@@ -1,0 +1,89 @@
+//! Quickstart: the SAGE public API in ~60 lines of calling code.
+//!
+//! 1. Generate a simulated CIFAR-10-like benchmark.
+//! 2. Run the two-pass streaming selection (FD sketch → agreement scores).
+//! 3. Inspect what was selected.
+//!
+//! Uses the AOT/PJRT backend when `artifacts/` exists (run `make
+//! artifacts`), otherwise falls back to the pure-Rust reference backend.
+//!
+//!     cargo run --release --example quickstart
+
+use sage::config::Method;
+use sage::data::{generate, BenchmarkKind};
+use sage::pipeline::{run_selection, PipelineConfig};
+use sage::runtime::{EngineActor, ModelBackend, ReferenceModelBackend, XlaModelBackend};
+
+fn main() -> Result<(), String> {
+    // --- backend: XLA artifacts if present, reference otherwise ---
+    let (backend, _actor): (Box<dyn ModelBackend>, Option<EngineActor>) =
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let actor = EngineActor::spawn("artifacts")?;
+            let b = XlaModelBackend::new(actor.handle(), "small")?;
+            println!("backend: {} (AOT artifacts via PJRT)", b.name());
+            (Box::new(b), Some(actor))
+        } else {
+            let b = ReferenceModelBackend::new(
+                sage::grad::MlpSpec::new(64, 64, 10),
+                sage::grad::TrainHyper::default(),
+                64,
+                64,
+                32,
+            );
+            println!("backend: reference (run `make artifacts` for the XLA path)");
+            (Box::new(b), None)
+        };
+
+    // --- data: simulated CIFAR-10 (10-class Gaussian mixture) ---
+    let spec = backend.spec();
+    let train = generate(&BenchmarkKind::Cifar10.spec(spec.f), 2048, 42, 0);
+    println!(
+        "dataset: {} examples, {} classes, {} features",
+        train.len(),
+        train.num_classes,
+        spec.f
+    );
+
+    // --- two-pass selection at a 25% budget ---
+    let k = train.len() / 4;
+    let cfg = PipelineConfig {
+        workers: 4,
+        warmup_steps: 20,
+        seed: 42,
+        ..Default::default()
+    };
+    let out = run_selection(backend.as_ref(), &train, Method::Sage, k, &cfg, None)?;
+
+    println!("\n--- Phase I: Frequent-Directions sketch ---");
+    println!("sketch memory: {} bytes (O(ell*D), N-independent)", out.sketch_bytes);
+    println!("shrinks: {}  |  error certificate (sum of deltas): {:.4}", out.shrinks, out.shift_bound);
+    println!("wall: {:.3}s over {} gradient batches", out.phase1.seconds, out.phase1.batches);
+
+    println!("\n--- Phase II: agreement scoring ---");
+    let alphas: Vec<f64> = out.scores.entries.iter().map(|e| e.alpha as f64).collect();
+    println!("wall: {:.3}s", out.phase2.seconds);
+    println!(
+        "alpha distribution: mean {:.4}, min {:.4}, max {:.4}",
+        sage::bench::mean(&alphas),
+        alphas.iter().cloned().fold(f64::MAX, f64::min),
+        alphas.iter().cloned().fold(f64::MIN, f64::max)
+    );
+
+    println!("\n--- selection (top-{k} by agreement) ---");
+    let subset = train.subset(&out.indices);
+    let counts = subset.class_counts();
+    println!("selected {} examples; per-class counts: {:?}", subset.len(), counts);
+    let sel_alpha: f64 = out
+        .indices
+        .iter()
+        .map(|&i| out.scores.entries.iter().find(|e| e.index == i).unwrap().alpha as f64)
+        .sum::<f64>()
+        / k as f64;
+    println!(
+        "mean alpha of selected: {:.4} (vs {:.4} overall) — agreement ranking at work",
+        sel_alpha,
+        sage::bench::mean(&alphas)
+    );
+    println!("\nnext: examples/e2e_train.rs trains on this subset and measures speed-up");
+    Ok(())
+}

@@ -1,0 +1,153 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts + manifest.json.
+
+Run once at build time (`make artifacts`); the Rust coordinator is
+self-contained afterwards. Python is NEVER on the request path.
+
+Interchange is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` crate binds) rejects with `proto.id() <= INT_MAX`. The text
+parser reassigns ids and round-trips cleanly — see /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--configs tiny,small,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import CONFIGS, ModelConfig
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs(cfg: ModelConfig):
+    """(name, fn, example_arg_specs, output_shapes) for every artifact."""
+    d, f, c, b, bt, l, m = cfg.d, cfg.f, cfg.c, cfg.b, cfg.bt, cfg.l, cfg.m
+    return [
+        (
+            "grads",
+            lambda p, x, y: model.per_example_grads(cfg, p, x, y),
+            [_spec(d), _spec(b, f), _spec(b, c)],
+            [[b, d], [b]],
+        ),
+        (
+            "train_step",
+            lambda p, mm, x, y, lr: model.train_step(cfg, p, mm, x, y, lr),
+            [_spec(d), _spec(d), _spec(bt, f), _spec(bt, c), _spec(1)],
+            [[d], [d], [1]],
+        ),
+        (
+            "eval",
+            lambda p, x: (model.eval_batch(cfg, p, x),),
+            [_spec(d), _spec(b, f)],
+            [[b, c]],
+        ),
+        (
+            "project",
+            lambda s, g: model.project(cfg, s, g),
+            [_spec(l, d), _spec(b, d)],
+            [[b, l], [b, 1]],
+        ),
+        (
+            "gram",
+            lambda sb: model.gram(cfg, sb),
+            [_spec(m, d)],
+            [[m, m]],
+        ),
+        (
+            "apply_rot",
+            lambda r, sb: model.apply_rot(cfg, r, sb),
+            [_spec(l, m), _spec(m, d)],
+            [[l, d]],
+        ),
+        (
+            "score_fused",
+            lambda p, s, x, y: model.score_fused(cfg, p, s, x, y),
+            [_spec(d), _spec(l, d), _spec(b, f), _spec(b, c)],
+            [[b, l], [b, 1], [b]],
+        ),
+    ]
+
+
+def lower_config(cfg: ModelConfig, out_dir: str) -> dict:
+    """Lower every artifact for one config; return its manifest entry."""
+    entry = {
+        "f": cfg.f,
+        "h": cfg.h,
+        "c": cfg.c,
+        "b": cfg.b,
+        "bt": cfg.bt,
+        "l": cfg.l,
+        "m": cfg.m,
+        "d": cfg.d,
+        "block_d": cfg.block_d,
+        "kernel_impl": cfg.kernel_impl,
+        "momentum": model.MOMENTUM,
+        "weight_decay": model.WEIGHT_DECAY,
+        "label_smoothing": model.LABEL_SMOOTHING,
+        "artifacts": {},
+    }
+    for name, fn, specs, outs in artifact_specs(cfg):
+        fname = f"{name}_{cfg.name}.hlo.txt"
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        entry["artifacts"][name] = {
+            "file": fname,
+            "inputs": [list(s.shape) for s in specs],
+            "outputs": outs,
+        }
+        print(f"  {fname}: {len(text)} chars")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=",".join(CONFIGS),
+        help="comma-separated config names (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": MANIFEST_VERSION, "configs": {}}
+    for name in args.configs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        cfg = CONFIGS[name]
+        print(f"[aot] lowering config '{name}' (D={cfg.d})")
+        manifest["configs"][name] = lower_config(cfg, args.out)
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""NumPy reference implementation of buffered Frequent Directions.
+
+This is the oracle for the Rust `sketch::` module (cross-validated via the
+shared test vectors in python/tests/test_fd_reference.py and mirrored
+property tests in rust/src/sketch/). It follows Algorithm 1 of the paper with
+the standard 2l buffered variant [Ghashami et al. 2015]:
+
+  * rows are appended into a [2l, D] buffer;
+  * when full, shrink: SVD (here: eigendecomposition of the small Gram,
+    exactly the split the Rust/L1 pipeline uses), delta = sigma_l^2,
+    sigma'_j = sqrt(max(sigma_j^2 - delta, 0)), S <- Sigma' V^T — at most l
+    nonzero rows survive, freeing l buffer slots.
+
+Deterministic, no randomness, O(l D) memory.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class FrequentDirections:
+    """Buffered FD sketch over row vectors of dimension d."""
+
+    def __init__(self, ell: int, d: int):
+        if ell <= 0 or d <= 0:
+            raise ValueError("ell and d must be positive")
+        self.ell = ell
+        self.d = d
+        self.buf = np.zeros((2 * ell, d), dtype=np.float64)
+        self.next_row = 0
+        self.shrink_count = 0
+
+    def insert(self, row: np.ndarray) -> None:
+        if self.next_row == 2 * self.ell:
+            self._shrink()
+        self.buf[self.next_row] = row
+        self.next_row += 1
+
+    def _shrink(self) -> None:
+        # Gram trick: eig(S S^T) gives sigma^2 and U; S' = diag(f) U^T S with
+        # f_j = sqrt(max(lam_j - delta, 0) / lam_j). Identical to SVD-shrink.
+        g = self.buf @ self.buf.T
+        lam, u = np.linalg.eigh(g)  # ascending
+        lam = lam[::-1]
+        u = u[:, ::-1]
+        delta = lam[self.ell - 1] if self.ell - 1 < len(lam) else 0.0
+        delta = max(delta, 0.0)
+        lam_c = np.maximum(lam, 0.0)
+        scale = np.sqrt(np.maximum(lam_c - delta, 0.0) / np.where(lam_c > 1e-30, lam_c, 1.0))
+        scale = np.where(lam_c > 1e-30, scale, 0.0)
+        rot = (scale[: self.ell, None] * u[:, : self.ell].T)  # [l, 2l]
+        new_top = rot @ self.buf
+        self.buf[: self.ell] = new_top
+        self.buf[self.ell :] = 0.0
+        self.next_row = self.ell
+        self.shrink_count += 1
+
+    def sketch(self) -> np.ndarray:
+        """Finalize: shrink once more if the buffer holds > l rows, then
+        return the top-l rows (the frozen S of Algorithm 1 line 12)."""
+        if self.next_row > self.ell:
+            self._shrink()
+        return self.buf[: self.ell].copy()
+
+    def merge(self, other: "FrequentDirections") -> None:
+        """Mergeability [Ghashami et al.]: insert the other sketch's rows."""
+        for row in other.sketch():
+            if np.any(row != 0.0):
+                self.insert(row)
+
+
+def covariance_error(g_matrix: np.ndarray, sketch: np.ndarray) -> float:
+    """||G^T G - S^T S||_2 via the largest eigenvalue of the difference."""
+    diff = g_matrix.T @ g_matrix - sketch.T @ sketch
+    return float(np.max(np.abs(np.linalg.eigvalsh(diff))))
+
+
+def fd_bound(g_matrix: np.ndarray, ell: int, k: int) -> float:
+    """The FD guarantee's RHS: 2/ell * ||G - G_k||_F^2 (k < ell)."""
+    s = np.linalg.svd(g_matrix, compute_uv=False)
+    tail = float(np.sum(s[k:] ** 2))
+    return 2.0 / ell * tail

@@ -1,0 +1,217 @@
+"""Layer-1 Pallas kernels for SAGE's FD-sketch hot spots.
+
+Three kernels, all tiled over the model dimension D so the VMEM working set is
+bounded by the block size rather than by D:
+
+  * ``project_normalize`` — Phase II hot spot. Z = G @ S.T accumulated over
+    D-blocks, with the row-normalization fused as an epilogue on the final
+    block (saves an HBM round-trip of Z vs. a separate elementwise kernel).
+  * ``gram``            — Sb @ Sb.T for the FD shrink step (accumulated).
+  * ``apply_rot``       — S' = R @ Sb rank-l reconstruction (D-blocks are
+    independent: no accumulation, perfectly parallel grid).
+
+TPU adaptation notes (paper targets CUDA/A100): the D-block loop replaces the
+CUDA threadblock reduction; BlockSpecs express the HBM<->VMEM schedule; the
+contractions are MXU-shaped ([b, dblk] x [dblk, l]). ``interpret=True`` is
+mandatory here — real-TPU lowering emits Mosaic custom-calls the CPU PJRT
+plugin cannot execute; CPU runs validate numerics only (see DESIGN.md #Perf
+for the VMEM/MXU estimates used in place of wall-clock).
+
+All kernels require D % block_d == 0; callers use :func:`pad_dim` (zero
+padding is exact for all three contractions).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default D-block. 512 f32 lanes x the row counts used here keeps the VMEM
+# working set of every kernel well under 16 MiB (see vmem_bytes()).
+DEFAULT_BLOCK_D = 512
+
+
+def pad_dim(x, block_d, axis=-1):
+    """Zero-pad `axis` of x up to a multiple of block_d (exact for matmuls)."""
+    d = x.shape[axis]
+    rem = (-d) % block_d
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _padded(d, block_d):
+    return d + ((-d) % block_d)
+
+
+# ---------------------------------------------------------------------------
+# project_normalize: Zhat = rownorm(G @ S.T), norms
+# ---------------------------------------------------------------------------
+
+
+def _project_kernel(s_ref, g_ref, zhat_ref, norms_ref, *, nblocks):
+    """Grid = (nblocks,) over D. Accumulates raw Z in zhat_ref, then fuses the
+    normalization epilogue on the last block."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        zhat_ref[...] = jnp.zeros_like(zhat_ref)
+
+    # [b, dblk] @ [dblk, l] -> [b, l]  (MXU-shaped contraction)
+    zhat_ref[...] += jax.lax.dot_general(
+        g_ref[...],
+        s_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(0) == nblocks - 1)
+    def _epilogue():
+        z = zhat_ref[...]
+        n = jnp.sqrt(jnp.sum(z * z, axis=1, keepdims=True))
+        safe = jnp.where(n > 0, n, 1.0)
+        norms_ref[...] = n
+        zhat_ref[...] = jnp.where(n > 0, z / safe, 0.0)
+
+
+def project_normalize(s, g, *, block_d=DEFAULT_BLOCK_D, interpret=True):
+    """Fused Phase-II scoring projection.
+
+    Args:
+      s: [l, d] frozen FD sketch.
+      g: [b, d] per-example gradient batch.
+    Returns:
+      (zhat [b, l], norms [b, 1]) with zhat_i = S g_i / ||S g_i|| (0 when 0).
+    """
+    l, d = s.shape
+    b, d2 = g.shape
+    assert d == d2, f"sketch dim {d} != grad dim {d2}"
+    dp = _padded(d, block_d)
+    s = pad_dim(s, block_d)
+    g = pad_dim(g, block_d)
+    nblocks = dp // block_d
+
+    kernel = functools.partial(_project_kernel, nblocks=nblocks)
+    zhat, norms = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((l, block_d), lambda i: (0, i)),
+            pl.BlockSpec((b, block_d), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, l), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(s, g)
+    return zhat, norms
+
+
+# ---------------------------------------------------------------------------
+# gram: Gm = Sb @ Sb.T
+# ---------------------------------------------------------------------------
+
+
+def _gram_kernel(sb_ref, gm_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        gm_ref[...] = jnp.zeros_like(gm_ref)
+
+    blk = sb_ref[...]
+    gm_ref[...] += jax.lax.dot_general(
+        blk,
+        blk,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gram(sb, *, block_d=DEFAULT_BLOCK_D, interpret=True):
+    """FD shrink-step Gram matrix: [m, d] -> [m, m], accumulated over D."""
+    m, d = sb.shape
+    dp = _padded(d, block_d)
+    sb = pad_dim(sb, block_d)
+    nblocks = dp // block_d
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((m, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=interpret,
+    )(sb)
+
+
+# ---------------------------------------------------------------------------
+# apply_rot: S' = R @ Sb
+# ---------------------------------------------------------------------------
+
+
+def _apply_rot_kernel(r_ref, sb_ref, out_ref):
+    out_ref[...] = jax.lax.dot_general(
+        r_ref[...],
+        sb_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def apply_rot(r, sb, *, block_d=DEFAULT_BLOCK_D, interpret=True):
+    """FD reconstruction: [l, m] @ [m, d] -> [l, d]. D-blocks independent."""
+    l, m = r.shape
+    m2, d = sb.shape
+    assert m == m2, f"rotation cols {m} != buffer rows {m2}"
+    dp = _padded(d, block_d)
+    sbp = pad_dim(sb, block_d)
+    nblocks = dp // block_d
+    out = pl.pallas_call(
+        _apply_rot_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((l, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((l, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((l, dp), jnp.float32),
+        interpret=interpret,
+    )(r, sbp)
+    return out[:, :d]
+
+
+# ---------------------------------------------------------------------------
+# Perf-model helpers (used by DESIGN.md / EXPERIMENTS.md #Perf — interpret
+# mode gives CPU-numpy timings, so TPU viability is argued structurally).
+# ---------------------------------------------------------------------------
+
+
+def vmem_bytes(kernel, *, b=None, l=None, m=None, block_d=DEFAULT_BLOCK_D):
+    """Per-grid-step VMEM working set (f32 bytes) of each kernel's blocks."""
+    f = 4
+    if kernel == "project_normalize":
+        return f * (l * block_d + b * block_d + b * l + b)
+    if kernel == "gram":
+        return f * (m * block_d + m * m)
+    if kernel == "apply_rot":
+        return f * (l * m + m * block_d + l * block_d)
+    raise ValueError(kernel)
+
+
+def mxu_flops(kernel, *, b=None, l=None, m=None, d=None):
+    """Total MXU MAC-flops (2*mnk) for one kernel invocation."""
+    if kernel == "project_normalize":
+        return 2 * b * l * d
+    if kernel == "gram":
+        return 2 * m * m * d
+    if kernel == "apply_rot":
+        return 2 * l * m * d
+    raise ValueError(kernel)

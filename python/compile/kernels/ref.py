@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to ~1e-5 (f32) across a hypothesis sweep of shapes.
+They are also what the L2 model falls back to when `use_pallas=False`
+(useful for isolating kernel bugs from model bugs).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def project_normalize_ref(s, g):
+    """Phase-II projection + normalization oracle.
+
+    z_i = S g_i  for every row g_i of g;  zhat_i = z_i/||z_i|| (0 if ||z_i||=0).
+
+    Args:
+      s: [l, d] frozen FD sketch.
+      g: [b, d] per-example gradients.
+    Returns:
+      (zhat [b, l], norms [b, 1])
+    """
+    z = g @ s.T  # [b, l]
+    n = jnp.sqrt(jnp.sum(z * z, axis=1, keepdims=True))  # [b, 1]
+    safe = jnp.where(n > 0, n, 1.0)
+    zhat = jnp.where(n > 0, z / safe, 0.0)
+    return zhat, n
+
+
+def gram_ref(sb):
+    """FD shrink step Gram matrix oracle: Sb @ Sb.T.
+
+    Args:
+      sb: [m, d] sketch buffer (m = 2*l in the buffered FD variant).
+    Returns:
+      [m, m] Gram matrix.
+    """
+    return sb @ sb.T
+
+
+def apply_rot_ref(r, sb):
+    """FD reconstruction oracle: S' = R @ Sb.
+
+    R = diag(sqrt(max(lam_i - delta, 0) / lam_i)) @ U.T  is computed by the
+    Rust coordinator from the eigendecomposition of the Gram matrix; this
+    kernel only performs the [l, m] x [m, d] contraction.
+    """
+    return r @ sb

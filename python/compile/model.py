@@ -1,0 +1,197 @@
+"""Layer-2 JAX model: the training target whose per-example gradients SAGE
+sketches, plus the jitted entry points that are AOT-lowered to HLO text.
+
+The paper trains a ResNet-18 on A100; here the backbone is a 2-layer MLP
+classifier (see DESIGN.md #Substitutions — the selection pipeline is
+architecture-agnostic and an MLP keeps the CPU-PJRT substrate feasible while
+exercising the identical code paths). Parameters travel as ONE flat f32[D]
+vector so the Rust coordinator treats the model as an opaque parameter buffer.
+
+Entry points (all shapes static per ModelConfig, all f32):
+
+  per_example_grads(params[D], X[B,F], Y[B,C])          -> (G[B,D], loss[B])
+  train_step(params[D], mom[D], X[Bt,F], Y[Bt,C], lr[1])-> (params', mom', loss[1])
+  eval_batch(params[D], X[B,F])                          -> logits[B,C]
+  score_fused(params[D], S[L,D], X[B,F], Y[B,C])         -> (Zhat[B,L], norms[B,1], loss[B])
+
+`score_fused` is the Phase-II hot path: per-example grads and the Pallas
+projection kernel lowered into ONE module, so the [B,D] gradient matrix never
+leaves the device between backprop and sketch-projection.
+
+Training recipe follows the paper's supplementary: SGD + momentum 0.9, weight
+decay 5e-4, label smoothing 0.1, cosine LR (the schedule itself lives in the
+Rust trainer; lr arrives as a [1] input each step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fd_ops, ref
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+LABEL_SMOOTHING = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape bundle for one AOT artifact set."""
+
+    name: str
+    f: int  # input features
+    h: int  # hidden width
+    c: int  # classes
+    b: int  # scoring/grad batch
+    bt: int  # training batch
+    l: int  # FD sketch size (buffer is 2l)
+    block_d: int = fd_ops.DEFAULT_BLOCK_D
+    # Which L1 implementation the AOT artifacts embed:
+    #   "pallas" — the TPU-design Pallas kernels (interpret=True lowering;
+    #              the path real-TPU deployment would compile with Mosaic);
+    #   "xla"    — the mathematically identical XLA-native contractions
+    #              (ref.py oracles). On the CPU-PJRT substrate the
+    #              interpret-lowered grid loop executes ~30x slower than the
+    #              fused XLA contraction (EXPERIMENTS.md §Perf iteration 1),
+    #              so benchmark configs ship "xla"; equivalence is pinned by
+    #              the hypothesis sweeps in python/tests/test_kernels.py and
+    #              by the tiny-config PJRT integration tests.
+    kernel_impl: str = "pallas"
+
+    @property
+    def d(self) -> int:
+        """Flat parameter count: W1[F,H] b1[H] W2[H,C] b2[C]."""
+        return self.f * self.h + self.h + self.h * self.c + self.c
+
+    @property
+    def m(self) -> int:
+        """FD buffer rows (buffered 2l variant)."""
+        return 2 * self.l
+
+
+# Named configs. `tiny` drives the test suite; `medium` is the ~100k-param
+# end-to-end model; the rest mirror the paper's five benchmarks (class counts
+# 10 / 10 / 100 / 200 / 256).
+CONFIGS = {
+    "tiny": ModelConfig("tiny", f=16, h=32, c=4, b=8, bt=8, l=8, block_d=256),
+    "small": ModelConfig("small", f=64, h=64, c=10, b=64, bt=64, l=32, kernel_impl="xla"),
+    "c100": ModelConfig("c100", f=128, h=128, c=100, b=64, bt=64, l=64, kernel_impl="xla"),
+    "tin": ModelConfig("tin", f=128, h=128, c=200, b=64, bt=64, l=64, kernel_impl="xla"),
+    "caltech": ModelConfig("caltech", f=128, h=128, c=256, b=64, bt=64, l=64, kernel_impl="xla"),
+    "medium": ModelConfig("medium", f=256, h=384, c=10, b=64, bt=64, l=64, kernel_impl="xla"),
+}
+
+
+def unflatten(cfg: ModelConfig, params):
+    """Split the flat f32[D] parameter vector into (W1, b1, W2, b2)."""
+    o = 0
+    w1 = params[o : o + cfg.f * cfg.h].reshape(cfg.f, cfg.h)
+    o += cfg.f * cfg.h
+    b1 = params[o : o + cfg.h]
+    o += cfg.h
+    w2 = params[o : o + cfg.h * cfg.c].reshape(cfg.h, cfg.c)
+    o += cfg.h * cfg.c
+    b2 = params[o : o + cfg.c]
+    return w1, b1, w2, b2
+
+
+def forward(cfg: ModelConfig, params, x):
+    """MLP forward: relu(x W1 + b1) W2 + b2 -> logits."""
+    w1, b1, w2, b2 = unflatten(cfg, params)
+    hid = jax.nn.relu(x @ w1 + b1)
+    return hid @ w2 + b2
+
+
+def smoothed_xent(logits, y_onehot, smoothing=LABEL_SMOOTHING):
+    """Label-smoothed cross entropy for a single example (or batch row)."""
+    c = logits.shape[-1]
+    ys = y_onehot * (1.0 - smoothing) + smoothing / c
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(ys * logp, axis=-1)
+
+
+def _loss_single(cfg: ModelConfig, params, x, y):
+    """Loss of ONE example — the function whose gradient SAGE streams."""
+    logits = forward(cfg, params, x[None, :])[0]
+    return smoothed_xent(logits, y)
+
+
+def per_example_grads(cfg: ModelConfig, params, xb, yb):
+    """Per-example gradient batch: G[b, D] plus per-example losses.
+
+    vmap(grad) over the flat parameter vector — the BackPACK-style primitive
+    that Algorithm 1 Phase I/II both consume.
+    """
+    gfn = jax.vmap(
+        jax.value_and_grad(lambda p, x, y: _loss_single(cfg, p, x, y)),
+        in_axes=(None, 0, 0),
+    )
+    loss, g = gfn(params, xb, yb)
+    return g, loss
+
+
+def train_step(cfg: ModelConfig, params, mom, xb, yb, lr):
+    """One SGD+momentum step on a (selected-subset) batch.
+
+    g = mean-batch grad + wd * params;  mom' = MU * mom + g;
+    params' = params - lr * mom'. lr is a [1] input (cosine schedule is owned
+    by the Rust trainer). Returns (params', mom', mean_loss[1]).
+    """
+
+    def batch_loss(p):
+        logits = forward(cfg, p, xb)
+        return jnp.mean(smoothed_xent(logits, yb))
+
+    loss, g = jax.value_and_grad(batch_loss)(params)
+    g = g + WEIGHT_DECAY * params
+    mom_n = MOMENTUM * mom + g
+    params_n = params - lr[0] * mom_n
+    return params_n, mom_n, loss[None]
+
+
+def eval_batch(cfg: ModelConfig, params, xb):
+    """Logits for a test batch; accuracy is computed by the Rust side."""
+    return forward(cfg, params, xb)
+
+
+def score_fused(cfg: ModelConfig, params, sketch, xb, yb, *, interpret=True):
+    """Fused Phase-II scoring: per-example grads -> Pallas projection.
+
+    Lowering this as one module keeps G[b, D] on-device between backprop and
+    the sketch projection (the L2<->L1 fusion DESIGN.md #Perf calls out).
+    """
+    g, loss = per_example_grads(cfg, params, xb, yb)
+    if cfg.kernel_impl == "xla":
+        zhat, norms = ref.project_normalize_ref(sketch, g)
+    else:
+        zhat, norms = fd_ops.project_normalize(
+            sketch, g, block_d=cfg.block_d, interpret=interpret
+        )
+    return zhat, norms, loss
+
+
+# --- thin jitted wrappers around the L1 kernels (lowered as artifacts) ------
+
+
+def project(cfg: ModelConfig, sketch, g, *, interpret=True):
+    """Standalone Phase-II projection (used when G comes from elsewhere)."""
+    if cfg.kernel_impl == "xla":
+        return ref.project_normalize_ref(sketch, g)
+    return fd_ops.project_normalize(sketch, g, block_d=cfg.block_d, interpret=interpret)
+
+
+def gram(cfg: ModelConfig, sbuf, *, interpret=True):
+    """FD shrink: Gram of the [2l, D] buffer."""
+    if cfg.kernel_impl == "xla":
+        return (ref.gram_ref(sbuf),)
+    return (fd_ops.gram(sbuf, block_d=cfg.block_d, interpret=interpret),)
+
+
+def apply_rot(cfg: ModelConfig, rot, sbuf, *, interpret=True):
+    """FD shrink: rank-l reconstruction S' = R @ Sbuf."""
+    if cfg.kernel_impl == "xla":
+        return (ref.apply_rot_ref(rot, sbuf),)
+    return (fd_ops.apply_rot(rot, sbuf, block_d=cfg.block_d, interpret=interpret),)

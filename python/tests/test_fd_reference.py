@@ -1,0 +1,129 @@
+"""FD reference (numpy) — validates Algorithm 1 Phase I and the paper's
+quoted guarantee  0 <= G^T G - S^T S <= 2/l * ||G - G_k||_F^2 * I."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.fd_reference import FrequentDirections, covariance_error, fd_bound
+
+
+def _random_lowrankish(rng, n, d, rank):
+    u = rng.normal(size=(n, rank))
+    v = rng.normal(size=(rank, d))
+    return (u @ v + 0.05 * rng.normal(size=(n, d))).astype(np.float64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=12),  # ell
+    st.integers(min_value=10, max_value=120),  # n
+    st.integers(min_value=4, max_value=40),  # d
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fd_guarantee_holds(ell, n, d, seed):
+    rng = np.random.default_rng(seed)
+    g = _random_lowrankish(rng, n, d, rank=min(3, d))
+    fd = FrequentDirections(ell, d)
+    for row in g:
+        fd.insert(row)
+    s = fd.sketch()
+    assert s.shape == (ell, d)
+    # Lower bound: G^T G - S^T S is PSD.
+    diff = g.T @ g - s.T @ s
+    ev = np.linalg.eigvalsh(diff)
+    assert ev.min() >= -1e-6 * max(1.0, np.abs(ev).max())
+    # Upper bound with k = ell//2 < ell.
+    k = max(1, ell // 2)
+    assert ev.max() <= fd_bound(g, ell, k) + 1e-8
+
+
+def test_gram_eig_shrink_equals_svd_shrink():
+    # The Gram-eig shrink used by the Rust/L1 pipeline must match the
+    # textbook SVD shrink up to rotation: compare S'^T S' (rotation-free).
+    rng = np.random.default_rng(0)
+    ell, d = 6, 30
+    buf = rng.normal(size=(2 * ell, d))
+    fd = FrequentDirections(ell, d)
+    fd.buf[:] = buf
+    fd.next_row = 2 * ell
+    fd._shrink()
+    s_gram = fd.buf[:ell]
+
+    u, sig, vt = np.linalg.svd(buf, full_matrices=False)
+    delta = sig[ell - 1] ** 2
+    sig_p = np.sqrt(np.maximum(sig**2 - delta, 0.0))
+    s_svd = (sig_p[:, None] * vt)[:ell]
+
+    np.testing.assert_allclose(s_gram.T @ s_gram, s_svd.T @ s_svd, atol=1e-8)
+
+
+def test_shrink_zeroes_half_the_buffer():
+    rng = np.random.default_rng(1)
+    fd = FrequentDirections(4, 16)
+    for _ in range(8):
+        fd.insert(rng.normal(size=16))
+    assert fd.next_row == 8
+    fd.insert(rng.normal(size=16))  # triggers shrink
+    assert fd.shrink_count == 1
+    assert fd.next_row == 5  # l rows survive + the newly inserted one
+    assert np.all(fd.buf[5:] == 0.0)
+
+
+def test_sketch_of_rank_le_ell_is_exact():
+    # If rank(G) < ell and n <= buffer, FD loses nothing: delta can still
+    # shrink, so test the strict case n <= 2*ell with rank <= ell where the
+    # final shrink has sigma_ell = 0 -> exact covariance preservation.
+    rng = np.random.default_rng(2)
+    ell, d, r = 8, 24, 3
+    g = _random_lowrankish(rng, 10, d, r) * 0
+    u = rng.normal(size=(10, r))
+    v = rng.normal(size=(r, d))
+    g = u @ v  # exactly rank r < ell
+    fd = FrequentDirections(ell, d)
+    for row in g:
+        fd.insert(row)
+    s = fd.sketch()
+    np.testing.assert_allclose(s.T @ s, g.T @ g, atol=1e-8)
+
+
+def test_merge_respects_bound():
+    rng = np.random.default_rng(3)
+    ell, d = 8, 32
+    g1 = rng.normal(size=(60, d))
+    g2 = rng.normal(size=(60, d))
+    fd1 = FrequentDirections(ell, d)
+    fd2 = FrequentDirections(ell, d)
+    for row in g1:
+        fd1.insert(row)
+    for row in g2:
+        fd2.insert(row)
+    fd1.merge(fd2)
+    s = fd1.sketch()
+    g = np.vstack([g1, g2])
+    diff = g.T @ g - s.T @ s
+    ev = np.linalg.eigvalsh(diff)
+    assert ev.min() >= -1e-6 * np.abs(ev).max()
+    # Merged sketch error <= 2x the single-stream bound (standard result).
+    k = ell // 2
+    assert ev.max() <= 2.0 * fd_bound(g, ell, k) + 1e-8
+
+
+def test_covariance_error_decreases_with_ell():
+    rng = np.random.default_rng(4)
+    d = 40
+    g = _random_lowrankish(rng, 200, d, rank=5)
+    errs = []
+    for ell in [4, 8, 16]:
+        fd = FrequentDirections(ell, d)
+        for row in g:
+            fd.insert(row)
+        errs.append(covariance_error(g, fd.sketch()))
+    assert errs[2] < errs[0]
+
+
+def test_invalid_args_raise():
+    with pytest.raises(ValueError):
+        FrequentDirections(0, 5)
+    with pytest.raises(ValueError):
+        FrequentDirections(5, 0)

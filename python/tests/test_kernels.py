@@ -1,0 +1,123 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the kernel layer: hypothesis sweeps
+shapes (including degenerate and non-divisible-by-block ones) and asserts
+allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import fd_ops, ref
+
+SHAPE = st.tuples(
+    st.integers(min_value=1, max_value=12),  # b (rows of G) / l rows
+    st.integers(min_value=1, max_value=24),  # l
+    st.integers(min_value=1, max_value=600),  # d
+    st.sampled_from([32, 128, 256, 512]),  # block_d
+)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(SHAPE, st.integers(min_value=0, max_value=2**31 - 1))
+def test_project_normalize_matches_ref(shape, seed):
+    b, l, d, block_d = shape
+    rng = np.random.default_rng(seed)
+    s = _rand(rng, l, d)
+    g = _rand(rng, b, d)
+    zh, n = fd_ops.project_normalize(s, g, block_d=block_d)
+    zh0, n0 = ref.project_normalize_ref(s, g)
+    np.testing.assert_allclose(np.asarray(zh), np.asarray(zh0), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(n), np.asarray(n0), atol=1e-3, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(SHAPE, st.integers(min_value=0, max_value=2**31 - 1))
+def test_gram_matches_ref(shape, seed):
+    m, _, d, block_d = shape
+    rng = np.random.default_rng(seed)
+    sb = _rand(rng, m, d)
+    gm = fd_ops.gram(sb, block_d=block_d)
+    gm0 = ref.gram_ref(sb)
+    np.testing.assert_allclose(np.asarray(gm), np.asarray(gm0), atol=1e-3, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(SHAPE, st.integers(min_value=0, max_value=2**31 - 1))
+def test_apply_rot_matches_ref(shape, seed):
+    l, m, d, block_d = shape
+    rng = np.random.default_rng(seed)
+    r = _rand(rng, l, m)
+    sb = _rand(rng, m, d)
+    out = fd_ops.apply_rot(r, sb, block_d=block_d)
+    out0 = ref.apply_rot_ref(r, sb)
+    assert out.shape == (l, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out0), atol=2e-4, rtol=2e-4)
+
+
+def test_zero_gradient_rows_normalize_to_zero():
+    s = jnp.ones((4, 64), jnp.float32)
+    g = jnp.zeros((3, 64), jnp.float32)
+    zh, n = fd_ops.project_normalize(s, g, block_d=32)
+    assert np.all(np.asarray(zh) == 0.0)
+    assert np.all(np.asarray(n) == 0.0)
+
+
+def test_orthogonal_gradient_normalizes_to_zero_projection():
+    # g orthogonal to every sketch row -> z = 0 -> zhat = 0 (no NaN).
+    s = jnp.zeros((2, 8), jnp.float32).at[0, 0].set(1.0).at[1, 1].set(1.0)
+    g = jnp.zeros((1, 8), jnp.float32).at[0, 7].set(3.0)
+    zh, n = fd_ops.project_normalize(s, g, block_d=32)
+    assert not np.any(np.isnan(np.asarray(zh)))
+    assert np.all(np.asarray(zh) == 0.0)
+
+
+def test_unit_norm_rows():
+    rng = np.random.default_rng(7)
+    s = _rand(rng, 8, 300)
+    g = _rand(rng, 16, 300)
+    zh, n = fd_ops.project_normalize(s, g, block_d=128)
+    norms = np.linalg.norm(np.asarray(zh), axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(3)
+    sb = _rand(rng, 10, 333)
+    gm = np.asarray(fd_ops.gram(sb, block_d=128))
+    np.testing.assert_allclose(gm, gm.T, atol=1e-4)
+    ev = np.linalg.eigvalsh(gm.astype(np.float64))
+    assert ev.min() > -1e-2
+
+
+def test_pad_dim_exact():
+    rng = np.random.default_rng(11)
+    x = _rand(rng, 3, 100)
+    p = fd_ops.pad_dim(x, 64)
+    assert p.shape == (3, 128)
+    np.testing.assert_array_equal(np.asarray(p[:, :100]), np.asarray(x))
+    assert np.all(np.asarray(p[:, 100:]) == 0.0)
+
+
+@pytest.mark.parametrize("kernel,kw", [
+    ("project_normalize", dict(b=64, l=64)),
+    ("gram", dict(m=128)),
+    ("apply_rot", dict(l=64, m=128)),
+])
+def test_vmem_budget_under_16mib(kernel, kw):
+    # The perf-model invariant DESIGN.md #Perf relies on: every kernel's
+    # per-step VMEM working set fits a TPU core's ~16 MiB VMEM.
+    assert fd_ops.vmem_bytes(kernel, block_d=512, **kw) < 16 * 2**20
+
+
+def test_mxu_flops_model():
+    assert fd_ops.mxu_flops("project_normalize", b=2, l=3, d=5) == 2 * 2 * 3 * 5
+    assert fd_ops.mxu_flops("gram", m=4, d=7) == 2 * 4 * 4 * 7
+    assert fd_ops.mxu_flops("apply_rot", l=2, m=4, d=7) == 2 * 2 * 4 * 7

@@ -1,0 +1,162 @@
+"""L2 correctness: model math, per-example gradients, train step, fusion."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.model import CONFIGS, ModelConfig
+
+CFG = CONFIGS["tiny"]
+
+
+def _rand_batch(cfg: ModelConfig, seed=0, n=None):
+    rng = np.random.default_rng(seed)
+    n = n or cfg.b
+    x = jnp.asarray(rng.normal(size=(n, cfg.f)).astype(np.float32))
+    labels = rng.integers(0, cfg.c, size=n)
+    y = jnp.asarray(np.eye(cfg.c, dtype=np.float32)[labels])
+    return x, y, labels
+
+
+def _rand_params(cfg: ModelConfig, seed=1, scale=0.1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(scale * rng.normal(size=cfg.d).astype(np.float32))
+
+
+def test_param_count():
+    cfg = CFG
+    assert cfg.d == cfg.f * cfg.h + cfg.h + cfg.h * cfg.c + cfg.c
+
+
+def test_unflatten_round_trip():
+    p = _rand_params(CFG)
+    w1, b1, w2, b2 = model.unflatten(CFG, p)
+    flat = jnp.concatenate([w1.ravel(), b1, w2.ravel(), b2])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(p))
+
+
+def test_forward_shape():
+    p = _rand_params(CFG)
+    x, _, _ = _rand_batch(CFG)
+    logits = model.forward(CFG, p, x)
+    assert logits.shape == (CFG.b, CFG.c)
+
+
+def test_smoothed_xent_at_uniform_logits():
+    # Uniform logits -> loss = log(C) regardless of smoothing.
+    c = 5
+    logits = jnp.zeros((c,))
+    y = jnp.zeros((c,)).at[2].set(1.0)
+    loss = model.smoothed_xent(logits, y)
+    np.testing.assert_allclose(float(loss), np.log(c), rtol=1e-6)
+
+
+def test_smoothed_xent_smoothing_penalizes_confidence():
+    # With smoothing, an extremely confident correct prediction has HIGHER
+    # loss than a moderately confident one cannot go to 0.
+    y = jnp.zeros((4,)).at[0].set(1.0)
+    confident = jnp.asarray([50.0, 0.0, 0.0, 0.0])
+    loss = float(model.smoothed_xent(confident, y))
+    assert loss > 1.0  # smoothing mass on wrong classes * 50 logit gap
+
+
+def test_per_example_grads_match_loop(seed=3):
+    p = _rand_params(CFG, seed)
+    x, y, _ = _rand_batch(CFG, seed)
+    g, loss = model.per_example_grads(CFG, p, x, y)
+    assert g.shape == (CFG.b, CFG.d)
+    assert loss.shape == (CFG.b,)
+    for i in [0, CFG.b // 2, CFG.b - 1]:
+        gi = jax.grad(lambda pp: model._loss_single(CFG, pp, x[i], y[i]))(p)
+        np.testing.assert_allclose(np.asarray(g[i]), np.asarray(gi), atol=1e-5)
+
+
+def test_per_example_grads_mean_equals_batch_grad():
+    p = _rand_params(CFG, 5)
+    x, y, _ = _rand_batch(CFG, 5)
+    g, _ = model.per_example_grads(CFG, p, x, y)
+
+    def batch_loss(pp):
+        return jnp.mean(model.smoothed_xent(model.forward(CFG, pp, x), y))
+
+    gb = jax.grad(batch_loss)(p)
+    np.testing.assert_allclose(np.asarray(jnp.mean(g, 0)), np.asarray(gb), atol=1e-5)
+
+
+def test_grads_finite_differences():
+    cfg = CFG
+    p = _rand_params(cfg, 7)
+    x, y, _ = _rand_batch(cfg, 7)
+    g, _ = model.per_example_grads(cfg, p, x, y)
+    rng = np.random.default_rng(7)
+    idxs = rng.integers(0, cfg.d, size=6)
+    eps = 1e-3
+    for j in idxs:
+        dp = jnp.zeros(cfg.d).at[j].set(eps)
+        lp = model._loss_single(cfg, p + dp, x[0], y[0])
+        lm = model._loss_single(cfg, p - dp, x[0], y[0])
+        fd = (lp - lm) / (2 * eps)
+        np.testing.assert_allclose(float(g[0, j]), float(fd), atol=5e-3)
+
+
+def test_train_step_decreases_loss():
+    cfg = CFG
+    p = _rand_params(cfg, 9)
+    m = jnp.zeros(cfg.d)
+    x, y, _ = _rand_batch(cfg, 9, n=cfg.bt)
+    lr = jnp.asarray([0.05], jnp.float32)
+    losses = []
+    for _ in range(30):
+        p, m, loss = model.train_step(cfg, p, m, x, y, lr)
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0] * 0.9
+
+
+def test_train_step_momentum_and_wd_math():
+    # One step from zero momentum must equal p - lr*(g + wd*p).
+    cfg = CFG
+    p = _rand_params(cfg, 11)
+    x, y, _ = _rand_batch(cfg, 11, n=cfg.bt)
+    lr = jnp.asarray([0.1], jnp.float32)
+
+    def batch_loss(pp):
+        return jnp.mean(model.smoothed_xent(model.forward(cfg, pp, x), y))
+
+    g = jax.grad(batch_loss)(p) + model.WEIGHT_DECAY * p
+    p1, m1, _ = model.train_step(cfg, p, jnp.zeros(cfg.d), x, y, lr)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(g), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p - 0.1 * g), atol=1e-6)
+
+
+def test_eval_batch_matches_forward():
+    p = _rand_params(CFG, 13)
+    x, _, _ = _rand_batch(CFG, 13)
+    np.testing.assert_array_equal(
+        np.asarray(model.eval_batch(CFG, p, x)),
+        np.asarray(model.forward(CFG, p, x)),
+    )
+
+
+def test_score_fused_equals_grads_then_project():
+    cfg = CFG
+    p = _rand_params(cfg, 15)
+    x, y, _ = _rand_batch(cfg, 15)
+    rng = np.random.default_rng(15)
+    s = jnp.asarray(rng.normal(size=(cfg.l, cfg.d)).astype(np.float32))
+    zh_f, n_f, loss_f = model.score_fused(cfg, p, s, x, y)
+    g, loss = model.per_example_grads(cfg, p, x, y)
+    zh, n = model.project(cfg, s, g)
+    np.testing.assert_allclose(np.asarray(zh_f), np.asarray(zh), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(n_f), np.asarray(n), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(loss_f), np.asarray(loss), atol=1e-6)
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_all_configs_have_consistent_dims(name):
+    cfg = CONFIGS[name]
+    assert cfg.d == cfg.f * cfg.h + cfg.h + cfg.h * cfg.c + cfg.c
+    assert cfg.m == 2 * cfg.l
+    assert cfg.l < cfg.d

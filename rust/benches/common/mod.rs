@@ -1,0 +1,105 @@
+//! Shared helpers for the bench drivers: backend construction (XLA when
+//! artifacts exist, reference otherwise) and env-var scaling so CI can run
+//! quick passes while full runs reproduce the paper tables.
+//!
+//! Env knobs:
+//!   SAGE_BENCH_SEEDS  seeds per cell (default 2; paper uses 3)
+//!   SAGE_BENCH_N      train examples per cell (default 1536)
+//!   SAGE_BENCH_EPOCHS training epochs (default 5)
+//!   SAGE_BENCH_XLA    "0" forces the reference backend
+
+use sage::data::BenchmarkKind;
+use sage::grad::{MlpSpec, TrainHyper};
+use sage::runtime::{
+    EngineActor, ModelBackend, ReferenceModelBackend, XlaModelBackend, XlaShrinkBackend,
+};
+use sage::sketch::ShrinkBackend;
+use std::sync::Arc;
+
+/// Optional dataset filter: SAGE_BENCH_DATASETS="cifar100,tinyimagenet".
+pub fn dataset_filter() -> Option<Vec<String>> {
+    std::env::var("SAGE_BENCH_DATASETS").ok().map(|v| {
+        v.split(',')
+            .map(|s| s.trim().to_ascii_lowercase())
+            .filter(|s| !s.is_empty())
+            .collect()
+    })
+}
+
+pub fn keep_dataset(filter: &Option<Vec<String>>, name: &str) -> bool {
+    match filter {
+        None => true,
+        Some(f) => f.iter().any(|x| x == name),
+    }
+}
+
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Map a benchmark to the artifact config carrying its class count.
+pub fn model_for(kind: BenchmarkKind) -> &'static str {
+    match kind {
+        BenchmarkKind::Cifar10 | BenchmarkKind::FashionMnist => "small",
+        BenchmarkKind::Cifar100 => "c100",
+        BenchmarkKind::TinyImageNet => "tin",
+        BenchmarkKind::Caltech256 => "caltech",
+    }
+}
+
+pub struct BenchBackend {
+    pub backend: Box<dyn ModelBackend>,
+    /// FD shrink contractions through the L1 Pallas artifacts (XLA path) —
+    /// on the single-core testbed XLA's vectorized matmuls are ~10x the
+    /// scalar Rust shrink, so benches route the sketch through them.
+    pub shrink: Option<Arc<dyn ShrinkBackend>>,
+    /// Keep the actor alive while the backend is used.
+    pub _actor: Option<EngineActor>,
+    pub label: String,
+}
+
+/// Build the best available backend for a benchmark.
+pub fn backend_for(kind: BenchmarkKind, actor: Option<&EngineActor>) -> BenchBackend {
+    if let Some(actor) = actor {
+        let model = model_for(kind);
+        if let Ok(b) = XlaModelBackend::new(actor.handle(), model) {
+            let shrink: Option<Arc<dyn ShrinkBackend>> = XlaShrinkBackend::new(actor.handle(), model)
+                .ok()
+                .map(|s| Arc::new(s) as Arc<dyn ShrinkBackend>);
+            return BenchBackend {
+                label: b.name(),
+                backend: Box::new(b),
+                shrink,
+                _actor: None,
+            };
+        }
+    }
+    // Reference fallback mirrors the artifact shapes.
+    let (f, h, bsz, ell) = match kind {
+        BenchmarkKind::Cifar10 | BenchmarkKind::FashionMnist => (64, 64, 64, 32),
+        _ => (128, 128, 64, 64),
+    };
+    let spec = MlpSpec::new(f, h, kind.num_classes());
+    let b = ReferenceModelBackend::new(spec, TrainHyper::default(), bsz, bsz, ell);
+    BenchBackend {
+        label: "reference".into(),
+        backend: Box::new(b),
+        shrink: None,
+        _actor: None,
+    }
+}
+
+/// Spawn the shared runtime actor if artifacts exist and XLA isn't disabled.
+pub fn maybe_actor() -> Option<EngineActor> {
+    if env_usize("SAGE_BENCH_XLA", 1) == 0 {
+        return None;
+    }
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("note: artifacts missing, benches run on the reference backend");
+        return None;
+    }
+    EngineActor::spawn("artifacts").ok()
+}

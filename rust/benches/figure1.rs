@@ -1,0 +1,161 @@
+//! Figure 1 regeneration: relative test accuracy vs end-to-end training
+//! speed-up across the five simulated benchmarks at subset fractions
+//! {5%, 15%, 25%, 100%}, with the generalized exponential fit + R² the
+//! paper overlays, and seed bands. Writes `reports/figure1.csv`,
+//! `reports/figure1.md` and an ASCII panel to stdout.
+//!
+//!     cargo bench --bench figure1
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sage::bench::report::ascii_plot;
+use sage::bench::runner::{run_cell, CellSpec};
+use sage::bench::{ci95, exp_fit, mean, write_csv, write_markdown_table};
+use sage::config::Method;
+use sage::data::BenchmarkKind;
+use std::path::Path;
+
+fn main() {
+    let seeds = common::env_usize("SAGE_BENCH_SEEDS", 1);
+    let n_train = common::env_usize("SAGE_BENCH_N", 2048);
+    let epochs = common::env_usize("SAGE_BENCH_EPOCHS", 40);
+    let filter = common::dataset_filter();
+    let actor = common::maybe_actor();
+    let fractions = [0.05, 0.15, 0.25, 1.0];
+
+    let mut csv_rows: Vec<Vec<String>> = Vec::new();
+    let mut md_rows: Vec<Vec<String>> = Vec::new();
+    let mut panels: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+
+    for kind in BenchmarkKind::all() {
+        if !common::keep_dataset(&filter, kind.name()) {
+            continue;
+        }
+        let bb = common::backend_for(*kind, actor.as_ref());
+        eprintln!("[figure1] {} on {}", kind.name(), bb.label);
+        // Full-data baseline per seed (accuracy + wall-clock reference).
+        let mut full_acc = Vec::new();
+        let mut full_time = Vec::new();
+        let mut full_train = Vec::new();
+        for seed in 0..seeds as u64 {
+            let mut spec = CellSpec::new(*kind, Method::Full, 1.0, seed);
+            spec.train_examples = n_train;
+            spec.test_examples = n_train / 2;
+            spec.epochs = epochs;
+            let r = run_cell(bb.backend.as_ref(), &spec, bb.shrink.clone()).expect("full");
+            full_acc.push(r.accuracy);
+            full_time.push(r.total_seconds);
+            full_train.push(r.train_seconds);
+        }
+        let full_acc_m = mean(&full_acc);
+        let full_time_m = mean(&full_time);
+        let full_train_m = mean(&full_train);
+
+        let mut xs = Vec::new(); // fraction
+        let mut ys = Vec::new(); // relative accuracy
+        let mut pts = Vec::new(); // (speedup, rel acc) for the panel
+        for &f in &fractions {
+            let mut rel_acc = Vec::new();
+            let mut speedup = Vec::new();
+            let mut train_speedup = Vec::new();
+            for seed in 0..seeds as u64 {
+                let (acc, total, tr) = if f >= 1.0 {
+                    (
+                        full_acc[seed as usize],
+                        full_time[seed as usize],
+                        full_train[seed as usize],
+                    )
+                } else {
+                    let mut spec = CellSpec::new(*kind, Method::Sage, f, seed);
+                    spec.train_examples = n_train;
+                    spec.test_examples = n_train / 2;
+                    spec.epochs = epochs;
+                    let r = run_cell(bb.backend.as_ref(), &spec, bb.shrink.clone()).expect("cell");
+                    (r.accuracy, r.total_seconds, r.train_seconds)
+                };
+                rel_acc.push(acc / full_acc_m);
+                speedup.push(full_time_m / total);
+                // The paper's regime (training >> selection): speed-up of
+                // the training loop itself, selection amortized away.
+                train_speedup.push(full_train_m / tr.max(1e-9));
+            }
+            let ra = mean(&rel_acc);
+            let su = mean(&speedup);
+            let tsu = mean(&train_speedup);
+            xs.push(f);
+            ys.push(ra);
+            pts.push((tsu, ra));
+            csv_rows.push(vec![
+                kind.name().into(),
+                format!("{f}"),
+                format!("{ra:.4}"),
+                format!("{:.4}", ci95(&rel_acc)),
+                format!("{su:.3}"),
+                format!("{:.3}", ci95(&speedup)),
+                format!("{tsu:.3}"),
+            ]);
+            eprintln!(
+                "  f={f:.2}: rel acc {ra:.3}±{:.3}, e2e speed-up {su:.2}x, train speed-up {tsu:.2}x",
+                ci95(&rel_acc)
+            );
+        }
+        // Paper's generalized exponential fit + R² per dataset.
+        let fit = exp_fit(&xs, &ys);
+        md_rows.push(vec![
+            kind.name().into(),
+            format!("{:.3}", fit.a),
+            format!("{:.3}", fit.b),
+            format!("{:.2}", fit.c),
+            format!("{:.4}", fit.r2),
+            format!("{:.3}", ys[2]),                 // rel acc at 25%
+            format!("{:.2}x", pts[2].0),             // train speed-up at 25%
+        ]);
+        panels.push((kind.name().to_string(), pts));
+    }
+
+    write_csv(
+        Path::new("reports/figure1.csv"),
+        &[
+            "dataset".into(),
+            "fraction".into(),
+            "rel_accuracy".into(),
+            "rel_accuracy_ci95".into(),
+            "speedup".into(),
+            "speedup_ci95".into(),
+            "train_speedup".into(),
+        ],
+        &csv_rows,
+    )
+    .unwrap();
+    write_markdown_table(
+        Path::new("reports/figure1.md"),
+        &format!("Figure 1 (simulated): exponential fits y=a-b·exp(-cx) of relative accuracy vs fraction — {seeds} seed(s), N={n_train}"),
+        &[
+            "dataset".into(),
+            "a".into(),
+            "b".into(),
+            "c".into(),
+            "R²".into(),
+            "rel acc @25%".into(),
+            "speed-up @25%".into(),
+        ],
+        &md_rows,
+    )
+    .unwrap();
+
+    println!("\n=== Figure 1 panel: relative accuracy (y) vs speed-up (x) ===");
+    let series: Vec<(&str, Vec<(f64, f64)>)> = panels
+        .iter()
+        .map(|(n, p)| (n.as_str(), p.clone()))
+        .collect();
+    print!("{}", ascii_plot(&series, 72, 18));
+    println!("\nfit table:");
+    for row in &md_rows {
+        println!(
+            "  {:<14} a={} b={} c={} R²={}  rel@25%={} speedup@25%={}",
+            row[0], row[1], row[2], row[3], row[4], row[5], row[6]
+        );
+    }
+    println!("\nwrote reports/figure1.csv + figure1.md");
+}

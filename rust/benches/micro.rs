@@ -1,0 +1,146 @@
+//! Micro benchmarks — the paper's §2 complexity claims, measured:
+//!
+//! * FD insert/shrink throughput and O(ℓD) memory vs an explicit N×D store
+//! * Phase-II projection + scoring throughput (CPU path and, when
+//!   artifacts exist, the AOT/PJRT path incl. dispatch overhead)
+//! * streaming top-k (the O(N log k) term)
+//! * tensor substrate kernels (dot/axpy/matmul) that everything sits on
+//!
+//!     cargo bench --bench micro
+
+use sage::bench::timing::{report, time_fn};
+use sage::selection::{top_k_indices, AgreementScorer};
+use sage::sketch::FdSketch;
+use sage::tensor::{self, Matrix};
+use sage::util::rng::Pcg64;
+
+fn main() {
+    println!("=== micro: tensor substrate ===");
+    let mut rng = Pcg64::seeded(1);
+    let n = 4096;
+    let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let t = time_fn(100, 2000, || {
+        std::hint::black_box(tensor::dot(
+            std::hint::black_box(&a),
+            std::hint::black_box(&b),
+        ));
+    });
+    report(&format!("dot f32 x{n}"), &t);
+    println!(
+        "  -> {:.2} GFLOP/s",
+        2.0 * n as f64 * t.per_sec() / 1e9
+    );
+
+    let am = Matrix::from_fn(64, 1024, |_, _| rng.normal_f32());
+    let bm = Matrix::from_fn(64, 1024, |_, _| rng.normal_f32());
+    let t = time_fn(10, 200, || {
+        std::hint::black_box(am.matmul_transb(std::hint::black_box(&bm)));
+    });
+    report("matmul_transb 64x1024 @ 1024x64", &t);
+    println!(
+        "  -> {:.2} GFLOP/s",
+        2.0 * 64.0 * 64.0 * 1024.0 * t.per_sec() / 1e9
+    );
+
+    println!("\n=== micro: FD sketch (Phase I core) ===");
+    for (ell, d) in [(32usize, 9610usize), (64, 9610), (64, 102538)] {
+        let rows = Matrix::from_fn(2 * ell, d, |_, _| rng.normal_f32());
+        let mut fd = FdSketch::new(ell, d);
+        // Time the amortized insert (includes one shrink per 2ℓ inserts).
+        let t = time_fn(1, 8, || {
+            fd.insert_batch(std::hint::black_box(&rows));
+        });
+        let per_row = t.mean_ns / (2 * ell) as f64;
+        report(&format!("FD insert+shrink ell={ell} D={d}"), &t);
+        println!(
+            "  -> {:.1} us/row amortized | sketch {} KiB vs explicit 50k-row store {} MiB",
+            per_row / 1e3,
+            fd.memory_bytes() / 1024,
+            50_000 * d * 4 / (1 << 20)
+        );
+    }
+
+    println!("\n=== micro: Phase II scoring ===");
+    let (ell, d, batch) = (64usize, 9610usize, 64usize);
+    let sketch = Matrix::from_fn(ell, d, |_, _| rng.normal_f32());
+    let g = Matrix::from_fn(batch, d, |_, _| rng.normal_f32());
+    let t = time_fn(3, 50, || {
+        let mut zhat = g.matmul_transb(&sketch);
+        for r in 0..zhat.rows() {
+            tensor::normalize_in_place(zhat.row_mut(r));
+        }
+        std::hint::black_box(zhat);
+    });
+    report(&format!("project+normalize B={batch} ell={ell} D={d}"), &t);
+    println!(
+        "  -> {:.0} examples/s",
+        batch as f64 * t.per_sec()
+    );
+
+    let n_examples = 100_000usize;
+    let mut scorer = AgreementScorer::new(ell);
+    let zb = Matrix::from_fn(512, ell, |_, _| rng.normal_f32());
+    let idx: Vec<usize> = (0..512).collect();
+    let labels = vec![0u32; 512];
+    let norms = vec![1.0f32; 512];
+    let losses = vec![1.0f32; 512];
+    let t = time_fn(2, 50, || {
+        scorer.add_batch(&idx, &labels, &zb, &norms, &losses);
+    });
+    report("scorer.add_batch 512 rows", &t);
+
+    println!("\n=== micro: top-k (O(N log k)) ===");
+    let scores: Vec<f32> = (0..n_examples).map(|_| rng.normal_f32()).collect();
+    for k in [100usize, 10_000] {
+        let t = time_fn(2, 20, || {
+            std::hint::black_box(top_k_indices(std::hint::black_box(&scores), k));
+        });
+        report(&format!("top-{k} of {n_examples}"), &t);
+    }
+
+    // Naive alternative the paper avoids: full sort.
+    let t = time_fn(2, 20, || {
+        let mut s: Vec<f32> = scores.clone();
+        s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        std::hint::black_box(s);
+    });
+    report(&format!("full sort of {n_examples} (naive)"), &t);
+
+    // --- PJRT dispatch overhead, if artifacts are available ---
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n=== micro: PJRT dispatch (AOT path) ===");
+        let actor = sage::runtime::EngineActor::spawn("artifacts").unwrap();
+        use sage::runtime::ModelBackend;
+        for model in ["tiny", "small"] {
+            if actor.handle().cfg(model).is_err() {
+                continue;
+            }
+            let be = sage::runtime::XlaModelBackend::new(actor.handle(), model).unwrap();
+            let spec = be.spec();
+            let mut prng = Pcg64::seeded(3);
+            let params = spec.init_params(&mut prng);
+            let sk = Matrix::from_fn(be.ell(), spec.d(), |_, _| 0.05 * prng.normal_f32());
+            let x = Matrix::from_fn(be.score_batch(), spec.f, |_, _| prng.normal_f32());
+            let mut y = Matrix::zeros(be.score_batch(), spec.c);
+            for i in 0..be.score_batch() {
+                y.set(i, i % spec.c, 1.0);
+            }
+            be.score_fused(&params, &sk, &x, &y).unwrap(); // compile
+            let t = time_fn(3, 30, || {
+                std::hint::black_box(be.score_fused(&params, &sk, &x, &y).unwrap());
+            });
+            report(
+                &format!("score_fused {model} (B={} D={})", be.score_batch(), spec.d()),
+                &t,
+            );
+            println!(
+                "  -> {:.0} examples/s end-to-end through PJRT",
+                be.score_batch() as f64 * t.per_sec()
+            );
+        }
+    } else {
+        println!("\n(skip PJRT micro benches — run `make artifacts`)");
+    }
+    println!("\nmicro bench done");
+}

@@ -1,0 +1,172 @@
+//! Table 1 regeneration: test accuracy (%) at subset fractions
+//! f ∈ {5%, 15%, 25%, 100%} for all methods on the simulated CIFAR-100 and
+//! TinyImageNet benchmarks, mean over seeds. Writes `reports/table1.md`
+//! (+ .csv) in the paper's layout; absolute values live on the simulated
+//! substrate, the comparison *shape* (ordering, gaps) is the reproduction
+//! target (EXPERIMENTS.md §Table-1).
+//!
+//!     cargo bench --bench table1
+//!     SAGE_BENCH_SEEDS=3 SAGE_BENCH_N=4096 cargo bench --bench table1   # full
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sage::bench::runner::{run_cell, CellSpec};
+use sage::bench::{mean, std_dev, write_csv, write_markdown_table};
+use sage::config::Method;
+use sage::data::BenchmarkKind;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+fn main() {
+    let seeds = common::env_usize("SAGE_BENCH_SEEDS", 1);
+    let n_train = common::env_usize("SAGE_BENCH_N", 2048);
+    let epochs = common::env_usize("SAGE_BENCH_EPOCHS", 40);
+    let filter = common::dataset_filter();
+    let actor = common::maybe_actor();
+
+    let datasets = [BenchmarkKind::Cifar100, BenchmarkKind::TinyImageNet];
+    let fractions = [0.05, 0.15, 0.25];
+    let methods = [
+        Method::Random,
+        Method::Drop,
+        Method::Glister,
+        Method::Craig,
+        Method::GradMatch,
+        Method::Graft,
+        Method::Sage,
+    ];
+
+    // (dataset, method, fraction) -> accuracies over seeds.
+    let mut acc: BTreeMap<(String, String, String), Vec<f64>> = BTreeMap::new();
+    let t0 = std::time::Instant::now();
+    for kind in datasets {
+        if !common::keep_dataset(&filter, kind.name()) {
+            continue;
+        }
+        let bb = common::backend_for(kind, actor.as_ref());
+        eprintln!("[table1] {} on {}", kind.name(), bb.label);
+        // Full-data column.
+        for seed in 0..seeds as u64 {
+            let mut spec = CellSpec::new(kind, Method::Full, 1.0, seed);
+            spec.train_examples = n_train;
+            spec.test_examples = n_train / 2;
+            spec.epochs = epochs;
+            let r = run_cell(bb.backend.as_ref(), &spec, bb.shrink.clone()).expect("full cell");
+            acc.entry((kind.name().into(), "Full data".into(), "100%".into()))
+                .or_default()
+                .push(r.accuracy * 100.0);
+            eprintln!("  full seed {seed}: {:.2}% ({:.1}s)", r.accuracy * 100.0, r.total_seconds);
+        }
+        for method in methods {
+            for &f in &fractions {
+                for seed in 0..seeds as u64 {
+                    let mut spec = CellSpec::new(kind, method, f, seed);
+                    spec.train_examples = n_train;
+                    spec.test_examples = n_train / 2;
+                    spec.epochs = epochs;
+                    let r = run_cell(bb.backend.as_ref(), &spec, bb.shrink.clone()).expect("cell");
+                    acc.entry((
+                        kind.name().into(),
+                        method.name().into(),
+                        format!("{}%", (f * 100.0) as usize),
+                    ))
+                    .or_default()
+                    .push(r.accuracy * 100.0);
+                }
+                eprintln!(
+                    "  {} f={:.0}%: {:.2}%",
+                    method.name(),
+                    f * 100.0,
+                    mean(&acc[&(
+                        kind.name().to_string(),
+                        method.name().to_string(),
+                        format!("{}%", (f * 100.0) as usize)
+                    )])
+                );
+            }
+        }
+    }
+
+    // --- render in the paper's layout ---
+    let col_of = |ds: &str, m: &str, f: &str| -> String {
+        match acc.get(&(ds.to_string(), m.to_string(), f.to_string())) {
+            Some(v) if !v.is_empty() => {
+                if v.len() > 1 {
+                    format!("{:.1}±{:.1}", mean(v), std_dev(v))
+                } else {
+                    format!("{:.1}", mean(v))
+                }
+            }
+            _ => "_".into(),
+        }
+    };
+    let mut headers = vec!["Method".to_string()];
+    for ds in ["cifar100", "tinyimagenet"] {
+        for f in ["5%", "15%", "25%", "100%"] {
+            headers.push(format!("{ds} {f}"));
+        }
+    }
+    let mut rows = Vec::new();
+    let mut row_names: Vec<&str> = vec!["Full data"];
+    row_names.extend(methods.iter().map(|m| m.name()));
+    for name in row_names {
+        let mut row = vec![name.to_string()];
+        for ds in ["cifar100", "tinyimagenet"] {
+            for f in ["5%", "15%", "25%", "100%"] {
+                row.push(col_of(ds, name, f));
+            }
+        }
+        rows.push(row);
+    }
+    write_markdown_table(
+        Path::new("reports/table1.md"),
+        &format!(
+            "Table 1 (simulated): test accuracy (%) at subset fraction f — {seeds} seed(s), N={n_train}, {epochs} epochs"
+        ),
+        &headers,
+        &rows,
+    )
+    .unwrap();
+
+    let mut csv_rows = Vec::new();
+    for ((ds, m, f), v) in &acc {
+        for (i, a) in v.iter().enumerate() {
+            csv_rows.push(vec![
+                ds.clone(),
+                m.clone(),
+                f.clone(),
+                i.to_string(),
+                format!("{a:.3}"),
+            ]);
+        }
+    }
+    write_csv(
+        Path::new("reports/table1.csv"),
+        &["dataset".into(), "method".into(), "fraction".into(), "seed".into(), "accuracy".into()],
+        &csv_rows,
+    )
+    .unwrap();
+
+    println!("\n=== Table 1 (simulated substrate) ===");
+    println!("| {} |", headers.join(" | "));
+    for row in &rows {
+        println!("| {} |", row.join(" | "));
+    }
+    println!(
+        "\nwrote reports/table1.md + .csv in {:.1}s total",
+        t0.elapsed().as_secs_f64()
+    );
+    // Shape check mirrored from the paper: SAGE should lead at 5%.
+    for ds in ["cifar100", "tinyimagenet"] {
+        let sage = acc
+            .get(&(ds.to_string(), "SAGE".into(), "5%".into()))
+            .map(|v| mean(v))
+            .unwrap_or(0.0);
+        let rand = acc
+            .get(&(ds.to_string(), "Random".into(), "5%".into()))
+            .map(|v| mean(v))
+            .unwrap_or(0.0);
+        println!("shape check {ds}: SAGE@5% {sage:.1} vs Random@5% {rand:.1} (paper: SAGE wins)");
+    }
+}

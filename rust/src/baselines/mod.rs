@@ -1,0 +1,593 @@
+//! Baseline subset-selection methods — from-scratch re-implementations of
+//! every comparator in the paper's evaluation (§3): Random, DROP, GLISTER,
+//! CRAIG, GradMatch, GRAFT and GRAFT-Warm.
+//!
+//! All methods consume the same inputs SAGE does — the sketched per-example
+//! projections `z_i = S g_i` (plus labels/norms) — so the comparison
+//! isolates the *selection rule*, matching how the paper's harness fixes
+//! the training recipe across methods. Where the original operates on
+//! full gradients or deep features, the sketched projection is the
+//! substituted low-rank surrogate (DESIGN.md §3); each function documents
+//! its simplifications.
+
+use crate::config::Method;
+use crate::selection::{select_class_balanced, select_top_k, Scores, TopK};
+use crate::tensor::{self, Matrix};
+use crate::util::rng::Pcg64;
+
+/// Everything a selection rule may use.
+pub struct SelectionInputs<'a> {
+    pub scores: &'a Scores,
+    /// Mean *normalized* validation projection (GLISTER's target); computed
+    /// by the pipeline from a held-out split.
+    pub val_consensus: Option<Vec<f32>>,
+    pub num_classes: usize,
+    pub seed: u64,
+}
+
+/// Dispatch a method by name. `k` is the subset budget.
+pub fn select(method: Method, inputs: &SelectionInputs, k: usize) -> Vec<usize> {
+    select_weighted(method, inputs, k).0
+}
+
+/// Like [`select`], additionally returning per-selected-example training
+/// weights when the method defines them (CRAIG's facility-location cluster
+/// sizes — each selected medoid is weighted by the number of examples it
+/// covers, fed to `trainer::train_weighted`).
+pub fn select_weighted(
+    method: Method,
+    inputs: &SelectionInputs,
+    k: usize,
+) -> (Vec<usize>, Option<Vec<f32>>) {
+    let n = inputs.scores.entries.len();
+    let k = k.min(n);
+    if method == Method::Craig {
+        return craig_weighted(inputs, k);
+    }
+    let indices = select_unweighted(method, inputs, k);
+    (indices, None)
+}
+
+fn select_unweighted(method: Method, inputs: &SelectionInputs, k: usize) -> Vec<usize> {
+    let n = inputs.scores.entries.len();
+    let k = k.min(n);
+    match method {
+        // SAGE-as-benchmarked = per-class consensus (see Method docs);
+        // identical to CB-SAGE's selection rule.
+        Method::Sage | Method::CbSage => {
+            select_class_balanced(inputs.scores, inputs.num_classes, k)
+        }
+        // Algorithm 1 verbatim: global consensus, plain top-k.
+        Method::SageGlobal => select_top_k(inputs.scores, k),
+        Method::Random => random(inputs, k),
+        Method::Drop => drop_norm_proxy(inputs, k),
+        Method::Glister => glister(inputs, k),
+        Method::Craig => craig_weighted(inputs, k).0,
+        Method::GradMatch => gradmatch(inputs, k),
+        Method::Graft => graft(inputs, k, false),
+        Method::GraftWarm => graft(inputs, k, true),
+        Method::Full => (0..n).map(|r| inputs.scores.entries[r].index).collect(),
+    }
+}
+
+/// Uniform random subset (the floor every method must beat).
+fn random(inputs: &SelectionInputs, k: usize) -> Vec<usize> {
+    let mut rng = Pcg64::new(inputs.seed, 0x52414E44);
+    let n = inputs.scores.entries.len();
+    let rows = rng.sample_indices(n, k);
+    let mut out: Vec<usize> = rows
+        .into_iter()
+        .map(|r| inputs.scores.entries[r].index)
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// DROP — scalable importance-proxy pruning: a single cheap per-example
+/// proxy, no pairwise terms. Implementation: *drop* the highest-loss 20%
+/// at the scoring parameters (the unlearnable/noisy tail the proxy flags),
+/// then sample the budget uniformly from the survivors — keeping the
+/// diversity of random sampling while shedding inconsistent examples.
+/// (A raw gradient-norm top-k ranking inverts under label noise; see
+/// examples/noise_sweep.rs and the ablation bench.)
+fn drop_norm_proxy(inputs: &SelectionInputs, k: usize) -> Vec<usize> {
+    const DROP_FRACTION: f64 = 0.2;
+    let n = inputs.scores.entries.len();
+    let keep_n = ((n as f64 * (1.0 - DROP_FRACTION)) as usize).max(k.min(n));
+    // Rows sorted by ascending loss; survivors = first keep_n.
+    let mut rows: Vec<usize> = (0..n).collect();
+    rows.sort_by(|&a, &b| {
+        inputs.scores.entries[a]
+            .loss
+            .partial_cmp(&inputs.scores.entries[b].loss)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    rows.truncate(keep_n);
+    let mut rng = Pcg64::new(inputs.seed, 0xD80B);
+    let picks = rng.sample_indices(rows.len(), k.min(rows.len()));
+    let mut out: Vec<usize> = picks
+        .into_iter()
+        .map(|p| inputs.scores.entries[rows[p]].index)
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// GLISTER — generalization-based greedy: pick examples whose (sketched)
+/// gradients align with the *validation* gradient direction, re-estimating
+/// the residual target after each pick (one-step Taylor form of the bilevel
+/// objective, on projections).
+fn glister(inputs: &SelectionInputs, k: usize) -> Vec<usize> {
+    let scores = inputs.scores;
+    let n = scores.entries.len();
+    // Target: validation consensus; falls back to train consensus.
+    let target: Vec<f32> = inputs
+        .val_consensus
+        .clone()
+        .unwrap_or_else(|| scores.consensus.clone());
+    let mut residual: Vec<f64> = target.iter().map(|&v| v as f64).collect();
+    let mut chosen = vec![false; n];
+    let mut out = Vec::with_capacity(k);
+    let damp = 1.0 / (k.max(1) as f64);
+    for _ in 0..k {
+        let rf: Vec<f32> = residual.iter().map(|&v| v as f32).collect();
+        let mut best = usize::MAX;
+        let mut best_gain = f32::NEG_INFINITY;
+        for r in 0..n {
+            if chosen[r] {
+                continue;
+            }
+            let gain = tensor::dot(scores.zhat.row(r), &rf);
+            if gain > best_gain {
+                best_gain = gain;
+                best = r;
+            }
+        }
+        if best == usize::MAX {
+            break;
+        }
+        chosen[best] = true;
+        out.push(scores.entries[best].index);
+        // Move the target away from the captured direction (greedy residual).
+        let zr = scores.zhat.row(best);
+        for (j, &v) in zr.iter().enumerate() {
+            residual[j] -= damp * v as f64;
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// CRAIG — facility-location coverage: maximize Σ_i max_{j∈T} sim(i, j)
+/// with cosine similarity in the sketched space, via stochastic ("lazier
+/// than lazy") greedy [Mirzasoleiman et al. 2015]. Returns (indices,
+/// weights): weight_j = |cluster(j)| = #examples whose best selected
+/// similarity is achieved by medoid j.
+fn craig_weighted(inputs: &SelectionInputs, k: usize) -> (Vec<usize>, Option<Vec<f32>>) {
+    let scores = inputs.scores;
+    let n = scores.entries.len();
+    let mut rng = Pcg64::new(inputs.seed, 0xC4A16);
+    // best_sim[i] = max similarity of i to the selected set so far.
+    let mut best_sim = vec![f32::NEG_INFINITY; n];
+    let mut chosen = vec![false; n];
+    let mut out = Vec::with_capacity(k);
+    // Stochastic-greedy sample size: (n/k)·ln(1/ε), ε = 0.1 — min 32.
+    let sample = (((n as f64 / k.max(1) as f64) * (10.0f64).ln()).ceil() as usize)
+        .clamp(32, n);
+    // best_medoid[i] = which selected row currently covers example i.
+    let mut best_medoid = vec![usize::MAX; n];
+    let mut selected_rows: Vec<usize> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut best_row = usize::MAX;
+        let mut best_gain = f32::NEG_INFINITY;
+        for _ in 0..sample {
+            let r = rng.below(n as u64) as usize;
+            if chosen[r] {
+                continue;
+            }
+            // Marginal facility-location gain of adding r.
+            let zr = scores.zhat.row(r);
+            let mut gain = 0.0f32;
+            for i in 0..n {
+                let sim = tensor::dot(zr, scores.zhat.row(i));
+                let cur = if best_sim[i] == f32::NEG_INFINITY { 0.0 } else { best_sim[i] };
+                if sim > cur {
+                    gain += sim - cur;
+                }
+            }
+            if gain > best_gain {
+                best_gain = gain;
+                best_row = r;
+            }
+        }
+        if best_row == usize::MAX {
+            // All sampled rows were chosen; fall back to first unchosen.
+            match (0..n).find(|&r| !chosen[r]) {
+                Some(r) => best_row = r,
+                None => break,
+            }
+        }
+        chosen[best_row] = true;
+        out.push(scores.entries[best_row].index);
+        selected_rows.push(best_row);
+        let zb = scores.zhat.row(best_row).to_vec();
+        for i in 0..n {
+            let sim = tensor::dot(&zb, scores.zhat.row(i));
+            if sim > best_sim[i] {
+                best_sim[i] = sim;
+                best_medoid[i] = best_row;
+            }
+        }
+    }
+    // Cluster sizes -> weights, aligned with the (sorted) index order.
+    let mut cluster = std::collections::HashMap::new();
+    for &m in best_medoid.iter().filter(|&&m| m != usize::MAX) {
+        *cluster.entry(m).or_insert(0usize) += 1;
+    }
+    let mut pairs: Vec<(usize, f32)> = selected_rows
+        .iter()
+        .map(|&r| (
+            scores.entries[r].index,
+            cluster.get(&r).copied().unwrap_or(0).max(1) as f32,
+        ))
+        .collect();
+    pairs.sort_unstable_by_key(|&(i, _)| i);
+    let indices: Vec<usize> = pairs.iter().map(|&(i, _)| i).collect();
+    let weights: Vec<f32> = pairs.iter().map(|&(_, w)| w).collect();
+    (indices, Some(weights))
+}
+
+/// GradMatch — matching pursuit toward the full-data mean gradient in the
+/// sketched space: residual r ← z_Σ − Σ_{j∈T} ⟨proj⟩, greedy argmax ⟨ẑ_i, r⟩.
+/// (OMP's per-step least-squares re-solve is replaced by matching pursuit;
+/// with normalized atoms the greedy picks coincide in the well-separated
+/// regime the paper evaluates.)
+fn gradmatch(inputs: &SelectionInputs, k: usize) -> Vec<usize> {
+    let scores = inputs.scores;
+    let n = scores.entries.len();
+    let ell = scores.ell;
+    // Target: sum of raw projections  Σ z_i = Σ norm_i · ẑ_i.
+    let mut residual = vec![0.0f64; ell];
+    for (r, e) in scores.entries.iter().enumerate() {
+        let row = scores.zhat.row(r);
+        for (j, &v) in row.iter().enumerate() {
+            residual[j] += (e.norm * v) as f64;
+        }
+    }
+    let mut chosen = vec![false; n];
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        let rf: Vec<f32> = residual.iter().map(|&v| v as f32).collect();
+        let mut best = usize::MAX;
+        let mut best_val = f32::NEG_INFINITY;
+        for r in 0..n {
+            if chosen[r] {
+                continue;
+            }
+            let v = tensor::dot(scores.zhat.row(r), &rf);
+            if v > best_val {
+                best_val = v;
+                best = r;
+            }
+        }
+        if best == usize::MAX {
+            break;
+        }
+        chosen[best] = true;
+        out.push(scores.entries[best].index);
+        // Subtract the atom's projection onto the residual (matching pursuit).
+        let zb = scores.zhat.row(best);
+        let coef: f64 = zb
+            .iter()
+            .zip(residual.iter())
+            .map(|(&a, &b)| a as f64 * b)
+            .sum();
+        let coef = coef.max(0.0); // nonneg weights as in GradMatch
+        for (j, &v) in zb.iter().enumerate() {
+            residual[j] -= coef * v as f64;
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// GRAFT — gradient-aware Fast MaxVol: greedy rectangular max-volume row
+/// selection on the projected matrix (pivoted Gram–Schmidt: repeatedly take
+/// the row with the largest residual after projecting out the span of the
+/// selected rows), then fill any budget beyond the rank by the dynamic
+/// gradient-alignment adjustment (agreement score α_i; magnitude is NOT
+/// used for the fill — under label noise the largest-norm gradients are
+/// the mislabeled ones, see examples/noise_sweep.rs). `warm=true` (GRAFT-Warm)
+/// restricts MaxVol to a warm candidate pool of the `4k` highest-magnitude
+/// rows — the warm-start heuristic of the GRAFT paper.
+fn graft(inputs: &SelectionInputs, k: usize, warm: bool) -> Vec<usize> {
+    let scores = inputs.scores;
+    let n = scores.entries.len();
+    let ell = scores.ell;
+
+    // Candidate pool.
+    let pool: Vec<usize> = if warm {
+        let mut tk = TopK::new((4 * k).min(n));
+        for (r, e) in scores.entries.iter().enumerate() {
+            tk.push(e.norm, r);
+        }
+        tk.into_sorted_indices()
+    } else {
+        (0..n).collect()
+    };
+
+    // Raw z rows (magnitude matters for volume): z_i = norm_i * ẑ_i.
+    // residual_row[r] kept implicitly: we orthogonalize a working copy.
+    let mut work = Matrix::zeros(pool.len(), ell);
+    for (p, &r) in pool.iter().enumerate() {
+        let e = &scores.entries[r];
+        let src = scores.zhat.row(r);
+        let dst = work.row_mut(p);
+        for (j, &v) in src.iter().enumerate() {
+            dst[j] = e.norm * v;
+        }
+    }
+
+    let mut chosen_pool = vec![false; pool.len()];
+    let mut out_rows: Vec<usize> = Vec::with_capacity(k);
+    let maxvol_steps = k.min(ell);
+    for _ in 0..maxvol_steps {
+        // Largest residual row.
+        let mut best = usize::MAX;
+        let mut best_norm = 0.0f64;
+        for p in 0..pool.len() {
+            if chosen_pool[p] {
+                continue;
+            }
+            let nrm = tensor::norm2(work.row(p));
+            if nrm > best_norm {
+                best_norm = nrm;
+                best = p;
+            }
+        }
+        if best == usize::MAX || best_norm < 1e-9 {
+            break; // span exhausted
+        }
+        chosen_pool[best] = true;
+        out_rows.push(pool[best]);
+        // Orthogonalize remaining rows against the chosen direction.
+        let mut q = work.row(best).to_vec();
+        tensor::normalize_in_place(&mut q);
+        for p in 0..pool.len() {
+            if chosen_pool[p] {
+                continue;
+            }
+            let row = work.row_mut(p);
+            let c = tensor::dot(row, &q);
+            if c != 0.0 {
+                tensor::axpy(-c, &q, row);
+            }
+        }
+    }
+
+    // Fill the rest by alignment-adjusted magnitude.
+    if out_rows.len() < k {
+        let mut tk = TopK::new(k - out_rows.len());
+        let in_out: std::collections::HashSet<usize> = out_rows.iter().copied().collect();
+        for (r, e) in scores.entries.iter().enumerate() {
+            if in_out.contains(&r) {
+                continue;
+            }
+            tk.push(e.alpha, r);
+        }
+        out_rows.extend(tk.into_sorted_indices());
+    }
+
+    let mut out: Vec<usize> = out_rows
+        .into_iter()
+        .map(|r| scores.entries[r].index)
+        .collect();
+    out.sort_unstable();
+    out.truncate(k);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::AgreementScorer;
+    use crate::util::check::forall;
+
+    fn make_scores(rng: &mut Pcg64, n: usize, ell: usize, classes: u32) -> Scores {
+        let mut scorer = AgreementScorer::new(ell);
+        let mut z = Matrix::zeros(n, ell);
+        let mut norms = vec![0.0f32; n];
+        let mut dir = vec![0.0f32; ell];
+        rng.fill_normal(&mut dir, 1.0);
+        tensor::normalize_in_place(&mut dir);
+        for i in 0..n {
+            let row = z.row_mut(i);
+            for (j, &d) in dir.iter().enumerate() {
+                row[j] = d + 0.8 * rng.normal_f32();
+            }
+            norms[i] = (0.2 + 2.0 * rng.next_f32()) as f32;
+            tensor::normalize_in_place(row);
+        }
+        let idx: Vec<usize> = (0..n).collect();
+        let labels: Vec<u32> = (0..n).map(|_| rng.below(classes as u64) as u32).collect();
+        scorer.add_batch(&idx, &labels, &z, &norms, &vec![1.0; n]);
+        scorer.finalize()
+    }
+
+    fn inputs<'a>(scores: &'a Scores, classes: usize) -> SelectionInputs<'a> {
+        SelectionInputs {
+            scores,
+            val_consensus: None,
+            num_classes: classes,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn every_method_returns_k_unique_valid_indices() {
+        forall("baselines_k", 6, |rng| {
+            let n = 60 + rng.below(60) as usize;
+            let scores = make_scores(rng, n, 8, 4);
+            let inp = inputs(&scores, 4);
+            let k = 1 + rng.below(40) as usize;
+            for m in [
+                Method::Sage,
+                Method::SageGlobal,
+                Method::CbSage,
+                Method::Random,
+                Method::Drop,
+                Method::Glister,
+                Method::Craig,
+                Method::GradMatch,
+                Method::Graft,
+                Method::GraftWarm,
+            ] {
+                let sel = select(m, &inp, k);
+                assert_eq!(sel.len(), k, "{m:?}");
+                let mut uniq = sel.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                assert_eq!(uniq.len(), k, "{m:?} dup indices");
+                assert!(uniq.iter().all(|&i| i < n), "{m:?} oob");
+            }
+        });
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let mut rng = Pcg64::seeded(1);
+        let scores = make_scores(&mut rng, 100, 8, 4);
+        let inp = inputs(&scores, 4);
+        let a = select(Method::Random, &inp, 20);
+        let b = select(Method::Random, &inp, 20);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn drop_excludes_highest_loss_tail() {
+        let mut rng = Pcg64::seeded(2);
+        let mut scores = make_scores(&mut rng, 50, 6, 2);
+        for e in scores.entries.iter_mut() {
+            e.loss = rng.next_f32() * 3.0;
+        }
+        let inp = inputs(&scores, 2);
+        let sel = select(Method::Drop, &inp, 10);
+        assert_eq!(sel.len(), 10);
+        // Survivor pool = lowest-loss 80%; nothing above that cut is kept.
+        let mut losses: Vec<f32> = scores.entries.iter().map(|e| e.loss).collect();
+        losses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cut = losses[39]; // 80% of 50
+        for &i in &sel {
+            let e = scores.entries.iter().find(|e| e.index == i).unwrap();
+            assert!(e.loss <= cut + 1e-6, "kept loss {} above cut {cut}", e.loss);
+        }
+        // Deterministic per seed.
+        assert_eq!(sel, select(Method::Drop, &inp, 10));
+    }
+
+    #[test]
+    fn craig_improves_coverage_over_random() {
+        // Facility-location objective of CRAIG's pick should beat random's.
+        let mut rng = Pcg64::seeded(3);
+        let scores = make_scores(&mut rng, 120, 8, 4);
+        let inp = inputs(&scores, 4);
+        let fl = |sel: &[usize]| -> f64 {
+            let rows: Vec<usize> = sel
+                .iter()
+                .map(|&i| scores.entries.iter().position(|e| e.index == i).unwrap())
+                .collect();
+            (0..120)
+                .map(|i| {
+                    rows.iter()
+                        .map(|&r| tensor::dot(scores.zhat.row(i), scores.zhat.row(r)) as f64)
+                        .fold(f64::NEG_INFINITY, f64::max)
+                })
+                .sum()
+        };
+        let c = fl(&select(Method::Craig, &inp, 12));
+        let r = fl(&select(Method::Random, &inp, 12));
+        assert!(c >= r - 1e-6, "craig {c} < random {r}");
+    }
+
+    #[test]
+    fn gradmatch_first_pick_matches_sum_direction() {
+        // MP's first atom must be argmax ⟨ẑ_i, Σ_j z_j⟩ (the residual starts
+        // at the full-gradient sum); later picks diversify by design.
+        let mut rng = Pcg64::seeded(4);
+        let scores = make_scores(&mut rng, 80, 8, 4);
+        let inp = inputs(&scores, 4);
+        let sel = select(Method::GradMatch, &inp, 20);
+        assert_eq!(sel.len(), 20);
+        let mut target = vec![0.0f32; 8];
+        for (r, e) in scores.entries.iter().enumerate() {
+            for (j, &v) in scores.zhat.row(r).iter().enumerate() {
+                target[j] += e.norm * v;
+            }
+        }
+        let best = (0..80)
+            .max_by(|&a, &b| {
+                tensor::dot(scores.zhat.row(a), &target)
+                    .partial_cmp(&tensor::dot(scores.zhat.row(b), &target))
+                    .unwrap()
+            })
+            .unwrap();
+        assert!(sel.contains(&scores.entries[best].index));
+    }
+
+    #[test]
+    fn graft_first_picks_span_distinct_directions() {
+        let mut rng = Pcg64::seeded(5);
+        let scores = make_scores(&mut rng, 100, 6, 4);
+        let inp = inputs(&scores, 4);
+        let sel = select(Method::Graft, &inp, 6);
+        // Gram of the selected ẑ rows should be well-conditioned (volume > 0).
+        let rows: Vec<usize> = sel
+            .iter()
+            .map(|&i| scores.entries.iter().position(|e| e.index == i).unwrap())
+            .collect();
+        let mut m = Matrix::zeros(6, 6);
+        for (a, &ra) in rows.iter().enumerate() {
+            for (b, &rb) in rows.iter().enumerate() {
+                m.set(a, b, tensor::dot(scores.zhat.row(ra), scores.zhat.row(rb)));
+            }
+        }
+        let g64: Vec<f64> = m.as_slice().iter().map(|&v| v as f64).collect();
+        let det = crate::linalg::abs_det(&g64, 6);
+        assert!(det > 1e-8, "volume {det}");
+    }
+
+    #[test]
+    fn glister_uses_validation_direction() {
+        let mut rng = Pcg64::seeded(6);
+        let scores = make_scores(&mut rng, 100, 8, 4);
+        // Validation consensus = a specific basis direction.
+        let mut v = vec![0.0f32; 8];
+        v[0] = 1.0;
+        let inp = SelectionInputs {
+            scores: &scores,
+            val_consensus: Some(v),
+            num_classes: 4,
+            seed: 7,
+        };
+        let sel = select(Method::Glister, &inp, 10);
+        // Selected rows should have above-average first coordinate.
+        let mean_sel: f32 = sel
+            .iter()
+            .map(|&i| {
+                let r = scores.entries.iter().position(|e| e.index == i).unwrap();
+                scores.zhat.row(r)[0]
+            })
+            .sum::<f32>()
+            / 10.0;
+        let mean_all: f32 = (0..100).map(|r| scores.zhat.row(r)[0]).sum::<f32>() / 100.0;
+        assert!(mean_sel > mean_all, "{mean_sel} <= {mean_all}");
+    }
+
+    #[test]
+    fn full_returns_everything() {
+        let mut rng = Pcg64::seeded(8);
+        let scores = make_scores(&mut rng, 30, 4, 2);
+        let inp = inputs(&scores, 2);
+        assert_eq!(select(Method::Full, &inp, 5).len(), 30);
+    }
+}

@@ -1,0 +1,141 @@
+//! Generalized exponential response fit — Figure 1's "empirical response
+//! curves are modeled using a generalized exponential fit, and all results
+//! include R² fit quality".
+//!
+//! Model: `y(x) = a − b·exp(−c·x)` (saturating accuracy vs subset fraction).
+//! For fixed `c` the model is linear in `(a, b)`, so we grid-search `c` and
+//! solve the 2×2 normal equations exactly — robust for the 4-point curves
+//! the paper fits, no iterative optimizer needed.
+
+/// Fitted parameters + quality.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpFit {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub r2: f64,
+}
+
+impl ExpFit {
+    pub fn predict(&self, x: f64) -> f64 {
+        self.a - self.b * (-self.c * x).exp()
+    }
+}
+
+/// Coefficient of determination of predictions vs observations.
+pub fn r_squared(ys: &[f64], preds: &[f64]) -> f64 {
+    assert_eq!(ys.len(), preds.len());
+    let n = ys.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mean = ys.iter().sum::<f64>() / n as f64;
+    let ss_tot: f64 = ys.iter().map(|y| (y - mean).powi(2)).sum();
+    let ss_res: f64 = ys.iter().zip(preds).map(|(y, p)| (y - p).powi(2)).sum();
+    if ss_tot <= 1e-18 {
+        return if ss_res <= 1e-18 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Fit `y = a − b·exp(−c·x)` over (xs, ys). Grid-searches c ∈ [0.01, 100]
+/// (log-spaced) and returns the best-R² fit.
+pub fn exp_fit(xs: &[f64], ys: &[f64]) -> ExpFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least 2 points");
+    let mut best = ExpFit {
+        a: ys.iter().sum::<f64>() / ys.len() as f64,
+        b: 0.0,
+        c: 0.0,
+        r2: f64::NEG_INFINITY,
+    };
+    let steps = 200;
+    for i in 0..=steps {
+        // log grid 0.01 .. 100
+        let c = 10f64.powf(-2.0 + 4.0 * i as f64 / steps as f64);
+        // Linear LS for (a, b) with basis [1, -exp(-c x)].
+        let n = xs.len() as f64;
+        let mut s_e = 0.0; // Σ e_i,  e_i = -exp(-c x_i)
+        let mut s_ee = 0.0;
+        let mut s_y = 0.0;
+        let mut s_ye = 0.0;
+        for (&x, &y) in xs.iter().zip(ys) {
+            let e = -(-c * x).exp();
+            s_e += e;
+            s_ee += e * e;
+            s_y += y;
+            s_ye += y * e;
+        }
+        // Normal equations: [n, s_e; s_e, s_ee] [a; b] = [s_y; s_ye]
+        let det = n * s_ee - s_e * s_e;
+        if det.abs() < 1e-12 {
+            continue;
+        }
+        let a = (s_y * s_ee - s_e * s_ye) / det;
+        let b = (n * s_ye - s_e * s_y) / det;
+        let preds: Vec<f64> = xs.iter().map(|&x| a - b * (-c * x).exp()).collect();
+        let r2 = r_squared(ys, &preds);
+        if r2 > best.r2 {
+            best = ExpFit { a, b, c, r2 };
+        }
+    }
+    if best.r2 == f64::NEG_INFINITY {
+        best.r2 = 0.0;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn recovers_known_curve() {
+        forall("exp_fit_recover", 10, |rng| {
+            let a = 0.5 + rng.next_f64();
+            let b = 0.1 + rng.next_f64();
+            let c = 0.5 + 8.0 * rng.next_f64();
+            let xs = [0.05, 0.15, 0.25, 0.5, 1.0];
+            let ys: Vec<f64> = xs.iter().map(|&x| a - b * (-c * x).exp()).collect();
+            let fit = exp_fit(&xs, &ys);
+            assert!(fit.r2 > 0.999, "r2 {}", fit.r2);
+            for (&x, &y) in xs.iter().zip(&ys) {
+                assert!((fit.predict(x) - y).abs() < 5e-3, "{x}");
+            }
+        });
+    }
+
+    #[test]
+    fn noisy_curve_reasonable_r2() {
+        forall("exp_fit_noise", 10, |rng| {
+            let xs = [0.05, 0.15, 0.25, 1.0];
+            let ys: Vec<f64> = xs
+                .iter()
+                .map(|&x: &f64| 0.9 - 0.5 * (-6.0 * x).exp() + 0.01 * rng.normal())
+                .collect();
+            let fit = exp_fit(&xs, &ys);
+            assert!(fit.r2 > 0.8, "r2 {}", fit.r2);
+        });
+    }
+
+    #[test]
+    fn r_squared_bounds() {
+        let ys = [1.0, 2.0, 3.0];
+        assert!((r_squared(&ys, &ys) - 1.0).abs() < 1e-12);
+        let bad = [3.0, 1.0, 2.0];
+        assert!(r_squared(&ys, &bad) < 1.0);
+        // Constant target, perfect prediction.
+        assert_eq!(r_squared(&[2.0, 2.0], &[2.0, 2.0]), 1.0);
+    }
+
+    #[test]
+    fn monotone_saturating_prediction() {
+        let xs = [0.05, 0.15, 0.25, 1.0];
+        let ys = [0.4, 0.7, 0.8, 0.9];
+        let fit = exp_fit(&xs, &ys);
+        assert!(fit.r2 > 0.9);
+        assert!(fit.predict(0.05) < fit.predict(0.25));
+        assert!(fit.predict(1.0) <= fit.a + 1e-9);
+    }
+}

@@ -1,0 +1,70 @@
+//! Benchmark harness library: experiment runner (one (dataset, method,
+//! fraction, seed) cell of the paper's evaluation), the generalized
+//! exponential fit + R² used by Figure 1, small-sample statistics, and
+//! markdown/CSV report writers. The `cargo bench` targets in
+//! `rust/benches/` are thin drivers over this module.
+
+pub mod fit;
+pub mod report;
+pub mod runner;
+pub mod timing;
+
+pub use fit::{exp_fit, r_squared, ExpFit};
+pub use report::{write_csv, write_markdown_table};
+pub use runner::{run_cell, CellResult, CellSpec};
+pub use timing::{time_fn, Timing};
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// 95% confidence half-width with small-sample t quantiles (the paper
+/// reports mean ± 95% CI over 3 seeds).
+pub fn ci95(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    // t_{0.975, n-1} for tiny n; 1.96 beyond the table.
+    let t = match n - 1 {
+        1 => 12.706,
+        2 => 4.303,
+        3 => 3.182,
+        4 => 2.776,
+        5 => 2.571,
+        6 => 2.447,
+        7 => 2.365,
+        8 => 2.306,
+        9 => 2.262,
+        _ => 1.96,
+    };
+    t * std_dev(xs) / (n as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_ci() {
+        let xs = [1.0, 2.0, 3.0];
+        assert!((mean(&xs) - 2.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.0).abs() < 1e-12);
+        // t=4.303, sd=1, n=3 -> 4.303/sqrt(3).
+        assert!((ci95(&xs) - 4.303 / 3f64.sqrt()).abs() < 1e-9);
+        assert_eq!(ci95(&[5.0]), 0.0);
+    }
+}

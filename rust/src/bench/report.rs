@@ -1,0 +1,144 @@
+//! Report writers: markdown tables (Table-1 style) and CSV series
+//! (Figure-1 style) under `reports/`.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a markdown table: `headers` then rows of cells.
+pub fn write_markdown_table(
+    path: &Path,
+    title: &str,
+    headers: &[String],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "# {title}\n")?;
+    writeln!(f, "| {} |", headers.join(" | "))?;
+    writeln!(
+        f,
+        "|{}|",
+        headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+    )?;
+    for row in rows {
+        writeln!(f, "| {} |", row.join(" | "))?;
+    }
+    f.flush()
+}
+
+/// Write a CSV file with a header row.
+pub fn write_csv(path: &Path, headers: &[String], rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", headers.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    f.flush()
+}
+
+/// Render a crude ASCII scatter of (x, y) series for terminal reports —
+/// the Figure-1 "accuracy vs speed-up" panel without a plotting stack.
+pub fn ascii_plot(series: &[(&str, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, pts)| pts.clone()).collect();
+    if all.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut xmin, mut xmax, mut ymin, mut ymax) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['S', 'r', 'd', 'g', 'c', 'm', 'f', 'w', 'x', 'o'];
+    for (si, (_name, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts {
+            let col = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let row = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - row][col] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "x: {:.2}..{:.2}  y: {:.3}..{:.3}  legend: {}\n",
+        xmin,
+        xmax,
+        ymin,
+        ymax,
+        series
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| format!("{}={}", marks[i % marks.len()], n))
+            .collect::<Vec<_>>()
+            .join(" ")
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_table_round_trip() {
+        let dir = std::env::temp_dir().join(format!("sage_report_{}", std::process::id()));
+        let path = dir.join("t.md");
+        write_markdown_table(
+            &path,
+            "Table 1",
+            &["Method".into(), "5%".into()],
+            &[vec!["SAGE".into(), "59.2".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("# Table 1"));
+        assert!(text.contains("| SAGE | 59.2 |"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join(format!("sage_csv_{}", std::process::id()));
+        let path = dir.join("f.csv");
+        write_csv(
+            &path,
+            &["a".into(), "b".into()],
+            &[vec!["1".into(), "2".into()]],
+        )
+        .unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ascii_plot_has_marks() {
+        let s = ascii_plot(
+            &[("SAGE", vec![(1.0, 0.5), (2.0, 0.9)]), ("Random", vec![(1.5, 0.3)])],
+            40,
+            10,
+        );
+        assert!(s.contains('S'));
+        assert!(s.contains('r'));
+        assert!(s.contains("legend"));
+    }
+}

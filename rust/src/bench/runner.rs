@@ -1,0 +1,182 @@
+//! Experiment runner: one cell of the paper's evaluation grid.
+//!
+//! A *cell* is `(dataset, method, fraction, seed)`. Running it means:
+//! generate the simulated benchmark → (if fraction < 1) run the two-pass
+//! selection pipeline → train on the kept subset → evaluate top-1 accuracy
+//! and wall-clock. "Full data" cells skip selection. Wall-clock matches the
+//! paper's definition: *end-to-end including selection*.
+
+use crate::config::Method;
+use crate::data::{generate, BenchmarkKind, Dataset};
+use crate::pipeline::{run_selection, PipelineConfig};
+use crate::runtime::ModelBackend;
+use crate::sketch::ShrinkBackend;
+use crate::trainer::{train_weighted, TrainConfig};
+use std::sync::Arc;
+
+/// Specification of one experiment cell.
+#[derive(Clone, Debug)]
+pub struct CellSpec {
+    pub dataset: BenchmarkKind,
+    pub method: Method,
+    pub fraction: f64,
+    pub seed: u64,
+    pub train_examples: usize,
+    pub test_examples: usize,
+    pub epochs: usize,
+    pub base_lr: f64,
+    pub workers: usize,
+    pub warmup_steps: usize,
+}
+
+impl CellSpec {
+    pub fn new(dataset: BenchmarkKind, method: Method, fraction: f64, seed: u64) -> Self {
+        Self {
+            dataset,
+            method,
+            fraction,
+            seed,
+            train_examples: 4096,
+            test_examples: 1024,
+            epochs: 10,
+            base_lr: 0.05,
+            workers: crate::util::threadpool::default_threads().min(4),
+            warmup_steps: 30,
+        }
+    }
+}
+
+/// Result of one cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub dataset: &'static str,
+    pub method: &'static str,
+    pub fraction: f64,
+    pub seed: u64,
+    pub accuracy: f64,
+    pub select_seconds: f64,
+    pub train_seconds: f64,
+    /// End-to-end (selection + training), the paper's wall-clock.
+    pub total_seconds: f64,
+    pub subset_size: usize,
+    pub sketch_bytes: usize,
+}
+
+/// Generate the (train, test) pair for a cell. Feature dim comes from the
+/// backend so the same datasets work for reference and XLA backends.
+pub fn cell_datasets(spec: &CellSpec, features: usize) -> (Dataset, Dataset) {
+    let synth = spec.dataset.spec(features);
+    let train = generate(&synth, spec.train_examples, spec.seed, 0);
+    let test = generate(&synth, spec.test_examples, spec.seed, 1);
+    (train, test)
+}
+
+/// Run one cell on the given backend.
+pub fn run_cell(
+    backend: &dyn ModelBackend,
+    spec: &CellSpec,
+    shrink: Option<Arc<dyn ShrinkBackend>>,
+) -> Result<CellResult, String> {
+    let mspec = backend.spec();
+    if mspec.c != spec.dataset.num_classes() {
+        return Err(format!(
+            "backend classes {} != dataset {} ({})",
+            mspec.c,
+            spec.dataset.num_classes(),
+            spec.dataset.name()
+        ));
+    }
+    let (train_ds, test_ds) = cell_datasets(spec, mspec.f);
+    let full = spec.method == Method::Full || spec.fraction >= 1.0;
+
+    let (subset, weights, select_seconds, sketch_bytes) = if full {
+        (train_ds.clone(), None, 0.0, 0)
+    } else {
+        let k = ((spec.fraction * train_ds.len() as f64).ceil() as usize)
+            .clamp(1, train_ds.len());
+        let pcfg = PipelineConfig {
+            workers: spec.workers,
+            warmup_steps: spec.warmup_steps,
+            warmup_lr: spec.base_lr,
+            seed: spec.seed,
+            ..Default::default()
+        };
+        let out = run_selection(backend, &train_ds, spec.method, k, &pcfg, shrink)?;
+        let secs = out.warmup_seconds + out.phase1.seconds + out.phase2.seconds + out.select_seconds;
+        (
+            train_ds.subset(&out.indices),
+            out.weights,
+            secs,
+            out.sketch_bytes,
+        )
+    };
+
+    let tcfg = TrainConfig {
+        epochs: spec.epochs,
+        base_lr: spec.base_lr,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    let res = train_weighted(backend, &subset, &test_ds, &tcfg, weights.as_deref())?;
+
+    Ok(CellResult {
+        dataset: spec.dataset.name(),
+        method: spec.method.name(),
+        fraction: spec.fraction,
+        seed: spec.seed,
+        accuracy: res.test_accuracy,
+        select_seconds,
+        train_seconds: res.train_seconds,
+        total_seconds: select_seconds + res.train_seconds,
+        subset_size: subset.len(),
+        sketch_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::{MlpSpec, TrainHyper};
+    use crate::runtime::ReferenceModelBackend;
+
+    fn backend() -> ReferenceModelBackend {
+        ReferenceModelBackend::new(MlpSpec::new(8, 12, 10), TrainHyper::default(), 16, 16, 8)
+    }
+
+    fn small_spec(method: Method, fraction: f64) -> CellSpec {
+        CellSpec {
+            train_examples: 200,
+            test_examples: 100,
+            epochs: 3,
+            workers: 2,
+            warmup_steps: 3,
+            ..CellSpec::new(BenchmarkKind::Cifar10, method, fraction, 0)
+        }
+    }
+
+    #[test]
+    fn full_cell_runs_without_selection() {
+        let r = run_cell(&backend(), &small_spec(Method::Full, 1.0), None).unwrap();
+        assert_eq!(r.subset_size, 200);
+        assert_eq!(r.select_seconds, 0.0);
+        assert!(r.accuracy > 0.2);
+    }
+
+    #[test]
+    fn sage_cell_selects_and_trains() {
+        let r = run_cell(&backend(), &small_spec(Method::Sage, 0.25), None).unwrap();
+        assert_eq!(r.subset_size, 50);
+        assert!(r.select_seconds > 0.0);
+        assert!(r.total_seconds >= r.train_seconds);
+        assert!(r.sketch_bytes > 0);
+    }
+
+    #[test]
+    fn class_mismatch_rejected() {
+        let spec = CellSpec {
+            train_examples: 100,
+            ..CellSpec::new(BenchmarkKind::Cifar100, Method::Sage, 0.25, 0)
+        };
+        assert!(run_cell(&backend(), &spec, None).is_err());
+    }
+}

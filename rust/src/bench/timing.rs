@@ -1,0 +1,104 @@
+//! Micro-bench timing harness (criterion is unavailable offline): warmup +
+//! repeated timed runs with mean / p50 / min / max over iterations.
+
+use std::time::Instant;
+
+/// Timing summary in nanoseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            0.0
+        } else {
+            1e9 / self.mean_ns
+        }
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        fn fmt_ns(ns: f64) -> String {
+            if ns >= 1e9 {
+                format!("{:.2}s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.2}ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.2}us", ns / 1e3)
+            } else {
+                format!("{ns:.0}ns")
+            }
+        }
+        write!(
+            f,
+            "mean {} | p50 {} | min {} | max {} ({} iters)",
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.max_ns),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Timing {
+        iters,
+        mean_ns: mean,
+        median_ns: samples[samples.len() / 2],
+        min_ns: samples[0],
+        max_ns: *samples.last().unwrap(),
+    }
+}
+
+/// Convenience: print a labelled timing row.
+pub fn report(label: &str, t: &Timing) {
+    println!("{label:<44} {t}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_counts_iters() {
+        let mut n = 0;
+        let t = time_fn(2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(t.iters, 10);
+        assert!(t.min_ns <= t.median_ns && t.median_ns <= t.max_ns);
+        assert!(t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn display_formats_units() {
+        let t = Timing {
+            iters: 1,
+            mean_ns: 2.5e6,
+            median_ns: 2.5e6,
+            min_ns: 1e3,
+            max_ns: 3e9,
+        };
+        let s = format!("{t}");
+        assert!(s.contains("ms") && s.contains("us") && s.contains('s'));
+    }
+}

@@ -1,0 +1,255 @@
+//! Command-line parsing (from scratch — no clap offline).
+//!
+//! Grammar: `sage <subcommand> [--flag] [--key value] [positional...]`.
+//! Subcommands are declared with their flags so `--help` is generated and
+//! unknown flags fail loudly instead of being silently dropped.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// A declared subcommand.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+/// Parse result for a subcommand invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &'static str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|e| format!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|e| format!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Application definition: subcommands + global help.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        out.push_str("\nRun '<command> --help' for command options.\n");
+        out
+    }
+
+    pub fn command_usage(&self, cmd: &Command) -> String {
+        let mut out = format!("{} {} — {}\n\nOPTIONS:\n", self.name, cmd.name, cmd.about);
+        for o in &cmd.opts {
+            let arg = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  {arg:<24} {}{def}\n", o.help));
+        }
+        out
+    }
+
+    /// Parse argv (excluding argv[0]). Returns Err(message) on bad input;
+    /// the message for `--help` is the usage text (caller prints + exits 0).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, String> {
+        let Some(cmd_name) = argv.first() else {
+            return Err(self.usage());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command '{cmd_name}'\n\n{}", self.usage()))?;
+
+        let mut parsed = Parsed {
+            command: cmd.name.to_string(),
+            ..Default::default()
+        };
+        // Seed defaults.
+        for o in &cmd.opts {
+            if let (true, Some(d)) = (o.takes_value, o.default) {
+                parsed.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.command_usage(cmd));
+            }
+            if let Some(name) = tok.strip_prefix("--") {
+                // Support --key=value.
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let opt = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option '--{name}' for '{}'", cmd.name))?;
+                if opt.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    parsed.values.insert(name.to_string(), value);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    parsed.flags.push(name.to_string());
+                }
+            } else {
+                parsed.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(parsed)
+    }
+}
+
+/// Shared option rows used by several subcommands.
+pub fn common_run_opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "dataset", takes_value: true, help: "benchmark: cifar10|cifar100|fmnist|tinyimagenet|caltech256", default: Some("cifar10") },
+        Opt { name: "model", takes_value: true, help: "artifact config name", default: Some("small") },
+        Opt { name: "method", takes_value: true, help: "selection method", default: Some("sage") },
+        Opt { name: "fraction", takes_value: true, help: "kept fraction f", default: Some("0.25") },
+        Opt { name: "seed", takes_value: true, help: "experiment seed", default: Some("0") },
+        Opt { name: "train-examples", takes_value: true, help: "N train", default: Some("4096") },
+        Opt { name: "test-examples", takes_value: true, help: "N test", default: Some("1024") },
+        Opt { name: "epochs", takes_value: true, help: "training epochs", default: Some("10") },
+        Opt { name: "lr", takes_value: true, help: "base learning rate", default: Some("0.05") },
+        Opt { name: "threads", takes_value: true, help: "worker threads", default: None },
+        Opt { name: "artifacts", takes_value: true, help: "artifacts directory", default: Some("artifacts") },
+        Opt { name: "config", takes_value: true, help: "INI config file (CLI overrides)", default: None },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "sage",
+            about: "test app",
+            commands: vec![
+                Command {
+                    name: "select",
+                    about: "run selection",
+                    opts: vec![
+                        Opt { name: "fraction", takes_value: true, help: "f", default: Some("0.25") },
+                        Opt { name: "verbose", takes_value: false, help: "chatty", default: None },
+                    ],
+                },
+                Command { name: "train", about: "train", opts: common_run_opts() },
+            ],
+        }
+    }
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let p = app()
+            .parse(&args(&["select", "--fraction", "0.05", "--verbose", "outfile"]))
+            .unwrap();
+        assert_eq!(p.command, "select");
+        assert_eq!(p.get("fraction"), Some("0.05"));
+        assert!(p.has_flag("verbose"));
+        assert_eq!(p.positional, vec!["outfile"]);
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let p = app().parse(&args(&["select", "--fraction=0.15"])).unwrap();
+        assert_eq!(p.get_f64("fraction").unwrap(), Some(0.15));
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let p = app().parse(&args(&["select"])).unwrap();
+        assert_eq!(p.get("fraction"), Some("0.25"));
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(app().parse(&args(&["select", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(app().parse(&args(&["select", "--fraction"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_rejected_and_help_is_err() {
+        assert!(app().parse(&args(&["frobnicate"])).is_err());
+        let help = app().parse(&args(&["--help"])).unwrap_err();
+        assert!(help.contains("COMMANDS"));
+        let chelp = app().parse(&args(&["select", "--help"])).unwrap_err();
+        assert!(chelp.contains("--fraction"));
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(app().parse(&args(&["select", "--verbose=1"])).is_err());
+    }
+}

@@ -1,0 +1,354 @@
+//! Config system: INI-style text config (`[section]`, `key = value`, `#`
+//! comments) plus the typed [`RunSpec`] the launcher/benches consume.
+//! From scratch (no serde/toml offline); values support string, number,
+//! bool, and comma lists.
+
+use std::collections::BTreeMap;
+
+/// Parsed raw config: section -> key -> raw string value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(stripped) = line.strip_prefix('[') {
+                let name = stripped
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                cfg.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), v.trim().to_string());
+            } else {
+                return Err(format!("line {}: expected 'key = value'", lineno + 1));
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// Override/insert a value (CLI `--set section.key=value`).
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>, String> {
+        self.get(section, key)
+            .map(|v| v.parse().map_err(|e| format!("{section}.{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>, String> {
+        self.get(section, key)
+            .map(|v| v.parse().map_err(|e| format!("{section}.{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some("true" | "1" | "yes") => Ok(Some(true)),
+            Some("false" | "0" | "no") => Ok(Some(false)),
+            Some(v) => Err(format!("{section}.{key}: bad bool '{v}'")),
+        }
+    }
+
+    pub fn get_list(&self, section: &str, key: &str) -> Option<Vec<String>> {
+        self.get(section, key).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+/// Selection method identifiers (SAGE + all paper baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// SAGE as benchmarked: agreement scoring with per-class consensus
+    /// (equals the paper's plain SAGE at ResNet scale; see DESIGN.md §3 —
+    /// on a small-D MLP the global consensus is class-dominated, so the
+    /// per-class centroid form is the faithful substrate adaptation).
+    Sage,
+    /// Algorithm 1 lines 14-15/20 verbatim: ONE global consensus direction.
+    /// Kept for ablations (`cargo bench --bench ablation`).
+    SageGlobal,
+    CbSage,
+    Random,
+    Drop,
+    Glister,
+    Craig,
+    GradMatch,
+    Graft,
+    GraftWarm,
+    Full,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sage" => Method::Sage,
+            "sage-global" | "sageglobal" | "sage_global" => Method::SageGlobal,
+            "cb-sage" | "cbsage" | "cb_sage" => Method::CbSage,
+            "random" => Method::Random,
+            "drop" => Method::Drop,
+            "glister" => Method::Glister,
+            "craig" => Method::Craig,
+            "gradmatch" | "grad-match" => Method::GradMatch,
+            "graft" => Method::Graft,
+            "graft-warm" | "graftwarm" => Method::GraftWarm,
+            "full" | "full data" | "full-data" => Method::Full,
+            other => return Err(format!("unknown method '{other}'")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Sage => "SAGE",
+            Method::SageGlobal => "SAGE-global",
+            Method::CbSage => "CB-SAGE",
+            Method::Random => "Random",
+            Method::Drop => "DROP",
+            Method::Glister => "GLISTER",
+            Method::Craig => "CRAIG",
+            Method::GradMatch => "GradMatch",
+            Method::Graft => "GRAFT",
+            Method::GraftWarm => "GRAFT-Warm",
+            Method::Full => "Full data",
+        }
+    }
+
+    pub fn all_baselines() -> &'static [Method] {
+        &[
+            Method::Random,
+            Method::Drop,
+            Method::Glister,
+            Method::Craig,
+            Method::GradMatch,
+            Method::Graft,
+            Method::GraftWarm,
+        ]
+    }
+}
+
+/// Fully-resolved run specification for one (dataset, method, fraction, seed).
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Simulated benchmark name (cifar10/cifar100/fmnist/tinyimagenet/caltech256).
+    pub dataset: String,
+    /// Artifact/model config name in artifacts/manifest.json.
+    pub model: String,
+    pub method: Method,
+    /// Kept fraction f in (0, 1].
+    pub fraction: f64,
+    pub seed: u64,
+    pub train_examples: usize,
+    pub test_examples: usize,
+    pub epochs: usize,
+    pub base_lr: f64,
+    /// FD sketch size ℓ (must match the model config's l).
+    pub sketch_size: usize,
+    pub threads: usize,
+    pub artifacts_dir: String,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        Self {
+            dataset: "cifar10".into(),
+            model: "small".into(),
+            method: Method::Sage,
+            fraction: 0.25,
+            seed: 0,
+            train_examples: 4096,
+            test_examples: 1024,
+            epochs: 10,
+            base_lr: 0.05,
+            sketch_size: 32,
+            threads: crate::util::threadpool::default_threads(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunSpec {
+    /// Build from a `[run]` section, falling back to defaults.
+    pub fn from_config(cfg: &Config) -> Result<RunSpec, String> {
+        let mut spec = RunSpec::default();
+        let s = "run";
+        if let Some(v) = cfg.get(s, "dataset") {
+            spec.dataset = v.to_string();
+        }
+        if let Some(v) = cfg.get(s, "model") {
+            spec.model = v.to_string();
+        }
+        if let Some(v) = cfg.get(s, "method") {
+            spec.method = Method::parse(v)?;
+        }
+        if let Some(v) = cfg.get_f64(s, "fraction")? {
+            spec.fraction = v;
+        }
+        if let Some(v) = cfg.get_usize(s, "seed")? {
+            spec.seed = v as u64;
+        }
+        if let Some(v) = cfg.get_usize(s, "train_examples")? {
+            spec.train_examples = v;
+        }
+        if let Some(v) = cfg.get_usize(s, "test_examples")? {
+            spec.test_examples = v;
+        }
+        if let Some(v) = cfg.get_usize(s, "epochs")? {
+            spec.epochs = v;
+        }
+        if let Some(v) = cfg.get_f64(s, "base_lr")? {
+            spec.base_lr = v;
+        }
+        if let Some(v) = cfg.get_usize(s, "sketch_size")? {
+            spec.sketch_size = v;
+        }
+        if let Some(v) = cfg.get_usize(s, "threads")? {
+            spec.threads = v;
+        }
+        if let Some(v) = cfg.get(s, "artifacts_dir") {
+            spec.artifacts_dir = v.to_string();
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.fraction > 0.0 && self.fraction <= 1.0) {
+            return Err(format!("fraction {} not in (0, 1]", self.fraction));
+        }
+        if self.train_examples == 0 || self.epochs == 0 {
+            return Err("train_examples and epochs must be > 0".into());
+        }
+        if self.sketch_size == 0 {
+            return Err("sketch_size must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Target subset size k = ceil(f * N).
+    pub fn subset_size(&self) -> usize {
+        ((self.fraction * self.train_examples as f64).ceil() as usize)
+            .clamp(1, self.train_examples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment
+[run]
+dataset = cifar100
+method = cb-sage
+fraction = 0.15
+seed = 3
+epochs = 8         # inline comment
+sketch_size = 64
+
+[pipeline]
+workers = 4
+shards = 8
+"#;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get("run", "dataset"), Some("cifar100"));
+        assert_eq!(cfg.get_usize("pipeline", "workers").unwrap(), Some(4));
+        assert_eq!(cfg.get("run", "epochs"), Some("8"));
+    }
+
+    #[test]
+    fn run_spec_from_config() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let spec = RunSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.method, Method::CbSage);
+        assert!((spec.fraction - 0.15).abs() < 1e-12);
+        assert_eq!(spec.epochs, 8);
+        assert_eq!(spec.subset_size(), (0.15f64 * 4096.0).ceil() as usize);
+    }
+
+    #[test]
+    fn rejects_bad_fraction() {
+        let mut cfg = Config::default();
+        cfg.set("run", "fraction", "1.5");
+        assert!(RunSpec::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("[run").is_err());
+        assert!(Config::parse("just words").is_err());
+    }
+
+    #[test]
+    fn method_parse_round_trip() {
+        for m in [
+            Method::Sage,
+            Method::SageGlobal,
+            Method::CbSage,
+            Method::Random,
+            Method::Drop,
+            Method::Glister,
+            Method::Craig,
+            Method::GradMatch,
+            Method::Graft,
+            Method::GraftWarm,
+            Method::Full,
+        ] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut cfg = Config::parse(SAMPLE).unwrap();
+        cfg.set("run", "dataset", "fmnist");
+        assert_eq!(cfg.get("run", "dataset"), Some("fmnist"));
+    }
+
+    #[test]
+    fn get_list_and_bool() {
+        let cfg = Config::parse("[a]\nxs = 1, 2,3\nflag = true\n").unwrap();
+        assert_eq!(
+            cfg.get_list("a", "xs"),
+            Some(vec!["1".into(), "2".into(), "3".into()])
+        );
+        assert_eq!(cfg.get_bool("a", "flag").unwrap(), Some(true));
+        assert_eq!(cfg.get_bool("a", "missing").unwrap(), None);
+    }
+}

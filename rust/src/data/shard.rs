@@ -1,0 +1,285 @@
+//! On-disk shard format + streaming readers.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   8 bytes  "SAGEDS01"
+//! n       u32      examples in this shard
+//! f       u32      feature dim
+//! c       u32      class count
+//! feats   n*f f32  row-major
+//! labels  n   u32
+//! ```
+//!
+//! A [`ShardedDataset`] is a directory of `shard_NNNN.bin` files; the
+//! pipeline assigns shards to workers and streams fixed-size batches
+//! through [`StreamBatches`] without materializing the full dataset.
+
+use super::Dataset;
+use crate::tensor::Matrix;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"SAGEDS01";
+
+/// Write one dataset as a single shard file.
+pub fn write_shard(ds: &Dataset, path: &Path) -> std::io::Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(ds.len() as u32).to_le_bytes())?;
+    w.write_all(&(ds.features.cols() as u32).to_le_bytes())?;
+    w.write_all(&(ds.num_classes as u32).to_le_bytes())?;
+    for &v in ds.features.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &l in &ds.labels {
+        w.write_all(&l.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+/// Read one shard file.
+pub fn read_shard(path: &Path) -> std::io::Result<Dataset> {
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("{}: bad magic", path.display()),
+        ));
+    }
+    let mut u32buf = [0u8; 4];
+    let mut read_u32 = |r: &mut dyn Read| -> std::io::Result<u32> {
+        r.read_exact(&mut u32buf)?;
+        Ok(u32::from_le_bytes(u32buf))
+    };
+    let n = read_u32(&mut r)? as usize;
+    let f = read_u32(&mut r)? as usize;
+    let c = read_u32(&mut r)? as usize;
+    if f == 0 || c == 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "zero dims",
+        ));
+    }
+    let mut feats = vec![0.0f32; n * f];
+    let mut fbuf = vec![0u8; n * f * 4];
+    r.read_exact(&mut fbuf)?;
+    for (i, chunk) in fbuf.chunks_exact(4).enumerate() {
+        feats[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    let mut labels = vec![0u32; n];
+    let mut lbuf = vec![0u8; n * 4];
+    r.read_exact(&mut lbuf)?;
+    for (i, chunk) in lbuf.chunks_exact(4).enumerate() {
+        labels[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+        if labels[i] as usize >= c {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("label {} >= classes {c}", labels[i]),
+            ));
+        }
+    }
+    let stem = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    Ok(Dataset {
+        name: stem,
+        features: Matrix::from_vec(n, f, feats),
+        labels,
+        num_classes: c,
+    })
+}
+
+/// A directory of shards with a stable ordering.
+pub struct ShardedDataset {
+    pub dir: PathBuf,
+    pub shards: Vec<PathBuf>,
+}
+
+impl ShardedDataset {
+    /// Split `ds` into `num_shards` contiguous shards under `dir`.
+    pub fn create(ds: &Dataset, dir: &Path, num_shards: usize) -> std::io::Result<Self> {
+        assert!(num_shards > 0);
+        std::fs::create_dir_all(dir)?;
+        let n = ds.len();
+        let per = n.div_ceil(num_shards);
+        let mut shards = Vec::new();
+        for s in 0..num_shards {
+            let start = s * per;
+            if start >= n {
+                break;
+            }
+            let end = ((s + 1) * per).min(n);
+            let idx: Vec<usize> = (start..end).collect();
+            let part = ds.subset(&idx);
+            let path = dir.join(format!("shard_{s:04}.bin"));
+            write_shard(&part, &path)?;
+            shards.push(path);
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            shards,
+        })
+    }
+
+    /// Open an existing shard directory.
+    pub fn open(dir: &Path) -> std::io::Result<Self> {
+        let mut shards: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().map(|e| e == "bin").unwrap_or(false)
+                    && p.file_name()
+                        .map(|n| n.to_string_lossy().starts_with("shard_"))
+                        .unwrap_or(false)
+            })
+            .collect();
+        shards.sort();
+        if shards.is_empty() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!("no shards in {}", dir.display()),
+            ));
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            shards,
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Load everything back into memory (tests / small runs).
+    pub fn load_all(&self) -> std::io::Result<Dataset> {
+        let mut parts = Vec::new();
+        for p in &self.shards {
+            parts.push(read_shard(p)?);
+        }
+        let refs: Vec<&Matrix> = parts.iter().map(|d| &d.features).collect();
+        let features = Matrix::vstack(&refs);
+        let labels: Vec<u32> = parts.iter().flat_map(|d| d.labels.clone()).collect();
+        Ok(Dataset {
+            name: parts[0].name.clone(),
+            features,
+            labels,
+            num_classes: parts[0].num_classes,
+        })
+    }
+}
+
+/// Iterator of `(global_start_index, batch)` over a dataset, fixed batch
+/// size, final partial batch included. The pipeline pads partial batches to
+/// the artifact's static shape and masks the padding rows.
+pub struct StreamBatches<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> StreamBatches<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize) -> Self {
+        assert!(batch > 0);
+        Self { ds, batch, pos: 0 }
+    }
+}
+
+impl Iterator for StreamBatches<'_> {
+    type Item = (usize, Dataset);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.ds.len() {
+            return None;
+        }
+        let start = self.pos;
+        let end = (start + self.batch).min(self.ds.len());
+        self.pos = end;
+        let idx: Vec<usize> = (start..end).collect();
+        Some((start, self.ds.subset(&idx)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, BenchmarkKind};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sage_shard_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn shard_round_trip() {
+        let ds = generate(&BenchmarkKind::Cifar10.spec(12), 100, 1, 0);
+        let dir = tmpdir("rt");
+        let path = dir.join("shard_0000.bin");
+        write_shard(&ds, &path).unwrap();
+        let back = read_shard(&path).unwrap();
+        assert_eq!(back.len(), 100);
+        assert_eq!(back.num_classes, 10);
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.features.as_slice(), ds.features.as_slice());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sharded_create_open_load() {
+        let ds = generate(&BenchmarkKind::Cifar100.spec(8), 103, 2, 0);
+        let dir = tmpdir("multi");
+        let sharded = ShardedDataset::create(&ds, &dir, 4).unwrap();
+        assert_eq!(sharded.num_shards(), 4);
+        let reopened = ShardedDataset::open(&dir).unwrap();
+        assert_eq!(reopened.num_shards(), 4);
+        let back = reopened.load_all().unwrap();
+        assert_eq!(back.len(), 103);
+        assert_eq!(back.labels, ds.labels);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupted_magic_rejected() {
+        let dir = tmpdir("bad");
+        let path = dir.join("shard_0000.bin");
+        std::fs::write(&path, b"NOTSAGE0rest").unwrap();
+        assert!(read_shard(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let ds = generate(&BenchmarkKind::Cifar10.spec(4), 10, 3, 0);
+        let dir = tmpdir("trunc");
+        let path = dir.join("shard_0000.bin");
+        write_shard(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(read_shard(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stream_batches_covers_all_with_partial_tail() {
+        let ds = generate(&BenchmarkKind::FashionMnist.spec(4), 25, 4, 0);
+        let batches: Vec<_> = StreamBatches::new(&ds, 8).collect();
+        assert_eq!(batches.len(), 4);
+        assert_eq!(batches[0].1.len(), 8);
+        assert_eq!(batches[3].1.len(), 1);
+        assert_eq!(batches[3].0, 24);
+        let total: usize = batches.iter().map(|(_, b)| b.len()).sum();
+        assert_eq!(total, 25);
+    }
+
+    #[test]
+    fn open_empty_dir_errors() {
+        let dir = tmpdir("empty");
+        assert!(ShardedDataset::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,391 @@
+//! Pure-Rust reference implementation of the L2 model (python/compile/
+//! model.py): MLP forward, label-smoothed cross-entropy, *per-example*
+//! gradients via manual backprop, and the SGD+momentum train step.
+//!
+//! Two jobs:
+//! 1. **Parity oracle** for the AOT artifacts — integration tests assert the
+//!    PJRT-executed HLO matches this implementation to f32 tolerance, which
+//!    pins the whole Python→HLO→Rust chain.
+//! 2. **Fallback engine** so selection/trainer/benches run end-to-end even
+//!    where artifacts for a given shape haven't been compiled (the
+//!    `Backend::Reference` path in `trainer`).
+//!
+//! The parameter layout matches `model.unflatten`: `[W1 (f·h) | b1 (h) |
+//! W2 (h·c) | b2 (c)]`, flat f32[D], row-major.
+
+use crate::tensor::{self, Matrix};
+use crate::util::rng::Pcg64;
+
+/// MLP shape; mirrors `ModelConfig` in python/compile/model.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MlpSpec {
+    pub f: usize,
+    pub h: usize,
+    pub c: usize,
+}
+
+/// Training hyper-parameters baked into the artifacts (manifest values).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainHyper {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub label_smoothing: f32,
+}
+
+impl Default for TrainHyper {
+    fn default() -> Self {
+        Self {
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            label_smoothing: 0.1,
+        }
+    }
+}
+
+impl MlpSpec {
+    pub fn new(f: usize, h: usize, c: usize) -> Self {
+        Self { f, h, c }
+    }
+
+    /// Flat parameter count D.
+    pub fn d(&self) -> usize {
+        self.f * self.h + self.h + self.h * self.c + self.c
+    }
+
+    /// Offsets of (w1, b1, w2, b2) in the flat vector.
+    fn offsets(&self) -> (usize, usize, usize, usize) {
+        let w1 = 0;
+        let b1 = w1 + self.f * self.h;
+        let w2 = b1 + self.h;
+        let b2 = w2 + self.h * self.c;
+        (w1, b1, w2, b2)
+    }
+
+    /// He-style init (W1 ~ N(0, √(2/f)), W2 ~ N(0, √(2/h)), biases 0).
+    pub fn init_params(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.d()];
+        let (w1, b1, w2, b2) = self.offsets();
+        let s1 = (2.0 / self.f as f64).sqrt() as f32;
+        let s2 = (2.0 / self.h as f64).sqrt() as f32;
+        rng.fill_normal(&mut p[w1..b1], s1);
+        rng.fill_normal(&mut p[w2..b2], s2);
+        p
+    }
+
+    /// Forward pass for a batch: logits `[n × c]`.
+    pub fn forward(&self, params: &[f32], x: &Matrix) -> Matrix {
+        assert_eq!(params.len(), self.d(), "param dim");
+        assert_eq!(x.cols(), self.f, "feature dim");
+        let (hidden, _pre) = self.hidden(params, x);
+        self.logits_from_hidden(params, &hidden)
+    }
+
+    fn hidden(&self, params: &[f32], x: &Matrix) -> (Matrix, Matrix) {
+        let (w1o, b1o, w2o, _) = self.offsets();
+        let w1 = &params[w1o..b1o];
+        let b1 = &params[b1o..w2o];
+        let n = x.rows();
+        let mut pre = Matrix::zeros(n, self.h);
+        for i in 0..n {
+            let xr = x.row(i);
+            let out = pre.row_mut(i);
+            out.copy_from_slice(b1);
+            for (j, &xj) in xr.iter().enumerate() {
+                if xj != 0.0 {
+                    tensor::axpy(xj, &w1[j * self.h..(j + 1) * self.h], out);
+                }
+            }
+        }
+        let mut hidden = pre.clone();
+        for v in hidden.as_mut_slice() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        (hidden, pre)
+    }
+
+    fn logits_from_hidden(&self, params: &[f32], hidden: &Matrix) -> Matrix {
+        let (_, _, w2o, b2o) = self.offsets();
+        let w2 = &params[w2o..b2o];
+        let b2 = &params[b2o..];
+        let n = hidden.rows();
+        let mut logits = Matrix::zeros(n, self.c);
+        for i in 0..n {
+            let hr = hidden.row(i);
+            let out = logits.row_mut(i);
+            out.copy_from_slice(b2);
+            for (j, &hj) in hr.iter().enumerate() {
+                if hj != 0.0 {
+                    tensor::axpy(hj, &w2[j * self.c..(j + 1) * self.c], out);
+                }
+            }
+        }
+        logits
+    }
+
+    /// Per-example gradients + losses for a batch with one-hot (or soft)
+    /// targets `y [n × c]`. Returns `(G [n × D], losses [n])`.
+    pub fn per_example_grads(
+        &self,
+        params: &[f32],
+        x: &Matrix,
+        y: &Matrix,
+        label_smoothing: f32,
+    ) -> (Matrix, Vec<f32>) {
+        assert_eq!(y.cols(), self.c);
+        assert_eq!(x.rows(), y.rows());
+        let n = x.rows();
+        let (w1o, b1o, w2o, b2o) = self.offsets();
+        let w2 = &params[w2o..b2o];
+        let (hidden, pre) = self.hidden(params, x);
+        let logits = self.logits_from_hidden(params, &hidden);
+
+        let mut g = Matrix::zeros(n, self.d());
+        let mut losses = vec![0.0f32; n];
+        let mut probs = vec![0.0f32; self.c];
+        let mut ys = vec![0.0f32; self.c];
+        let mut dpre = vec![0.0f32; self.h];
+
+        for i in 0..n {
+            let lr_ = logits.row(i);
+            // stable softmax + loss
+            let maxv = lr_.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f64;
+            for (k, &v) in lr_.iter().enumerate() {
+                let e = ((v - maxv) as f64).exp();
+                probs[k] = e as f32;
+                z += e;
+            }
+            let zf = z as f32;
+            let logz = (z.ln()) as f32;
+            let mut loss = 0.0f64;
+            for k in 0..self.c {
+                probs[k] /= zf;
+                ys[k] = y.get(i, k) * (1.0 - label_smoothing)
+                    + label_smoothing / self.c as f32;
+                // -ys * log_softmax
+                loss -= ys[k] as f64 * ((lr_[k] - maxv - logz) as f64);
+            }
+            losses[i] = loss as f32;
+
+            // dlogits = softmax - ys
+            let grow = g.row_mut(i);
+            let hr = hidden.row(i);
+            // dW2[j,k] = h_j * dlogits_k ; db2 = dlogits ; dh_j = Σ_k W2[j,k]*dl_k
+            for k in 0..self.c {
+                let dl = probs[k] - ys[k];
+                grow[b2o + k] = dl;
+            }
+            for j in 0..self.h {
+                let hj = hr[j];
+                let w2row = &w2[j * self.c..(j + 1) * self.c];
+                let mut dh = 0.0f32;
+                for k in 0..self.c {
+                    let dl = grow[b2o + k];
+                    if hj != 0.0 {
+                        grow[w2o + j * self.c + k] = hj * dl;
+                    }
+                    dh += w2row[k] * dl;
+                }
+                // relu backward through pre-activation
+                dpre[j] = if pre.get(i, j) > 0.0 { dh } else { 0.0 };
+            }
+            // dW1[j,t] = x_j * dpre_t ; db1 = dpre
+            let xr = x.row(i);
+            for (j, &xj) in xr.iter().enumerate() {
+                if xj != 0.0 {
+                    let dst = &mut grow[w1o + j * self.h..w1o + (j + 1) * self.h];
+                    for (t, dp) in dpre.iter().enumerate() {
+                        dst[t] = xj * dp;
+                    }
+                }
+            }
+            grow[b1o..w2o].copy_from_slice(&dpre);
+        }
+        (g, losses)
+    }
+
+    /// One SGD+momentum step on a batch (matches model.train_step):
+    /// `g = mean-grad + wd·p; m ← μ·m + g; p ← p − lr·m`. Returns mean loss.
+    pub fn train_step(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        x: &Matrix,
+        y: &Matrix,
+        lr: f32,
+        hyper: &TrainHyper,
+    ) -> f32 {
+        let n = x.rows();
+        let (g, losses) = self.per_example_grads(params, x, y, hyper.label_smoothing);
+        let inv = 1.0 / n as f32;
+        for j in 0..self.d() {
+            let mut gj = 0.0f32;
+            for i in 0..n {
+                gj += g.get(i, j);
+            }
+            gj = gj * inv + hyper.weight_decay * params[j];
+            mom[j] = hyper.momentum * mom[j] + gj;
+            params[j] -= lr * mom[j];
+        }
+        losses.iter().sum::<f32>() * inv
+    }
+
+    /// Top-1 accuracy against integer labels.
+    pub fn accuracy(&self, params: &[f32], x: &Matrix, labels: &[u32]) -> f64 {
+        let logits = self.forward(params, x);
+        let mut correct = 0usize;
+        for i in 0..x.rows() {
+            let row = logits.row(i);
+            let mut best = 0usize;
+            for k in 1..self.c {
+                if row[k] > row[best] {
+                    best = k;
+                }
+            }
+            if best as u32 == labels[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / x.rows().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    fn spec() -> MlpSpec {
+        MlpSpec::new(6, 5, 4)
+    }
+
+    fn rand_batch(rng: &mut Pcg64, s: &MlpSpec, n: usize) -> (Matrix, Matrix) {
+        let x = Matrix::from_fn(n, s.f, |_, _| rng.normal_f32());
+        let mut y = Matrix::zeros(n, s.c);
+        for i in 0..n {
+            let c = rng.below(s.c as u64) as usize;
+            y.set(i, c, 1.0);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn grads_match_finite_differences() {
+        forall("mlp_fd", 6, |rng| {
+            let s = spec();
+            let mut p = s.init_params(rng);
+            for v in p.iter_mut() {
+                *v += 0.01 * rng.normal_f32(); // make biases nonzero too
+            }
+            let (x, y) = rand_batch(rng, &s, 3);
+            let (g, losses) = s.per_example_grads(&p, &x, &y, 0.1);
+            // Check a handful of coordinates per example with central diffs.
+            for i in 0..3 {
+                for _ in 0..8 {
+                    let j = rng.below(s.d() as u64) as usize;
+                    let eps = 1e-3f32;
+                    let mut pp = p.clone();
+                    pp[j] += eps;
+                    let (_, lp) = s.per_example_grads(&pp, &x, &y, 0.1);
+                    pp[j] -= 2.0 * eps;
+                    let (_, lm) = s.per_example_grads(&pp, &x, &y, 0.1);
+                    let fd = (lp[i] - lm[i]) / (2.0 * eps);
+                    assert!(
+                        (g.get(i, j) - fd).abs() < 5e-3,
+                        "ex {i} param {j}: {} vs {}",
+                        g.get(i, j),
+                        fd
+                    );
+                    let _ = losses[i];
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn loss_at_uniform_logits_is_log_c() {
+        let s = spec();
+        let p = vec![0.0f32; s.d()]; // zero params -> zero logits
+        let mut rng = Pcg64::seeded(1);
+        let (x, y) = rand_batch(&mut rng, &s, 5);
+        let (_, losses) = s.per_example_grads(&p, &x, &y, 0.1);
+        for l in losses {
+            assert!((l - (s.c as f32).ln()).abs() < 1e-5, "{l}");
+        }
+    }
+
+    #[test]
+    fn train_step_decreases_loss() {
+        let s = spec();
+        let mut rng = Pcg64::seeded(2);
+        let mut p = s.init_params(&mut rng);
+        let mut m = vec![0.0f32; s.d()];
+        let (x, y) = rand_batch(&mut rng, &s, 16);
+        let hyper = TrainHyper::default();
+        let first = s.train_step(&mut p, &mut m, &x, &y, 0.05, &hyper);
+        let mut last = first;
+        for _ in 0..30 {
+            last = s.train_step(&mut p, &mut m, &x, &y, 0.05, &hyper);
+        }
+        assert!(last < first * 0.9, "{last} !< {first}");
+    }
+
+    #[test]
+    fn train_step_first_update_math() {
+        // From zero momentum: m1 = g + wd*p, p1 = p - lr*m1.
+        let s = spec();
+        let mut rng = Pcg64::seeded(3);
+        let p0 = s.init_params(&mut rng);
+        let (x, y) = rand_batch(&mut rng, &s, 4);
+        let hyper = TrainHyper::default();
+        let (g, _) = s.per_example_grads(&p0, &x, &y, hyper.label_smoothing);
+        let mut expect_m = vec![0.0f32; s.d()];
+        for j in 0..s.d() {
+            let mut gj = 0.0;
+            for i in 0..4 {
+                gj += g.get(i, j);
+            }
+            expect_m[j] = gj / 4.0 + hyper.weight_decay * p0[j];
+        }
+        let mut p = p0.clone();
+        let mut m = vec![0.0f32; s.d()];
+        s.train_step(&mut p, &mut m, &x, &y, 0.1, &hyper);
+        for j in 0..s.d() {
+            assert!((m[j] - expect_m[j]).abs() < 1e-5);
+            assert!((p[j] - (p0[j] - 0.1 * expect_m[j])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn accuracy_of_perfect_separator() {
+        // 1 feature deciding 2 classes via a hand-built network.
+        let s = MlpSpec::new(1, 2, 2);
+        // W1 = [[1, -1]], b1 = 0, W2 = [[1,0],[0,1]], b2 = 0.
+        let mut p = vec![0.0f32; s.d()];
+        p[0] = 1.0; // W1[0,0]
+        p[1] = -1.0; // W1[0,1]
+        let w2o = s.f * s.h + s.h;
+        p[w2o] = 1.0; // W2[0,0]
+        p[w2o + 3] = 1.0; // W2[1,1]
+        let x = Matrix::from_vec(4, 1, vec![2.0, -2.0, 5.0, -1.0]);
+        let labels = vec![0u32, 1, 0, 1];
+        assert_eq!(s.accuracy(&p, &x, &labels), 1.0);
+    }
+
+    #[test]
+    fn per_example_grad_mean_equals_batch_direction() {
+        // Mean of per-example grads must equal grad of mean loss; verified
+        // implicitly by train_step_first_update_math, plus shape checks here.
+        let s = spec();
+        let mut rng = Pcg64::seeded(5);
+        let p = s.init_params(&mut rng);
+        let (x, y) = rand_batch(&mut rng, &s, 7);
+        let (g, losses) = s.per_example_grads(&p, &x, &y, 0.1);
+        assert_eq!(g.rows(), 7);
+        assert_eq!(g.cols(), s.d());
+        assert_eq!(losses.len(), 7);
+        assert!(losses.iter().all(|&l| l.is_finite() && l > 0.0));
+    }
+}

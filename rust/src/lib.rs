@@ -1,0 +1,34 @@
+//! # SAGE — Streaming Agreement-Driven Gradient Sketches
+//!
+//! Production-shaped reproduction of *SAGE: Streaming Agreement-Driven
+//! Gradient Sketches for Representative Subset Selection* as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — streaming coordinator: sharded gradient pipeline,
+//!   Frequent-Directions sketching, agreement scoring & subset selection,
+//!   baselines, subset trainer, benchmark harness, CLI.
+//! * **L2 (python/compile/model.py)** — the training target (MLP classifier,
+//!   per-example grads via `vmap(grad)`) AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the sketch
+//!   hot spots (projection+normalize, Gram, rank-ℓ reconstruction).
+//!
+//! Python runs only at build time (`make artifacts`); the binary executes
+//! pre-compiled artifacts through the PJRT CPU client (`runtime`).
+//!
+//! Start with [`selection`] for the paper's algorithm, [`pipeline`] for the
+//! streaming system, and `examples/quickstart.rs` for the API tour.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod grad;
+pub mod linalg;
+pub mod pipeline;
+pub mod runtime;
+pub mod selection;
+pub mod sketch;
+pub mod tensor;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,397 @@
+//! Small dense linear algebra (from scratch — no LAPACK binding offline).
+//!
+//! Sized for the coordinator's needs: the matrices here are at most
+//! `2ℓ × 2ℓ` (FD shrink Gram, ℓ ≤ 256) or `k × k` for baseline solvers, so
+//! clarity and robustness beat asymptotic tricks. Everything runs in f64
+//! internally; the f32 world converts at the boundary.
+//!
+//! * [`eigh_jacobi`] — cyclic Jacobi eigendecomposition of a symmetric
+//!   matrix. This is the heart of the FD shrink step: eig(S Sᵀ) gives
+//!   σ² = λ and U, from which the shrink rotation is built without ever
+//!   running an SVD over the full `2ℓ × D` buffer (see DESIGN.md).
+//! * [`cholesky`] / [`solve_spd`] — SPD solves for GradMatch's OMP step.
+//! * [`lu_solve`] — general square solves (GRAFT MaxVol updates).
+
+/// Eigendecomposition of a symmetric matrix (dense, row-major, n×n).
+///
+/// Returns (eigenvalues descending, eigenvectors as rows of length n) such
+/// that `A ≈ Σ_j λ_j v_j v_jᵀ`. Cyclic Jacobi with threshold sweeping;
+/// converges quadratically, `O(n³)` per sweep, typically 6–10 sweeps.
+pub fn eigh_jacobi(a: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), n * n, "eigh_jacobi shape");
+    let mut m = a.to_vec();
+    // v starts as identity; accumulates rotations. Row i = eigenvector i.
+    let mut v = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        let diag: f64 = (0..n).map(|i| m[i * n + i] * m[i * n + i]).sum();
+        if off <= 1e-26 * (diag + off).max(1e-300) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // Accumulate rotation into v (rows are vectors).
+                for k in 0..n {
+                    let vpk = v[p * n + k];
+                    let vqk = v[q * n + k];
+                    v[p * n + k] = c * vpk - s * vqk;
+                    v[q * n + k] = s * vpk + c * vqk;
+                }
+            }
+        }
+    }
+
+    let mut lam: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    // Sort descending, permuting eigenvector rows along.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| lam[j].partial_cmp(&lam[i]).unwrap());
+    let lam_sorted: Vec<f64> = order.iter().map(|&i| lam[i]).collect();
+    let mut v_sorted = vec![0.0; n * n];
+    for (row, &src) in order.iter().enumerate() {
+        v_sorted[row * n..(row + 1) * n].copy_from_slice(&v[src * n..(src + 1) * n]);
+    }
+    lam = lam_sorted;
+    (lam, v_sorted)
+}
+
+/// Cholesky factorization A = L Lᵀ of an SPD matrix (returns L, row-major
+/// lower-triangular). Errors if A is not positive definite.
+pub fn cholesky(a: &[f64], n: usize) -> Result<Vec<f64>, String> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(format!("not SPD at pivot {i}: {sum}"));
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve A x = b for SPD A via Cholesky (with a tiny ridge retry for
+/// near-singular Gram systems from OMP).
+pub fn solve_spd(a: &[f64], b: &[f64], n: usize) -> Result<Vec<f64>, String> {
+    let l = match cholesky(a, n) {
+        Ok(l) => l,
+        Err(_) => {
+            // Ridge fallback: A + 1e-8·tr(A)/n · I.
+            let tr: f64 = (0..n).map(|i| a[i * n + i]).sum();
+            let ridge = 1e-8 * (tr / n.max(1) as f64).max(1e-12);
+            let mut aa = a.to_vec();
+            for i in 0..n {
+                aa[i * n + i] += ridge;
+            }
+            cholesky(&aa, n)?
+        }
+    };
+    // Forward solve L y = b.
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    // Back solve Lᵀ x = y.
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    Ok(x)
+}
+
+/// LU with partial pivoting; solves A x = b for general square A.
+pub fn lu_solve(a: &[f64], b: &[f64], n: usize) -> Result<Vec<f64>, String> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut lu = a.to_vec();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for col in 0..n {
+        // Pivot.
+        let mut pbest = col;
+        let mut vbest = lu[col * n + col].abs();
+        for r in (col + 1)..n {
+            let v = lu[r * n + col].abs();
+            if v > vbest {
+                vbest = v;
+                pbest = r;
+            }
+        }
+        if vbest < 1e-300 {
+            return Err(format!("singular at column {col}"));
+        }
+        if pbest != col {
+            for k in 0..n {
+                lu.swap(col * n + k, pbest * n + k);
+            }
+            piv.swap(col, pbest);
+        }
+        let pivot = lu[col * n + col];
+        for r in (col + 1)..n {
+            let f = lu[r * n + col] / pivot;
+            lu[r * n + col] = f;
+            for k in (col + 1)..n {
+                lu[r * n + k] -= f * lu[col * n + k];
+            }
+        }
+    }
+    // Apply permutation to b.
+    let mut x: Vec<f64> = piv.iter().map(|&p| b[p]).collect();
+    // Forward.
+    for i in 1..n {
+        for k in 0..i {
+            x[i] -= lu[i * n + k] * x[k];
+        }
+    }
+    // Backward.
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            x[i] -= lu[i * n + k] * x[k];
+        }
+        x[i] /= lu[i * n + i];
+    }
+    Ok(x)
+}
+
+/// Determinant-magnitude proxy via LU (used by MaxVol tests).
+pub fn abs_det(a: &[f64], n: usize) -> f64 {
+    let mut lu = a.to_vec();
+    let mut det = 1.0f64;
+    for col in 0..n {
+        let mut pbest = col;
+        let mut vbest = lu[col * n + col].abs();
+        for r in (col + 1)..n {
+            let v = lu[r * n + col].abs();
+            if v > vbest {
+                vbest = v;
+                pbest = r;
+            }
+        }
+        if vbest < 1e-300 {
+            return 0.0;
+        }
+        if pbest != col {
+            for k in 0..n {
+                lu.swap(col * n + k, pbest * n + k);
+            }
+        }
+        let pivot = lu[col * n + col];
+        det *= pivot.abs();
+        for r in (col + 1)..n {
+            let f = lu[r * n + col] / pivot;
+            for k in (col + 1)..n {
+                lu[r * n + k] -= f * lu[col * n + k];
+            }
+        }
+    }
+    det
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Pcg64;
+
+    fn random_symmetric(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        a
+    }
+
+    fn random_spd(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        // B Bᵀ + n·I.
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn eigh_reconstructs_matrix() {
+        forall("eigh_reconstruct", 15, |rng| {
+            let n = 1 + rng.below(12) as usize;
+            let a = random_symmetric(rng, n);
+            let (lam, v) = eigh_jacobi(&a, n);
+            // A ?= Σ λ_j v_j v_jᵀ
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for t in 0..n {
+                        s += lam[t] * v[t * n + i] * v[t * n + j];
+                    }
+                    assert!((s - a[i * n + j]).abs() < 1e-8, "({i},{j}): {s} vs {}", a[i * n + j]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn eigh_vectors_orthonormal() {
+        forall("eigh_orthonormal", 15, |rng| {
+            let n = 2 + rng.below(10) as usize;
+            let a = random_symmetric(rng, n);
+            let (_lam, v) = eigh_jacobi(&a, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let dot: f64 = (0..n).map(|k| v[i * n + k] * v[j * n + k]).sum();
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((dot - want).abs() < 1e-9, "({i},{j}): {dot}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn eigh_sorted_descending() {
+        forall("eigh_sorted", 10, |rng| {
+            let n = 2 + rng.below(8) as usize;
+            let (lam, _) = eigh_jacobi(&random_symmetric(rng, n), n);
+            for w in lam.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn eigh_diagonal_matrix_exact() {
+        let a = vec![3.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.0, 0.0, 7.0];
+        let (lam, _) = eigh_jacobi(&a, 3);
+        assert!((lam[0] - 7.0).abs() < 1e-12);
+        assert!((lam[1] - 3.0).abs() < 1e-12);
+        assert!((lam[2] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_round_trip() {
+        forall("chol", 15, |rng| {
+            let n = 1 + rng.below(10) as usize;
+            let a = random_spd(rng, n);
+            let l = cholesky(&a, n).unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += l[i * n + k] * l[j * n + k];
+                    }
+                    assert!((s - a[i * n + j]).abs() < 1e-8);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_err());
+    }
+
+    #[test]
+    fn solve_spd_matches_direct() {
+        forall("solve_spd", 15, |rng| {
+            let n = 1 + rng.below(10) as usize;
+            let a = random_spd(rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| a[i * n + j] * x_true[j]).sum())
+                .collect();
+            let x = solve_spd(&a, &b, n).unwrap();
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-6, "{} vs {}", x[i], x_true[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn lu_solve_matches_direct() {
+        forall("lu_solve", 15, |rng| {
+            let n = 1 + rng.below(10) as usize;
+            let a: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| a[i * n + j] * x_true[j]).sum())
+                .collect();
+            match lu_solve(&a, &b, n) {
+                Ok(x) => {
+                    for i in 0..n {
+                        assert!((x[i] - x_true[i]).abs() < 1e-5);
+                    }
+                }
+                Err(_) => {} // singular random draw — acceptable
+            }
+        });
+    }
+
+    #[test]
+    fn abs_det_identity_and_scaling() {
+        let i3 = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        assert!((abs_det(&i3, 3) - 1.0).abs() < 1e-12);
+        let d = vec![2.0, 0.0, 0.0, 3.0];
+        assert!((abs_det(&d, 2) - 6.0).abs() < 1e-12);
+        let sing = vec![1.0, 2.0, 2.0, 4.0];
+        assert_eq!(abs_det(&sing, 2), 0.0);
+    }
+}

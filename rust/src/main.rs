@@ -1,0 +1,325 @@
+//! `sage` — launcher CLI for the SAGE streaming subset-selection system.
+//!
+//! Subcommands:
+//!   select     run two-pass selection on a simulated benchmark, print stats
+//!   train      select (optional) + train + evaluate one experiment cell
+//!   info       show manifest/artifact information
+//!   gen-data   write a simulated benchmark to a sharded directory
+//!
+//! The runtime path requires `make artifacts` (AOT-lowered HLO). Pass
+//! `--backend reference` to run the pure-Rust model instead.
+
+use sage::bench::runner::{run_cell, CellSpec};
+use sage::cli::{common_run_opts, App, Command, Opt, Parsed};
+use sage::config::Method;
+use sage::data::{generate, BenchmarkKind, ShardedDataset};
+use sage::log_info;
+use sage::pipeline::{run_selection, PipelineConfig};
+use sage::runtime::{
+    EngineActor, ModelBackend, ReferenceModelBackend, XlaModelBackend, XlaShrinkBackend,
+};
+use sage::sketch::ShrinkBackend;
+use std::sync::Arc;
+
+fn app() -> App {
+    let mut select_opts = common_run_opts();
+    select_opts.push(Opt {
+        name: "backend",
+        takes_value: true,
+        help: "xla | reference",
+        default: Some("xla"),
+    });
+    let mut train_opts = select_opts.clone();
+    train_opts.push(Opt {
+        name: "out",
+        takes_value: true,
+        help: "append result row to this CSV",
+        default: None,
+    });
+    App {
+        name: "sage",
+        about: "streaming agreement-driven gradient sketches for subset selection",
+        commands: vec![
+            Command {
+                name: "select",
+                about: "run two-pass SAGE (or baseline) selection and report stats",
+                opts: select_opts,
+            },
+            Command {
+                name: "train",
+                about: "run one experiment cell: select + train + evaluate",
+                opts: train_opts,
+            },
+            Command {
+                name: "info",
+                about: "print the artifact manifest",
+                opts: vec![Opt {
+                    name: "artifacts",
+                    takes_value: true,
+                    help: "artifacts directory",
+                    default: Some("artifacts"),
+                }],
+            },
+            Command {
+                name: "gen-data",
+                about: "generate a simulated benchmark into a shard directory",
+                opts: vec![
+                    Opt { name: "dataset", takes_value: true, help: "benchmark name", default: Some("cifar10") },
+                    Opt { name: "examples", takes_value: true, help: "number of examples", default: Some("4096") },
+                    Opt { name: "features", takes_value: true, help: "feature dim", default: Some("64") },
+                    Opt { name: "seed", takes_value: true, help: "seed", default: Some("0") },
+                    Opt { name: "shards", takes_value: true, help: "shard count", default: Some("4") },
+                    Opt { name: "out", takes_value: true, help: "output directory", default: Some("data_shards") },
+                ],
+            },
+        ],
+    }
+}
+
+struct BackendChoice {
+    backend: Box<dyn ModelBackend>,
+    shrink: Option<Arc<dyn ShrinkBackend>>,
+    /// Keep the runtime actor alive for the duration of the run.
+    _actor: Option<EngineActor>,
+}
+
+fn make_backend(p: &Parsed, dataset: BenchmarkKind) -> Result<BackendChoice, String> {
+    let artifacts = p.get_or("artifacts", "artifacts");
+    let model = p.get_or("model", "small");
+    match p.get("backend").unwrap_or("xla") {
+        "reference" => {
+            let c = dataset.num_classes();
+            let spec = sage::grad::MlpSpec::new(64, 64, c);
+            Ok(BackendChoice {
+                backend: Box::new(ReferenceModelBackend::new(
+                    spec,
+                    sage::grad::TrainHyper::default(),
+                    64,
+                    64,
+                    32,
+                )),
+                shrink: None,
+                _actor: None,
+            })
+        }
+        "xla" => {
+            let actor = EngineActor::spawn(&artifacts)?;
+            let handle = actor.handle();
+            let backend = XlaModelBackend::new(handle.clone(), &model)?;
+            let shrink: Arc<dyn ShrinkBackend> =
+                Arc::new(XlaShrinkBackend::new(handle, &model)?);
+            Ok(BackendChoice {
+                backend: Box::new(backend),
+                shrink: Some(shrink),
+                _actor: Some(actor),
+            })
+        }
+        other => Err(format!("unknown backend '{other}'")),
+    }
+}
+
+fn parse_cell(p: &Parsed) -> Result<CellSpec, String> {
+    let dataset = BenchmarkKind::parse(&p.get_or("dataset", "cifar10"))?;
+    let method = Method::parse(&p.get_or("method", "sage"))?;
+    let mut spec = CellSpec::new(
+        dataset,
+        method,
+        p.get_f64("fraction")?.unwrap_or(0.25),
+        p.get_usize("seed")?.unwrap_or(0) as u64,
+    );
+    if let Some(v) = p.get_usize("train-examples")? {
+        spec.train_examples = v;
+    }
+    if let Some(v) = p.get_usize("test-examples")? {
+        spec.test_examples = v;
+    }
+    if let Some(v) = p.get_usize("epochs")? {
+        spec.epochs = v;
+    }
+    if let Some(v) = p.get_f64("lr")? {
+        spec.base_lr = v;
+    }
+    if let Some(v) = p.get_usize("threads")? {
+        spec.workers = v;
+    }
+    Ok(spec)
+}
+
+fn cmd_select(p: &Parsed) -> Result<(), String> {
+    let spec = parse_cell(p)?;
+    let choice = make_backend(p, spec.dataset)?;
+    let mspec = choice.backend.spec();
+    if mspec.c != spec.dataset.num_classes() {
+        return Err(format!(
+            "model config has {} classes but {} needs {} — pick a matching --model",
+            mspec.c,
+            spec.dataset.name(),
+            spec.dataset.num_classes()
+        ));
+    }
+    let (train_ds, _) = sage::bench::runner::cell_datasets(&spec, mspec.f);
+    let k = ((spec.fraction * train_ds.len() as f64).ceil() as usize).max(1);
+    let pcfg = PipelineConfig {
+        workers: spec.workers,
+        warmup_steps: spec.warmup_steps,
+        warmup_lr: spec.base_lr,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    log_info!(
+        "selecting {k}/{} from {} with {} (backend {})",
+        train_ds.len(),
+        spec.dataset.name(),
+        spec.method.name(),
+        choice.backend.name()
+    );
+    let out = run_selection(
+        choice.backend.as_ref(),
+        &train_ds,
+        spec.method,
+        k,
+        &pcfg,
+        choice.shrink.clone(),
+    )?;
+    println!("method: {}", spec.method.name());
+    println!("selected: {} indices", out.indices.len());
+    println!(
+        "sketch: {} bytes ({} shrinks, shift bound {:.4})",
+        out.sketch_bytes, out.shrinks, out.shift_bound
+    );
+    println!(
+        "phase1: {:.3}s over {} batches | phase2: {:.3}s | rule: {:.4}s | warmup: {:.3}s",
+        out.phase1.seconds, out.phase1.batches, out.phase2.seconds, out.select_seconds,
+        out.warmup_seconds
+    );
+    let alphas: Vec<f64> = out.scores.entries.iter().map(|e| e.alpha as f64).collect();
+    println!(
+        "alpha: mean {:.4} min {:.4} max {:.4}",
+        sage::bench::mean(&alphas),
+        alphas.iter().cloned().fold(f64::MAX, f64::min),
+        alphas.iter().cloned().fold(f64::MIN, f64::max)
+    );
+    println!(
+        "first 20 selected: {:?}",
+        &out.indices[..out.indices.len().min(20)]
+    );
+    if std::env::var("SAGE_METRICS").as_deref() == Ok("1") {
+        println!("\n--- metrics ---\n{}", sage::util::metrics::global().report());
+    }
+    Ok(())
+}
+
+fn cmd_train(p: &Parsed) -> Result<(), String> {
+    let spec = parse_cell(p)?;
+    let choice = make_backend(p, spec.dataset)?;
+    log_info!(
+        "cell: {} / {} / f={} / seed={} (backend {})",
+        spec.dataset.name(),
+        spec.method.name(),
+        spec.fraction,
+        spec.seed,
+        choice.backend.name()
+    );
+    let r = run_cell(choice.backend.as_ref(), &spec, choice.shrink.clone())?;
+    println!(
+        "{} {} f={:.2} seed={}: acc={:.4} select={:.2}s train={:.2}s total={:.2}s subset={}",
+        r.dataset,
+        r.method,
+        r.fraction,
+        r.seed,
+        r.accuracy,
+        r.select_seconds,
+        r.train_seconds,
+        r.total_seconds,
+        r.subset_size
+    );
+    if let Some(path) = p.get("out") {
+        let line = format!(
+            "{},{},{},{},{:.6},{:.3},{:.3},{:.3},{}\n",
+            r.dataset,
+            r.method,
+            r.fraction,
+            r.seed,
+            r.accuracy,
+            r.select_seconds,
+            r.train_seconds,
+            r.total_seconds,
+            r.subset_size
+        );
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("{path}: {e}"))?;
+        f.write_all(line.as_bytes()).map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_info(p: &Parsed) -> Result<(), String> {
+    let dir = p.get_or("artifacts", "artifacts");
+    let manifest = sage::runtime::Manifest::load(std::path::Path::new(&dir))?;
+    println!("artifacts: {dir}");
+    for (name, cfg) in &manifest.configs {
+        println!(
+            "config {name}: f={} h={} c={} d={} b={} bt={} l={} block_d={}",
+            cfg.f, cfg.h, cfg.c, cfg.d, cfg.b, cfg.bt, cfg.l, cfg.block_d
+        );
+        for (aname, a) in &cfg.artifacts {
+            println!("  {aname}: {} in={:?} out={:?}", a.file, a.inputs, a.outputs);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(p: &Parsed) -> Result<(), String> {
+    let kind = BenchmarkKind::parse(&p.get_or("dataset", "cifar10"))?;
+    let n = p.get_usize("examples")?.unwrap_or(4096);
+    let f = p.get_usize("features")?.unwrap_or(64);
+    let seed = p.get_usize("seed")?.unwrap_or(0) as u64;
+    let shards = p.get_usize("shards")?.unwrap_or(4);
+    let out = p.get_or("out", "data_shards");
+    let ds = generate(&kind.spec(f), n, seed, 0);
+    let sharded = ShardedDataset::create(&ds, std::path::Path::new(&out), shards)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "wrote {} examples of {} ({} classes, {} features) into {} shards under {}",
+        n,
+        kind.name(),
+        ds.num_classes,
+        f,
+        sharded.num_shards(),
+        out
+    );
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let parsed = match app.parse(&argv) {
+        Ok(p) => p,
+        Err(msg) => {
+            // --help lands here too; print usage and exit 0 in that case.
+            let is_help = msg.contains("USAGE") || msg.contains("OPTIONS");
+            if is_help {
+                print!("{msg}");
+                std::process::exit(0);
+            }
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let result = match parsed.command.as_str() {
+        "select" => cmd_select(&parsed),
+        "train" => cmd_train(&parsed),
+        "info" => cmd_info(&parsed),
+        "gen-data" => cmd_gen_data(&parsed),
+        other => Err(format!("unhandled command {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

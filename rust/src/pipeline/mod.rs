@@ -1,0 +1,528 @@
+//! Streaming selection pipeline — the L3 coordinator tying Algorithm 1
+//! together over the runtime:
+//!
+//! ```text
+//! shards ──► grad workers ──► shard-local FD sketches ──► ordered merge ──► S
+//!          (Phase I: one streaming pass, O(ℓD) per worker)
+//! shards ──► score workers (fused grads+projection) ──► scorer merge ──► α
+//!          (Phase II: second pass against frozen S)
+//! α ──► top-k / CB top-k / baseline rule ──► subset indices
+//! ```
+//!
+//! Two execution modes:
+//! * [`run_selection`] — shard-parallel: each worker owns a contiguous shard
+//!   and a local sketch; sketches merge in shard order (FD mergeability), so
+//!   results are deterministic for a fixed `(seed, workers)`.
+//! * [`stream_sketch`] — demand-driven: a reader thread pushes batches into
+//!   a bounded channel (backpressure) and workers pull; used by the
+//!   streaming example and the backpressure tests.
+
+use crate::baselines::{select_weighted, SelectionInputs};
+use crate::config::Method;
+use crate::data::{Dataset, StreamBatches};
+use crate::selection::{AgreementScorer, Scores};
+use crate::sketch::{FdSketch, ShrinkBackend};
+use crate::runtime::ModelBackend;
+use crate::tensor::Matrix;
+use crate::util::channel::bounded;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Pipeline knobs.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Worker threads (= shards in shard-parallel mode).
+    pub workers: usize,
+    /// Bounded channel capacity for streaming mode (backpressure depth).
+    pub channel_capacity: usize,
+    /// Warm-up SGD steps before selection gradients are taken.
+    pub warmup_steps: usize,
+    pub warmup_lr: f64,
+    /// Held-out fraction used for GLISTER's validation direction.
+    pub val_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            workers: crate::util::threadpool::default_threads().min(4),
+            channel_capacity: 8,
+            warmup_steps: 30,
+            warmup_lr: 0.05,
+            val_fraction: 0.1,
+            seed: 0,
+        }
+    }
+}
+
+/// Wall-clock + volume stats for one phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseStats {
+    pub seconds: f64,
+    pub batches: u64,
+    pub examples: u64,
+}
+
+/// Everything the selection pass produces.
+pub struct SelectionOutcome {
+    /// Selected global indices (sorted for SAGE/CB and baselines that sort).
+    pub indices: Vec<usize>,
+    /// Per-selected-example training weights (CRAIG cluster sizes), aligned
+    /// with `indices`; None for methods without weights.
+    pub weights: Option<Vec<f32>>,
+    /// Phase-II scores for every example.
+    pub scores: Scores,
+    /// Frozen sketch S.
+    pub sketch: Matrix,
+    /// O(ℓD) footprint of the sketch buffer in bytes.
+    pub sketch_bytes: usize,
+    pub shrinks: u64,
+    pub shift_bound: f64,
+    pub phase1: PhaseStats,
+    pub phase2: PhaseStats,
+    pub select_seconds: f64,
+    pub warmup_seconds: f64,
+    /// Parameters the selection gradients were computed at.
+    pub params: Vec<f32>,
+}
+
+fn shard_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let w = workers.max(1).min(n.max(1));
+    let per = n.div_ceil(w);
+    (0..w)
+        .map(|i| (i * per, ((i + 1) * per).min(n)))
+        .filter(|(a, b)| a < b)
+        .collect()
+}
+
+/// Phase I over one shard: stream batches, push per-example grads into a
+/// local FD sketch.
+fn phase1_shard(
+    backend: &dyn ModelBackend,
+    ds: &Dataset,
+    params: &[f32],
+    range: (usize, usize),
+    ell: usize,
+    shrink_backend: Option<Arc<dyn ShrinkBackend>>,
+) -> Result<(FdSketch, u64), String> {
+    let d = backend.spec().d();
+    let mut sketch = match shrink_backend {
+        Some(b) => FdSketch::with_backend(ell, d, b),
+        None => FdSketch::new(ell, d),
+    };
+    let idx: Vec<usize> = (range.0..range.1).collect();
+    let shard = ds.subset(&idx);
+    let b = backend.score_batch();
+    let mut batches = 0u64;
+    let hist = crate::util::metrics::global().histogram("pipeline.phase1.batch.ns");
+    for (_start, batch) in StreamBatches::new(&shard, b) {
+        let _t = crate::util::metrics::ScopedTimer::new(hist);
+        let y = batch.one_hot();
+        let (g, _losses) = backend.per_example_grads(params, &batch.features, &y)?;
+        sketch.insert_batch(&g);
+        batches += 1;
+    }
+    crate::util::metrics::global()
+        .counter("pipeline.phase1.examples")
+        .add((range.1 - range.0) as u64);
+    Ok((sketch, batches))
+}
+
+/// Phase II over one shard: fused grads+projection against frozen S.
+fn phase2_shard(
+    backend: &dyn ModelBackend,
+    ds: &Dataset,
+    params: &[f32],
+    sketch: &Matrix,
+    range: (usize, usize),
+) -> Result<(AgreementScorer, u64), String> {
+    let mut scorer = AgreementScorer::new(backend.ell());
+    let idx: Vec<usize> = (range.0..range.1).collect();
+    let shard = ds.subset(&idx);
+    let b = backend.score_batch();
+    let mut batches = 0u64;
+    let hist = crate::util::metrics::global().histogram("pipeline.phase2.batch.ns");
+    for (start, batch) in StreamBatches::new(&shard, b) {
+        let _t = crate::util::metrics::ScopedTimer::new(hist);
+        let y = batch.one_hot();
+        let (zhat, norms, losses) =
+            backend.score_fused(params, sketch, &batch.features, &y)?;
+        let global: Vec<usize> = (0..batch.len()).map(|r| range.0 + start + r).collect();
+        let labels: Vec<u32> = batch.labels.clone();
+        scorer.add_batch(&global, &labels, &zhat, &norms, &losses);
+        batches += 1;
+    }
+    Ok((scorer, batches))
+}
+
+/// Run the full two-pass selection (Algorithm 1) and apply `method`.
+///
+/// `shrink_backend = None` uses the pure-Rust FD shrink; pass an
+/// [`crate::runtime::XlaShrinkBackend`] to route the shrink contractions
+/// through the L1 Pallas artifacts.
+pub fn run_selection(
+    backend: &dyn ModelBackend,
+    ds: &Dataset,
+    method: Method,
+    k: usize,
+    cfg: &PipelineConfig,
+    shrink_backend: Option<Arc<dyn ShrinkBackend>>,
+) -> Result<SelectionOutcome, String> {
+    let ell = backend.ell();
+    let n = ds.len();
+    if n == 0 {
+        return Err("empty dataset".into());
+    }
+
+    // Warm-up the model so selection gradients carry label signal.
+    let t0 = Instant::now();
+    let params = crate::trainer::warmup_params(
+        backend,
+        ds,
+        cfg.warmup_steps,
+        cfg.warmup_lr,
+        cfg.seed,
+    )?;
+    let warmup_seconds = t0.elapsed().as_secs_f64();
+
+    // --- Phase I: sharded streaming sketch + ordered merge ---
+    let t1 = Instant::now();
+    let ranges = shard_ranges(n, cfg.workers);
+    let mut results: Vec<Option<Result<(FdSketch, u64), String>>> =
+        Vec::with_capacity(ranges.len());
+    results.resize_with(ranges.len(), || None);
+    {
+        let results = std::sync::Mutex::new(&mut results);
+        std::thread::scope(|scope| {
+            for (i, &range) in ranges.iter().enumerate() {
+                let results = &results;
+                let params = &params;
+                let sb = shrink_backend.clone();
+                scope.spawn(move || {
+                    let r = phase1_shard(backend, ds, params, range, ell, sb);
+                    results.lock().unwrap()[i] = Some(r);
+                });
+            }
+        });
+    }
+    let mut sketches: Vec<FdSketch> = Vec::with_capacity(ranges.len());
+    let mut p1_batches = 0u64;
+    for r in results.into_iter() {
+        let (s, b) = r.expect("shard not run")?;
+        p1_batches += b;
+        sketches.push(s);
+    }
+    let mut merged = sketches.remove(0);
+    for mut s in sketches {
+        merged.merge(&mut s);
+    }
+    let sketch_matrix = merged.sketch();
+    let phase1 = PhaseStats {
+        seconds: t1.elapsed().as_secs_f64(),
+        batches: p1_batches,
+        examples: n as u64,
+    };
+
+    // --- Phase II: fused scoring against the frozen sketch ---
+    let t2 = Instant::now();
+    let mut results2: Vec<Option<Result<(AgreementScorer, u64), String>>> =
+        Vec::with_capacity(ranges.len());
+    results2.resize_with(ranges.len(), || None);
+    {
+        let results2 = std::sync::Mutex::new(&mut results2);
+        std::thread::scope(|scope| {
+            for (i, &range) in ranges.iter().enumerate() {
+                let results2 = &results2;
+                let params = &params;
+                let sketch_matrix = &sketch_matrix;
+                scope.spawn(move || {
+                    let r = phase2_shard(backend, ds, params, sketch_matrix, range);
+                    results2.lock().unwrap()[i] = Some(r);
+                });
+            }
+        });
+    }
+    let mut scorer: Option<AgreementScorer> = None;
+    let mut p2_batches = 0u64;
+    for r in results2.into_iter() {
+        let (s, b) = r.expect("shard not run")?;
+        p2_batches += b;
+        scorer = Some(match scorer {
+            None => s,
+            Some(mut acc) => {
+                acc.merge(s);
+                acc
+            }
+        });
+    }
+    let scores = scorer.unwrap().finalize();
+    let phase2 = PhaseStats {
+        seconds: t2.elapsed().as_secs_f64(),
+        batches: p2_batches,
+        examples: n as u64,
+    };
+
+    // --- validation consensus for GLISTER ---
+    let val_consensus = if method == Method::Glister && cfg.val_fraction > 0.0 {
+        let val_n = ((n as f64 * cfg.val_fraction) as usize).clamp(1, n);
+        let mut rng = crate::util::rng::Pcg64::new(cfg.seed, 0x7A1);
+        let val_idx = rng.sample_indices(n, val_n);
+        let val = ds.subset(&val_idx);
+        let mut acc = vec![0.0f64; ell];
+        let b = backend.score_batch();
+        for (_s, batch) in StreamBatches::new(&val, b) {
+            let y = batch.one_hot();
+            let (zhat, _norms, _l) =
+                backend.score_fused(&params, &sketch_matrix, &batch.features, &y)?;
+            for r in 0..zhat.rows() {
+                for (j, &v) in zhat.row(r).iter().enumerate() {
+                    acc[j] += v as f64;
+                }
+            }
+        }
+        let mut u: Vec<f32> = acc.iter().map(|&v| v as f32).collect();
+        crate::tensor::normalize_in_place(&mut u);
+        Some(u)
+    } else {
+        None
+    };
+
+    // --- selection rule ---
+    let t3 = Instant::now();
+    let inputs = SelectionInputs {
+        scores: &scores,
+        val_consensus,
+        num_classes: ds.num_classes,
+        seed: cfg.seed,
+    };
+    let (indices, weights) = select_weighted(method, &inputs, k);
+    let select_seconds = t3.elapsed().as_secs_f64();
+
+    Ok(SelectionOutcome {
+        indices,
+        weights,
+        scores,
+        sketch: sketch_matrix,
+        sketch_bytes: merged.memory_bytes(),
+        shrinks: merged.shrink_count(),
+        shift_bound: merged.shift_bound(),
+        phase1,
+        phase2,
+        select_seconds,
+        warmup_seconds,
+        params,
+    })
+}
+
+/// Streaming Phase I with explicit backpressure: a reader thread pushes
+/// `(global_start, batch)` into a bounded channel; `workers` consumers pull
+/// and sketch. Returns the merged sketch (worker-order merge) and stats.
+pub fn stream_sketch(
+    backend: &dyn ModelBackend,
+    ds: &Dataset,
+    params: &[f32],
+    ell: usize,
+    cfg: &PipelineConfig,
+) -> Result<(FdSketch, PhaseStats), String> {
+    let d = backend.spec().d();
+    let b = backend.score_batch();
+    let t0 = Instant::now();
+    let (tx, rx) = bounded::<(usize, Dataset)>(cfg.channel_capacity);
+
+    let mut worker_sketches: Vec<Option<Result<(FdSketch, u64), String>>> =
+        Vec::with_capacity(cfg.workers);
+    worker_sketches.resize_with(cfg.workers.max(1), || None);
+
+    let ws = std::sync::Mutex::new(&mut worker_sketches);
+    std::thread::scope(|scope| {
+        // Reader: stream batches (blocks when the channel is full).
+        scope.spawn(|| {
+            for item in StreamBatches::new(ds, b) {
+                if tx.send(item).is_err() {
+                    break;
+                }
+            }
+            tx.close();
+        });
+        // Workers: pull, grad, sketch.
+        for w in 0..cfg.workers.max(1) {
+            let rx = rx.clone();
+            let ws = &ws;
+            let params = &params;
+            scope.spawn(move || {
+                let mut sk = FdSketch::new(ell, d);
+                let mut batches = 0u64;
+                let mut failed: Option<String> = None;
+                while let Some((_start, batch)) = rx.recv() {
+                    let y = batch.one_hot();
+                    match backend.per_example_grads(params, &batch.features, &y) {
+                        Ok((g, _)) => {
+                            sk.insert_batch(&g);
+                            batches += 1;
+                        }
+                        Err(e) => {
+                            failed = Some(e);
+                            break;
+                        }
+                    }
+                }
+                ws.lock().unwrap()[w] = Some(match failed {
+                    None => Ok((sk, batches)),
+                    Some(e) => Err(e),
+                });
+            });
+        }
+    });
+
+    drop(ws);
+    let mut merged: Option<FdSketch> = None;
+    let mut batches = 0u64;
+    for r in worker_sketches.into_iter() {
+        let (s, bt) = r.expect("worker missing")?;
+        batches += bt;
+        merged = Some(match merged {
+            None => s,
+            Some(mut acc) => {
+                let mut s = s;
+                acc.merge(&mut s);
+                acc
+            }
+        });
+    }
+    let stats = PhaseStats {
+        seconds: t0.elapsed().as_secs_f64(),
+        batches,
+        examples: ds.len() as u64,
+    };
+    Ok((merged.unwrap(), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, BenchmarkKind};
+    use crate::grad::{MlpSpec, TrainHyper};
+    use crate::runtime::ReferenceModelBackend;
+
+    fn backend() -> ReferenceModelBackend {
+        ReferenceModelBackend::new(MlpSpec::new(8, 12, 10), TrainHyper::default(), 16, 16, 8)
+    }
+
+    fn dataset(n: usize) -> Dataset {
+        generate(&BenchmarkKind::Cifar10.spec(8), n, 5, 0)
+    }
+
+    #[test]
+    fn selection_returns_k_indices_and_stats() {
+        let ds = dataset(200);
+        let cfg = PipelineConfig {
+            workers: 3,
+            warmup_steps: 5,
+            ..Default::default()
+        };
+        let out = run_selection(&backend(), &ds, Method::Sage, 50, &cfg, None).unwrap();
+        assert_eq!(out.indices.len(), 50);
+        assert!(out.indices.iter().all(|&i| i < 200));
+        assert_eq!(out.scores.entries.len(), 200);
+        assert_eq!(out.phase1.examples, 200);
+        assert!(out.phase1.batches >= 13); // ceil-splits across 3 shards
+        assert_eq!(out.sketch.rows(), 8);
+        assert!(out.sketch_bytes > 0);
+    }
+
+    #[test]
+    fn deterministic_for_fixed_workers_and_seed() {
+        let ds = dataset(120);
+        let cfg = PipelineConfig {
+            workers: 2,
+            warmup_steps: 3,
+            seed: 11,
+            ..Default::default()
+        };
+        let b = backend();
+        let a = run_selection(&b, &ds, Method::Sage, 30, &cfg, None).unwrap();
+        let c = run_selection(&b, &ds, Method::Sage, 30, &cfg, None).unwrap();
+        assert_eq!(a.indices, c.indices);
+    }
+
+    #[test]
+    fn single_worker_matches_sequential_scoring() {
+        // With 1 worker the pipeline is exactly the sequential algorithm;
+        // with more workers only the FD merge order changes, so scores stay
+        // within sketch-error of each other — here we pin the 1-worker path.
+        let ds = dataset(100);
+        let cfg = PipelineConfig {
+            workers: 1,
+            warmup_steps: 2,
+            seed: 2,
+            ..Default::default()
+        };
+        let b = backend();
+        let out = run_selection(&b, &ds, Method::Sage, 25, &cfg, None).unwrap();
+        // Recompute scores sequentially with the same params + sketch.
+        let (scorer, _) = phase2_shard(&b, &ds, &out.params, &out.sketch, (0, 100)).unwrap();
+        let seq = scorer.finalize();
+        for (a, b2) in out.scores.entries.iter().zip(seq.entries.iter()) {
+            assert_eq!(a.index, b2.index);
+            assert!((a.alpha - b2.alpha).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn all_methods_run_through_pipeline() {
+        let ds = dataset(90);
+        let cfg = PipelineConfig {
+            workers: 2,
+            warmup_steps: 2,
+            ..Default::default()
+        };
+        let b = backend();
+        for m in [
+            Method::Sage,
+            Method::SageGlobal,
+            Method::CbSage,
+            Method::Random,
+            Method::Drop,
+            Method::Glister,
+            Method::Craig,
+            Method::GradMatch,
+            Method::Graft,
+            Method::GraftWarm,
+        ] {
+            let out = run_selection(&b, &ds, m, 20, &cfg, None).unwrap();
+            assert_eq!(out.indices.len(), 20, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn stream_sketch_covers_all_batches() {
+        let ds = dataset(150);
+        let b = backend();
+        let mut rng = crate::util::rng::Pcg64::seeded(1);
+        let params = b.spec().init_params(&mut rng);
+        let cfg = PipelineConfig {
+            workers: 3,
+            channel_capacity: 2, // force backpressure
+            ..Default::default()
+        };
+        let (sketch, stats) = stream_sketch(&b, &ds, &params, 8, &cfg).unwrap();
+        assert_eq!(stats.batches, 150u64.div_ceil(16));
+        assert_eq!(sketch.rows_seen(), 150);
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        for (n, w) in [(10, 3), (1, 4), (100, 7), (16, 16)] {
+            let ranges = shard_ranges(n, w);
+            let mut covered = vec![false; n];
+            for (a, b) in ranges {
+                for i in a..b {
+                    assert!(!covered[i]);
+                    covered[i] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "n={n} w={w}");
+        }
+    }
+}

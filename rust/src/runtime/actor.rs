@@ -1,0 +1,184 @@
+//! Runtime actor: the PJRT client and executables are not `Send`, so a
+//! dedicated thread owns the [`Engine`] and the rest of the system talks to
+//! it through a cloneable, `Send` [`EngineHandle`] (request/reply over the
+//! bounded channel substrate).
+//!
+//! XLA:CPU parallelizes *inside* an execution (intra-op thread pool), so a
+//! single dispatch thread is not the bottleneck for the large-D artifacts
+//! the hot path uses; benches/micro quantifies dispatch overhead.
+
+use super::engine::{Engine, TensorIn};
+use crate::util::channel::{bounded, Sender};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// An owned input tensor crossing the thread boundary.
+#[derive(Clone, Debug)]
+pub struct OwnedTensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl OwnedTensor {
+    pub fn new(data: Vec<f32>, dims: &[usize]) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Self {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+}
+
+type RunReply = Result<Vec<Vec<f32>>, String>;
+
+enum Request {
+    Run {
+        model: String,
+        artifact: String,
+        inputs: Vec<OwnedTensor>,
+        reply: mpsc::Sender<RunReply>,
+    },
+    Warm {
+        model: String,
+        artifacts: Vec<String>,
+        reply: mpsc::Sender<Result<(), String>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the runtime thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Request>,
+    manifest: std::sync::Arc<super::manifest::Manifest>,
+}
+
+/// Owns the runtime thread; dropping shuts it down.
+pub struct EngineActor {
+    handle: EngineHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl EngineActor {
+    /// Spawn the runtime thread on `artifacts_dir`. Fails fast (in the
+    /// caller's thread) if the manifest is unreadable.
+    pub fn spawn(artifacts_dir: &str) -> Result<EngineActor, String> {
+        // Validate the manifest on the caller thread for early errors; the
+        // engine re-reads it on its own thread.
+        let manifest = super::manifest::Manifest::load(std::path::Path::new(artifacts_dir))?;
+        let (tx, rx) = bounded::<Request>(64);
+        let dir = artifacts_dir.to_string();
+        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("sage-runtime".into())
+            .spawn(move || {
+                let mut engine = match Engine::new(&dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Some(req) = rx.recv() {
+                    match req {
+                        Request::Run {
+                            model,
+                            artifact,
+                            inputs,
+                            reply,
+                        } => {
+                            let ins: Vec<TensorIn> = inputs
+                                .iter()
+                                .map(|t| TensorIn::new(&t.data, &t.dims))
+                                .collect();
+                            let _ = reply.send(engine.run(&model, &artifact, &ins));
+                        }
+                        Request::Warm {
+                            model,
+                            artifacts,
+                            reply,
+                        } => {
+                            let arts: Vec<&str> =
+                                artifacts.iter().map(|s| s.as_str()).collect();
+                            let _ = reply.send(engine.warm(&model, &arts));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn runtime thread: {e}"))?;
+        init_rx
+            .recv()
+            .map_err(|_| "runtime thread died during init".to_string())??;
+        Ok(EngineActor {
+            handle: EngineHandle {
+                tx,
+                manifest: std::sync::Arc::new(manifest),
+            },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for EngineActor {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        self.handle.tx.close();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Blocking execute on the runtime thread.
+    pub fn run(
+        &self,
+        model: &str,
+        artifact: &str,
+        inputs: Vec<OwnedTensor>,
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Run {
+                model: model.to_string(),
+                artifact: artifact.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| "runtime thread gone".to_string())?;
+        reply_rx
+            .recv()
+            .map_err(|_| "runtime thread dropped reply".to_string())?
+    }
+
+    /// Pre-compile artifacts.
+    pub fn warm(&self, model: &str, artifacts: &[&str]) -> Result<(), String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warm {
+                model: model.to_string(),
+                artifacts: artifacts.iter().map(|s| s.to_string()).collect(),
+                reply: reply_tx,
+            })
+            .map_err(|_| "runtime thread gone".to_string())?;
+        reply_rx
+            .recv()
+            .map_err(|_| "runtime thread dropped reply".to_string())?
+    }
+
+    pub fn manifest(&self) -> &super::manifest::Manifest {
+        &self.manifest
+    }
+
+    pub fn cfg(&self, model: &str) -> Result<super::manifest::ModelCfg, String> {
+        self.manifest.get(model).cloned()
+    }
+}

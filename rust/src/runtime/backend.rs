@@ -1,0 +1,459 @@
+//! Model execution backends.
+//!
+//! [`ModelBackend`] abstracts "run the L2 model" for the pipeline/trainer:
+//!
+//! * [`XlaModelBackend`] — the production path: AOT artifacts through the
+//!   PJRT actor. Fixed static shapes from the manifest; partial batches are
+//!   zero-padded and outputs truncated.
+//! * [`ReferenceModelBackend`] — the pure-Rust `grad::MlpSpec` math.
+//!   Arbitrary shapes, no artifacts needed; also the parity oracle.
+//!
+//! [`XlaShrinkBackend`] plugs the L1 Pallas gram/apply_rot kernels into
+//! `sketch::FdSketch`.
+
+use super::actor::{EngineHandle, OwnedTensor};
+use super::manifest::ModelCfg;
+use crate::grad::{MlpSpec, TrainHyper};
+use crate::sketch::ShrinkBackend;
+use crate::tensor::{self, Matrix};
+
+/// Backend-agnostic model interface used by pipeline + trainer.
+pub trait ModelBackend: Send + Sync {
+    fn name(&self) -> String;
+    fn spec(&self) -> MlpSpec;
+    fn hyper(&self) -> TrainHyper;
+    /// Scoring/grad batch size (artifact-static for XLA).
+    fn score_batch(&self) -> usize;
+    /// Train-step batch size.
+    fn train_batch(&self) -> usize;
+    /// FD sketch size ℓ.
+    fn ell(&self) -> usize;
+
+    /// Per-example gradients `(G [n×D], losses [n])`; n ≤ score_batch.
+    fn per_example_grads(
+        &self,
+        params: &[f32],
+        x: &Matrix,
+        y: &Matrix,
+    ) -> Result<(Matrix, Vec<f32>), String>;
+
+    /// Phase-II projection `(ẑ [n×ℓ], norms [n])`; n ≤ score_batch.
+    fn project(&self, sketch: &Matrix, g: &Matrix) -> Result<(Matrix, Vec<f32>), String>;
+
+    /// Fused Phase II: grads + projection without materializing G host-side.
+    fn score_fused(
+        &self,
+        params: &[f32],
+        sketch: &Matrix,
+        x: &Matrix,
+        y: &Matrix,
+    ) -> Result<(Matrix, Vec<f32>, Vec<f32>), String> {
+        let (g, losses) = self.per_example_grads(params, x, y)?;
+        let (zhat, norms) = self.project(sketch, &g)?;
+        Ok((zhat, norms, losses))
+    }
+
+    /// One SGD+momentum step in place; x must have exactly train_batch rows.
+    fn train_step(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        x: &Matrix,
+        y: &Matrix,
+        lr: f32,
+    ) -> Result<f32, String>;
+
+    /// Logits `[n×C]`; n ≤ score_batch.
+    fn eval_logits(&self, params: &[f32], x: &Matrix) -> Result<Matrix, String>;
+
+    /// Top-1 accuracy helper over arbitrary n (chunks internally).
+    fn accuracy(&self, params: &[f32], x: &Matrix, labels: &[u32]) -> Result<f64, String> {
+        let b = self.score_batch();
+        let c = self.spec().c;
+        let mut correct = 0usize;
+        let mut start = 0;
+        while start < x.rows() {
+            let end = (start + b).min(x.rows());
+            let idx: Vec<usize> = (start..end).collect();
+            let xb = {
+                let mut m = Matrix::zeros(end - start, x.cols());
+                for (r, &i) in idx.iter().enumerate() {
+                    m.row_mut(r).copy_from_slice(x.row(i));
+                }
+                m
+            };
+            let logits = self.eval_logits(params, &xb)?;
+            for (r, &i) in idx.iter().enumerate() {
+                let row = logits.row(r);
+                let mut best = 0usize;
+                for k in 1..c {
+                    if row[k] > row[best] {
+                        best = k;
+                    }
+                }
+                if best as u32 == labels[i] {
+                    correct += 1;
+                }
+            }
+            start = end;
+        }
+        Ok(correct as f64 / x.rows().max(1) as f64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference backend (pure Rust)
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust backend over `grad::MlpSpec`.
+pub struct ReferenceModelBackend {
+    spec: MlpSpec,
+    hyper: TrainHyper,
+    b: usize,
+    bt: usize,
+    ell: usize,
+}
+
+impl ReferenceModelBackend {
+    pub fn new(spec: MlpSpec, hyper: TrainHyper, b: usize, bt: usize, ell: usize) -> Self {
+        Self {
+            spec,
+            hyper,
+            b,
+            bt,
+            ell,
+        }
+    }
+
+    /// Mirror an artifact config's shapes without requiring artifacts.
+    pub fn from_cfg(cfg: &ModelCfg) -> Self {
+        Self::new(cfg.mlp_spec(), cfg.hyper(), cfg.b, cfg.bt, cfg.l)
+    }
+}
+
+impl ModelBackend for ReferenceModelBackend {
+    fn name(&self) -> String {
+        "reference".into()
+    }
+
+    fn spec(&self) -> MlpSpec {
+        self.spec
+    }
+
+    fn hyper(&self) -> TrainHyper {
+        self.hyper
+    }
+
+    fn score_batch(&self) -> usize {
+        self.b
+    }
+
+    fn train_batch(&self) -> usize {
+        self.bt
+    }
+
+    fn ell(&self) -> usize {
+        self.ell
+    }
+
+    fn per_example_grads(
+        &self,
+        params: &[f32],
+        x: &Matrix,
+        y: &Matrix,
+    ) -> Result<(Matrix, Vec<f32>), String> {
+        Ok(self
+            .spec
+            .per_example_grads(params, x, y, self.hyper.label_smoothing))
+    }
+
+    fn project(&self, sketch: &Matrix, g: &Matrix) -> Result<(Matrix, Vec<f32>), String> {
+        let mut zhat = g.matmul_transb(sketch);
+        let mut norms = Vec::with_capacity(zhat.rows());
+        for r in 0..zhat.rows() {
+            norms.push(tensor::normalize_in_place(zhat.row_mut(r)) as f32);
+        }
+        Ok((zhat, norms))
+    }
+
+    fn train_step(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        x: &Matrix,
+        y: &Matrix,
+        lr: f32,
+    ) -> Result<f32, String> {
+        Ok(self.spec.train_step(params, mom, x, y, lr, &self.hyper))
+    }
+
+    fn eval_logits(&self, params: &[f32], x: &Matrix) -> Result<Matrix, String> {
+        Ok(self.spec.forward(params, x))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA backend (AOT artifacts through the PJRT actor)
+// ---------------------------------------------------------------------------
+
+/// Production backend executing AOT artifacts.
+pub struct XlaModelBackend {
+    handle: EngineHandle,
+    cfg: ModelCfg,
+}
+
+impl XlaModelBackend {
+    pub fn new(handle: EngineHandle, model: &str) -> Result<Self, String> {
+        let cfg = handle.cfg(model)?;
+        Ok(Self { handle, cfg })
+    }
+
+    pub fn cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    pub fn handle(&self) -> &EngineHandle {
+        &self.handle
+    }
+
+    /// Zero-pad `m` to `rows` rows.
+    fn pad_rows(m: &Matrix, rows: usize) -> Matrix {
+        assert!(m.rows() <= rows);
+        if m.rows() == rows {
+            return m.clone();
+        }
+        let mut out = Matrix::zeros(rows, m.cols());
+        for r in 0..m.rows() {
+            out.row_mut(r).copy_from_slice(m.row(r));
+        }
+        out
+    }
+
+    fn tensor(m: &Matrix) -> OwnedTensor {
+        OwnedTensor::new(m.as_slice().to_vec(), &[m.rows(), m.cols()])
+    }
+
+    fn vec_tensor(v: &[f32], dims: &[usize]) -> OwnedTensor {
+        OwnedTensor::new(v.to_vec(), dims)
+    }
+}
+
+impl ModelBackend for XlaModelBackend {
+    fn name(&self) -> String {
+        format!("xla:{}", self.cfg.name)
+    }
+
+    fn spec(&self) -> MlpSpec {
+        self.cfg.mlp_spec()
+    }
+
+    fn hyper(&self) -> TrainHyper {
+        self.cfg.hyper()
+    }
+
+    fn score_batch(&self) -> usize {
+        self.cfg.b
+    }
+
+    fn train_batch(&self) -> usize {
+        self.cfg.bt
+    }
+
+    fn ell(&self) -> usize {
+        self.cfg.l
+    }
+
+    fn per_example_grads(
+        &self,
+        params: &[f32],
+        x: &Matrix,
+        y: &Matrix,
+    ) -> Result<(Matrix, Vec<f32>), String> {
+        let n = x.rows();
+        let (b, d) = (self.cfg.b, self.cfg.d);
+        if n > b {
+            return Err(format!("grads batch {n} > artifact batch {b}"));
+        }
+        let xp = Self::pad_rows(x, b);
+        let yp = Self::pad_rows(y, b);
+        let out = self.handle.run(
+            &self.cfg.name,
+            "grads",
+            vec![
+                Self::vec_tensor(params, &[d]),
+                Self::tensor(&xp),
+                Self::tensor(&yp),
+            ],
+        )?;
+        let g_full = Matrix::from_vec(b, d, out[0].clone());
+        let g = g_full.slice_rows(0, n);
+        let losses = out[1][..n].to_vec();
+        Ok((g, losses))
+    }
+
+    fn project(&self, sketch: &Matrix, g: &Matrix) -> Result<(Matrix, Vec<f32>), String> {
+        let n = g.rows();
+        let (b, d, l) = (self.cfg.b, self.cfg.d, self.cfg.l);
+        if n > b {
+            return Err(format!("project batch {n} > artifact batch {b}"));
+        }
+        if sketch.rows() != l || sketch.cols() != d {
+            return Err(format!(
+                "sketch shape {}x{} != {l}x{d}",
+                sketch.rows(),
+                sketch.cols()
+            ));
+        }
+        let gp = Self::pad_rows(g, b);
+        let out = self.handle.run(
+            &self.cfg.name,
+            "project",
+            vec![Self::tensor(sketch), Self::tensor(&gp)],
+        )?;
+        let zhat = Matrix::from_vec(b, l, out[0].clone()).slice_rows(0, n);
+        let norms = out[1][..n].to_vec();
+        Ok((zhat, norms))
+    }
+
+    fn score_fused(
+        &self,
+        params: &[f32],
+        sketch: &Matrix,
+        x: &Matrix,
+        y: &Matrix,
+    ) -> Result<(Matrix, Vec<f32>, Vec<f32>), String> {
+        let n = x.rows();
+        let (b, d, l) = (self.cfg.b, self.cfg.d, self.cfg.l);
+        if n > b {
+            return Err(format!("score batch {n} > artifact batch {b}"));
+        }
+        let xp = Self::pad_rows(x, b);
+        let yp = Self::pad_rows(y, b);
+        let out = self.handle.run(
+            &self.cfg.name,
+            "score_fused",
+            vec![
+                Self::vec_tensor(params, &[d]),
+                Self::tensor(sketch),
+                Self::tensor(&xp),
+                Self::tensor(&yp),
+            ],
+        )?;
+        let zhat = Matrix::from_vec(b, l, out[0].clone()).slice_rows(0, n);
+        let norms = out[1][..n].to_vec();
+        let losses = out[2][..n].to_vec();
+        Ok((zhat, norms, losses))
+    }
+
+    fn train_step(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        x: &Matrix,
+        y: &Matrix,
+        lr: f32,
+    ) -> Result<f32, String> {
+        let (bt, d) = (self.cfg.bt, self.cfg.d);
+        if x.rows() != bt {
+            return Err(format!(
+                "train_step needs exactly {bt} rows, got {}",
+                x.rows()
+            ));
+        }
+        let out = self.handle.run(
+            &self.cfg.name,
+            "train_step",
+            vec![
+                Self::vec_tensor(params, &[d]),
+                Self::vec_tensor(mom, &[d]),
+                Self::tensor(x),
+                Self::tensor(y),
+                OwnedTensor::new(vec![lr], &[1]),
+            ],
+        )?;
+        params.copy_from_slice(&out[0]);
+        mom.copy_from_slice(&out[1]);
+        Ok(out[2][0])
+    }
+
+    fn eval_logits(&self, params: &[f32], x: &Matrix) -> Result<Matrix, String> {
+        let n = x.rows();
+        let (b, d, c) = (self.cfg.b, self.cfg.d, self.cfg.c);
+        if n > b {
+            return Err(format!("eval batch {n} > artifact batch {b}"));
+        }
+        let xp = Self::pad_rows(x, b);
+        let out = self.handle.run(
+            &self.cfg.name,
+            "eval",
+            vec![Self::vec_tensor(params, &[d]), Self::tensor(&xp)],
+        )?;
+        Ok(Matrix::from_vec(b, c, out[0].clone()).slice_rows(0, n))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA shrink backend for the FD sketch
+// ---------------------------------------------------------------------------
+
+/// Runs the FD shrink contractions (L1 Pallas `gram` / `apply_rot` kernels)
+/// through the PJRT actor. Buffers with fewer than `m` live rows are
+/// zero-padded; padding is exact for both contractions.
+pub struct XlaShrinkBackend {
+    handle: EngineHandle,
+    cfg: ModelCfg,
+}
+
+impl XlaShrinkBackend {
+    pub fn new(handle: EngineHandle, model: &str) -> Result<Self, String> {
+        let cfg = handle.cfg(model)?;
+        Ok(Self { handle, cfg })
+    }
+}
+
+impl ShrinkBackend for XlaShrinkBackend {
+    fn gram(&self, buf: &Matrix) -> Matrix {
+        let (m, d) = (self.cfg.m, self.cfg.d);
+        let mp = buf.rows();
+        assert!(mp <= m && buf.cols() == d, "gram buffer shape");
+        let padded = XlaModelBackend::pad_rows(buf, m);
+        let out = self
+            .handle
+            .run(
+                &self.cfg.name,
+                "gram",
+                vec![OwnedTensor::new(
+                    padded.as_slice().to_vec(),
+                    &[m, d],
+                )],
+            )
+            .expect("gram artifact failed");
+        let full = Matrix::from_vec(m, m, out[0].clone());
+        // Slice the live m' x m' block (padding rows/cols are zero).
+        Matrix::from_fn(mp, mp, |r, c| full.get(r, c))
+    }
+
+    fn apply_rot(&self, rot: &Matrix, buf: &Matrix) -> Matrix {
+        let (l, m, d) = (self.cfg.l, self.cfg.m, self.cfg.d);
+        assert_eq!(rot.rows(), l, "rotation rows");
+        assert!(rot.cols() == buf.rows() && buf.cols() == d);
+        // Pad rot cols and buf rows to m (exact under zero padding).
+        let mut rp = Matrix::zeros(l, m);
+        for r in 0..l {
+            rp.row_mut(r)[..rot.cols()].copy_from_slice(rot.row(r));
+        }
+        let bp = XlaModelBackend::pad_rows(buf, m);
+        let out = self
+            .handle
+            .run(
+                &self.cfg.name,
+                "apply_rot",
+                vec![
+                    OwnedTensor::new(rp.as_slice().to_vec(), &[l, m]),
+                    OwnedTensor::new(bp.as_slice().to_vec(), &[m, d]),
+                ],
+            )
+            .expect("apply_rot artifact failed");
+        Matrix::from_vec(l, d, out[0].clone())
+    }
+}

@@ -1,0 +1,187 @@
+//! Single-threaded PJRT engine: loads HLO-text artifacts, compiles them on
+//! the CPU PJRT client (lazily, once per artifact), executes with f32
+//! host tensors. Not `Send` — the actor in `runtime::actor` owns one of
+//! these per runtime thread and serializes access.
+
+use super::manifest::{Manifest, ModelCfg};
+use crate::log_debug;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// A host-side f32 tensor view handed to [`Engine::run`].
+pub struct TensorIn<'a> {
+    pub data: &'a [f32],
+    pub dims: Vec<usize>,
+}
+
+impl<'a> TensorIn<'a> {
+    pub fn new(data: &'a [f32], dims: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            dims.iter().product::<usize>(),
+            "tensor data/shape mismatch"
+        );
+        Self {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+}
+
+/// Owns the PJRT client and the compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<(String, String), xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Open the artifacts directory (reads + validates the manifest).
+    pub fn new(artifacts_dir: &str) -> Result<Engine, String> {
+        let dir = PathBuf::from(artifacts_dir);
+        let manifest = Manifest::load(&dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| format!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn cfg(&self, model: &str) -> Result<&ModelCfg, String> {
+        self.manifest.get(model)
+    }
+
+    fn compile(&mut self, model: &str, artifact: &str) -> Result<(), String> {
+        let key = (model.to_string(), artifact.to_string());
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let cfg = self.manifest.get(model)?;
+        let meta = cfg
+            .artifacts
+            .get(artifact)
+            .ok_or_else(|| format!("config '{model}' has no artifact '{artifact}'"))?;
+        let path = self.dir.join(&meta.file);
+        let start = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| format!("{}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {model}/{artifact}: {e:?}"))?;
+        log_debug!(
+            "compiled {model}/{artifact} in {:.1} ms",
+            start.elapsed().as_secs_f64() * 1e3
+        );
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute one artifact. Inputs are validated against the manifest;
+    /// outputs come back as flat f32 vectors in manifest output order.
+    pub fn run(
+        &mut self,
+        model: &str,
+        artifact: &str,
+        inputs: &[TensorIn],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        // Validate shapes first (clearer error than an XLA abort).
+        {
+            let cfg = self.manifest.get(model)?;
+            let meta = cfg
+                .artifacts
+                .get(artifact)
+                .ok_or_else(|| format!("config '{model}' has no artifact '{artifact}'"))?;
+            if inputs.len() != meta.inputs.len() {
+                return Err(format!(
+                    "{model}/{artifact}: {} inputs given, {} expected",
+                    inputs.len(),
+                    meta.inputs.len()
+                ));
+            }
+            for (i, (got, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+                if &got.dims != want {
+                    return Err(format!(
+                        "{model}/{artifact} input {i}: shape {:?} != manifest {:?}",
+                        got.dims, want
+                    ));
+                }
+            }
+        }
+        self.compile(model, artifact)?;
+        let exe = &self.cache[&(model.to_string(), artifact.to_string())];
+        let hist = crate::util::metrics::global()
+            .histogram(&format!("runtime.exec.{artifact}.ns"));
+        let _timer = crate::util::metrics::ScopedTimer::new(hist);
+        crate::util::metrics::global()
+            .counter(&format!("runtime.exec.{artifact}.calls"))
+            .inc();
+
+        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute`
+        // (literal inputs): the xla crate's C shim `execute` leaks every
+        // input device buffer (`buffer.release()` without a matching
+        // delete), which OOMs long benchmark runs. Building the input
+        // buffers ourselves keeps them owned by `PjRtBuffer` wrappers
+        // (freed on Drop) and `execute_b` only borrows them.
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| {
+                self.client
+                    .buffer_from_host_buffer::<f32>(t.data, &t.dims, None)
+                    .map_err(|e| format!("host->device {:?}: {e:?}", t.dims))
+            })
+            .collect::<Result<_, String>>()?;
+
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| format!("execute {model}/{artifact}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch {model}/{artifact}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| format!("untuple {model}/{artifact}: {e:?}"))?;
+        let meta = &self.manifest.get(model)?.artifacts[artifact];
+        if parts.len() != meta.outputs.len() {
+            return Err(format!(
+                "{model}/{artifact}: {} outputs, manifest says {}",
+                parts.len(),
+                meta.outputs.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.iter().enumerate() {
+            let v = p
+                .to_vec::<f32>()
+                .map_err(|e| format!("{model}/{artifact} output {i}: {e:?}"))?;
+            let want: usize = meta.outputs[i].iter().product();
+            if v.len() != want {
+                return Err(format!(
+                    "{model}/{artifact} output {i}: {} elements, manifest says {want}",
+                    v.len()
+                ));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Pre-compile a set of artifacts (warm-up before timed runs).
+    pub fn warm(&mut self, model: &str, artifacts: &[&str]) -> Result<(), String> {
+        for a in artifacts {
+            self.compile(model, a)?;
+        }
+        Ok(())
+    }
+}

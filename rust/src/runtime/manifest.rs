@@ -1,0 +1,235 @@
+//! `artifacts/manifest.json` schema — written by python/compile/aot.py,
+//! validated here at load time so shape drift between the Python and Rust
+//! sides fails fast with a clear error instead of a PJRT crash.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Expected manifest version (must match aot.MANIFEST_VERSION).
+pub const MANIFEST_VERSION: usize = 1;
+
+/// One AOT-lowered entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// One model configuration's shape bundle + training constants.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub f: usize,
+    pub h: usize,
+    pub c: usize,
+    /// Scoring/grad batch.
+    pub b: usize,
+    /// Training batch.
+    pub bt: usize,
+    /// FD sketch size ℓ.
+    pub l: usize,
+    /// FD buffer rows (2ℓ).
+    pub m: usize,
+    /// Flat parameter count.
+    pub d: usize,
+    pub block_d: usize,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub label_smoothing: f64,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl ModelCfg {
+    pub fn mlp_spec(&self) -> crate::grad::MlpSpec {
+        crate::grad::MlpSpec::new(self.f, self.h, self.c)
+    }
+
+    pub fn hyper(&self) -> crate::grad::TrainHyper {
+        crate::grad::TrainHyper {
+            momentum: self.momentum as f32,
+            weight_decay: self.weight_decay as f32,
+            label_smoothing: self.label_smoothing as f32,
+        }
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ModelCfg>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let doc = json::parse(text)?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or("manifest: missing version")?;
+        if version != MANIFEST_VERSION {
+            return Err(format!(
+                "manifest version {version} != expected {MANIFEST_VERSION}"
+            ));
+        }
+        let mut configs = BTreeMap::new();
+        let cfgs = doc
+            .get("configs")
+            .and_then(Json::as_obj)
+            .ok_or("manifest: missing configs")?;
+        for (name, entry) in cfgs {
+            configs.insert(name.clone(), parse_cfg(name, entry)?);
+        }
+        Ok(Manifest { configs })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModelCfg, String> {
+        self.configs.get(name).ok_or_else(|| {
+            format!(
+                "model config '{name}' not in manifest (have: {})",
+                self.configs.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+}
+
+fn get_usize(e: &Json, cfg: &str, key: &str) -> Result<usize, String> {
+    e.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("manifest config '{cfg}': missing {key}"))
+}
+
+fn get_f64(e: &Json, cfg: &str, key: &str) -> Result<f64, String> {
+    e.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("manifest config '{cfg}': missing {key}"))
+}
+
+fn parse_cfg(name: &str, e: &Json) -> Result<ModelCfg, String> {
+    let mut artifacts = BTreeMap::new();
+    let arts = e
+        .get("artifacts")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| format!("config '{name}': missing artifacts"))?;
+    for (aname, a) in arts {
+        let file = a
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("artifact '{aname}': missing file"))?
+            .to_string();
+        let shapes = |key: &str| -> Result<Vec<Vec<usize>>, String> {
+            a.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("artifact '{aname}': missing {key}"))?
+                .iter()
+                .map(|s| {
+                    s.as_usize_vec()
+                        .ok_or_else(|| format!("artifact '{aname}': bad {key}"))
+                })
+                .collect()
+        };
+        artifacts.insert(
+            aname.clone(),
+            ArtifactMeta {
+                file,
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+            },
+        );
+    }
+    let cfg = ModelCfg {
+        name: name.to_string(),
+        f: get_usize(e, name, "f")?,
+        h: get_usize(e, name, "h")?,
+        c: get_usize(e, name, "c")?,
+        b: get_usize(e, name, "b")?,
+        bt: get_usize(e, name, "bt")?,
+        l: get_usize(e, name, "l")?,
+        m: get_usize(e, name, "m")?,
+        d: get_usize(e, name, "d")?,
+        block_d: get_usize(e, name, "block_d")?,
+        momentum: get_f64(e, name, "momentum")?,
+        weight_decay: get_f64(e, name, "weight_decay")?,
+        label_smoothing: get_f64(e, name, "label_smoothing")?,
+        artifacts,
+    };
+    // Cross-checks: D must match the MLP layout, m = 2l.
+    let expect_d = cfg.f * cfg.h + cfg.h + cfg.h * cfg.c + cfg.c;
+    if cfg.d != expect_d {
+        return Err(format!(
+            "config '{name}': d={} but f/h/c imply {expect_d}",
+            cfg.d
+        ));
+    }
+    if cfg.m != 2 * cfg.l {
+        return Err(format!("config '{name}': m={} != 2l={}", cfg.m, 2 * cfg.l));
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        r#"{
+          "version": 1,
+          "configs": {
+            "tiny": {
+              "f": 16, "h": 32, "c": 4, "b": 8, "bt": 8, "l": 8, "m": 16,
+              "d": 676, "block_d": 256,
+              "momentum": 0.9, "weight_decay": 0.0005, "label_smoothing": 0.1,
+              "artifacts": {
+                "grads": {"file": "grads_tiny.hlo.txt",
+                          "inputs": [[676],[8,16],[8,4]],
+                          "outputs": [[8,676],[8]]}
+              }
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(&sample()).unwrap();
+        let cfg = m.get("tiny").unwrap();
+        assert_eq!(cfg.d, 676);
+        assert_eq!(cfg.artifacts["grads"].inputs[1], vec![8, 16]);
+        assert_eq!(cfg.mlp_spec().d(), 676);
+        assert!((cfg.hyper().momentum - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = sample().replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_d() {
+        let bad = sample().replace("\"d\": 676", "\"d\": 100");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_m() {
+        let bad = sample().replace("\"m\": 16", "\"m\": 17");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_config_lookup_lists_available() {
+        let m = Manifest::parse(&sample()).unwrap();
+        let err = m.get("nope").unwrap_err();
+        assert!(err.contains("tiny"));
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the coordinator hot path.
+//!
+//! Layering:
+//! * [`manifest`] — the shape contract written by `python/compile/aot.py`.
+//! * [`engine`] — one PJRT CPU client + compiled-executable cache
+//!   (not `Send`; thread-confined).
+//! * [`actor`] — dedicated runtime thread + cloneable [`EngineHandle`].
+//! * [`backend`] — [`ModelBackend`] implementations (XLA + pure-Rust
+//!   reference) and the FD [`XlaShrinkBackend`].
+
+pub mod actor;
+pub mod backend;
+pub mod engine;
+pub mod manifest;
+
+pub use actor::{EngineActor, EngineHandle, OwnedTensor};
+pub use backend::{ModelBackend, ReferenceModelBackend, XlaModelBackend, XlaShrinkBackend};
+pub use engine::{Engine, TensorIn};
+pub use manifest::{ArtifactMeta, Manifest, ModelCfg};

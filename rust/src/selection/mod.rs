@@ -1,0 +1,341 @@
+//! Agreement scoring & subset selection — Algorithm 1, Phase II.
+//!
+//! Given the frozen FD sketch `S`, every example's gradient is projected to
+//! `z_i = S g_i ∈ R^ℓ`, normalized (`ẑ_i`), and scored by cosine agreement
+//! with the consensus direction `u = z̄/‖z̄‖`:
+//!
+//! ```text
+//! α_i = ⟨ẑ_i, u⟩ ∈ [-1, 1]
+//! ```
+//!
+//! [`AgreementScorer`] accumulates the consensus in a streaming fashion
+//! (ℓ-dim state), while caching projected rows so scoring is a single pass;
+//! [`select_top_k`] / [`select_class_balanced`] implement plain SAGE and
+//! CB-SAGE (per-class centroids `u_c`, per-class budgets `k_c`).
+//!
+//! The module verifies Lemma 1 (consensus-direction energy) and the
+//! mean-alignment corollary as property tests.
+
+mod scorer;
+pub mod streaming;
+mod topk;
+
+pub use scorer::{AgreementScorer, ScoreEntry, Scores};
+pub use streaming::{streaming_select, ConsensusAccumulator, StreamingSelector};
+pub use topk::{top_k_indices, TopK};
+
+use crate::tensor::Matrix;
+
+/// Select indices of the k highest-agreement examples (Algorithm 1 line 20).
+pub fn select_top_k(scores: &Scores, k: usize) -> Vec<usize> {
+    let mut tk = TopK::new(k);
+    for e in &scores.entries {
+        tk.push(e.alpha, e.index);
+    }
+    tk.into_sorted_indices()
+}
+
+/// CB-SAGE (Algorithm 1 lines 16-18): per-class unit centroids `u_c`,
+/// select top-`k_c` per class by `⟨ẑ_i, u_c⟩`, with `Σ_c k_c = k` allocated
+/// proportionally to class frequency (each nonempty class gets ≥ 1).
+pub fn select_class_balanced(scores: &Scores, num_classes: usize, k: usize) -> Vec<usize> {
+    let budgets = class_budgets(scores, num_classes, k);
+    let ell = scores.ell;
+
+    // Per-class centroids from the cached normalized projections.
+    let mut centroid = vec![vec![0.0f64; ell]; num_classes];
+    let mut count = vec![0usize; num_classes];
+    for (row, e) in scores.entries.iter().enumerate() {
+        let z = scores.zhat.row(row);
+        let c = e.label as usize;
+        count[c] += 1;
+        for (j, &v) in z.iter().enumerate() {
+            centroid[c][j] += v as f64;
+        }
+    }
+    let mut unit: Vec<Option<Vec<f32>>> = Vec::with_capacity(num_classes);
+    for c in 0..num_classes {
+        if count[c] == 0 {
+            unit.push(None);
+            continue;
+        }
+        let mut u: Vec<f32> = centroid[c].iter().map(|&v| (v / count[c] as f64) as f32).collect();
+        let n = crate::tensor::normalize_in_place(&mut u);
+        unit.push(if n > 0.0 { Some(u) } else { None });
+    }
+
+    // Per-class top-k_c by ⟨ẑ_i, u_c⟩ (falls back to global α when the
+    // class centroid is degenerate/zero).
+    let mut heaps: Vec<TopK> = budgets.iter().map(|&b| TopK::new(b)).collect();
+    for (row, e) in scores.entries.iter().enumerate() {
+        let c = e.label as usize;
+        if budgets[c] == 0 {
+            continue;
+        }
+        let score = match &unit[c] {
+            Some(u) => crate::tensor::dot(scores.zhat.row(row), u),
+            None => e.alpha,
+        };
+        heaps[c].push(score, e.index);
+    }
+    let mut out: Vec<usize> = heaps
+        .into_iter()
+        .flat_map(|h| h.into_sorted_indices())
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Proportional per-class budgets: `k_c ∝ n_c`, every nonempty class gets at
+/// least one slot, total exactly `min(k, N)`.
+pub fn class_budgets(scores: &Scores, num_classes: usize, k: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; num_classes];
+    for e in &scores.entries {
+        counts[e.label as usize] += 1;
+    }
+    let n: usize = counts.iter().sum();
+    let k = k.min(n);
+    let mut budgets = vec![0usize; num_classes];
+    if k == 0 {
+        return budgets;
+    }
+    // Largest-remainder apportionment with a floor of 1 for nonempty classes.
+    let nonempty = counts.iter().filter(|&&c| c > 0).count();
+    let base_total = k.max(nonempty.min(k));
+    let mut rema: Vec<(f64, usize)> = Vec::new();
+    let mut assigned = 0usize;
+    for c in 0..num_classes {
+        if counts[c] == 0 {
+            continue;
+        }
+        let ideal = base_total as f64 * counts[c] as f64 / n as f64;
+        let mut floor = ideal.floor() as usize;
+        if floor == 0 {
+            floor = 1;
+        }
+        let floor = floor.min(counts[c]);
+        budgets[c] = floor;
+        assigned += floor;
+        rema.push((ideal - ideal.floor(), c));
+    }
+    // Fix up to exactly k: add by largest remainder, remove from largest
+    // budgets (above 1) if we overshot.
+    rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut i = 0;
+    while assigned < k {
+        let c = rema[i % rema.len()].1;
+        if budgets[c] < counts[c] {
+            budgets[c] += 1;
+            assigned += 1;
+        }
+        i += 1;
+        if i > 4 * (rema.len() + k) {
+            break; // all classes saturated
+        }
+    }
+    while assigned > k {
+        // Remove from the class with the largest budget > 1 (or > 0 if must).
+        let (c, _) = budgets
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &b)| b)
+            .unwrap();
+        if budgets[c] == 0 {
+            break;
+        }
+        budgets[c] -= 1;
+        assigned -= 1;
+    }
+    budgets
+}
+
+/// Lemma-1 check helper: given raw (un-normalized) projections `z` for a
+/// subset with scores `alpha ≥ ξ`, verify
+/// `‖mean z‖ ≥ ξ · mean ‖z‖` (mean-alignment corollary).
+pub fn mean_alignment_holds(z: &Matrix, alphas: &[f32], xi: f32) -> bool {
+    let k = z.rows();
+    if k == 0 {
+        return true;
+    }
+    assert!(alphas.iter().all(|&a| a >= xi));
+    let mut mean = vec![0.0f64; z.cols()];
+    let mut norm_sum = 0.0f64;
+    for i in 0..k {
+        let row = z.row(i);
+        for (j, &v) in row.iter().enumerate() {
+            mean[j] += v as f64;
+        }
+        norm_sum += crate::tensor::norm2(row);
+    }
+    let mean_norm = (mean.iter().map(|v| v * v).sum::<f64>()).sqrt() / k as f64;
+    mean_norm + 1e-9 >= xi as f64 * norm_sum / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Pcg64;
+
+    /// Build Scores from synthetic ẑ clustered around a direction.
+    fn synthetic_scores(rng: &mut Pcg64, n: usize, ell: usize, classes: u32) -> Scores {
+        let mut scorer = AgreementScorer::new(ell);
+        let mut dir = vec![0.0f32; ell];
+        rng.fill_normal(&mut dir, 1.0);
+        crate::tensor::normalize_in_place(&mut dir);
+        let mut z = Matrix::zeros(n, ell);
+        let mut norms = vec![0.0f32; n];
+        let mut idx = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..n {
+            let spread = 0.3 + rng.next_f32();
+            let row = z.row_mut(i);
+            for (j, &d) in dir.iter().enumerate() {
+                row[j] = d + spread * rng.normal_f32();
+            }
+            norms[i] = crate::tensor::normalize_in_place(row) as f32;
+            idx.push(i);
+            labels.push(rng.below(classes as u64) as u32);
+        }
+        scorer.add_batch(&idx, &labels, &z, &norms, &vec![1.0; n]);
+        scorer.finalize()
+    }
+
+    #[test]
+    fn top_k_returns_best_alphas() {
+        forall("sel_topk", 10, |rng| {
+            let scores = synthetic_scores(rng, 100, 8, 4);
+            let k = 1 + rng.below(50) as usize;
+            let sel = select_top_k(&scores, k);
+            assert_eq!(sel.len(), k);
+            let mut alphas: Vec<f32> = scores.entries.iter().map(|e| e.alpha).collect();
+            alphas.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let threshold = alphas[k - 1];
+            for &i in &sel {
+                let e = scores.entries.iter().find(|e| e.index == i).unwrap();
+                assert!(e.alpha >= threshold - 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn class_balanced_budgets_sum_to_k() {
+        forall("sel_budgets", 10, |rng| {
+            let classes = 2 + rng.below(6) as u32;
+            let scores = synthetic_scores(rng, 150, 8, classes);
+            let k = 1 + rng.below(120) as usize;
+            let budgets = class_budgets(&scores, classes as usize, k);
+            assert_eq!(budgets.iter().sum::<usize>(), k.min(150));
+            // No budget exceeds class count.
+            let mut counts = vec![0usize; classes as usize];
+            for e in &scores.entries {
+                counts[e.label as usize] += 1;
+            }
+            for (c, &b) in budgets.iter().enumerate() {
+                assert!(b <= counts[c], "class {c}: {b} > {}", counts[c]);
+            }
+        });
+    }
+
+    #[test]
+    fn class_balanced_selection_covers_classes() {
+        forall("sel_cb_cover", 8, |rng| {
+            let classes = 4u32;
+            let scores = synthetic_scores(rng, 200, 8, classes);
+            let sel = select_class_balanced(&scores, 4, 40);
+            assert_eq!(sel.len(), 40);
+            let mut hit = vec![false; 4];
+            for &i in &sel {
+                let e = scores.entries.iter().find(|e| e.index == i).unwrap();
+                hit[e.label as usize] = true;
+            }
+            assert!(hit.iter().all(|&h| h), "all classes covered");
+        });
+    }
+
+    #[test]
+    fn lemma1_mean_alignment_on_selected_subsets() {
+        forall("lemma1", 10, |rng| {
+            let ell = 6;
+            let n = 80;
+            // Raw z_i (not normalized): cluster + magnitudes.
+            let mut dir = vec![0.0f32; ell];
+            rng.fill_normal(&mut dir, 1.0);
+            crate::tensor::normalize_in_place(&mut dir);
+            let mut z = Matrix::zeros(n, ell);
+            for i in 0..n {
+                let mag = 0.5 + 2.0 * rng.next_f32();
+                let spread = 0.4;
+                let row = z.row_mut(i);
+                for (j, &d) in dir.iter().enumerate() {
+                    row[j] = mag * (d + spread * rng.normal_f32());
+                }
+            }
+            // Consensus from normalized copies.
+            let mut u = vec![0.0f64; ell];
+            for i in 0..n {
+                let mut r = z.row(i).to_vec();
+                crate::tensor::normalize_in_place(&mut r);
+                for (j, &v) in r.iter().enumerate() {
+                    u[j] += v as f64;
+                }
+            }
+            let mut uf: Vec<f32> = u.iter().map(|&v| v as f32).collect();
+            crate::tensor::normalize_in_place(&mut uf);
+            // Alphas.
+            let alphas: Vec<f32> = (0..n)
+                .map(|i| {
+                    let mut r = z.row(i).to_vec();
+                    crate::tensor::normalize_in_place(&mut r);
+                    crate::tensor::dot(&r, &uf)
+                })
+                .collect();
+            let xi = 0.5f32;
+            let keep: Vec<usize> = (0..n).filter(|&i| alphas[i] >= xi).collect();
+            if keep.is_empty() {
+                return;
+            }
+            let zsub = {
+                let mut m = Matrix::zeros(keep.len(), ell);
+                for (r, &i) in keep.iter().enumerate() {
+                    m.row_mut(r).copy_from_slice(z.row(i));
+                }
+                m
+            };
+            let asub: Vec<f32> = keep.iter().map(|&i| alphas[i]).collect();
+            assert!(mean_alignment_holds(&zsub, &asub, xi));
+        });
+    }
+
+    #[test]
+    fn degenerate_all_same_direction() {
+        // All ẑ identical -> α_i = 1 for all; top-k arbitrary but valid.
+        let ell = 4;
+        let mut scorer = AgreementScorer::new(ell);
+        let mut z = Matrix::zeros(10, ell);
+        for i in 0..10 {
+            z.set(i, 0, 1.0);
+        }
+        let idx: Vec<usize> = (0..10).collect();
+        let labels = vec![0u32; 10];
+        let norms = vec![1.0f32; 10];
+        scorer.add_batch(&idx, &labels, &z, &norms, &vec![1.0; 10]);
+        let scores = scorer.finalize();
+        for e in &scores.entries {
+            assert!((e.alpha - 1.0).abs() < 1e-6);
+        }
+        assert_eq!(select_top_k(&scores, 3).len(), 3);
+    }
+
+    #[test]
+    fn zero_projections_score_zero() {
+        let ell = 4;
+        let mut scorer = AgreementScorer::new(ell);
+        let mut z = Matrix::zeros(3, ell);
+        z.set(0, 0, 1.0); // one real row, two zero rows
+        scorer.add_batch(&[0, 1, 2], &[0, 0, 0], &z, &[1.0, 0.0, 0.0], &[1.0, 1.0, 1.0]);
+        let scores = scorer.finalize();
+        assert!((scores.entries[1].alpha).abs() < 1e-6);
+        assert!((scores.entries[2].alpha).abs() < 1e-6);
+    }
+}

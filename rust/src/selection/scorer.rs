@@ -1,0 +1,220 @@
+//! Streaming consensus accumulation + agreement scoring.
+
+use crate::tensor::{self, Matrix};
+
+/// Metadata for one scored example.
+#[derive(Clone, Copy, Debug)]
+pub struct ScoreEntry {
+    /// Global dataset index.
+    pub index: usize,
+    pub label: u32,
+    /// ‖S g_i‖₂ (projection magnitude before normalization).
+    pub norm: f32,
+    /// Per-example training loss at the scoring parameters (DROP's proxy).
+    pub loss: f32,
+    /// Agreement score α_i = ⟨ẑ_i, u⟩.
+    pub alpha: f32,
+}
+
+/// Finalized Phase-II output.
+pub struct Scores {
+    pub ell: usize,
+    /// Unit consensus u (zero vector if z̄ = 0).
+    pub consensus: Vec<f32>,
+    pub entries: Vec<ScoreEntry>,
+    /// Cached normalized projections, row r ↔ entries[r].
+    pub zhat: Matrix,
+}
+
+/// Accumulates normalized projections ẑ_i and the running mean z̄ in a
+/// streaming pass (Algorithm 1 lines 13-15). The consensus state is ℓ-dim;
+/// ẑ rows are cached so the subsequent scoring pass needs no recompute
+/// (`O(Nℓ)` cache — see the `streaming` ablation bench for the two-pass
+/// `O(ℓ)` variant).
+pub struct AgreementScorer {
+    ell: usize,
+    /// Σ ẑ_i in f64 (drift across N ~ 1e5 terms must not perturb ranks).
+    consensus_acc: Vec<f64>,
+    count: u64,
+    entries: Vec<ScoreEntry>,
+    rows: Vec<f32>,
+}
+
+impl AgreementScorer {
+    pub fn new(ell: usize) -> Self {
+        assert!(ell > 0);
+        Self {
+            ell,
+            consensus_acc: vec![0.0; ell],
+            count: 0,
+            entries: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Add a batch of *already normalized* projections (`zhat [b × ℓ]`,
+    /// zero rows for zero projections) with their pre-normalization norms.
+    pub fn add_batch(
+        &mut self,
+        indices: &[usize],
+        labels: &[u32],
+        zhat: &Matrix,
+        norms: &[f32],
+        losses: &[f32],
+    ) {
+        assert_eq!(zhat.rows(), indices.len());
+        assert_eq!(indices.len(), labels.len());
+        assert_eq!(indices.len(), norms.len());
+        assert_eq!(indices.len(), losses.len());
+        assert_eq!(zhat.cols(), self.ell, "projection dim");
+        for r in 0..zhat.rows() {
+            let row = zhat.row(r);
+            for (j, &v) in row.iter().enumerate() {
+                self.consensus_acc[j] += v as f64;
+            }
+            self.count += 1;
+            self.entries.push(ScoreEntry {
+                index: indices[r],
+                label: labels[r],
+                norm: norms[r],
+                loss: losses[r],
+                alpha: 0.0, // filled by finalize
+            });
+            self.rows.extend_from_slice(row);
+        }
+    }
+
+    /// Merge another scorer's partial state (pipeline shard aggregation).
+    pub fn merge(&mut self, other: AgreementScorer) {
+        assert_eq!(self.ell, other.ell);
+        for (a, b) in self.consensus_acc.iter_mut().zip(&other.consensus_acc) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.entries.extend(other.entries);
+        self.rows.extend(other.rows);
+    }
+
+    /// Compute u and all α_i (Algorithm 1 lines 14-15).
+    pub fn finalize(mut self) -> Scores {
+        let n = self.count.max(1) as f64;
+        let mut u: Vec<f32> = self.consensus_acc.iter().map(|&v| (v / n) as f32).collect();
+        let norm = tensor::normalize_in_place(&mut u);
+        let consensus = if norm > 0.0 { u } else { vec![0.0; self.ell] };
+
+        let zhat = Matrix::from_vec(self.entries.len(), self.ell, std::mem::take(&mut self.rows));
+        for (r, e) in self.entries.iter_mut().enumerate() {
+            e.alpha = tensor::dot(zhat.row(r), &consensus);
+        }
+        Scores {
+            ell: self.ell,
+            consensus,
+            entries: self.entries,
+            zhat,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(v: &mut [f32]) {
+        tensor::normalize_in_place(v);
+    }
+
+    #[test]
+    fn consensus_is_mean_direction() {
+        let mut scorer = AgreementScorer::new(2);
+        // Two points symmetric about the x-axis -> consensus = x-axis.
+        let mut z = Matrix::zeros(2, 2);
+        let mut a = [1.0f32, 0.5];
+        let mut b = [1.0f32, -0.5];
+        unit(&mut a);
+        unit(&mut b);
+        z.row_mut(0).copy_from_slice(&a);
+        z.row_mut(1).copy_from_slice(&b);
+        scorer.add_batch(&[0, 1], &[0, 0], &z, &[1.0, 1.0], &[0.5, 0.5]);
+        let s = scorer.finalize();
+        assert!((s.consensus[0] - 1.0).abs() < 1e-6);
+        assert!(s.consensus[1].abs() < 1e-6);
+        // Both examples have equal alpha.
+        assert!((s.entries[0].alpha - s.entries[1].alpha).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alpha_in_unit_interval() {
+        let mut scorer = AgreementScorer::new(3);
+        let mut rng = crate::util::rng::Pcg64::seeded(3);
+        let mut z = Matrix::zeros(50, 3);
+        let mut norms = vec![0.0f32; 50];
+        for i in 0..50 {
+            let row = z.row_mut(i);
+            rng.fill_normal(row, 1.0);
+            norms[i] = tensor::normalize_in_place(row) as f32;
+        }
+        let idx: Vec<usize> = (0..50).collect();
+        let labels = vec![0u32; 50];
+        scorer.add_batch(&idx, &labels, &z, &norms, &vec![1.0; 50]);
+        for e in scorer.finalize().entries {
+            assert!((-1.0 - 1e-5..=1.0 + 1e-5).contains(&e.alpha), "{}", e.alpha);
+        }
+    }
+
+    #[test]
+    fn merge_equals_single_stream() {
+        let mut rng = crate::util::rng::Pcg64::seeded(5);
+        let mut z = Matrix::zeros(40, 4);
+        let mut norms = vec![0.0f32; 40];
+        for i in 0..40 {
+            let row = z.row_mut(i);
+            rng.fill_normal(row, 1.0);
+            norms[i] = tensor::normalize_in_place(row) as f32;
+        }
+        let idx: Vec<usize> = (0..40).collect();
+        let labels: Vec<u32> = (0..40).map(|i| (i % 3) as u32).collect();
+
+        let mut whole = AgreementScorer::new(4);
+        whole.add_batch(&idx, &labels, &z, &norms, &vec![1.0; 40]);
+        let s1 = whole.finalize();
+
+        let mut a = AgreementScorer::new(4);
+        let mut b = AgreementScorer::new(4);
+        let za = z.slice_rows(0, 25);
+        let zb = z.slice_rows(25, 40);
+        a.add_batch(&idx[..25], &labels[..25], &za, &norms[..25], &vec![1.0; 25]);
+        b.add_batch(&idx[25..], &labels[25..], &zb, &norms[25..], &vec![1.0; 15]);
+        a.merge(b);
+        let s2 = a.finalize();
+
+        for (e1, e2) in s1.entries.iter().zip(&s2.entries) {
+            assert_eq!(e1.index, e2.index);
+            assert!((e1.alpha - e2.alpha).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_consensus_gives_zero_scores() {
+        // Two exactly opposite directions cancel: z̄ = 0 -> u = 0 -> α = 0.
+        let mut scorer = AgreementScorer::new(2);
+        let mut z = Matrix::zeros(2, 2);
+        z.set(0, 0, 1.0);
+        z.set(1, 0, -1.0);
+        scorer.add_batch(&[0, 1], &[0, 1], &z, &[1.0, 1.0], &[0.5, 0.5]);
+        let s = scorer.finalize();
+        assert!(s.consensus.iter().all(|&v| v == 0.0));
+        assert!(s.entries.iter().all(|e| e.alpha == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let mut scorer = AgreementScorer::new(3);
+        let z = Matrix::zeros(1, 2);
+        scorer.add_batch(&[0], &[0], &z, &[1.0], &[1.0]);
+    }
+}

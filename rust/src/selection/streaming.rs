@@ -1,0 +1,222 @@
+//! Strictly-streaming Phase II: O(ℓ) state, no ẑ cache.
+//!
+//! [`AgreementScorer`](super::AgreementScorer) caches the `N × ℓ` normalized
+//! projections so consensus + scoring need one model pass. This module
+//! implements the paper's strict constant-memory reading instead: pass 2a
+//! accumulates only the ℓ-dim consensus; pass 2b recomputes each projection
+//! and scores it on the fly, feeding a bounded top-k heap. Total extra state
+//! is `O(ℓ + k)` — the trade is one additional backward pass over the data
+//! (quantified in `cargo bench --bench ablation`, section F).
+
+use super::topk::TopK;
+use crate::tensor::{self, Matrix};
+
+/// Pass 2a: consensus accumulation (ℓ-dim, mergeable).
+pub struct ConsensusAccumulator {
+    ell: usize,
+    acc: Vec<f64>,
+    count: u64,
+}
+
+impl ConsensusAccumulator {
+    pub fn new(ell: usize) -> Self {
+        Self {
+            ell,
+            acc: vec![0.0; ell],
+            count: 0,
+        }
+    }
+
+    /// Fold in a batch of normalized projections.
+    pub fn add(&mut self, zhat: &Matrix) {
+        assert_eq!(zhat.cols(), self.ell);
+        for r in 0..zhat.rows() {
+            for (j, &v) in zhat.row(r).iter().enumerate() {
+                self.acc[j] += v as f64;
+            }
+            self.count += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: &ConsensusAccumulator) {
+        assert_eq!(self.ell, other.ell);
+        for (a, b) in self.acc.iter_mut().zip(&other.acc) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Unit consensus u (zero if the mean is zero).
+    pub fn consensus(&self) -> Vec<f32> {
+        let n = self.count.max(1) as f64;
+        let mut u: Vec<f32> = self.acc.iter().map(|&v| (v / n) as f32).collect();
+        let norm = tensor::normalize_in_place(&mut u);
+        if norm > 0.0 {
+            u
+        } else {
+            vec![0.0; self.ell]
+        }
+    }
+
+    /// State size in bytes — the O(ℓ) claim, measurable.
+    pub fn memory_bytes(&self) -> usize {
+        self.acc.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// Pass 2b: streaming scoring + bounded selection against a fixed u.
+pub struct StreamingSelector {
+    consensus: Vec<f32>,
+    heap: TopK,
+    scored: u64,
+}
+
+impl StreamingSelector {
+    pub fn new(consensus: Vec<f32>, k: usize) -> Self {
+        Self {
+            consensus,
+            heap: TopK::new(k),
+            scored: 0,
+        }
+    }
+
+    /// Score one batch of normalized projections with global indices.
+    pub fn add(&mut self, indices: &[usize], zhat: &Matrix) {
+        assert_eq!(indices.len(), zhat.rows());
+        assert_eq!(zhat.cols(), self.consensus.len());
+        for (r, &idx) in indices.iter().enumerate() {
+            let alpha = tensor::dot(zhat.row(r), &self.consensus);
+            self.heap.push(alpha, idx);
+            self.scored += 1;
+        }
+    }
+
+    pub fn scored(&self) -> u64 {
+        self.scored
+    }
+
+    /// Selected indices, best-first.
+    pub fn finish(self) -> Vec<usize> {
+        self.heap.into_sorted_indices()
+    }
+}
+
+/// Convenience: run both streaming passes over an iterator of batches.
+/// `batches` yields `(global_indices, zhat)` and must be re-playable
+/// (called twice — this is the second backward pass the paper counts).
+pub fn streaming_select<F>(ell: usize, k: usize, mut replay: F) -> Vec<usize>
+where
+    F: FnMut(&mut dyn FnMut(&[usize], &Matrix)),
+{
+    let mut acc = ConsensusAccumulator::new(ell);
+    replay(&mut |_idx, zhat| acc.add(zhat));
+    let mut sel = StreamingSelector::new(acc.consensus(), k);
+    replay(&mut |idx, zhat| sel.add(idx, zhat));
+    sel.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::AgreementScorer;
+    use crate::util::rng::Pcg64;
+
+    fn normalized_batch(rng: &mut Pcg64, n: usize, ell: usize) -> Matrix {
+        let mut z = Matrix::zeros(n, ell);
+        let mut dir = vec![0.0f32; ell];
+        rng.fill_normal(&mut dir, 1.0);
+        tensor::normalize_in_place(&mut dir);
+        for i in 0..n {
+            let row = z.row_mut(i);
+            for (j, &d) in dir.iter().enumerate() {
+                row[j] = d + 0.7 * rng.normal_f32();
+            }
+            tensor::normalize_in_place(row);
+        }
+        z
+    }
+
+    #[test]
+    fn streaming_matches_cached_selection() {
+        let mut rng = Pcg64::seeded(1);
+        let ell = 8;
+        let z = normalized_batch(&mut rng, 200, ell);
+        let idx: Vec<usize> = (0..200).collect();
+
+        // Cached path.
+        let mut scorer = AgreementScorer::new(ell);
+        scorer.add_batch(
+            &idx,
+            &vec![0u32; 200],
+            &z,
+            &vec![1.0f32; 200],
+            &vec![1.0f32; 200],
+        );
+        let scores = scorer.finalize();
+        let cached = crate::selection::select_top_k(&scores, 40);
+
+        // Streaming path replaying the same batches.
+        let streamed = streaming_select(ell, 40, |f| {
+            for chunk in 0..4 {
+                let lo = chunk * 50;
+                let zc = z.slice_rows(lo, lo + 50);
+                let ic: Vec<usize> = (lo..lo + 50).collect();
+                f(&ic, &zc);
+            }
+        });
+        let mut a = cached.clone();
+        let mut b = streamed.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn consensus_accumulator_merge_equals_single() {
+        let mut rng = Pcg64::seeded(2);
+        let z = normalized_batch(&mut rng, 60, 6);
+        let mut whole = ConsensusAccumulator::new(6);
+        whole.add(&z);
+        let mut p1 = ConsensusAccumulator::new(6);
+        let mut p2 = ConsensusAccumulator::new(6);
+        p1.add(&z.slice_rows(0, 25));
+        p2.add(&z.slice_rows(25, 60));
+        p1.merge(&p2);
+        assert_eq!(p1.count(), whole.count());
+        let a = whole.consensus();
+        let b = p1.consensus();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn memory_is_ell_only() {
+        let acc = ConsensusAccumulator::new(64);
+        assert_eq!(acc.memory_bytes(), 64 * 8);
+        // Adding data never grows the state.
+        let mut acc = ConsensusAccumulator::new(16);
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..50 {
+            acc.add(&normalized_batch(&mut rng, 32, 16));
+        }
+        assert_eq!(acc.memory_bytes(), 16 * 8);
+        assert_eq!(acc.count(), 1600);
+    }
+
+    #[test]
+    fn zero_consensus_selects_deterministically() {
+        let mut z = Matrix::zeros(2, 4);
+        z.set(0, 0, 1.0);
+        z.set(1, 0, -1.0);
+        let sel = streaming_select(4, 1, |f| {
+            f(&[0, 1], &z);
+        });
+        assert_eq!(sel.len(), 1);
+        assert_eq!(sel[0], 0); // tie on alpha=0 -> smallest index
+    }
+}

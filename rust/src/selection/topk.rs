@@ -1,0 +1,151 @@
+//! Streaming top-k selection — `O(N log k)` time, `O(k)` memory (the
+//! `N log k` term in the paper's complexity claim).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// (score, index) with min-at-top ordering so the heap root is the current
+/// k-th best; ties break on the smaller index (determinism).
+#[derive(Clone, Copy, Debug)]
+struct HeapItem {
+    score: f32,
+    index: usize,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for HeapItem {}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse on score -> min-heap; then reverse on index so the larger
+        // index is evicted first among ties.
+        other
+            .score
+            .partial_cmp(&self.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.index.cmp(&other.index))
+    }
+}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Bounded max-score tracker.
+pub struct TopK {
+    k: usize,
+    heap: BinaryHeap<HeapItem>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            heap: BinaryHeap::with_capacity(k + 1),
+        }
+    }
+
+    /// Offer one (score, index); keeps only the k best.
+    pub fn push(&mut self, score: f32, index: usize) {
+        if self.k == 0 {
+            return;
+        }
+        debug_assert!(!score.is_nan(), "NaN score for index {index}");
+        if self.heap.len() < self.k {
+            self.heap.push(HeapItem { score, index });
+        } else if let Some(&root) = self.heap.peek() {
+            if score > root.score || (score == root.score && index < root.index) {
+                self.heap.pop();
+                self.heap.push(HeapItem { score, index });
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Indices sorted by descending score (ties: ascending index).
+    pub fn into_sorted_indices(self) -> Vec<usize> {
+        let mut items: Vec<HeapItem> = self.heap.into_vec();
+        items.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| a.index.cmp(&b.index))
+        });
+        items.into_iter().map(|it| it.index).collect()
+    }
+}
+
+/// Convenience: top-k indices of a score slice.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut tk = TopK::new(k);
+    for (i, &s) in scores.iter().enumerate() {
+        tk.push(s, i);
+    }
+    tk.into_sorted_indices()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn matches_full_sort() {
+        forall("topk_sort", 20, |rng| {
+            let n = 1 + rng.below(300) as usize;
+            let k = 1 + rng.below(n as u64) as usize;
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let got = top_k_indices(&scores, k);
+            let mut want: Vec<usize> = (0..n).collect();
+            want.sort_by(|&a, &b| {
+                scores[b]
+                    .partial_cmp(&scores[a])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            want.truncate(k);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let got = top_k_indices(&[1.0, 3.0, 2.0], 10);
+        assert_eq!(got, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn k_zero() {
+        assert!(top_k_indices(&[1.0, 2.0], 0).is_empty());
+    }
+
+    #[test]
+    fn deterministic_tie_break_prefers_small_index() {
+        let got = top_k_indices(&[5.0, 5.0, 5.0, 5.0], 2);
+        assert_eq!(got, vec![0, 1]);
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        forall("topk_stream", 10, |rng| {
+            let scores: Vec<f32> = (0..200).map(|_| rng.normal_f32()).collect();
+            let mut tk = TopK::new(17);
+            for (i, &s) in scores.iter().enumerate() {
+                tk.push(s, i);
+            }
+            assert_eq!(tk.into_sorted_indices(), top_k_indices(&scores, 17));
+        });
+    }
+}

@@ -1,0 +1,426 @@
+//! Frequent Directions (FD) gradient sketching — Algorithm 1, Phase I.
+//!
+//! [`FdSketch`] maintains the deterministic `ℓ × D` sketch of the streamed
+//! per-example gradient rowspace in `O(ℓD)` memory. This implementation is
+//! the standard buffered 2ℓ variant [Liberty 2013; Ghashami et al. 2015]:
+//! rows accumulate in a `2ℓ × D` buffer and, when it fills, a *shrink*
+//! contracts low-energy directions:
+//!
+//! ```text
+//! S = U Σ Vᵀ;  δ = σ_ℓ²;  Σ' = sqrt(max(Σ² − δ, 0));  S ← Σ' Vᵀ
+//! ```
+//!
+//! The shrink is implemented without a `2ℓ × D` SVD via the Gram trick
+//! (DESIGN.md §1): `eig(S Sᵀ) = (λ = σ², U)` on the tiny `2ℓ × 2ℓ` Gram,
+//! then `S' = R S` with `R = diag(√max(λ−δ,0)/λ) Uᵀ` — numerically identical
+//! and MXU-friendly: both the Gram and the `R S` contraction are the L1
+//! Pallas kernels, pluggable here through [`ShrinkBackend`].
+//!
+//! Guarantee (quoted in the paper): for the matrix `G` of all streamed rows
+//! and any `k < ℓ`, `0 ⪯ GᵀG − SᵀS ⪯ (2/ℓ)‖G − G_k‖_F² I`. The property
+//! tests in this module verify it directly; [`FdSketch::shift_bound`]
+//! exposes the tighter online certificate `Σ δ_shrinks`.
+
+use crate::linalg::eigh_jacobi;
+use crate::tensor::Matrix;
+use std::sync::Arc;
+
+/// Backend for the two O(ℓD) shrink contractions. The default
+/// [`CpuShrinkBackend`] runs them on the Rust tensor substrate; the runtime
+/// swaps in the AOT-compiled Pallas kernels (`runtime::XlaShrinkBackend`).
+pub trait ShrinkBackend: Send + Sync {
+    /// `buf bufᵀ` for the `m × d` buffer (m = 2ℓ).
+    fn gram(&self, buf: &Matrix) -> Matrix;
+    /// `rot @ buf` for the `ℓ × m` rotation.
+    fn apply_rot(&self, rot: &Matrix, buf: &Matrix) -> Matrix;
+}
+
+/// Pure-Rust shrink contractions (reference backend).
+#[derive(Default)]
+pub struct CpuShrinkBackend;
+
+impl ShrinkBackend for CpuShrinkBackend {
+    fn gram(&self, buf: &Matrix) -> Matrix {
+        buf.gram()
+    }
+
+    fn apply_rot(&self, rot: &Matrix, buf: &Matrix) -> Matrix {
+        rot.matmul(buf)
+    }
+}
+
+/// Streaming Frequent-Directions sketch of gradient rows.
+pub struct FdSketch {
+    ell: usize,
+    d: usize,
+    /// `2ℓ × d` row buffer; rows `[0, next_row)` are live.
+    buf: Matrix,
+    next_row: usize,
+    shrink_count: u64,
+    rows_seen: u64,
+    /// Σ of shrink deltas — the online covariance-error certificate.
+    delta_sum: f64,
+    /// Σ‖g‖² of all inserted rows (for error ratios in reports).
+    energy_seen: f64,
+    backend: Arc<dyn ShrinkBackend>,
+}
+
+impl FdSketch {
+    /// New sketch with the pure-Rust backend.
+    pub fn new(ell: usize, d: usize) -> Self {
+        Self::with_backend(ell, d, Arc::new(CpuShrinkBackend))
+    }
+
+    pub fn with_backend(ell: usize, d: usize, backend: Arc<dyn ShrinkBackend>) -> Self {
+        assert!(ell > 0 && d > 0, "ell and d must be positive");
+        Self {
+            ell,
+            d,
+            buf: Matrix::zeros(2 * ell, d),
+            next_row: 0,
+            shrink_count: 0,
+            rows_seen: 0,
+            delta_sum: 0.0,
+            energy_seen: 0.0,
+            backend,
+        }
+    }
+
+    pub fn ell(&self) -> usize {
+        self.ell
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn rows_seen(&self) -> u64 {
+        self.rows_seen
+    }
+
+    pub fn shrink_count(&self) -> u64 {
+        self.shrink_count
+    }
+
+    /// Online certificate: `GᵀG − SᵀS ⪯ delta_sum · I` at any point.
+    pub fn shift_bound(&self) -> f64 {
+        self.delta_sum
+    }
+
+    /// Total squared norm streamed in (denominator for relative error).
+    pub fn energy_seen(&self) -> f64 {
+        self.energy_seen
+    }
+
+    /// Memory footprint in bytes — the paper's O(ℓD) claim, measurable.
+    pub fn memory_bytes(&self) -> usize {
+        self.buf.as_slice().len() * std::mem::size_of::<f32>()
+    }
+
+    /// Stream one gradient row into the sketch (Algorithm 1 line 5).
+    pub fn insert(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d, "row dim mismatch");
+        if self.next_row == 2 * self.ell {
+            self.shrink();
+        }
+        self.buf.row_mut(self.next_row).copy_from_slice(row);
+        self.next_row += 1;
+        self.rows_seen += 1;
+        self.energy_seen += crate::tensor::dot_f64(row, row);
+    }
+
+    /// Stream a batch `[b × d]` of rows (amortizes the shrink checks).
+    pub fn insert_batch(&mut self, rows: &Matrix) {
+        assert_eq!(rows.cols(), self.d, "batch dim mismatch");
+        for r in 0..rows.rows() {
+            self.insert(rows.row(r));
+        }
+    }
+
+    /// The shrink step (Algorithm 1 lines 6-8), via the Gram trick.
+    fn shrink(&mut self) {
+        let _t = crate::util::metrics::ScopedTimer::new(
+            crate::util::metrics::global().histogram("sketch.shrink.ns"),
+        );
+        let m = self.next_row; // rows currently live (== 2ℓ on the hot path)
+        debug_assert!(m > self.ell);
+        let live = self.buf.slice_rows(0, m);
+        let gram = self.backend.gram(&live);
+
+        // Tiny symmetric eig in f64 (m ≤ 2ℓ ≤ 512).
+        let gram64: Vec<f64> = gram.as_slice().iter().map(|&v| v as f64).collect();
+        let (lam, u) = eigh_jacobi(&gram64, m);
+
+        // δ = σ_ℓ² = λ_{ℓ-1} (0-indexed ℓ-th largest); clamp negatives.
+        let delta = lam.get(self.ell - 1).copied().unwrap_or(0.0).max(0.0);
+        self.delta_sum += delta;
+
+        // R[j, :] = sqrt(max(λ_j − δ, 0) / λ_j) * u_j  (rows of eigh output).
+        let mut rot = Matrix::zeros(self.ell, m);
+        for j in 0..self.ell.min(m) {
+            let l = lam[j].max(0.0);
+            if l <= 1e-30 {
+                continue; // direction already empty
+            }
+            let scale = (((l - delta).max(0.0)) / l).sqrt() as f32;
+            if scale == 0.0 {
+                continue;
+            }
+            let dst = rot.row_mut(j);
+            for k in 0..m {
+                dst[k] = scale * (u[j * m + k] as f32);
+            }
+        }
+
+        let new_top = self.backend.apply_rot(&rot, &live);
+        for r in 0..self.ell {
+            self.buf.row_mut(r).copy_from_slice(new_top.row(r));
+        }
+        for r in self.ell..2 * self.ell {
+            self.buf.row_mut(r).fill(0.0);
+        }
+        self.next_row = self.ell;
+        self.shrink_count += 1;
+    }
+
+    /// Finalize into the frozen `ℓ × d` sketch (Algorithm 1 line 12).
+    /// The sketch remains usable for further inserts afterwards.
+    pub fn sketch(&mut self) -> Matrix {
+        if self.next_row > self.ell {
+            self.shrink();
+        }
+        self.buf.slice_rows(0, self.ell)
+    }
+
+    /// Merge another FD sketch (mergeability property): inserting the other
+    /// sketch's rows preserves the summed guarantee up to 2× the bound.
+    /// This is how shard-local sketches combine in the pipeline.
+    pub fn merge(&mut self, other: &mut FdSketch) {
+        assert_eq!(self.d, other.d, "merge dim mismatch");
+        let s = other.sketch();
+        let mut inserted = 0u64;
+        for r in 0..s.rows() {
+            let row = s.row(r);
+            if row.iter().any(|&v| v != 0.0) {
+                self.insert(row);
+                inserted += 1;
+            }
+        }
+        // Adopt the other stream's certificate and stats (rows were already
+        // counted as sketch rows above; track source stream size instead).
+        self.rows_seen = self.rows_seen - inserted + other.rows_seen;
+        self.energy_seen = self.energy_seen
+            - s.as_slice().iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            + other.energy_seen;
+        self.delta_sum += other.delta_sum;
+    }
+}
+
+/// `‖GᵀG − SᵀS‖₂` via Jacobi eig of the d×d difference (test/report helper —
+/// O(d³), only for small-d validation).
+pub fn covariance_error(g: &Matrix, s: &Matrix) -> f64 {
+    assert_eq!(g.cols(), s.cols());
+    let d = g.cols();
+    let gtg = g.transpose().gram(); // (Gᵀ)(Gᵀ)ᵀ = GᵀG
+    let sts = s.transpose().gram();
+    let diff: Vec<f64> = gtg
+        .as_slice()
+        .iter()
+        .zip(sts.as_slice())
+        .map(|(&a, &b)| a as f64 - b as f64)
+        .collect();
+    let (lam, _) = eigh_jacobi(&diff, d);
+    lam.iter().fold(0.0f64, |acc, &l| acc.max(l.abs()))
+}
+
+/// Smallest eigenvalue of `GᵀG − SᵀS` (PSD check in tests).
+pub fn covariance_diff_min_eig(g: &Matrix, s: &Matrix) -> f64 {
+    let d = g.cols();
+    let gtg = g.transpose().gram();
+    let sts = s.transpose().gram();
+    let diff: Vec<f64> = gtg
+        .as_slice()
+        .iter()
+        .zip(sts.as_slice())
+        .map(|(&a, &b)| a as f64 - b as f64)
+        .collect();
+    let (lam, _) = eigh_jacobi(&diff, d);
+    lam.last().copied().unwrap_or(0.0)
+}
+
+/// `2/ℓ · ‖G − G_k‖_F²` — the guarantee's RHS, from the spectrum of GᵀG.
+pub fn fd_bound(g: &Matrix, ell: usize, k: usize) -> f64 {
+    assert!(k < ell);
+    let d = g.cols();
+    let gtg = g.transpose().gram();
+    let gtg64: Vec<f64> = gtg.as_slice().iter().map(|&v| v as f64).collect();
+    let (lam, _) = eigh_jacobi(&gtg64, d);
+    let tail: f64 = lam.iter().skip(k).map(|&l| l.max(0.0)).sum();
+    2.0 / ell as f64 * tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Pcg64;
+
+    fn lowrankish(rng: &mut Pcg64, n: usize, d: usize, rank: usize, noise: f32) -> Matrix {
+        let u = Matrix::from_fn(n, rank, |_, _| rng.normal_f32());
+        let v = Matrix::from_fn(rank, d, |_, _| rng.normal_f32());
+        let mut g = u.matmul(&v);
+        for val in g.as_mut_slice() {
+            *val += noise * rng.normal_f32();
+        }
+        g
+    }
+
+    #[test]
+    fn guarantee_holds_on_random_streams() {
+        forall("fd_guarantee", 12, |rng| {
+            let ell = 2 + rng.below(8) as usize;
+            let n = 20 + rng.below(100) as usize;
+            let d = 4 + rng.below(24) as usize;
+            let g = lowrankish(rng, n, d, 3.min(d), 0.05);
+            let mut fd = FdSketch::new(ell, d);
+            fd.insert_batch(&g);
+            let s = fd.sketch();
+            assert_eq!(s.rows(), ell);
+
+            let min_eig = covariance_diff_min_eig(&g, &s);
+            let err = covariance_error(&g, &s);
+            // f32 accumulation slack scales with the Gram magnitude.
+            let f32_slack = 1e-6 * g.frobenius_norm().powi(2) + 1e-6;
+            assert!(min_eig >= -f32_slack, "not PSD: {min_eig} (slack {f32_slack})");
+            let k = 1.max(ell / 2);
+            if k < ell {
+                assert!(
+                    err <= fd_bound(&g, ell, k) * (1.0 + 1e-3) + f32_slack,
+                    "bound violated: {err} > {}",
+                    fd_bound(&g, ell, k)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn shift_bound_dominates_error() {
+        forall("fd_shift_bound", 10, |rng| {
+            let (ell, n, d) = (4, 80, 16);
+            let g = lowrankish(rng, n, d, 4, 0.1);
+            let mut fd = FdSketch::new(ell, d);
+            fd.insert_batch(&g);
+            let s = fd.sketch();
+            let err = covariance_error(&g, &s);
+            assert!(
+                err <= fd.shift_bound() * (1.0 + 1e-3) + 1e-4,
+                "{err} > {}",
+                fd.shift_bound()
+            );
+        });
+    }
+
+    #[test]
+    fn exact_for_rank_below_ell() {
+        forall("fd_exact_lowrank", 10, |rng| {
+            let (ell, d, r) = (8, 20, 3);
+            let g = lowrankish(rng, 40, d, r, 0.0);
+            let mut fd = FdSketch::new(ell, d);
+            fd.insert_batch(&g);
+            let s = fd.sketch();
+            let rel = covariance_error(&g, &s) / (g.frobenius_norm().powi(2)).max(1e-12);
+            assert!(rel < 1e-4, "relative err {rel}");
+        });
+    }
+
+    #[test]
+    fn matches_python_reference_shrink_semantics() {
+        // Shrink leaves ≤ ℓ live rows and zeroes the rest.
+        let mut rng = Pcg64::seeded(5);
+        let mut fd = FdSketch::new(4, 16);
+        for _ in 0..8 {
+            let row: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+            fd.insert(&row);
+        }
+        assert_eq!(fd.next_row, 8);
+        let row: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        fd.insert(&row); // triggers shrink
+        assert_eq!(fd.shrink_count(), 1);
+        assert_eq!(fd.next_row, 5);
+        for r in 5..8 {
+            assert!(fd.buf.row(r).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn memory_is_constant_in_n() {
+        let mut fd = FdSketch::new(8, 64);
+        let m0 = fd.memory_bytes();
+        let mut rng = Pcg64::seeded(6);
+        for _ in 0..1000 {
+            let row: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+            fd.insert(&row);
+        }
+        assert_eq!(fd.memory_bytes(), m0);
+        assert_eq!(fd.memory_bytes(), 2 * 8 * 64 * 4);
+        assert_eq!(fd.rows_seen(), 1000);
+    }
+
+    #[test]
+    fn merge_preserves_guarantee_within_2x() {
+        forall("fd_merge", 8, |rng| {
+            let (ell, d) = (6, 16);
+            let g1 = lowrankish(rng, 50, d, 4, 0.1);
+            let g2 = lowrankish(rng, 50, d, 4, 0.1);
+            let mut a = FdSketch::new(ell, d);
+            let mut b = FdSketch::new(ell, d);
+            a.insert_batch(&g1);
+            b.insert_batch(&g2);
+            a.merge(&mut b);
+            assert_eq!(a.rows_seen(), 100);
+            let s = a.sketch();
+            let g = Matrix::vstack(&[&g1, &g2]);
+            let err = covariance_error(&g, &s);
+            let min_eig = covariance_diff_min_eig(&g, &s);
+            assert!(min_eig >= -1e-2 * err.max(1e-6));
+            let k = ell / 2;
+            assert!(err <= 2.0 * fd_bound(&g, ell, k) * (1.0 + 1e-3) + 1e-4);
+        });
+    }
+
+    #[test]
+    fn sketch_then_continue_streaming() {
+        let mut rng = Pcg64::seeded(9);
+        let mut fd = FdSketch::new(4, 8);
+        for _ in 0..20 {
+            let row: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            fd.insert(&row);
+        }
+        let _mid = fd.sketch();
+        for _ in 0..20 {
+            let row: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            fd.insert(&row);
+        }
+        assert_eq!(fd.rows_seen(), 40);
+        let s = fd.sketch();
+        assert_eq!(s.rows(), 4);
+    }
+
+    #[test]
+    fn zero_rows_are_harmless() {
+        let mut fd = FdSketch::new(2, 4);
+        for _ in 0..10 {
+            fd.insert(&[0.0; 4]);
+        }
+        let s = fd.sketch();
+        assert!(s.as_slice().iter().all(|&v| v == 0.0));
+        assert_eq!(fd.shift_bound(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_dim_panics() {
+        let mut fd = FdSketch::new(2, 4);
+        fd.insert(&[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,345 @@
+//! Row-major dense f32 matrix.
+
+use super::ops;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// C = A @ B (blocked ikj loop — cache-friendly row-major kernel).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul inner dim");
+        let mut out = Matrix::zeros(self.rows, b.cols);
+        let n = b.cols;
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[k * n..(k + 1) * n];
+                ops::axpy(aik, brow, orow);
+            }
+        }
+        out
+    }
+
+    /// C = A @ Bᵀ — the projection shape (rows of B are the sketch rows).
+    pub fn matmul_transb(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.cols, "matmul_transb inner dim");
+        let mut out = Matrix::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..b.rows {
+                out.data[i * b.rows + j] = ops::dot(arow, b.row(j));
+            }
+        }
+        out
+    }
+
+    /// G = A @ Aᵀ (symmetric Gram; only computes the lower triangle once).
+    pub fn gram(&self) -> Matrix {
+        let n = self.rows;
+        let mut out = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = ops::dot(self.row(i), self.row(j));
+                out.data[i * n + j] = v;
+                out.data[j * n + i] = v;
+            }
+        }
+        out
+    }
+
+    /// y = A @ x for a vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len(), "matvec dim");
+        (0..self.rows).map(|i| ops::dot(self.row(i), x)).collect()
+    }
+
+    /// y = Aᵀ @ x.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, x.len(), "matvec_t dim");
+        let mut out = vec![0.0; self.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi != 0.0 {
+                ops::axpy(xi, self.row(i), &mut out);
+            }
+        }
+        out
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Extract rows [start, end).
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix::from_vec(
+            end - start,
+            self.cols,
+            self.data[start * self.cols..end * self.cols].to_vec(),
+        )
+    }
+
+    /// Stack rows of `mats` vertically.
+    pub fn vstack(mats: &[&Matrix]) -> Matrix {
+        assert!(!mats.is_empty());
+        let cols = mats[0].cols;
+        let rows: usize = mats.iter().map(|m| m.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for m in mats {
+            assert_eq!(m.cols, cols, "vstack col mismatch");
+            data.extend_from_slice(&m.data);
+        }
+        Matrix::from_vec(rows, cols, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{assert_allclose, forall};
+
+    fn random_matrix(rng: &mut crate::util::rng::Pcg64, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn identity_matmul_is_noop() {
+        forall("identity_matmul", 20, |rng| {
+            let r = 1 + rng.below(8) as usize;
+            let c = 1 + rng.below(8) as usize;
+            let a = random_matrix(rng, r, c);
+            let i = Matrix::identity(r);
+            let out = i.matmul(&a);
+            assert_allclose(out.as_slice(), a.as_slice(), 1e-6, 1e-6, "I@A");
+        });
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        forall("matmul_naive", 20, |rng| {
+            let (m, k, n) = (
+                1 + rng.below(7) as usize,
+                1 + rng.below(7) as usize,
+                1 + rng.below(7) as usize,
+            );
+            let a = random_matrix(rng, m, k);
+            let b = random_matrix(rng, k, n);
+            let c = a.matmul(&b);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f64;
+                    for t in 0..k {
+                        acc += a.get(i, t) as f64 * b.get(t, j) as f64;
+                    }
+                    assert!((c.get(i, j) as f64 - acc).abs() < 1e-4, "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_transb_matches_explicit_transpose() {
+        forall("matmul_transb", 20, |rng| {
+            let (m, k, n) = (
+                1 + rng.below(6) as usize,
+                1 + rng.below(6) as usize,
+                1 + rng.below(6) as usize,
+            );
+            let a = random_matrix(rng, m, k);
+            let b = random_matrix(rng, n, k);
+            let fast = a.matmul_transb(&b);
+            let slow = a.matmul(&b.transpose());
+            assert_allclose(fast.as_slice(), slow.as_slice(), 1e-5, 1e-5, "ABt");
+        });
+    }
+
+    #[test]
+    fn gram_matches_matmul_transb_self() {
+        forall("gram", 20, |rng| {
+            let m = 1 + rng.below(8) as usize;
+            let d = 1 + rng.below(20) as usize;
+            let a = random_matrix(rng, m, d);
+            let g = a.gram();
+            let g2 = a.matmul_transb(&a);
+            assert_allclose(g.as_slice(), g2.as_slice(), 1e-5, 1e-5, "gram");
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        forall("transpose", 10, |rng| {
+            let r = 1 + rng.below(9) as usize;
+            let c = 1 + rng.below(9) as usize;
+            let a = random_matrix(rng, r, c);
+            assert_eq!(a.transpose().transpose(), a);
+        });
+    }
+
+    #[test]
+    fn matvec_consistent_with_matmul() {
+        forall("matvec", 10, |rng| {
+            let (m, k) = (1 + rng.below(6) as usize, 1 + rng.below(6) as usize);
+            let a = random_matrix(rng, m, k);
+            let x: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+            let xm = Matrix::from_vec(k, 1, x.clone());
+            let via_mm = a.matmul(&xm);
+            let via_mv = a.matvec(&x);
+            assert_allclose(&via_mv, via_mm.as_slice(), 1e-5, 1e-5, "matvec");
+        });
+    }
+
+    #[test]
+    fn matvec_t_consistent() {
+        forall("matvec_t", 10, |rng| {
+            let (m, k) = (1 + rng.below(6) as usize, 1 + rng.below(6) as usize);
+            let a = random_matrix(rng, m, k);
+            let x: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+            let got = a.matvec_t(&x);
+            let want = a.transpose().matvec(&x);
+            assert_allclose(&got, &want, 1e-5, 1e-5, "matvec_t");
+        });
+    }
+
+    #[test]
+    fn slice_and_vstack_round_trip() {
+        let a = Matrix::from_fn(6, 3, |r, c| (r * 3 + c) as f32);
+        let top = a.slice_rows(0, 2);
+        let bottom = a.slice_rows(2, 6);
+        let back = Matrix::vstack(&[&top, &bottom]);
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn frobenius_of_identity() {
+        let i = Matrix::identity(9);
+        assert!((i.frobenius_norm() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_dim_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

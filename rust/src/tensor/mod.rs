@@ -1,0 +1,13 @@
+//! Dense f32 matrix/vector substrate (from scratch — no ndarray offline).
+//!
+//! Row-major [`Matrix`] with the operations the coordinator-side math needs:
+//! blocked matmuls (incl. the `A Bᵀ` and `Aᵀ A` forms the FD/selection code
+//! uses), row views, norms, and in-place BLAS-1 helpers. Accumulations that
+//! feed decisions (norms, dot products) run in f64 to keep the Rust
+//! reference numerically comparable to the XLA artifacts.
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{dot, dot_f64, norm2, normalize_in_place, axpy, scale_in_place};

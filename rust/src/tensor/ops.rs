@@ -1,0 +1,126 @@
+//! BLAS-1 style slice kernels. `dot`/`axpy` are the two hot primitives of
+//! the coordinator-side math; both are written as 4-way unrolled loops the
+//! compiler auto-vectorizes (checked via the micro bench in benches/micro).
+
+/// f32 dot product with f32 accumulation in 4 independent lanes (enables
+/// SIMD + keeps error acceptable for scoring math; decision-critical norms
+/// use `dot_f64`).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Dot product with f64 accumulation — for norms/consensus where drift
+/// across D ~ 1e5 terms would perturb rankings.
+#[inline]
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| x as f64 * y as f64)
+        .sum()
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm (f64 accumulation).
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    x.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt()
+}
+
+/// x /= ||x||; returns the norm. Zero vectors stay zero (the paper's
+/// z_i = 0 convention in Algorithm 1 line 13).
+pub fn normalize_in_place(x: &mut [f32]) -> f64 {
+    let n = norm2(x);
+    if n > 0.0 {
+        let inv = (1.0 / n) as f32;
+        for v in x.iter_mut() {
+            *v *= inv;
+        }
+    }
+    n
+}
+
+/// x *= s.
+#[inline]
+pub fn scale_in_place(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn dot_matches_f64_reference() {
+        forall("dot", 30, |rng| {
+            let n = rng.below(200) as usize;
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let fast = dot(&a, &b) as f64;
+            let slow = dot_f64(&a, &b);
+            assert!((fast - slow).abs() < 1e-3 * (1.0 + slow.abs()), "{fast} vs {slow}");
+        });
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        forall("normalize", 20, |rng| {
+            let n = 1 + rng.below(50) as usize;
+            let mut x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let pre = norm2(&x);
+            let returned = normalize_in_place(&mut x);
+            assert!((returned - pre).abs() < 1e-6 * (1.0 + pre));
+            if pre > 1e-6 {
+                assert!((norm2(&x) - 1.0).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn normalize_zero_stays_zero() {
+        let mut x = [0.0f32; 5];
+        let n = normalize_in_place(&mut x);
+        assert_eq!(n, 0.0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn norm2_pythagoras() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+    }
+}

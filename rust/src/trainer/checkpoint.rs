@@ -1,0 +1,198 @@
+//! Training checkpoints: params + momentum + schedule position, with an
+//! integrity checksum so a torn write never resumes silently.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic    8B  "SAGECKPT"
+//! version  u32
+//! step     u64
+//! total    u64   (total steps of the schedule being resumed)
+//! d        u64
+//! params   d x f32
+//! mom      d x f32
+//! fnv64    u64   (checksum of everything above)
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SAGECKPT";
+const VERSION: u32 = 1;
+
+/// A resumable training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub total_steps: u64,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+}
+
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn new(step: u64, total_steps: u64, params: Vec<f32>, momentum: Vec<f32>) -> Self {
+        assert_eq!(params.len(), momentum.len());
+        Self {
+            step,
+            total_steps,
+            params,
+            momentum,
+        }
+    }
+
+    fn body_bytes(&self) -> Vec<u8> {
+        let d = self.params.len();
+        let mut out = Vec::with_capacity(8 + 4 + 8 + 8 + 8 + d * 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.total_steps.to_le_bytes());
+        out.extend_from_slice(&(d as u64).to_le_bytes());
+        for &v in &self.params {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &self.momentum {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Write atomically (tmp file + rename).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let body = self.body_bytes();
+        let sum = fnv64(&body);
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            f.write_all(&body)?;
+            f.write_all(&sum.to_le_bytes())?;
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint, String> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?
+            .read_to_end(&mut bytes)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        if bytes.len() < 8 + 4 + 8 + 8 + 8 + 8 {
+            return Err("checkpoint truncated".into());
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if fnv64(body) != stored {
+            return Err("checkpoint checksum mismatch (torn write?)".into());
+        }
+        if &body[..8] != MAGIC {
+            return Err("bad checkpoint magic".into());
+        }
+        let version = u32::from_le_bytes(body[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(format!("checkpoint version {version} != {VERSION}"));
+        }
+        let step = u64::from_le_bytes(body[12..20].try_into().unwrap());
+        let total_steps = u64::from_le_bytes(body[20..28].try_into().unwrap());
+        let d = u64::from_le_bytes(body[28..36].try_into().unwrap()) as usize;
+        let expect = 36 + d * 8;
+        if body.len() != expect {
+            return Err(format!(
+                "checkpoint length {} != expected {expect} for d={d}",
+                body.len()
+            ));
+        }
+        let mut params = Vec::with_capacity(d);
+        let mut momentum = Vec::with_capacity(d);
+        for i in 0..d {
+            let off = 36 + i * 4;
+            params.push(f32::from_le_bytes(body[off..off + 4].try_into().unwrap()));
+        }
+        for i in 0..d {
+            let off = 36 + (d + i) * 4;
+            momentum.push(f32::from_le_bytes(body[off..off + 4].try_into().unwrap()));
+        }
+        Ok(Checkpoint {
+            step,
+            total_steps,
+            params,
+            momentum,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sage_ckpt_{name}_{}", std::process::id()))
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint::new(
+            42,
+            100,
+            vec![1.0, -2.5, 3.25, 0.0],
+            vec![0.1, 0.2, -0.3, 0.0],
+        )
+    }
+
+    #[test]
+    fn round_trip() {
+        let path = tmp("rt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let path = tmp("corrupt");
+        sample().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).unwrap_err().contains("checksum"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let path = tmp("trunc");
+        sample().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = tmp("magic");
+        let mut bytes = sample().body_bytes();
+        bytes[0] = b'X';
+        let sum = super::fnv64(&bytes);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).unwrap_err().contains("magic"));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,356 @@
+//! Subset trainer: trains the L2 model on a selected subset via a
+//! [`ModelBackend`], following the paper's recipe (SGD + momentum 0.9,
+//! weight decay 5e-4, label smoothing 0.1 — baked into the artifacts — and
+//! a cosine LR schedule owned here).
+//!
+//! Batching uses wrap-around sampling so every step feeds the artifact's
+//! static `bt`-row batch exactly (no padding bias in the mean loss).
+
+pub mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use crate::data::Dataset;
+use crate::runtime::ModelBackend;
+use crate::tensor::Matrix;
+use crate::util::rng::{AliasSampler, Pcg64};
+use std::time::Instant;
+
+/// Trainer configuration (model hyper-params live in the backend/manifest).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub base_lr: f64,
+    pub seed: u64,
+    /// Record the loss every `log_every` steps (0 = only epoch ends).
+    pub log_every: usize,
+    /// Cosine floor as a fraction of base_lr.
+    pub min_lr_frac: f64,
+    /// Periodic checkpointing (None = off).
+    pub checkpoint_path: Option<std::path::PathBuf>,
+    /// Save every this many steps (also saved at the end). 0 = end only.
+    pub checkpoint_every: usize,
+    /// Resume from checkpoint_path when it exists and matches the schedule.
+    pub resume: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 10,
+            base_lr: 0.05,
+            seed: 0,
+            log_every: 0,
+            min_lr_frac: 0.01,
+            checkpoint_path: None,
+            checkpoint_every: 0,
+            resume: false,
+        }
+    }
+}
+
+/// Output of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub steps: usize,
+    pub final_loss: f32,
+    /// (step, loss) samples.
+    pub loss_curve: Vec<(usize, f32)>,
+    /// Top-1 accuracy on the test set.
+    pub test_accuracy: f64,
+    /// Wall-clock training seconds (excludes selection).
+    pub train_seconds: f64,
+    /// Final parameters (for further eval / checkpointing).
+    pub params: Vec<f32>,
+}
+
+/// Cosine learning rate at step `t` of `total`.
+pub fn cosine_lr(base: f64, min_frac: f64, t: usize, total: usize) -> f64 {
+    if total <= 1 {
+        return base;
+    }
+    let min_lr = base * min_frac;
+    let progress = t as f64 / (total - 1) as f64;
+    min_lr + 0.5 * (base - min_lr) * (1.0 + (std::f64::consts::PI * progress).cos())
+}
+
+/// Assemble a `bt`-row batch from dataset rows (wrap-around indices).
+fn gather_batch(ds: &Dataset, order: &[usize], start: usize, bt: usize) -> (Matrix, Matrix) {
+    let n = order.len();
+    let f = ds.features.cols();
+    let c = ds.num_classes;
+    let mut x = Matrix::zeros(bt, f);
+    let mut y = Matrix::zeros(bt, c);
+    for r in 0..bt {
+        let i = order[(start + r) % n];
+        x.row_mut(r).copy_from_slice(ds.features.row(i));
+        y.set(r, ds.labels[i] as usize, 1.0);
+    }
+    (x, y)
+}
+
+/// Train on `train` (already the selected subset), evaluate on `test`.
+pub fn train(
+    backend: &dyn ModelBackend,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    cfg: &TrainConfig,
+) -> Result<TrainResult, String> {
+    train_weighted(backend, train_ds, test_ds, cfg, None)
+}
+
+/// Weighted variant: when `weights` (one per subset example, non-negative)
+/// is given, batches are assembled by weighted sampling with replacement
+/// (Walker alias method) instead of shuffled epochs — CRAIG's weighted
+/// coreset training, equivalent in expectation to weighting the loss.
+pub fn train_weighted(
+    backend: &dyn ModelBackend,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    cfg: &TrainConfig,
+    weights: Option<&[f32]>,
+) -> Result<TrainResult, String> {
+    if train_ds.is_empty() {
+        return Err("empty training set".into());
+    }
+    let spec = backend.spec();
+    if train_ds.features.cols() != spec.f {
+        return Err(format!(
+            "dataset features {} != model {}",
+            train_ds.features.cols(),
+            spec.f
+        ));
+    }
+    if train_ds.num_classes != spec.c {
+        return Err(format!(
+            "dataset classes {} != model {}",
+            train_ds.num_classes, spec.c
+        ));
+    }
+    let bt = backend.train_batch();
+    let steps_per_epoch = train_ds.len().div_ceil(bt).max(1);
+    let total_steps = steps_per_epoch * cfg.epochs;
+
+    let sampler = match weights {
+        Some(w) => {
+            if w.len() != train_ds.len() {
+                return Err(format!(
+                    "weights len {} != subset len {}",
+                    w.len(),
+                    train_ds.len()
+                ));
+            }
+            let w64: Vec<f64> = w.iter().map(|&x| x as f64).collect();
+            Some(AliasSampler::new(&w64)?)
+        }
+        None => None,
+    };
+
+    let mut rng = Pcg64::new(cfg.seed, 0x7E41);
+    let mut params = spec.init_params(&mut rng);
+    let mut mom = vec![0.0f32; spec.d()];
+    let mut order: Vec<usize> = (0..train_ds.len()).collect();
+
+    // Resume from a valid matching checkpoint if asked.
+    let mut resume_step = 0usize;
+    if cfg.resume {
+        if let Some(path) = &cfg.checkpoint_path {
+            if path.exists() {
+                let ck = Checkpoint::load(path)?;
+                if ck.params.len() == spec.d() && ck.total_steps == total_steps as u64 {
+                    params = ck.params;
+                    mom = ck.momentum;
+                    resume_step = ck.step as usize;
+                    crate::log_info!(
+                        "resumed from {} at step {resume_step}/{total_steps}",
+                        path.display()
+                    );
+                } else {
+                    return Err(format!(
+                        "checkpoint {} does not match schedule (d={} total={})",
+                        path.display(),
+                        ck.params.len(),
+                        ck.total_steps
+                    ));
+                }
+            }
+        }
+    }
+
+    let mut loss_curve = Vec::new();
+    let mut final_loss = f32::NAN;
+    let start = Instant::now();
+    let mut step = 0usize;
+    let mut widx = vec![0usize; bt];
+    'epochs: for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for s in 0..steps_per_epoch {
+            if step >= total_steps {
+                break 'epochs;
+            }
+            // Keep the RNG stream identical when resuming: draw sampling
+            // indices regardless, skip the compute for replayed steps.
+            let (x, y) = if let Some(sampler) = &sampler {
+                for slot in widx.iter_mut() {
+                    *slot = sampler.sample(&mut rng);
+                }
+                gather_batch(train_ds, &widx, 0, bt)
+            } else {
+                gather_batch(train_ds, &order, s * bt, bt)
+            };
+            if step < resume_step {
+                step += 1;
+                continue;
+            }
+            let lr = cosine_lr(cfg.base_lr, cfg.min_lr_frac, step, total_steps) as f32;
+            let loss = backend.train_step(&mut params, &mut mom, &x, &y, lr)?;
+            final_loss = loss;
+            if (cfg.log_every > 0 && step % cfg.log_every == 0) || s + 1 == steps_per_epoch {
+                loss_curve.push((step, loss));
+            }
+            step += 1;
+            if let (Some(path), every) = (&cfg.checkpoint_path, cfg.checkpoint_every) {
+                if every > 0 && step % every == 0 {
+                    Checkpoint::new(step as u64, total_steps as u64, params.clone(), mom.clone())
+                        .save(path)
+                        .map_err(|e| format!("checkpoint save: {e}"))?;
+                }
+            }
+        }
+    }
+    if let Some(path) = &cfg.checkpoint_path {
+        Checkpoint::new(step as u64, total_steps as u64, params.clone(), mom.clone())
+            .save(path)
+            .map_err(|e| format!("checkpoint save: {e}"))?;
+    }
+    let train_seconds = start.elapsed().as_secs_f64();
+
+    let test_accuracy = backend.accuracy(&params, &test_ds.features, &test_ds.labels)?;
+    Ok(TrainResult {
+        steps: step,
+        final_loss,
+        loss_curve,
+        test_accuracy,
+        train_seconds,
+        params,
+    })
+}
+
+/// Warm up a fresh model for selection-time gradients: a few steps on
+/// random batches so per-example gradients carry label signal. Returns the
+/// warmed parameters (the paper computes selection gradients at the current
+/// model state before freezing the subset).
+pub fn warmup_params(
+    backend: &dyn ModelBackend,
+    ds: &Dataset,
+    steps: usize,
+    base_lr: f64,
+    seed: u64,
+) -> Result<Vec<f32>, String> {
+    let spec = backend.spec();
+    let mut rng = Pcg64::new(seed, 0x3A97);
+    let mut params = spec.init_params(&mut rng);
+    let mut mom = vec![0.0f32; spec.d()];
+    let bt = backend.train_batch();
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    rng.shuffle(&mut order);
+    for s in 0..steps {
+        let (x, y) = gather_batch(ds, &order, s * bt, bt);
+        backend.train_step(&mut params, &mut mom, &x, &y, base_lr as f32)?;
+    }
+    Ok(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, BenchmarkKind};
+    use crate::grad::{MlpSpec, TrainHyper};
+    use crate::runtime::ReferenceModelBackend;
+
+    fn backend() -> ReferenceModelBackend {
+        ReferenceModelBackend::new(MlpSpec::new(8, 16, 10), TrainHyper::default(), 16, 16, 8)
+    }
+
+    fn datasets() -> (Dataset, Dataset) {
+        let spec = BenchmarkKind::Cifar10.spec(8);
+        (generate(&spec, 256, 1, 0), generate(&spec, 128, 1, 1))
+    }
+
+    #[test]
+    fn cosine_schedule_endpoints_and_monotonicity() {
+        let total = 100;
+        let first = cosine_lr(0.1, 0.01, 0, total);
+        let mid = cosine_lr(0.1, 0.01, 50, total);
+        let last = cosine_lr(0.1, 0.01, 99, total);
+        assert!((first - 0.1).abs() < 1e-12);
+        assert!((last - 0.001).abs() < 1e-9);
+        assert!(first > mid && mid > last);
+    }
+
+    #[test]
+    fn training_learns_synthetic_mixture() {
+        let (tr, te) = datasets();
+        let cfg = TrainConfig {
+            epochs: 8,
+            base_lr: 0.1,
+            seed: 3,
+            ..Default::default()
+        };
+        let res = train(&backend(), &tr, &te, &cfg).unwrap();
+        assert!(res.test_accuracy > 0.5, "acc {}", res.test_accuracy);
+        assert!(res.final_loss < 2.0, "loss {}", res.final_loss);
+        assert_eq!(res.steps, 8 * 16);
+        assert!(!res.loss_curve.is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (tr, te) = datasets();
+        let cfg = TrainConfig {
+            epochs: 2,
+            seed: 9,
+            ..Default::default()
+        };
+        let a = train(&backend(), &tr, &te, &cfg).unwrap();
+        let b = train(&backend(), &tr, &te, &cfg).unwrap();
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.test_accuracy, b.test_accuracy);
+    }
+
+    #[test]
+    fn subset_smaller_than_batch_still_trains() {
+        let (tr, te) = datasets();
+        let sub = tr.subset(&(0..5).collect::<Vec<_>>());
+        let cfg = TrainConfig {
+            epochs: 2,
+            ..Default::default()
+        };
+        let res = train(&backend(), &sub, &te, &cfg).unwrap();
+        assert_eq!(res.steps, 2); // 1 wrap-around step per epoch
+    }
+
+    #[test]
+    fn mismatched_dataset_rejected() {
+        let (tr, te) = datasets();
+        let bad = ReferenceModelBackend::new(
+            MlpSpec::new(99, 16, 10),
+            TrainHyper::default(),
+            16,
+            16,
+            8,
+        );
+        assert!(train(&bad, &tr, &te, &TrainConfig::default()).is_err());
+    }
+
+    #[test]
+    fn warmup_changes_params() {
+        let (tr, _te) = datasets();
+        let b = backend();
+        let warmed = warmup_params(&b, &tr, 10, 0.05, 1).unwrap();
+        let mut rng = Pcg64::new(1, 0x3A97);
+        let fresh = b.spec().init_params(&mut rng);
+        assert_eq!(warmed.len(), fresh.len());
+        assert!(warmed.iter().zip(&fresh).any(|(a, b)| a != b));
+    }
+}

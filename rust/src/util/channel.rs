@@ -1,0 +1,290 @@
+//! Bounded MPMC channel with blocking send — the backpressure primitive of
+//! the streaming pipeline (from scratch; no tokio/crossbeam offline).
+//!
+//! Semantics:
+//!   * `send` blocks while the queue is at capacity (backpressure) and fails
+//!     only if every receiver is gone.
+//!   * `recv` blocks while empty and returns `None` once the channel is
+//!     closed AND drained — so producers finishing never lose items.
+//!   * Any number of producers and consumers may share the endpoints by
+//!     cloning; the channel closes when all senders drop or on `close()`.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+    closed: bool,
+}
+
+/// Sending endpoint (clonable).
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Receiving endpoint (clonable).
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Error returned when the send side outlives all receivers.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity > 0, "channel capacity must be > 0");
+    let inner = Arc::new(Inner {
+        queue: Mutex::new(State {
+            items: VecDeque::with_capacity(capacity),
+            senders: 1,
+            receivers: 1,
+            closed: false,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        capacity,
+    });
+    (
+        Sender {
+            inner: inner.clone(),
+        },
+        Receiver { inner },
+    )
+}
+
+impl<T> Sender<T> {
+    /// Blocking send with backpressure.
+    pub fn send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if st.receivers == 0 || st.closed {
+                return Err(SendError(item));
+            }
+            if st.items.len() < self.inner.capacity {
+                st.items.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; returns the item back if full/closed.
+    pub fn try_send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.receivers == 0 || st.closed || st.items.len() >= self.inner.capacity {
+            return Err(SendError(item));
+        }
+        st.items.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Explicitly close (wakes all blocked parties).
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    /// Current queue depth (diagnostics / backpressure metrics).
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.queue.lock().unwrap().senders += 1;
+        Sender {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            st.closed = true;
+            self.inner.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` = closed and fully drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed || st.senders == 0 {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Drain into an iterator (blocking until closed).
+    pub fn iter(&self) -> RecvIter<'_, T> {
+        RecvIter { rx: self }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.inner.queue.lock().unwrap().receivers += 1;
+        Receiver {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            // Unblock producers so they can observe the error.
+            self.inner.not_full.notify_all();
+        }
+    }
+}
+
+pub struct RecvIter<'a, T> {
+    rx: &'a Receiver<T>,
+}
+
+impl<T> Iterator for RecvIter<'_, T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        self.rx.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let got: Vec<i32> = rx.iter().collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_recv() {
+        let (tx, rx) = bounded(1);
+        tx.send(1).unwrap();
+        let t = thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks until the main thread receives
+            tx.send(3).unwrap();
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), Some(3));
+        t.join().unwrap();
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn try_send_full() {
+        let (tx, _rx) = bounded(1);
+        assert!(tx.try_send(1).is_ok());
+        assert_eq!(tx.try_send(2), Err(SendError(2)));
+    }
+
+    #[test]
+    fn send_fails_when_receiver_gone() {
+        let (tx, rx) = bounded(1);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(SendError(7)));
+    }
+
+    #[test]
+    fn close_drains_remaining() {
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        tx.close();
+        assert_eq!(tx.send(3), Err(SendError(3)));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = bounded(4);
+        let n_producers = 4;
+        let per = 250;
+        let mut producers = Vec::new();
+        for p in 0..n_producers {
+            let tx = tx.clone();
+            producers.push(thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * per + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let rx = rx.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n_producers * per).collect::<Vec<_>>());
+    }
+}

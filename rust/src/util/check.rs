@@ -1,0 +1,97 @@
+//! Micro property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(name, cases, |rng| { ... })` runs a closure over `cases`
+//! independent deterministic PRNG streams; a panic in any case is reported
+//! with the case index and the exact seed so the failure replays with
+//! `replay(name, seed, f)`. Shrinking is out of scope — cases are kept small
+//! instead.
+
+use super::rng::{mix64, Pcg64};
+
+/// Run `f` across `cases` deterministic random cases.
+///
+/// The per-case seed is derived from a stable hash of `name` and the case
+/// index, so adding tests never reshuffles other tests' cases.
+pub fn forall(name: &str, cases: usize, f: impl Fn(&mut Pcg64)) {
+    for case in 0..cases {
+        let seed = case_seed(name, case as u64);
+        let mut rng = Pcg64::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (seed {seed:#x}); \
+                 replay with check::replay(\"{name}\", {seed:#x}, f)"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay(_name: &str, seed: u64, f: impl Fn(&mut Pcg64)) {
+    let mut rng = Pcg64::seeded(seed);
+    f(&mut rng);
+}
+
+fn case_seed(name: &str, case: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV offset
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    mix64(h ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Assert two f32 slices match within absolute + relative tolerance.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}[{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_requested_cases() {
+        let mut seen = std::collections::HashSet::new();
+        // Seeds must be distinct across cases.
+        for case in 0..50u64 {
+            assert!(seen.insert(case_seed("x", case)));
+        }
+        let count = std::cell::Cell::new(0);
+        forall("count", 10, |_rng| count.set(count.get() + 1));
+        assert_eq!(count.get(), 10);
+    }
+
+    #[test]
+    fn seeds_stable_across_runs() {
+        assert_eq!(case_seed("stable", 3), case_seed("stable", 3));
+        assert_ne!(case_seed("stable", 3), case_seed("other", 3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        forall("fails", 5, |rng| {
+            assert!(rng.next_f64() < 0.0);
+        });
+    }
+
+    #[test]
+    fn allclose_passes_and_fails() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6, "ok");
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0], &[1.1], 1e-6, 1e-6, "bad");
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny leveled logger (from scratch — no `log`/`env_logger` facade at
+//! runtime). Level comes from `SAGE_LOG` (error|warn|info|debug|trace),
+//! default `info`. Timestamps are seconds since process start to keep
+//! output deterministic-ish and diffable in CI logs.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => return None,
+        })
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static START: OnceLock<Instant> = OnceLock::new();
+static INIT: OnceLock<()> = OnceLock::new();
+
+/// Initialize from `SAGE_LOG`; called lazily by the first log line.
+pub fn init() {
+    INIT.get_or_init(|| {
+        START.get_or_init(Instant::now);
+        if let Ok(v) = std::env::var("SAGE_LOG") {
+            if let Some(l) = Level::from_str(&v) {
+                LEVEL.store(l as u8, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+pub fn set_level(level: Level) {
+    init();
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    init();
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, module: &str, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {module}] {msg}", level.tag());
+}
+
+#[macro_export]
+macro_rules! log_error { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, module_path!(), &format!($($a)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), &format!($($a)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, module_path!(), &format!($($a)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), &format!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str("warn"), Some(Level::Warn));
+        assert_eq!(Level::from_str("TRACE"), Some(Level::Trace));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

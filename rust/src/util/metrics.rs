@@ -1,0 +1,286 @@
+//! Metrics substrate: counters, gauges, wall-clock timers and streaming
+//! histograms, aggregated in a registry the pipeline/trainer/benches report
+//! from. From scratch (no prometheus/metrics crates offline).
+//!
+//! Histograms are fixed-layout log-linear (powers of two, 4 sub-buckets) so
+//! merging across worker threads is exact and allocation-free.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-linear histogram of nanosecond (or arbitrary u64) samples.
+/// 64 power-of-two decades x 4 sub-buckets; relative error <= 25%.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+const SUB: usize = 4;
+const NBUCKETS: usize = 64 * SUB;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            return 0;
+        }
+        let log2 = 63 - v.leading_zeros() as usize;
+        let frac = if log2 >= 2 {
+            ((v >> (log2 - 2)) & 0b11) as usize
+        } else {
+            0
+        };
+        (log2 * SUB + frac).min(NBUCKETS - 1)
+    }
+
+    /// Lower edge of a bucket (inverse of `bucket_of`, approximate).
+    fn bucket_low(idx: usize) -> u64 {
+        let log2 = idx / SUB;
+        let frac = idx % SUB;
+        if log2 >= 2 {
+            (1u64 << log2) + ((frac as u64) << (log2 - 2))
+        } else {
+            1u64 << log2
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (q in [0,1]) from the bucket layout.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target.max(1) {
+                return Self::bucket_low(i);
+            }
+        }
+        self.max()
+    }
+
+    pub fn merge_from(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max
+            .fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// Times a scope and records nanoseconds into a histogram on drop.
+pub struct ScopedTimer<'a> {
+    hist: &'a Histogram,
+    start: Instant,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(hist: &'a Histogram) -> Self {
+        Self {
+            hist,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Named registry. Coarse-grained Mutex is fine: lookup happens at setup;
+/// hot paths hold `&Counter`/`&Histogram` directly.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, &'static Counter>>,
+    hists: Mutex<BTreeMap<String, &'static Histogram>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| Box::leak(Box::new(Counter::default())))
+    }
+
+    pub fn histogram(&self, name: &str) -> &'static Histogram {
+        let mut m = self.hists.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| Box::leak(Box::new(Histogram::new())))
+    }
+
+    /// Human-readable dump (sorted by name).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name}: {}\n", c.get()));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name}: n={} mean={:.0}ns p50={} p99={} max={}\n",
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+                h.max()
+            ));
+        }
+        out
+    }
+}
+
+/// Process-global registry.
+pub fn global() -> &'static Registry {
+    static REG: std::sync::OnceLock<Registry> = std::sync::OnceLock::new();
+    REG.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        // Log-linear bucketing: <=25% relative error.
+        assert!((350..=650).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((700..=1000).contains(&p99), "p99={p99}");
+        assert_eq!(h.max(), 1000);
+        assert!((h.mean() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_zero_and_huge() {
+        let h = Histogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in 0..100 {
+            a.record(v);
+            b.record(v + 100);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max(), 199);
+    }
+
+    #[test]
+    fn scoped_timer_records() {
+        let h = Histogram::new();
+        {
+            let _t = ScopedTimer::new(&h);
+            std::hint::black_box(1 + 1);
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn registry_dedups_names() {
+        let r = Registry::default();
+        let c1 = r.counter("x") as *const _;
+        let c2 = r.counter("x") as *const _;
+        assert_eq!(c1, c2);
+        r.counter("x").inc();
+        assert!(r.report().contains("x: 1"));
+    }
+
+    #[test]
+    fn bucket_of_monotone() {
+        let mut last = 0;
+        for v in [1u64, 2, 3, 5, 9, 100, 5000, 1 << 40] {
+            let b = Histogram::bucket_of(v);
+            assert!(b >= last);
+            last = b;
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Infrastructure substrates built from scratch for the offline environment:
+//! PRNG, JSON, logging, metrics, bounded channels, thread pool, and a tiny
+//! property-testing harness. Nothing here depends on the paper — these are
+//! the libraries the coordinator would normally pull from crates.io.
+
+pub mod channel;
+pub mod check;
+pub mod json;
+pub mod log;
+pub mod metrics;
+pub mod rng;
+pub mod threadpool;

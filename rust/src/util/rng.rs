@@ -1,0 +1,421 @@
+//! Deterministic pseudo-random number generation (from scratch — the offline
+//! build has no `rand` crate).
+//!
+//! [`Pcg64`] implements PCG-XSL-RR 128/64 (O'Neill 2014): a small, fast,
+//! statistically strong generator with a jumpable stream parameter, which the
+//! pipeline uses to give every shard worker an independent stream from one
+//! experiment seed. [`SplitMix64`] seeds it (and is handy for hashing).
+//!
+//! Everything in the repo that consumes randomness (dataset synthesis,
+//! selection baselines, property tests) goes through this module, so every
+//! experiment is reproducible from a single `u64` seed recorded in the
+//! report.
+
+/// SplitMix64 — used for seeding and cheap stateless mixing.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// One-shot stateless mix — stable hashing of (seed, index) pairs.
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    SplitMix64::new(x).next_u64()
+}
+
+/// PCG-XSL-RR 128/64.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Construct from a seed; `stream` selects an independent sequence
+    /// (used to decorrelate shard workers deterministically).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let mut sm2 = SplitMix64::new(stream ^ 0xDA3E_39CB_94B9_5BDB);
+        let i0 = sm2.next_u64() as u128;
+        let i1 = sm2.next_u64() as u128;
+        let mut rng = Self {
+            state: (s0 << 64) | s1,
+            inc: ((i0 << 64) | i1) | 1, // must be odd
+        };
+        rng.next_u64();
+        rng
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        // XSL-RR output function.
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire rejection).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (cached second value).
+    pub fn normal(&mut self) -> f64 {
+        // Marsaglia polar method: numerically tame, no trig.
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with iid N(0, sigma^2) samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32() * sigma;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices k > n");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Sample from a Zipf(s) distribution over ranks 1..=n — used for the
+    /// Caltech-256-style long-tail class priors.
+    pub fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+        let mut w: Vec<f64> = (1..=n).map(|r| 1.0 / (r as f64).powf(s)).collect();
+        let total: f64 = w.iter().sum();
+        for v in w.iter_mut() {
+            *v /= total;
+        }
+        w
+    }
+
+    /// Categorical draw from (unnormalized) non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut t = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_are_decorrelated() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut rng = Pcg64::seeded(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(9);
+        let n = 20_000;
+        let (mut sum, mut sumsq, mut sum3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            sum += x;
+            sumsq += x * x;
+            sum3 += x * x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        let skew = sum3 / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+        assert!(skew.abs() < 0.1, "skew {skew}");
+    }
+
+    #[test]
+    fn below_is_unbiased_and_in_range() {
+        let mut rng = Pcg64::seeded(11);
+        let n = 7u64;
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(n) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::seeded(13);
+        let idx = rng.sample_indices(100, 40);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 40);
+        assert!(sorted.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(17);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_weights_normalized_and_decreasing() {
+        let w = Pcg64::zipf_weights(10, 1.2);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for i in 1..w.len() {
+            assert!(w[i] < w[i - 1]);
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Pcg64::seeded(19);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+}
+
+/// Walker's alias method: O(1) weighted sampling after O(n) setup — used
+/// by the trainer for CRAIG-style weighted subset sampling.
+#[derive(Clone, Debug)]
+pub struct AliasSampler {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasSampler {
+    /// Build from non-negative weights (not all zero).
+    pub fn new(weights: &[f64]) -> Result<AliasSampler, String> {
+        let n = weights.len();
+        if n == 0 {
+            return Err("alias sampler: empty weights".into());
+        }
+        if weights.iter().any(|&w| w < 0.0 || !w.is_finite()) {
+            return Err("alias sampler: negative or non-finite weight".into());
+        }
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return Err("alias sampler: all-zero weights".into());
+        }
+        let mut prob: Vec<f64> = weights.iter().map(|&w| w * n as f64 / total).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s] = l;
+            prob[l] = (prob[l] + prob[s]) - 1.0;
+            if prob[l] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Leftovers are numerically 1.0.
+        for i in small.into_iter().chain(large) {
+            prob[i] = 1.0;
+        }
+        Ok(AliasSampler { prob, alias })
+    }
+
+    /// Draw one index.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let n = self.prob.len();
+        let i = rng.below(n as u64) as usize;
+        if rng.next_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod alias_tests {
+    use super::*;
+
+    #[test]
+    fn matches_weights_statistically() {
+        let weights = [1.0, 2.0, 4.0, 0.0, 1.0];
+        let sampler = AliasSampler::new(&weights).unwrap();
+        let mut rng = Pcg64::seeded(21);
+        let mut counts = [0usize; 5];
+        let n = 80_000;
+        for _ in 0..n {
+            counts[sampler.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[3], 0);
+        let total: f64 = weights.iter().sum();
+        for (i, &w) in weights.iter().enumerate() {
+            let expect = n as f64 * w / total;
+            let got = counts[i] as f64;
+            assert!(
+                (got - expect).abs() < 0.05 * n as f64 / 5.0 + 3.0 * expect.sqrt(),
+                "idx {i}: {got} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_weights_uniform_draws() {
+        let sampler = AliasSampler::new(&[1.0; 7]).unwrap();
+        let mut rng = Pcg64::seeded(22);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[sampler.sample(&mut rng)] += 1;
+        }
+        for c in counts {
+            assert!((c as i64 - 10_000).abs() < 600, "{c}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(AliasSampler::new(&[]).is_err());
+        assert!(AliasSampler::new(&[0.0, 0.0]).is_err());
+        assert!(AliasSampler::new(&[1.0, -1.0]).is_err());
+        assert!(AliasSampler::new(&[1.0, f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn single_element() {
+        let s = AliasSampler::new(&[3.0]).unwrap();
+        let mut rng = Pcg64::seeded(23);
+        assert_eq!(s.sample(&mut rng), 0);
+        assert_eq!(s.len(), 1);
+    }
+}

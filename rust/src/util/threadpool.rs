@@ -1,0 +1,195 @@
+//! Minimal work-stealing-free thread pool + structured parallel map
+//! (from scratch — no rayon offline).
+//!
+//! [`ThreadPool`] feeds boxed jobs through the bounded channel (so job
+//! submission itself backpressures), and [`parallel_map_chunks`] gives the
+//! common "split a big slice across cores" pattern on std scoped threads
+//! with zero allocation of intermediate Vecs beyond the output.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::channel::{bounded, Sender};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size pool. Jobs run FIFO; `wait_idle` blocks until all submitted
+/// jobs completed (the pipeline's phase barrier).
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = bounded::<Job>(threads * 4);
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let rx = rx.clone();
+            let pending = pending.clone();
+            workers.push(std::thread::spawn(move || {
+                while let Some(job) = rx.recv() {
+                    job();
+                    let (lock, cv) = &*pending;
+                    let mut n = lock.lock().unwrap();
+                    *n -= 1;
+                    if *n == 0 {
+                        cv.notify_all();
+                    }
+                }
+            }));
+        }
+        Self {
+            tx: Some(tx),
+            workers,
+            pending,
+        }
+    }
+
+    /// Submit a job (blocks if the queue is full — backpressure).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .unwrap_or_else(|_| panic!("worker threads gone"));
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Reasonable default parallelism for this host.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Parallel map over chunks of `items`: `f(chunk_start_index, chunk)` for
+/// each contiguous chunk, results concatenated in order.
+pub fn parallel_map_chunks<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(usize, &[T]) -> Vec<R> + Sync,
+) -> Vec<R> {
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() < 2 {
+        return f(0, items);
+    }
+    let chunk = items.len().div_ceil(threads);
+    let next = AtomicUsize::new(0);
+    let mut parts: Vec<Option<Vec<R>>> = Vec::new();
+    parts.resize_with(threads, || None);
+    let parts_mutex = Mutex::new(&mut parts);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let start = i * chunk;
+                if start >= items.len() {
+                    break;
+                }
+                let end = (start + chunk).min(items.len());
+                let out = f(start, &items[start..end]);
+                parts_mutex.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+    parts.into_iter().flatten().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = counter.clone();
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop waits for queue drain via channel close + join
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn parallel_map_chunks_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map_chunks(&items, 7, |_start, chunk| {
+            chunk.iter().map(|x| x * 2).collect()
+        });
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_chunks_passes_offsets() {
+        let items: Vec<u64> = vec![0; 100];
+        let out = parallel_map_chunks(&items, 3, |start, chunk| {
+            (start..start + chunk.len()).collect()
+        });
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread_and_empty() {
+        let out = parallel_map_chunks(&[1, 2, 3], 1, |_s, c| c.to_vec());
+        assert_eq!(out, vec![1, 2, 3]);
+        let empty: Vec<i32> = parallel_map_chunks(&[], 4, |_s, c: &[i32]| c.to_vec());
+        assert!(empty.is_empty());
+    }
+}

@@ -1,0 +1,235 @@
+//! Failure injection: every load/validate path must fail loudly and
+//! descriptively, never crash or silently mis-run.
+
+use sage::data::{generate, BenchmarkKind};
+use sage::runtime::{EngineActor, Manifest};
+use sage::tensor::Matrix;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sage_fail_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_artifacts_dir_is_reported() {
+    let err = match EngineActor::spawn("/nonexistent/artifacts") {
+        Err(e) => e,
+        Ok(_) => panic!("spawn should fail"),
+    };
+    assert!(err.contains("manifest.json"), "{err}");
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn malformed_manifest_is_reported() {
+    let dir = tmpdir("badjson");
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    let err = match EngineActor::spawn(dir.to_str().unwrap()) {
+        Err(e) => e,
+        Ok(_) => panic!("spawn should fail"),
+    };
+    assert!(!err.is_empty());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn wrong_version_manifest_is_reported() {
+    let dir = tmpdir("badver");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 999, "configs": {}}"#,
+    )
+    .unwrap();
+    let err = match EngineActor::spawn(dir.to_str().unwrap()) {
+        Err(e) => e,
+        Ok(_) => panic!("spawn should fail"),
+    };
+    assert!(err.contains("version"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn missing_artifact_file_fails_at_run_not_load() {
+    // Manifest points at a file that doesn't exist: loading the manifest is
+    // fine (lazy compile), executing the artifact errors with its path.
+    let dir = tmpdir("missingfile");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "configs": {"tiny": {
+            "f": 16, "h": 32, "c": 4, "b": 8, "bt": 8, "l": 8, "m": 16,
+            "d": 676, "block_d": 256,
+            "momentum": 0.9, "weight_decay": 0.0005, "label_smoothing": 0.1,
+            "artifacts": {"grads": {"file": "nope.hlo.txt",
+                "inputs": [[676],[8,16],[8,4]], "outputs": [[8,676],[8]]}}}}}"#,
+    )
+    .unwrap();
+    let actor = EngineActor::spawn(dir.to_str().unwrap()).unwrap();
+    let err = actor
+        .handle()
+        .run(
+            "tiny",
+            "grads",
+            vec![
+                sage::runtime::OwnedTensor::new(vec![0.0; 676], &[676]),
+                sage::runtime::OwnedTensor::new(vec![0.0; 8 * 16], &[8, 16]),
+                sage::runtime::OwnedTensor::new(vec![0.0; 8 * 4], &[8, 4]),
+            ],
+        )
+        .unwrap_err();
+    assert!(err.contains("nope.hlo.txt"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn wrong_input_shape_rejected_before_xla() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let actor = EngineActor::spawn("artifacts").unwrap();
+    if actor.handle().cfg("tiny").is_err() {
+        return;
+    }
+    let err = actor
+        .handle()
+        .run(
+            "tiny",
+            "grads",
+            vec![sage::runtime::OwnedTensor::new(vec![0.0; 10], &[10])],
+        )
+        .unwrap_err();
+    assert!(err.contains("inputs"), "{err}");
+
+    let cfg = actor.handle().cfg("tiny").unwrap();
+    let err = actor
+        .handle()
+        .run(
+            "tiny",
+            "grads",
+            vec![
+                sage::runtime::OwnedTensor::new(vec![0.0; cfg.d], &[cfg.d]),
+                sage::runtime::OwnedTensor::new(vec![0.0; 3], &[1, 3]), // wrong
+                sage::runtime::OwnedTensor::new(
+                    vec![0.0; cfg.b * cfg.c],
+                    &[cfg.b, cfg.c],
+                ),
+            ],
+        )
+        .unwrap_err();
+    assert!(err.contains("shape"), "{err}");
+}
+
+#[test]
+fn unknown_model_and_artifact_are_reported() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let actor = EngineActor::spawn("artifacts").unwrap();
+    let err = actor.handle().run("no-such-model", "grads", vec![]).unwrap_err();
+    assert!(err.contains("no-such-model"), "{err}");
+    let err = actor
+        .handle()
+        .run("tiny", "no-such-artifact", vec![])
+        .unwrap_err();
+    assert!(err.contains("no-such-artifact"), "{err}");
+}
+
+#[test]
+fn manifest_rejects_inconsistent_dims() {
+    let text = r#"{"version": 1, "configs": {"x": {
+        "f": 16, "h": 32, "c": 4, "b": 8, "bt": 8, "l": 8, "m": 16,
+        "d": 999, "block_d": 256,
+        "momentum": 0.9, "weight_decay": 0.0005, "label_smoothing": 0.1,
+        "artifacts": {}}}}"#;
+    assert!(Manifest::parse(text).unwrap_err().contains("imply"));
+}
+
+#[test]
+fn trainer_rejects_shape_mismatches() {
+    use sage::grad::{MlpSpec, TrainHyper};
+    use sage::runtime::ReferenceModelBackend;
+    use sage::trainer::{train_weighted, TrainConfig};
+    let backend =
+        ReferenceModelBackend::new(MlpSpec::new(8, 8, 4), TrainHyper::default(), 8, 8, 4);
+    let spec = sage::data::SynthSpec {
+        classes: 4,
+        ..BenchmarkKind::Cifar10.spec(8)
+    };
+    let tr = generate(&spec, 64, 0, 0);
+    let te = generate(&spec, 32, 0, 1);
+    // Wrong weights length.
+    let err = train_weighted(
+        &backend,
+        &tr,
+        &te,
+        &TrainConfig::default(),
+        Some(&[1.0, 2.0]),
+    )
+    .unwrap_err();
+    assert!(err.contains("weights"), "{err}");
+    // Negative weights rejected by the alias sampler.
+    let bad = vec![-1.0f32; tr.len()];
+    let err = train_weighted(&backend, &tr, &te, &TrainConfig::default(), Some(&bad))
+        .unwrap_err();
+    assert!(err.contains("negative"), "{err}");
+}
+
+#[test]
+fn checkpoint_resume_mismatch_is_reported() {
+    use sage::grad::{MlpSpec, TrainHyper};
+    use sage::runtime::ReferenceModelBackend;
+    use sage::trainer::{train, Checkpoint, TrainConfig};
+    let dir = tmpdir("ckpt");
+    let path = dir.join("model.ckpt");
+    // Save a checkpoint with the wrong schedule length and dimension.
+    Checkpoint::new(5, 9999, vec![0.0; 10], vec![0.0; 10])
+        .save(&path)
+        .unwrap();
+    let backend =
+        ReferenceModelBackend::new(MlpSpec::new(8, 8, 4), TrainHyper::default(), 8, 8, 4);
+    let spec = sage::data::SynthSpec {
+        classes: 4,
+        ..BenchmarkKind::Cifar10.spec(8)
+    };
+    let tr = generate(&spec, 64, 0, 0);
+    let te = generate(&spec, 32, 0, 1);
+    let cfg = TrainConfig {
+        epochs: 2,
+        checkpoint_path: Some(path.clone()),
+        resume: true,
+        ..Default::default()
+    };
+    let err = train(&backend, &tr, &te, &cfg).unwrap_err();
+    assert!(err.contains("does not match"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn selection_on_empty_dataset_errors() {
+    use sage::grad::{MlpSpec, TrainHyper};
+    use sage::pipeline::{run_selection, PipelineConfig};
+    use sage::runtime::ReferenceModelBackend;
+    let backend =
+        ReferenceModelBackend::new(MlpSpec::new(8, 8, 4), TrainHyper::default(), 8, 8, 4);
+    let empty = sage::data::Dataset {
+        name: "empty".into(),
+        features: Matrix::zeros(0, 8),
+        labels: vec![],
+        num_classes: 4,
+    };
+    let err = match run_selection(
+        &backend,
+        &empty,
+        sage::config::Method::Sage,
+        1,
+        &PipelineConfig::default(),
+        None,
+    ) {
+        Err(e) => e,
+        Ok(_) => panic!("selection on empty dataset should fail"),
+    };
+    assert!(err.contains("empty"), "{err}");
+}

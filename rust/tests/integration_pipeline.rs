@@ -1,0 +1,191 @@
+//! Cross-module integration on the pure-Rust reference backend (no
+//! artifacts needed): selection quality, class balance on long-tailed data,
+//! constant-memory behaviour, and end-to-end cells through the bench runner.
+
+use sage::bench::runner::{run_cell, CellSpec};
+use sage::config::Method;
+use sage::data::{generate, BenchmarkKind, SynthSpec};
+use sage::grad::{MlpSpec, TrainHyper};
+use sage::pipeline::{run_selection, PipelineConfig};
+use sage::runtime::ReferenceModelBackend;
+use sage::trainer::{train, TrainConfig};
+
+fn backend(classes: usize) -> ReferenceModelBackend {
+    ReferenceModelBackend::new(
+        MlpSpec::new(16, 24, classes),
+        TrainHyper::default(),
+        32,
+        32,
+        16,
+    )
+}
+
+fn pipeline_cfg(seed: u64) -> PipelineConfig {
+    PipelineConfig {
+        workers: 3,
+        warmup_steps: 15,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Train on a method's subset, return test accuracy.
+fn acc_for(method: Method, fraction: f64, seed: u64) -> f64 {
+    let spec = SynthSpec {
+        classes: 10,
+        ..BenchmarkKind::Cifar10.spec(16)
+    };
+    let train_ds = generate(&spec, 1200, seed, 0);
+    let test_ds = generate(&spec, 600, seed, 1);
+    let b = backend(10);
+    let k = ((fraction * train_ds.len() as f64) as usize).max(1);
+    let subset = if fraction >= 1.0 {
+        train_ds.clone()
+    } else {
+        let out = run_selection(&b, &train_ds, method, k, &pipeline_cfg(seed), None).unwrap();
+        train_ds.subset(&out.indices)
+    };
+    let cfg = TrainConfig {
+        epochs: 6,
+        base_lr: 0.08,
+        seed,
+        ..Default::default()
+    };
+    train(&b, &subset, &test_ds, &cfg).unwrap().test_accuracy
+}
+
+#[test]
+fn sage_beats_random_at_small_fraction() {
+    // The paper's core claim, at laptop scale: at a small kept-rate SAGE's
+    // subset trains better than a random subset. Averaged over 3 seeds to
+    // keep the test stable.
+    let fractions = 0.1;
+    let mut sage_acc = 0.0;
+    let mut rand_acc = 0.0;
+    for seed in 0..3 {
+        sage_acc += acc_for(Method::Sage, fractions, seed);
+        rand_acc += acc_for(Method::Random, fractions, seed);
+    }
+    sage_acc /= 3.0;
+    rand_acc /= 3.0;
+    assert!(
+        sage_acc > rand_acc - 0.02,
+        "SAGE {sage_acc:.4} should not trail Random {rand_acc:.4}"
+    );
+}
+
+#[test]
+fn accuracy_increases_with_fraction() {
+    let a05 = acc_for(Method::Sage, 0.08, 1);
+    let a100 = acc_for(Method::Full, 1.0, 1);
+    assert!(
+        a100 > a05 - 0.02,
+        "full {a100:.4} should dominate 8% subset {a05:.4}"
+    );
+}
+
+#[test]
+fn cb_sage_covers_tail_classes_on_longtail() {
+    let spec = SynthSpec {
+        classes: 20,
+        zipf: Some(1.0),
+        ..BenchmarkKind::Caltech256.spec(16)
+    };
+    let ds = generate(&spec, 2000, 3, 0);
+    let b = backend(20);
+    let k = 200;
+    let sage = run_selection(&b, &ds, Method::Sage, k, &pipeline_cfg(3), None).unwrap();
+    let cb = run_selection(&b, &ds, Method::CbSage, k, &pipeline_cfg(3), None).unwrap();
+    let coverage = |idx: &[usize]| -> usize {
+        let sub = ds.subset(idx);
+        sub.class_counts().iter().filter(|&&c| c > 0).count()
+    };
+    let present = ds.class_counts().iter().filter(|&&c| c > 0).count();
+    let cov_cb = coverage(&cb.indices);
+    let cov_sage = coverage(&sage.indices);
+    assert_eq!(
+        cov_cb, present,
+        "CB-SAGE must cover all {present} present classes (got {cov_cb})"
+    );
+    assert!(cov_cb >= cov_sage, "CB {cov_cb} >= plain {cov_sage}");
+}
+
+#[test]
+fn sketch_memory_constant_while_n_grows() {
+    let spec = SynthSpec {
+        classes: 10,
+        ..BenchmarkKind::Cifar10.spec(16)
+    };
+    let b = backend(10);
+    let mut sizes = Vec::new();
+    for n in [300usize, 600, 1200] {
+        let ds = generate(&spec, n, 5, 0);
+        let out = run_selection(&b, &ds, Method::Sage, n / 4, &pipeline_cfg(5), None).unwrap();
+        sizes.push(out.sketch_bytes);
+    }
+    assert_eq!(sizes[0], sizes[1]);
+    assert_eq!(sizes[1], sizes[2]);
+}
+
+#[test]
+fn runner_grid_smoke_all_methods() {
+    for method in [
+        Method::Sage,
+        Method::CbSage,
+        Method::Random,
+        Method::Drop,
+        Method::Glister,
+        Method::Craig,
+        Method::GradMatch,
+        Method::Graft,
+        Method::GraftWarm,
+    ] {
+        let spec = CellSpec {
+            train_examples: 300,
+            test_examples: 150,
+            epochs: 2,
+            workers: 2,
+            warmup_steps: 5,
+            ..CellSpec::new(BenchmarkKind::Cifar10, method, 0.2, 0)
+        };
+        let b = ReferenceModelBackend::new(
+            MlpSpec::new(16, 24, 10),
+            TrainHyper::default(),
+            32,
+            32,
+            16,
+        );
+        // Feature dim of the generated data comes from the backend (16).
+        let r = run_cell(&b, &spec, None).unwrap();
+        assert_eq!(r.subset_size, 60, "{method:?}");
+        assert!(r.accuracy > 0.05, "{method:?} acc {}", r.accuracy);
+    }
+}
+
+#[test]
+fn selection_wallclock_scales_subquadratically() {
+    // O(N ℓ D) pipeline: 4x data should cost ~4x, far from 16x (N²).
+    let spec = SynthSpec {
+        classes: 10,
+        ..BenchmarkKind::Cifar10.spec(16)
+    };
+    let b = backend(10);
+    let time_for = |n: usize| -> f64 {
+        let ds = generate(&spec, n, 7, 0);
+        let cfg = PipelineConfig {
+            workers: 1,
+            warmup_steps: 0,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let _ = run_selection(&b, &ds, Method::Sage, n / 10, &cfg, None).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+    let t1 = time_for(500);
+    let t4 = time_for(2000);
+    assert!(
+        t4 < t1 * 12.0,
+        "4x data took {:.1}x (t1={t1:.3}s t4={t4:.3}s) — should be ~linear",
+        t4 / t1
+    );
+}

@@ -1,0 +1,251 @@
+//! Integration: the full Python→HLO→PJRT chain against the pure-Rust
+//! reference model. Requires `make artifacts` (tiny config); tests skip
+//! with a notice when artifacts are absent so plain `cargo test` still
+//! passes in a fresh checkout.
+
+use sage::data::{generate, BenchmarkKind, SynthSpec};
+use sage::grad::MlpSpec;
+use sage::runtime::{
+    EngineActor, ModelBackend, ReferenceModelBackend, XlaModelBackend, XlaShrinkBackend,
+};
+use sage::sketch::{CpuShrinkBackend, FdSketch, ShrinkBackend};
+use sage::tensor::Matrix;
+use sage::util::check::assert_allclose;
+use sage::util::rng::Pcg64;
+use std::sync::Arc;
+
+const ARTIFACTS: &str = "artifacts";
+const MODEL: &str = "tiny";
+
+fn actor_or_skip() -> Option<EngineActor> {
+    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        return None;
+    }
+    match EngineActor::spawn(ARTIFACTS) {
+        Ok(a) => {
+            if a.handle().cfg(MODEL).is_err() {
+                eprintln!("SKIP: tiny config not in manifest");
+                None
+            } else {
+                Some(a)
+            }
+        }
+        Err(e) => panic!("engine spawn failed: {e}"),
+    }
+}
+
+fn backends(actor: &EngineActor) -> (XlaModelBackend, ReferenceModelBackend) {
+    let xla = XlaModelBackend::new(actor.handle(), MODEL).unwrap();
+    let reference = ReferenceModelBackend::from_cfg(xla.cfg());
+    (xla, reference)
+}
+
+fn rand_params(spec: &MlpSpec, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seeded(seed);
+    spec.init_params(&mut rng)
+}
+
+fn rand_batch(spec: &MlpSpec, n: usize, seed: u64) -> (Matrix, Matrix, Vec<u32>) {
+    let mut rng = Pcg64::seeded(seed ^ 0xBEEF);
+    let x = Matrix::from_fn(n, spec.f, |_, _| rng.normal_f32());
+    let mut y = Matrix::zeros(n, spec.c);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = rng.below(spec.c as u64) as u32;
+        labels.push(c);
+        y.set(i, c as usize, 1.0);
+    }
+    (x, y, labels)
+}
+
+#[test]
+fn grads_match_reference() {
+    let Some(actor) = actor_or_skip() else { return };
+    let (xla, reference) = backends(&actor);
+    let spec = xla.spec();
+    let params = rand_params(&spec, 1);
+    let (x, y, _) = rand_batch(&spec, xla.score_batch(), 1);
+    let (gx, lx) = xla.per_example_grads(&params, &x, &y).unwrap();
+    let (gr, lr) = reference.per_example_grads(&params, &x, &y).unwrap();
+    assert_allclose(gx.as_slice(), gr.as_slice(), 1e-4, 1e-3, "grads");
+    assert_allclose(&lx, &lr, 1e-4, 1e-3, "losses");
+}
+
+#[test]
+fn grads_partial_batch_padding_is_truncated() {
+    let Some(actor) = actor_or_skip() else { return };
+    let (xla, reference) = backends(&actor);
+    let spec = xla.spec();
+    let params = rand_params(&spec, 2);
+    let n = xla.score_batch() - 3;
+    let (x, y, _) = rand_batch(&spec, n, 2);
+    let (gx, lx) = xla.per_example_grads(&params, &x, &y).unwrap();
+    assert_eq!(gx.rows(), n);
+    assert_eq!(lx.len(), n);
+    let (gr, _) = reference.per_example_grads(&params, &x, &y).unwrap();
+    assert_allclose(gx.as_slice(), gr.as_slice(), 1e-4, 1e-3, "grads-part");
+}
+
+#[test]
+fn train_step_matches_reference() {
+    let Some(actor) = actor_or_skip() else { return };
+    let (xla, reference) = backends(&actor);
+    let spec = xla.spec();
+    let mut px = rand_params(&spec, 3);
+    let mut pr = px.clone();
+    let mut mx = vec![0.0f32; spec.d()];
+    let mut mr = vec![0.0f32; spec.d()];
+    let (x, y, _) = rand_batch(&spec, xla.train_batch(), 3);
+    for step in 0..5 {
+        let lr = 0.05 / (1 + step) as f32;
+        let lx = xla.train_step(&mut px, &mut mx, &x, &y, lr).unwrap();
+        let lrf = reference.train_step(&mut pr, &mut mr, &x, &y, lr).unwrap();
+        assert!((lx - lrf).abs() < 1e-3, "step {step}: {lx} vs {lrf}");
+    }
+    assert_allclose(&px, &pr, 1e-4, 1e-3, "params after 5 steps");
+    assert_allclose(&mx, &mr, 1e-4, 1e-3, "momentum after 5 steps");
+}
+
+#[test]
+fn eval_matches_reference() {
+    let Some(actor) = actor_or_skip() else { return };
+    let (xla, reference) = backends(&actor);
+    let spec = xla.spec();
+    let params = rand_params(&spec, 4);
+    let (x, _, labels) = rand_batch(&spec, xla.score_batch(), 4);
+    let lx = xla.eval_logits(&params, &x).unwrap();
+    let lr = reference.eval_logits(&params, &x).unwrap();
+    assert_allclose(lx.as_slice(), lr.as_slice(), 1e-4, 1e-3, "logits");
+    let ax = xla.accuracy(&params, &x, &labels).unwrap();
+    let ar = reference.accuracy(&params, &x, &labels).unwrap();
+    assert!((ax - ar).abs() < 1e-9);
+}
+
+#[test]
+fn project_matches_reference() {
+    let Some(actor) = actor_or_skip() else { return };
+    let (xla, reference) = backends(&actor);
+    let spec = xla.spec();
+    let mut rng = Pcg64::seeded(5);
+    let sketch = Matrix::from_fn(xla.ell(), spec.d(), |_, _| rng.normal_f32());
+    let g = Matrix::from_fn(xla.score_batch(), spec.d(), |_, _| rng.normal_f32());
+    let (zx, nx) = xla.project(&sketch, &g).unwrap();
+    let (zr, nr) = reference.project(&sketch, &g).unwrap();
+    assert_allclose(zx.as_slice(), zr.as_slice(), 1e-4, 1e-3, "zhat");
+    assert_allclose(&nx, &nr, 1e-2, 1e-3, "norms");
+}
+
+#[test]
+fn score_fused_matches_grads_then_project() {
+    let Some(actor) = actor_or_skip() else { return };
+    let (xla, reference) = backends(&actor);
+    let spec = xla.spec();
+    let params = rand_params(&spec, 6);
+    let mut rng = Pcg64::seeded(6);
+    let sketch = Matrix::from_fn(xla.ell(), spec.d(), |_, _| 0.1 * rng.normal_f32());
+    let (x, y, _) = rand_batch(&spec, xla.score_batch(), 6);
+    let (zf, nf, lf) = xla.score_fused(&params, &sketch, &x, &y).unwrap();
+    // Reference computes the same composition in pure Rust.
+    let (g, lref) = reference.per_example_grads(&params, &x, &y).unwrap();
+    let (zr, nr) = reference.project(&sketch, &g).unwrap();
+    assert_allclose(zf.as_slice(), zr.as_slice(), 2e-3, 2e-3, "fused zhat");
+    assert_allclose(&nf, &nr, 1e-3, 2e-2, "fused norms");
+    assert_allclose(&lf, &lref, 1e-4, 1e-3, "fused losses");
+}
+
+#[test]
+fn xla_shrink_backend_matches_cpu() {
+    let Some(actor) = actor_or_skip() else { return };
+    let handle = actor.handle();
+    let cfg = handle.cfg(MODEL).unwrap();
+    let xla = XlaShrinkBackend::new(handle, MODEL).unwrap();
+    let cpu = CpuShrinkBackend;
+    let mut rng = Pcg64::seeded(7);
+
+    // Full buffer.
+    let buf = Matrix::from_fn(cfg.m, cfg.d, |_, _| rng.normal_f32());
+    let gx = xla.gram(&buf);
+    let gc = cpu.gram(&buf);
+    assert_allclose(gx.as_slice(), gc.as_slice(), 1e-2, 1e-3, "gram");
+
+    // Partial buffer (padding path).
+    let part = Matrix::from_fn(cfg.m - 3, cfg.d, |_, _| rng.normal_f32());
+    let gxp = xla.gram(&part);
+    let gcp = cpu.gram(&part);
+    assert_eq!(gxp.rows(), cfg.m - 3);
+    assert_allclose(gxp.as_slice(), gcp.as_slice(), 1e-2, 1e-3, "gram-partial");
+
+    let rot = Matrix::from_fn(cfg.l, cfg.m - 3, |_, _| rng.normal_f32());
+    let rx = xla.apply_rot(&rot, &part);
+    let rc = cpu.apply_rot(&rot, &part);
+    assert_allclose(rx.as_slice(), rc.as_slice(), 1e-3, 1e-3, "apply_rot");
+}
+
+#[test]
+fn fd_sketch_with_xla_backend_tracks_cpu_sketch() {
+    let Some(actor) = actor_or_skip() else { return };
+    let handle = actor.handle();
+    let cfg = handle.cfg(MODEL).unwrap();
+    let xla: Arc<dyn ShrinkBackend> = Arc::new(XlaShrinkBackend::new(handle, MODEL).unwrap());
+    let mut fd_x = FdSketch::with_backend(cfg.l, cfg.d, xla);
+    let mut fd_c = FdSketch::new(cfg.l, cfg.d);
+    let mut rng = Pcg64::seeded(8);
+    let rows = 5 * cfg.l; // force several shrinks
+    let g = Matrix::from_fn(rows, cfg.d, |_, _| rng.normal_f32());
+    fd_x.insert_batch(&g);
+    fd_c.insert_batch(&g);
+    assert_eq!(fd_x.shrink_count(), fd_c.shrink_count());
+    let sx = fd_x.sketch();
+    let sc = fd_c.sketch();
+    // Sketches are rotation-unique: compare SᵀS actions instead of S.
+    let ex = sage::sketch::covariance_error(&g, &sx);
+    let ec = sage::sketch::covariance_error(&g, &sc);
+    assert!(
+        (ex - ec).abs() <= 0.05 * ec.max(1e-6),
+        "cov err {ex} vs {ec}"
+    );
+}
+
+#[test]
+fn end_to_end_selection_and_training_on_tiny_artifacts() {
+    let Some(actor) = actor_or_skip() else { return };
+    let (xla, _) = backends(&actor);
+    // 4-class synthetic mixture matching the tiny model (f=16, c=4).
+    let spec = SynthSpec {
+        classes: 4,
+        ..BenchmarkKind::Cifar10.spec(16)
+    };
+    let train_ds = generate(&spec, 256, 3, 0);
+    let test_ds = generate(&spec, 128, 3, 1);
+    let pcfg = sage::pipeline::PipelineConfig {
+        workers: 2,
+        warmup_steps: 5,
+        ..Default::default()
+    };
+    let shrink: Arc<dyn ShrinkBackend> =
+        Arc::new(XlaShrinkBackend::new(actor.handle(), MODEL).unwrap());
+    let out = sage::pipeline::run_selection(
+        &xla,
+        &train_ds,
+        sage::config::Method::Sage,
+        64,
+        &pcfg,
+        Some(shrink),
+    )
+    .unwrap();
+    assert_eq!(out.indices.len(), 64);
+    let subset = train_ds.subset(&out.indices);
+    let tcfg = sage::trainer::TrainConfig {
+        epochs: 6,
+        base_lr: 0.1,
+        seed: 3,
+        ..Default::default()
+    };
+    let res = sage::trainer::train(&xla, &subset, &test_ds, &tcfg).unwrap();
+    assert!(
+        res.test_accuracy > 0.4,
+        "tiny e2e accuracy {}",
+        res.test_accuracy
+    );
+}
