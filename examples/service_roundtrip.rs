@@ -1,0 +1,127 @@
+//! sage-serve round trip: spawn the session server in-process, stream
+//! Phase-I gradients from four concurrent producer connections (one per
+//! shard), freeze, score Phase II from four concurrent scorers, and run an
+//! online TopK query — then verify the served result is IDENTICAL to the
+//! offline `pipeline::run_selection` on the same `(seed, workers)` config.
+//!
+//!     cargo run --example service_roundtrip
+
+use sage::config::Method;
+use sage::data::{generate, BenchmarkKind};
+use sage::grad::{MlpSpec, TrainHyper};
+use sage::pipeline::{phase1_gradient_stream, phase2_score_stream, shard_ranges};
+use sage::pipeline::{run_selection, PipelineConfig};
+use sage::runtime::{ModelBackend, ReferenceModelBackend};
+use sage::service::{RegistryConfig, Server, ServerConfig, ServiceClient};
+
+fn main() {
+    let workers = 4;
+    let n = 400;
+    let k = 100;
+    let backend = ReferenceModelBackend::new(
+        MlpSpec::new(12, 16, 10),
+        TrainHyper::default(),
+        32,
+        32,
+        8,
+    );
+    let ds = generate(&BenchmarkKind::Cifar10.spec(12), n, 3, 0);
+    let cfg = PipelineConfig {
+        workers,
+        warmup_steps: 5,
+        seed: 9,
+        ..Default::default()
+    };
+
+    // --- Offline reference run ---
+    let offline = run_selection(&backend, &ds, Method::Sage, k, &cfg, None).unwrap();
+    println!(
+        "offline: {} indices, sketch {}x{}, {} shrinks",
+        offline.indices.len(),
+        offline.sketch.rows(),
+        offline.sketch.cols(),
+        offline.shrinks
+    );
+
+    // --- Served run ---
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".into(), // free port
+        threads: 8,
+        registry: RegistryConfig::default(),
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn();
+    println!("server on {addr}");
+
+    let mut control = ServiceClient::connect(&addr).unwrap();
+    control
+        .create_session("demo", backend.ell(), backend.spec().d(), workers)
+        .unwrap();
+
+    // Phase I: one concurrent producer connection per shard, reusing the
+    // warm-up parameters the offline run computed.
+    let ranges = shard_ranges(n, workers);
+    let params = &offline.params;
+    let backend_ref = &backend;
+    let ds_ref = &ds;
+    std::thread::scope(|scope| {
+        for (shard, &range) in ranges.iter().enumerate() {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut client = ServiceClient::connect(&addr).unwrap();
+                let batches = phase1_gradient_stream(backend_ref, ds_ref, params, range, |g| {
+                    client.ingest("demo", shard, g).map(|_| ())
+                })
+                .unwrap();
+                println!("producer {shard}: {batches} gradient batches");
+            });
+        }
+    });
+
+    // Freeze: drains ingest, merges shard sketches in shard order.
+    let frozen = control.freeze("demo").unwrap();
+    assert_eq!(
+        frozen.sketch.as_slice(),
+        offline.sketch.as_slice(),
+        "served sketch must be byte-identical to the offline sketch"
+    );
+    println!(
+        "frozen: byte-identical sketch, shift bound {:.4} (offline {:.4})",
+        frozen.shift_bound, offline.shift_bound
+    );
+
+    // Phase II: concurrent scorers per shard against the frozen sketch.
+    std::thread::scope(|scope| {
+        for (shard, &range) in ranges.iter().enumerate() {
+            let addr = addr.clone();
+            let sketch = &frozen.sketch;
+            scope.spawn(move || {
+                let mut client = ServiceClient::connect(&addr).unwrap();
+                phase2_score_stream(backend_ref, ds_ref, params, sketch, range, |blk| {
+                    client.score("demo", shard, &blk)
+                })
+                .unwrap();
+            });
+        }
+    });
+
+    // Online selection query.
+    let (indices, _weights) = control.top_k("demo", "sage", k, 10, cfg.seed).unwrap();
+    assert_eq!(
+        indices, offline.indices,
+        "served TopK must equal offline selection"
+    );
+    println!("TopK: {} indices, identical to offline ✓", indices.len());
+
+    // A second online query at a different budget — no recompute needed.
+    let (half, _) = control.top_k("demo", "sage", k / 2, 10, cfg.seed).unwrap();
+    println!("online re-query at k={}: {} indices", k / 2, half.len());
+
+    for (name, value) in control.stats(Some("demo")).unwrap() {
+        println!("{name}: {value}");
+    }
+
+    handle.shutdown();
+    println!("round trip complete");
+}

@@ -6,7 +6,11 @@
 //!
 //! * **L3 (this crate)** — streaming coordinator: sharded gradient pipeline,
 //!   Frequent-Directions sketching, agreement scoring & subset selection,
-//!   baselines, subset trainer, benchmark harness, CLI.
+//!   baselines, subset trainer, benchmark harness, CLI — plus `sage-serve`
+//!   ([`service`]): a long-running multi-tenant TCP service holding many
+//!   independent sketch sessions, fed by streaming producers and queried
+//!   online (Freeze / Score / TopK), sharing the pipeline's Phase-I/II
+//!   loops so served selection is byte-identical to offline selection.
 //! * **L2 (python/compile/model.py)** — the training target (MLP classifier,
 //!   per-example grads via `vmap(grad)`) AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the sketch
@@ -28,6 +32,7 @@ pub mod linalg;
 pub mod pipeline;
 pub mod runtime;
 pub mod selection;
+pub mod service;
 pub mod sketch;
 pub mod tensor;
 pub mod trainer;

@@ -5,9 +5,43 @@
 //!   train      select (optional) + train + evaluate one experiment cell
 //!   info       show manifest/artifact information
 //!   gen-data   write a simulated benchmark to a sharded directory
+//!   serve      run the sage-serve session server (TCP)
+//!   ingest     stream Phase-I gradients / Phase-II scores into a session
+//!   query      freeze / top-k / stats / checkpoint against a session
 //!
 //! The runtime path requires `make artifacts` (AOT-lowered HLO). Pass
 //! `--backend reference` to run the pure-Rust model instead.
+//!
+//! # sage serve / sage ingest quickstart
+//!
+//! Terminal 1 — start a server with room for 64 sessions:
+//!
+//! ```text
+//! sage serve --addr 127.0.0.1:7009 --checkpoint-dir /tmp/sage-sessions
+//! ```
+//!
+//! Terminal 2 — create a 4-shard session and stream shard 0's gradients
+//! into it (repeat with --shard 1..3, concurrently if you like; each shard
+//! gets its own producer so results stay deterministic):
+//!
+//! ```text
+//! sage ingest --addr 127.0.0.1:7009 --session run1 --create \
+//!             --shards 4 --shard 0 --dataset cifar10 --seed 0
+//! ```
+//!
+//! Freeze + Phase-II score each shard, then run online selection queries:
+//!
+//! ```text
+//! sage ingest --addr 127.0.0.1:7009 --session run1 --shards 4 --shard 0 \
+//!             --dataset cifar10 --seed 0 --phase score
+//! sage query  --addr 127.0.0.1:7009 --session run1 --op topk \
+//!             --method sage --k 1024 --seed 0
+//! sage query  --addr 127.0.0.1:7009 --session run1 --op stats
+//! ```
+//!
+//! With the same `(seed, shards)` the selected indices are byte-identical
+//! to the offline `sage select --backend reference --threads 4` — the
+//! service drives the same `pipeline` Phase-I/II loops.
 
 use sage::bench::runner::{run_cell, CellSpec};
 use sage::cli::{common_run_opts, App, Command, Opt, Parsed};
@@ -72,6 +106,47 @@ fn app() -> App {
                     Opt { name: "out", takes_value: true, help: "output directory", default: Some("data_shards") },
                 ],
             },
+            Command {
+                name: "serve",
+                about: "run the sage-serve multi-tenant sketch session server",
+                opts: vec![
+                    Opt { name: "addr", takes_value: true, help: "bind address", default: Some("127.0.0.1:7009") },
+                    Opt { name: "threads", takes_value: true, help: "connection threads", default: Some("16") },
+                    Opt { name: "max-sessions", takes_value: true, help: "admission: max sessions", default: Some("64") },
+                    Opt { name: "max-bytes-mb", takes_value: true, help: "admission: max resident sketch MiB", default: Some("1024") },
+                    Opt { name: "queue-depth", takes_value: true, help: "per-session ingest queue depth", default: Some("8") },
+                    Opt { name: "checkpoint-dir", takes_value: true, help: "session checkpoint/recovery dir", default: None },
+                ],
+            },
+            Command {
+                name: "ingest",
+                about: "stream one shard of a benchmark into a served session",
+                opts: {
+                    let mut opts = common_run_opts();
+                    opts.extend([
+                        Opt { name: "addr", takes_value: true, help: "server address", default: Some("127.0.0.1:7009") },
+                        Opt { name: "session", takes_value: true, help: "session name", default: Some("run1") },
+                        Opt { name: "shards", takes_value: true, help: "total shards in the session", default: Some("4") },
+                        Opt { name: "shard", takes_value: true, help: "this producer's shard index", default: Some("0") },
+                        Opt { name: "phase", takes_value: true, help: "sketch (Phase I) | score (Phase II)", default: Some("sketch") },
+                        Opt { name: "create", takes_value: false, help: "create the session first", default: None },
+                    ]);
+                    opts
+                },
+            },
+            Command {
+                name: "query",
+                about: "query a served session: freeze | topk | stats | checkpoint | close",
+                opts: vec![
+                    Opt { name: "addr", takes_value: true, help: "server address", default: Some("127.0.0.1:7009") },
+                    Opt { name: "session", takes_value: true, help: "session name ('' = server stats)", default: Some("run1") },
+                    Opt { name: "op", takes_value: true, help: "freeze | topk | stats | checkpoint | close", default: Some("stats") },
+                    Opt { name: "method", takes_value: true, help: "selection method (topk)", default: Some("sage") },
+                    Opt { name: "k", takes_value: true, help: "subset size (topk)", default: Some("100") },
+                    Opt { name: "classes", takes_value: true, help: "class count (topk)", default: Some("10") },
+                    Opt { name: "seed", takes_value: true, help: "selection seed (topk)", default: Some("0") },
+                ],
+            },
         ],
     }
 }
@@ -83,25 +158,29 @@ struct BackendChoice {
     _actor: Option<EngineActor>,
 }
 
+/// The CLI's canonical reference backend for `dataset`. Both `sage select
+/// --backend reference` and the served `sage ingest` path build from HERE —
+/// the served-equals-offline guarantee depends on them never diverging.
+fn reference_backend(dataset: BenchmarkKind) -> ReferenceModelBackend {
+    let c = dataset.num_classes();
+    ReferenceModelBackend::new(
+        sage::grad::MlpSpec::new(64, 64, c),
+        sage::grad::TrainHyper::default(),
+        64,
+        64,
+        32,
+    )
+}
+
 fn make_backend(p: &Parsed, dataset: BenchmarkKind) -> Result<BackendChoice, String> {
     let artifacts = p.get_or("artifacts", "artifacts");
     let model = p.get_or("model", "small");
     match p.get("backend").unwrap_or("xla") {
-        "reference" => {
-            let c = dataset.num_classes();
-            let spec = sage::grad::MlpSpec::new(64, 64, c);
-            Ok(BackendChoice {
-                backend: Box::new(ReferenceModelBackend::new(
-                    spec,
-                    sage::grad::TrainHyper::default(),
-                    64,
-                    64,
-                    32,
-                )),
-                shrink: None,
-                _actor: None,
-            })
-        }
+        "reference" => Ok(BackendChoice {
+            backend: Box::new(reference_backend(dataset)),
+            shrink: None,
+            _actor: None,
+        }),
         "xla" => {
             let actor = EngineActor::spawn(&artifacts)?;
             let handle = actor.handle();
@@ -295,6 +374,144 @@ fn cmd_gen_data(p: &Parsed) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_serve(p: &Parsed) -> Result<(), String> {
+    let cfg = sage::service::ServerConfig {
+        addr: p.get_or("addr", "127.0.0.1:7009"),
+        threads: p.get_usize("threads")?.unwrap_or(16).max(1),
+        registry: sage::service::RegistryConfig {
+            max_sessions: p.get_usize("max-sessions")?.unwrap_or(64).max(1),
+            max_resident_bytes: p.get_usize("max-bytes-mb")?.unwrap_or(1024) << 20,
+            ingest_queue_depth: p.get_usize("queue-depth")?.unwrap_or(8).max(1),
+            checkpoint_dir: p.get("checkpoint-dir").map(std::path::PathBuf::from),
+        },
+    };
+    let server = sage::service::Server::bind(&cfg)?;
+    println!("sage-serve listening on {}", server.local_addr());
+    server.run(std::sync::Arc::new(std::sync::atomic::AtomicBool::new(
+        false,
+    )))
+}
+
+fn cmd_ingest(p: &Parsed) -> Result<(), String> {
+    let spec = parse_cell(p)?;
+    let backend = reference_backend(spec.dataset);
+    let (train_ds, _) = sage::bench::runner::cell_datasets(&spec, backend.spec().f);
+    let shards = p.get_usize("shards")?.unwrap_or(4).max(1);
+    let shard = p.get_usize("shard")?.unwrap_or(0);
+    let ranges = sage::pipeline::shard_ranges(train_ds.len(), shards);
+    if shard >= ranges.len() {
+        return Err(format!(
+            "shard {shard} out of range ({} shards over {} examples)",
+            ranges.len(),
+            train_ds.len()
+        ));
+    }
+    let range = ranges[shard];
+    let addr = p.get_or("addr", "127.0.0.1:7009");
+    let session = p.get_or("session", "run1");
+    let params = sage::trainer::warmup_params(
+        &backend,
+        &train_ds,
+        spec.warmup_steps,
+        spec.base_lr,
+        spec.seed,
+    )?;
+    let mut client = sage::service::ServiceClient::connect(&addr)?;
+    if p.has_flag("create") {
+        client.create_session(&session, backend.ell(), backend.spec().d(), shards)?;
+        log_info!("created session '{session}' ({shards} shards)");
+    }
+    match p.get_or("phase", "sketch").as_str() {
+        "sketch" => {
+            let batches = sage::pipeline::phase1_gradient_stream(
+                &backend,
+                &train_ds,
+                &params,
+                range,
+                |g| client.ingest(&session, shard, g).map(|_| ()),
+            )?;
+            println!(
+                "ingested shard {shard} ({} examples, {batches} batches) into '{session}'",
+                range.1 - range.0
+            );
+        }
+        "score" => {
+            let frozen = client.freeze(&session)?;
+            let batches = sage::pipeline::phase2_score_stream(
+                &backend,
+                &train_ds,
+                &params,
+                &frozen.sketch,
+                range,
+                |blk| client.score(&session, shard, &blk),
+            )?;
+            println!(
+                "scored shard {shard} ({} examples, {batches} batches) against '{session}'",
+                range.1 - range.0
+            );
+        }
+        other => return Err(format!("unknown --phase '{other}' (sketch|score)")),
+    }
+    Ok(())
+}
+
+fn cmd_query(p: &Parsed) -> Result<(), String> {
+    let addr = p.get_or("addr", "127.0.0.1:7009");
+    let session = p.get_or("session", "run1");
+    let mut client = sage::service::ServiceClient::connect(&addr)?;
+    match p.get_or("op", "stats").as_str() {
+        "freeze" => {
+            let f = client.freeze(&session)?;
+            println!(
+                "frozen '{session}': {}x{} sketch, {} rows seen, {} shrinks, \
+                 shift bound {:.4}, {} resident bytes",
+                f.sketch.rows(),
+                f.sketch.cols(),
+                f.rows_seen,
+                f.shrinks,
+                f.shift_bound,
+                f.sketch_bytes
+            );
+        }
+        "topk" => {
+            let method = p.get_or("method", "sage");
+            let k = p.get_usize("k")?.unwrap_or(100);
+            let classes = p.get_usize("classes")?.unwrap_or(10);
+            let seed = p.get_usize("seed")?.unwrap_or(0) as u64;
+            let (indices, weights) = client.top_k(&session, &method, k, classes, seed)?;
+            println!("selected {} indices from '{session}':", indices.len());
+            println!("{:?}", &indices[..indices.len().min(50)]);
+            if let Some(w) = weights {
+                println!("first weights: {:?}", &w[..w.len().min(10)]);
+            }
+        }
+        "stats" => {
+            let target = if session.is_empty() {
+                None
+            } else {
+                Some(session.as_str())
+            };
+            for (name, value) in client.stats(target)? {
+                println!("{name}: {value}");
+            }
+        }
+        "checkpoint" => {
+            let path = client.checkpoint(&session)?;
+            println!("checkpointed '{session}' to {path}");
+        }
+        "close" => {
+            client.close_session(&session)?;
+            println!("closed '{session}'");
+        }
+        other => {
+            return Err(format!(
+                "unknown --op '{other}' (freeze|topk|stats|checkpoint|close)"
+            ))
+        }
+    }
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let app = app();
@@ -316,6 +533,9 @@ fn main() {
         "train" => cmd_train(&parsed),
         "info" => cmd_info(&parsed),
         "gen-data" => cmd_gen_data(&parsed),
+        "serve" => cmd_serve(&parsed),
+        "ingest" => cmd_ingest(&parsed),
+        "query" => cmd_query(&parsed),
         other => Err(format!("unhandled command {other}")),
     };
     if let Err(e) = result {

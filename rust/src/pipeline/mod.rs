@@ -16,6 +16,11 @@
 //! * [`stream_sketch`] — demand-driven: a reader thread pushes batches into
 //!   a bounded channel (backpressure) and workers pull; used by the
 //!   streaming example and the backpressure tests.
+//!
+//! The per-shard loops are exposed as [`phase1_gradient_stream`] and
+//! [`phase2_score_stream`] so the `service` subsystem drives the *same*
+//! implementation over the wire: a served session fed shard-by-shard
+//! produces byte-identical sketches and scores to the offline path.
 
 use crate::baselines::{select_weighted, SelectionInputs};
 use crate::config::Method;
@@ -87,13 +92,98 @@ pub struct SelectionOutcome {
     pub params: Vec<f32>,
 }
 
-fn shard_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+/// Contiguous `[start, end)` shard ranges covering `n` examples across
+/// `workers` shards — the unit of work for both the offline pipeline and
+/// the service's per-shard sessions. Deterministic for fixed `(n, workers)`.
+pub fn shard_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
     let w = workers.max(1).min(n.max(1));
     let per = n.div_ceil(w);
     (0..w)
         .map(|i| (i * per, ((i + 1) * per).min(n)))
         .filter(|(a, b)| a < b)
         .collect()
+}
+
+/// One block of Phase-II scoring output, borrowed from the producing loop:
+/// global indices, labels, normalized projections `ẑ [b × ℓ]`, projection
+/// norms and per-example losses for one batch.
+pub struct ScoreBlock<'a> {
+    pub indices: &'a [usize],
+    pub labels: &'a [u32],
+    pub zhat: &'a Matrix,
+    pub norms: &'a [f32],
+    pub losses: &'a [f32],
+}
+
+/// Phase-I gradient stream over one contiguous shard `[range.0, range.1)`:
+/// compute per-example gradients batch-by-batch and hand each `[b × D]`
+/// gradient block to `sink` in deterministic order. Returns the number of
+/// batches streamed.
+///
+/// This is THE Phase-I ingest loop — [`run_selection`] drives it into a
+/// shard-local [`FdSketch`], and the service client drives it into
+/// `IngestBatch` wire frames, so offline and served selection share one
+/// implementation (and therefore produce identical sketches).
+pub fn phase1_gradient_stream(
+    backend: &dyn ModelBackend,
+    ds: &Dataset,
+    params: &[f32],
+    range: (usize, usize),
+    mut sink: impl FnMut(&Matrix) -> Result<(), String>,
+) -> Result<u64, String> {
+    let idx: Vec<usize> = (range.0..range.1).collect();
+    let shard = ds.subset(&idx);
+    let b = backend.score_batch();
+    let mut batches = 0u64;
+    let hist = crate::util::metrics::global().histogram("pipeline.phase1.batch.ns");
+    for (_start, batch) in StreamBatches::new(&shard, b) {
+        let _t = crate::util::metrics::ScopedTimer::new(hist);
+        let y = batch.one_hot();
+        let (g, _losses) = backend.per_example_grads(params, &batch.features, &y)?;
+        sink(&g)?;
+        batches += 1;
+    }
+    crate::util::metrics::global()
+        .counter("pipeline.phase1.examples")
+        .add((range.1 - range.0) as u64);
+    Ok(batches)
+}
+
+/// Phase-II scoring stream over one contiguous shard against the frozen
+/// sketch `S`: fused grads+projection per batch, handing each
+/// [`ScoreBlock`] (global indices, labels, ẑ, norms, losses) to `sink` in
+/// deterministic order. Returns the number of batches streamed.
+///
+/// Shared by [`run_selection`] (sink = [`AgreementScorer::add_batch`]) and
+/// the service client (sink = `Score` wire frames).
+pub fn phase2_score_stream(
+    backend: &dyn ModelBackend,
+    ds: &Dataset,
+    params: &[f32],
+    sketch: &Matrix,
+    range: (usize, usize),
+    mut sink: impl FnMut(ScoreBlock<'_>) -> Result<(), String>,
+) -> Result<u64, String> {
+    let idx: Vec<usize> = (range.0..range.1).collect();
+    let shard = ds.subset(&idx);
+    let b = backend.score_batch();
+    let mut batches = 0u64;
+    let hist = crate::util::metrics::global().histogram("pipeline.phase2.batch.ns");
+    for (start, batch) in StreamBatches::new(&shard, b) {
+        let _t = crate::util::metrics::ScopedTimer::new(hist);
+        let y = batch.one_hot();
+        let (zhat, norms, losses) = backend.score_fused(params, sketch, &batch.features, &y)?;
+        let global: Vec<usize> = (0..batch.len()).map(|r| range.0 + start + r).collect();
+        sink(ScoreBlock {
+            indices: &global,
+            labels: &batch.labels,
+            zhat: &zhat,
+            norms: &norms,
+            losses: &losses,
+        })?;
+        batches += 1;
+    }
+    Ok(batches)
 }
 
 /// Phase I over one shard: stream batches, push per-example grads into a
@@ -111,21 +201,10 @@ fn phase1_shard(
         Some(b) => FdSketch::with_backend(ell, d, b),
         None => FdSketch::new(ell, d),
     };
-    let idx: Vec<usize> = (range.0..range.1).collect();
-    let shard = ds.subset(&idx);
-    let b = backend.score_batch();
-    let mut batches = 0u64;
-    let hist = crate::util::metrics::global().histogram("pipeline.phase1.batch.ns");
-    for (_start, batch) in StreamBatches::new(&shard, b) {
-        let _t = crate::util::metrics::ScopedTimer::new(hist);
-        let y = batch.one_hot();
-        let (g, _losses) = backend.per_example_grads(params, &batch.features, &y)?;
-        sketch.insert_batch(&g);
-        batches += 1;
-    }
-    crate::util::metrics::global()
-        .counter("pipeline.phase1.examples")
-        .add((range.1 - range.0) as u64);
+    let batches = phase1_gradient_stream(backend, ds, params, range, |g| {
+        sketch.insert_batch(g);
+        Ok(())
+    })?;
     Ok((sketch, batches))
 }
 
@@ -138,21 +217,10 @@ fn phase2_shard(
     range: (usize, usize),
 ) -> Result<(AgreementScorer, u64), String> {
     let mut scorer = AgreementScorer::new(backend.ell());
-    let idx: Vec<usize> = (range.0..range.1).collect();
-    let shard = ds.subset(&idx);
-    let b = backend.score_batch();
-    let mut batches = 0u64;
-    let hist = crate::util::metrics::global().histogram("pipeline.phase2.batch.ns");
-    for (start, batch) in StreamBatches::new(&shard, b) {
-        let _t = crate::util::metrics::ScopedTimer::new(hist);
-        let y = batch.one_hot();
-        let (zhat, norms, losses) =
-            backend.score_fused(params, sketch, &batch.features, &y)?;
-        let global: Vec<usize> = (0..batch.len()).map(|r| range.0 + start + r).collect();
-        let labels: Vec<u32> = batch.labels.clone();
-        scorer.add_batch(&global, &labels, &zhat, &norms, &losses);
-        batches += 1;
-    }
+    let batches = phase2_score_stream(backend, ds, params, sketch, range, |blk| {
+        scorer.add_batch(blk.indices, blk.labels, blk.zhat, blk.norms, blk.losses);
+        Ok(())
+    })?;
     Ok((scorer, batches))
 }
 

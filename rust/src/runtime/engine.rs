@@ -4,6 +4,9 @@
 //! these per runtime thread and serializes access.
 
 use super::manifest::{Manifest, ModelCfg};
+// Offline builds use the API-compatible stub; swap to the real PJRT
+// bindings by replacing this line with an `xla` crate dependency.
+use super::xla_stub as xla;
 use crate::log_debug;
 use std::collections::HashMap;
 use std::path::PathBuf;

@@ -13,6 +13,7 @@ pub mod actor;
 pub mod backend;
 pub mod engine;
 pub mod manifest;
+pub(crate) mod xla_stub;
 
 pub use actor::{EngineActor, EngineHandle, OwnedTensor};
 pub use backend::{ModelBackend, ReferenceModelBackend, XlaModelBackend, XlaShrinkBackend};

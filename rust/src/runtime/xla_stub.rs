@@ -1,0 +1,102 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! This container has no PJRT shared library or `xla` crate, so the engine
+//! compiles against this API-compatible stub: the client constructs (the
+//! manifest/validation layer stays fully testable — see
+//! `tests/integration_failures.rs`), but compiling an artifact reports the
+//! runtime as unavailable. Linking the real bindings is a one-line swap in
+//! `runtime/engine.rs` (`use super::xla_stub as xla;` → `use xla;`); every
+//! call site matches the real crate's signatures.
+
+// The stub mirrors the real crate's API surface; not every item is
+// exercised by every build configuration.
+#![allow(dead_code)]
+
+/// Error type mirroring the real crate's (engine formats it with `{e:?}`).
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+fn unavailable() -> Error {
+    Error(
+        "XLA/PJRT runtime unavailable in this build (offline stub); \
+         link the real `xla` crate to execute AOT artifacts"
+            .to_string(),
+    )
+}
+
+/// Stub device handle (only used as `Option<&PjRtDevice>` = `None`).
+pub struct PjRtDevice;
+
+/// Stub PJRT CPU client. Construction succeeds so manifest loading and
+/// shape validation work; anything touching device execution errors.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub HLO module proto: loading always reports the stub (with the real
+/// crate this parses the AOT text artifact).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+}

@@ -1,0 +1,252 @@
+//! Session persistence — the service's durable form of a sketch session,
+//! using the same framing discipline as `trainer::checkpoint`: versioned
+//! magic header, little-endian body, FNV-64 trailer, atomic tmp+rename
+//! writes. A torn write never recovers silently.
+//!
+//! Layout:
+//!
+//! ```text
+//! magic    8B   "SAGESES1"
+//! body          PayloadWriter fields:
+//!   version u32
+//!   name    str
+//!   ell     u32
+//!   d       u32
+//!   shards  u32
+//!   frozen  u8
+//!   if frozen == 0:  shards × SketchState
+//!   if frozen == 1:  sketch matrix + shift_bound f64 + shrinks u64
+//!                    + rows_seen u64 + sketch_bytes u64
+//! fnv64    8B   checksum of magic + body
+//! ```
+
+use super::protocol::{fnv64, FrozenSketch, PayloadReader, PayloadWriter};
+use crate::sketch::SketchState;
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SAGESES1";
+const VERSION: u32 = 1;
+
+/// Durable snapshot of one session (either still ingesting — per-shard
+/// sketch states — or frozen — the merged sketch and its certificate).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionCheckpoint {
+    pub name: String,
+    pub ell: u32,
+    pub d: u32,
+    pub shards: u32,
+    /// Per-shard sketch states; empty when `frozen` is set.
+    pub shard_states: Vec<SketchState>,
+    pub frozen: Option<FrozenSketch>,
+}
+
+impl SessionCheckpoint {
+    fn body_bytes(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        w.put_u32(VERSION);
+        w.put_str(&self.name);
+        w.put_u32(self.ell);
+        w.put_u32(self.d);
+        w.put_u32(self.shards);
+        match &self.frozen {
+            None => {
+                w.put_u8(0);
+                for st in &self.shard_states {
+                    w.put_u32(st.ell);
+                    w.put_u32(st.d);
+                    w.put_u32(st.next_row);
+                    w.put_u64(st.shrink_count);
+                    w.put_u64(st.rows_seen);
+                    w.put_f64(st.delta_sum);
+                    w.put_f64(st.energy_seen);
+                    w.put_f32_slice(&st.buf);
+                }
+            }
+            Some(f) => {
+                w.put_u8(1);
+                w.put_matrix(&f.sketch);
+                w.put_f64(f.shift_bound);
+                w.put_u64(f.shrinks);
+                w.put_u64(f.rows_seen);
+                w.put_u64(f.sketch_bytes);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Write atomically (tmp file + rename), creating parent dirs.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("{}: {e}", parent.display()))?;
+            }
+        }
+        let body = self.body_bytes();
+        let mut out = Vec::with_capacity(8 + body.len() + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&body);
+        let sum = fnv64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp).map_err(|e| format!("{}: {e}", tmp.display()))?,
+            );
+            f.write_all(&out).map_err(|e| e.to_string())?;
+            f.flush().map_err(|e| e.to_string())?;
+        }
+        std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<SessionCheckpoint, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        if bytes.len() < 8 + 8 {
+            return Err("session checkpoint truncated".into());
+        }
+        let (body_with_magic, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if fnv64(body_with_magic) != stored {
+            return Err("session checkpoint checksum mismatch (torn write?)".into());
+        }
+        if &body_with_magic[..8] != MAGIC {
+            return Err("bad session checkpoint magic".into());
+        }
+        let mut r = PayloadReader::new(&body_with_magic[8..]);
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(format!("session checkpoint version {version} != {VERSION}"));
+        }
+        let name = r.str()?;
+        let ell = r.u32()?;
+        let d = r.u32()?;
+        let shards = r.u32()?;
+        let (shard_states, frozen) = match r.u8()? {
+            0 => {
+                let mut states = Vec::with_capacity((shards as usize).min(1024));
+                for _ in 0..shards {
+                    states.push(SketchState {
+                        ell: r.u32()?,
+                        d: r.u32()?,
+                        next_row: r.u32()?,
+                        shrink_count: r.u64()?,
+                        rows_seen: r.u64()?,
+                        delta_sum: r.f64()?,
+                        energy_seen: r.f64()?,
+                        buf: r.f32_slice()?,
+                    });
+                }
+                (states, None)
+            }
+            1 => {
+                let frozen = FrozenSketch {
+                    sketch: r.matrix()?,
+                    shift_bound: r.f64()?,
+                    shrinks: r.u64()?,
+                    rows_seen: r.u64()?,
+                    sketch_bytes: r.u64()?,
+                };
+                (Vec::new(), Some(frozen))
+            }
+            other => return Err(format!("session checkpoint: bad frozen tag {other}")),
+        };
+        r.finish()?;
+        Ok(SessionCheckpoint {
+            name,
+            ell,
+            d,
+            shards,
+            shard_states,
+            frozen,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::FdSketch;
+    use crate::tensor::Matrix;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("sage_sess_ckpt_{name}_{}", std::process::id()))
+    }
+
+    fn active_sample() -> SessionCheckpoint {
+        let mut s0 = FdSketch::new(2, 4);
+        let mut s1 = FdSketch::new(2, 4);
+        s0.insert_batch(&Matrix::from_fn(5, 4, |r, c| (r * 4 + c) as f32 * 0.1));
+        s1.insert_batch(&Matrix::from_fn(3, 4, |r, c| (r + c) as f32 * -0.2));
+        SessionCheckpoint {
+            name: "act".into(),
+            ell: 2,
+            d: 4,
+            shards: 2,
+            shard_states: vec![s0.export_state(), s1.export_state()],
+            frozen: None,
+        }
+    }
+
+    fn frozen_sample() -> SessionCheckpoint {
+        SessionCheckpoint {
+            name: "frz".into(),
+            ell: 2,
+            d: 4,
+            shards: 2,
+            shard_states: Vec::new(),
+            frozen: Some(FrozenSketch {
+                sketch: Matrix::from_fn(2, 4, |r, c| (r * 4 + c) as f32),
+                shift_bound: 0.5,
+                shrinks: 2,
+                rows_seen: 8,
+                sketch_bytes: 64,
+            }),
+        }
+    }
+
+    #[test]
+    fn active_round_trip() {
+        let path = tmp("act");
+        let ck = active_sample();
+        ck.save(&path).unwrap();
+        let back = SessionCheckpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn frozen_round_trip() {
+        let path = tmp("frz");
+        let ck = frozen_sample();
+        ck.save(&path).unwrap();
+        let back = SessionCheckpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let path = tmp("corrupt");
+        active_sample().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x55;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(SessionCheckpoint::load(&path)
+            .unwrap_err()
+            .contains("checksum"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let path = tmp("trunc");
+        frozen_sample().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 11]).unwrap();
+        assert!(SessionCheckpoint::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,202 @@
+//! Blocking client for `sage-serve` — one TCP connection, strict
+//! request/response alternation. Used by the `sage ingest` / `sage query`
+//! subcommands, `examples/service_roundtrip.rs`, and the integration tests.
+//!
+//! Typical producer flow (one client per shard for deterministic results):
+//!
+//! ```text
+//! create_session("run1", ell, d, shards)      (once)
+//! ingest("run1", shard, grads) ...            (Phase I, per batch)
+//! freeze("run1") -> S                         (idempotent; fetches S)
+//! score("run1", shard, block) ...             (Phase II, per batch)
+//! top_k("run1", "sage", k, classes, seed)     (online selection query)
+//! ```
+
+use super::protocol::{
+    encode_ingest_batch, encode_score, op, read_frame, write_frame, FrozenSketch, Request,
+    Response,
+};
+use crate::pipeline::ScoreBlock;
+use crate::sketch::FdSketch;
+use crate::tensor::Matrix;
+use std::net::TcpStream;
+
+/// Blocking `sage-serve` client (not thread-safe; one per connection).
+pub struct ServiceClient {
+    stream: TcpStream,
+}
+
+impl ServiceClient {
+    pub fn connect(addr: &str) -> Result<ServiceClient, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(ServiceClient { stream })
+    }
+
+    /// Send one request and wait for its response frame.
+    pub fn request(&mut self, request: &Request) -> Result<Response, String> {
+        let payload = request.encode();
+        self.roundtrip(request.opcode(), &payload)
+    }
+
+    /// Write one pre-encoded request payload and read its response.
+    fn roundtrip(&mut self, opcode: u8, payload: &[u8]) -> Result<Response, String> {
+        write_frame(&mut self.stream, opcode, 0, payload)?;
+        let frame = read_frame(&mut self.stream)?
+            .ok_or_else(|| "server closed the connection".to_string())?;
+        let response = Response::decode(&frame.payload)?;
+        // Error frames may carry opcode 0 (e.g. pool rejection before the
+        // request was read) — surface the message rather than the mismatch.
+        if frame.opcode != opcode && !matches!(response, Response::Error { .. }) {
+            return Err(format!(
+                "response opcode {} for request {opcode}",
+                frame.opcode
+            ));
+        }
+        Ok(response)
+    }
+
+    /// Like [`ServiceClient::request`], but application errors become `Err`.
+    fn expect(&mut self, request: &Request) -> Result<Response, String> {
+        match self.request(request)? {
+            Response::Error { message } => Err(message),
+            resp => Ok(resp),
+        }
+    }
+
+    /// Raw-payload variant of [`ServiceClient::expect`] for the hot ops
+    /// (payload already serialized from borrowed data — no matrix clones).
+    fn expect_raw(&mut self, opcode: u8, payload: &[u8]) -> Result<Response, String> {
+        match self.roundtrip(opcode, payload)? {
+            Response::Error { message } => Err(message),
+            resp => Ok(resp),
+        }
+    }
+
+    pub fn create_session(
+        &mut self,
+        name: &str,
+        ell: usize,
+        d: usize,
+        shards: usize,
+    ) -> Result<(), String> {
+        self.expect(&Request::CreateSession {
+            name: name.to_string(),
+            ell: ell as u32,
+            d: d as u32,
+            shards: shards as u32,
+        })
+        .map(|_| ())
+    }
+
+    /// Stream one `[b × d]` block of gradient rows into a shard slot.
+    /// Returns total rows the session has acked.
+    pub fn ingest(&mut self, session: &str, shard: usize, rows: &Matrix) -> Result<u64, String> {
+        let payload = encode_ingest_batch(session, shard as u32, rows);
+        match self.expect_raw(op::INGEST_BATCH, &payload)? {
+            Response::Ingested { rows_seen } => Ok(rows_seen),
+            other => Err(format!("unexpected ingest response {other:?}")),
+        }
+    }
+
+    /// Merge a locally-built FD sketch into a shard slot.
+    pub fn merge_sketch(
+        &mut self,
+        session: &str,
+        shard: usize,
+        sketch: &FdSketch,
+    ) -> Result<(), String> {
+        self.expect(&Request::MergeSketch {
+            session: session.to_string(),
+            shard: shard as u32,
+            state: sketch.export_state(),
+        })
+        .map(|_| ())
+    }
+
+    /// Freeze the session (idempotent) and fetch the frozen sketch S.
+    pub fn freeze(&mut self, session: &str) -> Result<FrozenSketch, String> {
+        match self.expect(&Request::Freeze {
+            session: session.to_string(),
+        })? {
+            Response::Frozen(frozen) => Ok(frozen),
+            other => Err(format!("unexpected freeze response {other:?}")),
+        }
+    }
+
+    /// Stream one Phase-II scoring block (borrowed straight from
+    /// `pipeline::phase2_score_stream` — only the small index vector is
+    /// converted; the ẑ matrix is serialized without cloning).
+    pub fn score(
+        &mut self,
+        session: &str,
+        shard: usize,
+        block: &ScoreBlock<'_>,
+    ) -> Result<(), String> {
+        let indices: Vec<u64> = block.indices.iter().map(|&i| i as u64).collect();
+        let payload = encode_score(
+            session,
+            shard as u32,
+            &indices,
+            block.labels,
+            block.norms,
+            block.losses,
+            block.zhat,
+        );
+        self.expect_raw(op::SCORE, &payload).map(|_| ())
+    }
+
+    /// Online selection query against the session's finalized scores.
+    pub fn top_k(
+        &mut self,
+        session: &str,
+        method: &str,
+        k: usize,
+        num_classes: usize,
+        seed: u64,
+    ) -> Result<(Vec<usize>, Option<Vec<f32>>), String> {
+        match self.expect(&Request::TopK {
+            session: session.to_string(),
+            method: method.to_string(),
+            k: k as u64,
+            num_classes: num_classes as u32,
+            seed,
+        })? {
+            Response::Selected { indices, weights } => Ok((
+                indices.iter().map(|&i| i as usize).collect(),
+                if weights.is_empty() {
+                    None
+                } else {
+                    Some(weights)
+                },
+            )),
+            other => Err(format!("unexpected topk response {other:?}")),
+        }
+    }
+
+    pub fn checkpoint(&mut self, session: &str) -> Result<String, String> {
+        match self.expect(&Request::Checkpoint {
+            session: session.to_string(),
+        })? {
+            Response::Checkpointed { path } => Ok(path),
+            other => Err(format!("unexpected checkpoint response {other:?}")),
+        }
+    }
+
+    /// Per-session counters; `None` = server-wide stats.
+    pub fn stats(&mut self, session: Option<&str>) -> Result<Vec<(String, u64)>, String> {
+        match self.expect(&Request::Stats {
+            session: session.unwrap_or("").to_string(),
+        })? {
+            Response::Stats { pairs } => Ok(pairs),
+            other => Err(format!("unexpected stats response {other:?}")),
+        }
+    }
+
+    pub fn close_session(&mut self, session: &str) -> Result<(), String> {
+        self.expect(&Request::CloseSession {
+            session: session.to_string(),
+        })
+        .map(|_| ())
+    }
+}

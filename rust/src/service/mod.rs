@@ -1,0 +1,39 @@
+//! `sage-serve` — the multi-tenant streaming sketch service.
+//!
+//! The offline pipeline runs SAGE as a batch, single-process, two-pass job;
+//! this subsystem promotes the FD sketch from a local variable to a served,
+//! sessioned resource: external producers stream gradients in over a
+//! length-prefixed binary protocol, and consumers run online selection
+//! queries (Freeze / Score / TopK) against the evolving state.
+//!
+//! Layers:
+//! * [`protocol`] — versioned, checksummed wire frames and the typed op
+//!   surface (CreateSession / IngestBatch / MergeSketch / Freeze / Score /
+//!   TopK / Checkpoint / Stats / CloseSession).
+//! * [`registry`] — concurrent session registry: per-session bounded-channel
+//!   ingest with backpressure, shard-ordered deterministic merges, admission
+//!   control (max sessions, max resident ℓ×D bytes).
+//! * [`checkpoint`] — session persistence/recovery (FNV-checksummed,
+//!   atomic-rename framing in the style of `trainer::checkpoint`).
+//! * [`server`] — TCP accept loop, thread-per-connection on
+//!   `util::threadpool`, graceful rejection when the pool is gone.
+//! * [`client`] — blocking client used by the CLI, the example, and tests.
+//!
+//! Exactness contract: a session fed shard-by-shard through
+//! `pipeline::phase1_gradient_stream` / `phase2_score_stream` (one producer
+//! per shard, shards assigned by `pipeline::shard_ranges`) yields the SAME
+//! selected indices as `pipeline::run_selection` for the same
+//! `(seed, workers)` configuration — verified end-to-end by
+//! `tests/integration_service.rs`.
+
+pub mod checkpoint;
+pub mod client;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use checkpoint::SessionCheckpoint;
+pub use client::ServiceClient;
+pub use protocol::{FrozenSketch, Request, Response, ScoreBatch};
+pub use registry::{RegistryConfig, Session, SessionRegistry};
+pub use server::{Server, ServerConfig, ServerHandle};

@@ -1,0 +1,938 @@
+//! `sage-serve` wire protocol — length-prefixed binary frames with a
+//! versioned header and an FNV-64 integrity checksum (same style as
+//! `trainer::checkpoint`), so a torn or corrupted frame is always detected
+//! and never half-applied.
+//!
+//! Frame layout (little-endian):
+//!
+//! ```text
+//! magic    4B   "SGW1"
+//! version  u16
+//! opcode   u8    (response frames echo the request opcode)
+//! flags    u8    (reserved, 0)
+//! status   u16   (0 = ok; requests always 0)
+//! len      u32   payload byte length
+//! payload  len bytes
+//! fnv64    u64   checksum of header + payload
+//! ```
+//!
+//! Payloads are flat field sequences written by [`PayloadWriter`] and read
+//! back by [`PayloadReader`]; strings are `u32` length + UTF-8, slices are
+//! `u32`/`u64` element count + raw little-endian values. [`Request`] and
+//! [`Response`] give the typed op surface: CreateSession / IngestBatch /
+//! MergeSketch / Freeze / Score / TopK / Checkpoint / Stats / CloseSession.
+
+use crate::sketch::SketchState;
+use crate::tensor::Matrix;
+use std::io::{Read, Write};
+
+pub const MAGIC: &[u8; 4] = b"SGW1";
+pub const VERSION: u16 = 1;
+/// Hard cap on a single frame payload (256 MiB) — protects the server from
+/// unbounded allocation on a corrupt or hostile length field.
+pub const MAX_PAYLOAD: usize = 256 << 20;
+const HEADER_LEN: usize = 14;
+
+/// FNV-1a 64-bit, shared by framing and session checkpoints.
+pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// One decoded frame (request or response — direction is contextual).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub opcode: u8,
+    pub status: u16,
+    pub payload: Vec<u8>,
+}
+
+/// Serialize a frame into one contiguous buffer (header + payload + fnv64).
+pub fn encode_frame(opcode: u8, status: u16, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(opcode);
+    out.push(0); // flags
+    out.extend_from_slice(&status.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let sum = fnv64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Write one frame. Rejects payloads over [`MAX_PAYLOAD`] locally with a
+/// descriptive error — the receiver would tear the connection on them
+/// anyway, and above u32 range the length field would silently truncate.
+pub fn write_frame(
+    w: &mut impl Write,
+    opcode: u8,
+    status: u16,
+    payload: &[u8],
+) -> Result<(), String> {
+    if payload.len() > MAX_PAYLOAD {
+        return Err(format!(
+            "frame payload {} bytes exceeds the {MAX_PAYLOAD}-byte wire cap; \
+             split the batch into smaller blocks",
+            payload.len()
+        ));
+    }
+    let buf = encode_frame(opcode, status, payload);
+    w.write_all(&buf).map_err(|e| format!("frame write: {e}"))?;
+    w.flush().map_err(|e| format!("frame flush: {e}"))
+}
+
+/// Outcome of one frame-read attempt on a connection.
+pub enum ReadEvent {
+    Frame(Frame),
+    /// Clean EOF before any header byte (peer closed between requests).
+    Eof,
+    /// The socket read timed out with NO frame in progress — the server's
+    /// shutdown poll point. Only occurs when a read timeout is set.
+    Idle,
+}
+
+/// Read one frame. `Ok(None)` on clean EOF before any header byte; `Err`
+/// on anything torn (including an idle timeout on a timeout-less reader).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, String> {
+    match read_frame_event(r)? {
+        ReadEvent::Frame(f) => Ok(Some(f)),
+        ReadEvent::Eof => Ok(None),
+        ReadEvent::Idle => Err("frame: idle timeout".into()),
+    }
+}
+
+/// Read one frame, surfacing idle timeouts (sockets with a read timeout)
+/// as [`ReadEvent::Idle`] so callers can poll a shutdown flag. Once a
+/// frame's first byte arrives, timeouts mid-frame keep waiting instead of
+/// tearing the stream.
+pub fn read_frame_event(r: &mut impl Read) -> Result<ReadEvent, String> {
+    let mut header = [0u8; HEADER_LEN];
+    match fill(r, &mut header, true)? {
+        Fill::Full => {}
+        Fill::EofAtStart => return Ok(ReadEvent::Eof),
+        Fill::IdleAtStart => return Ok(ReadEvent::Idle),
+    }
+    if &header[0..4] != MAGIC {
+        return Err("frame: bad magic".into());
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(format!("frame: version {version} != {VERSION}"));
+    }
+    let opcode = header[6];
+    let status = u16::from_le_bytes([header[8], header[9]]);
+    let len = u32::from_le_bytes([header[10], header[11], header[12], header[13]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(format!("frame: payload {len} exceeds cap {MAX_PAYLOAD}"));
+    }
+    let mut payload = vec![0u8; len];
+    if !matches!(fill(r, &mut payload, false)?, Fill::Full) {
+        return Err("frame: truncated payload".into());
+    }
+    let mut sum_bytes = [0u8; 8];
+    if !matches!(fill(r, &mut sum_bytes, false)?, Fill::Full) {
+        return Err("frame: truncated checksum".into());
+    }
+    let stored = u64::from_le_bytes(sum_bytes);
+    let mut check = Vec::with_capacity(HEADER_LEN + len);
+    check.extend_from_slice(&header);
+    check.extend_from_slice(&payload);
+    if fnv64(&check) != stored {
+        return Err("frame: checksum mismatch (corrupt frame)".into());
+    }
+    Ok(ReadEvent::Frame(Frame {
+        opcode,
+        status,
+        payload,
+    }))
+}
+
+enum Fill {
+    Full,
+    EofAtStart,
+    IdleAtStart,
+}
+
+/// Consecutive mid-frame read timeouts tolerated before the stream is
+/// declared stalled (with a 200 ms socket timeout ≈ 60 s of silence).
+const MAX_MIDFRAME_TIMEOUTS: u32 = 300;
+
+/// Fill `buf` completely. EOF or a read timeout before the first byte are
+/// reported to the caller; EOF mid-buffer is a torn frame, and a bounded
+/// number of mid-buffer timeouts keep waiting (a started frame is finished
+/// unless the peer stalls outright).
+fn fill(r: &mut impl Read, buf: &mut [u8], at_frame_start: bool) -> Result<Fill, String> {
+    let mut filled = 0usize;
+    let mut timeouts = 0u32;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && at_frame_start {
+                    return Ok(Fill::EofAtStart);
+                }
+                return Err("frame: truncated (peer closed mid-frame)".into());
+            }
+            Ok(n) => {
+                filled += n;
+                timeouts = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if filled == 0 && at_frame_start {
+                    return Ok(Fill::IdleAtStart);
+                }
+                timeouts += 1;
+                if timeouts > MAX_MIDFRAME_TIMEOUTS {
+                    return Err("frame: peer stalled mid-frame".into());
+                }
+            }
+            Err(e) => return Err(format!("frame read: {e}")),
+        }
+    }
+    Ok(Fill::Full)
+}
+
+// ---------------------------------------------------------------------------
+// Payload encoding helpers
+// ---------------------------------------------------------------------------
+
+/// Flat little-endian payload builder.
+#[derive(Default)]
+pub struct PayloadWriter {
+    buf: Vec<u8>,
+}
+
+impl PayloadWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_f32_slice(&mut self, xs: &[f32]) {
+        self.put_u64(xs.len() as u64);
+        for &v in xs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_u32_slice(&mut self, xs: &[u32]) {
+        self.put_u64(xs.len() as u64);
+        for &v in xs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_u64_slice(&mut self, xs: &[u64]) {
+        self.put_u64(xs.len() as u64);
+        for &v in xs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_matrix(&mut self, m: &Matrix) {
+        self.put_u32(m.rows() as u32);
+        self.put_u32(m.cols() as u32);
+        for &v in m.as_slice() {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Flat little-endian payload parser with strict bounds checking.
+pub struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "payload: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("payload: bad utf8: {e}"))
+    }
+
+    fn slice_len(&mut self) -> Result<usize, String> {
+        let n = self.u64()? as usize;
+        // Each element is ≥ 4 bytes; reject counts the buffer cannot hold.
+        if n > self.buf.len() / 4 + 1 {
+            return Err(format!("payload: implausible slice length {n}"));
+        }
+        Ok(n)
+    }
+
+    pub fn f32_slice(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.slice_len()?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn u32_slice(&mut self) -> Result<Vec<u32>, String> {
+        let n = self.slice_len()?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn u64_slice(&mut self) -> Result<Vec<u64>, String> {
+        let n = self.slice_len()?;
+        let bytes = self.take(n * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn matrix(&mut self) -> Result<Matrix, String> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let count = rows
+            .checked_mul(cols)
+            .filter(|&c| c <= MAX_PAYLOAD / 4)
+            .ok_or_else(|| "payload: matrix dims overflow".to_string())?;
+        let bytes = self.take(count * 4)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    /// Assert the payload is fully consumed (catches layout drift).
+    pub fn finish(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "payload: {} trailing bytes",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ops
+// ---------------------------------------------------------------------------
+
+/// Request opcodes.
+pub mod op {
+    pub const CREATE_SESSION: u8 = 1;
+    pub const INGEST_BATCH: u8 = 2;
+    pub const MERGE_SKETCH: u8 = 3;
+    pub const FREEZE: u8 = 4;
+    pub const SCORE: u8 = 5;
+    pub const TOP_K: u8 = 6;
+    pub const CHECKPOINT: u8 = 7;
+    pub const STATS: u8 = 8;
+    pub const CLOSE_SESSION: u8 = 9;
+}
+
+/// One Phase-II scoring batch on the wire (mirrors
+/// `AgreementScorer::add_batch` / `pipeline::ScoreBlock`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoreBatch {
+    pub indices: Vec<u64>,
+    pub labels: Vec<u32>,
+    pub norms: Vec<f32>,
+    pub losses: Vec<f32>,
+    /// Normalized projections `[b × ℓ]`, row r ↔ indices[r].
+    pub zhat: Matrix,
+}
+
+/// A decoded client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Register a session of `shards` independent shard slots, each holding
+    /// an `ℓ × d` FD sketch (subject to the registry's admission control).
+    CreateSession {
+        name: String,
+        ell: u32,
+        d: u32,
+        shards: u32,
+    },
+    /// Stream raw gradient rows `[b × d]` into one shard slot.
+    IngestBatch {
+        session: String,
+        shard: u32,
+        rows: Matrix,
+    },
+    /// Merge a client-side FD sketch into one shard slot (FD mergeability).
+    MergeSketch {
+        session: String,
+        shard: u32,
+        state: SketchState,
+    },
+    /// Drain ingest, merge shard sketches in shard order, return frozen S.
+    /// Idempotent: later calls return the cached frozen sketch.
+    Freeze { session: String },
+    /// Stream Phase-II scoring entries for one shard (requires Freeze).
+    Score {
+        session: String,
+        shard: u32,
+        batch: ScoreBatch,
+    },
+    /// Finalize scores (first call) and run a selection rule online.
+    TopK {
+        session: String,
+        method: String,
+        k: u64,
+        num_classes: u32,
+        seed: u64,
+    },
+    /// Persist the session to the server's checkpoint directory.
+    Checkpoint { session: String },
+    /// Per-session counters (empty session name = server-wide stats).
+    Stats { session: String },
+    /// Tear the session down and release its admission budget.
+    CloseSession { session: String },
+}
+
+/// Borrow-encoding fast path for the hot Phase-I op: serialize an
+/// IngestBatch payload straight from a borrowed matrix. `Request::encode`
+/// delegates here so the wire layout has exactly one definition.
+pub fn encode_ingest_batch(session: &str, shard: u32, rows: &Matrix) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_str(session);
+    w.put_u32(shard);
+    w.put_matrix(rows);
+    w.into_bytes()
+}
+
+/// Borrow-encoding fast path for the hot Phase-II op (see
+/// [`encode_ingest_batch`]).
+pub fn encode_score(
+    session: &str,
+    shard: u32,
+    indices: &[u64],
+    labels: &[u32],
+    norms: &[f32],
+    losses: &[f32],
+    zhat: &Matrix,
+) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_str(session);
+    w.put_u32(shard);
+    w.put_u64_slice(indices);
+    w.put_u32_slice(labels);
+    w.put_f32_slice(norms);
+    w.put_f32_slice(losses);
+    w.put_matrix(zhat);
+    w.into_bytes()
+}
+
+impl Request {
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Request::CreateSession { .. } => op::CREATE_SESSION,
+            Request::IngestBatch { .. } => op::INGEST_BATCH,
+            Request::MergeSketch { .. } => op::MERGE_SKETCH,
+            Request::Freeze { .. } => op::FREEZE,
+            Request::Score { .. } => op::SCORE,
+            Request::TopK { .. } => op::TOP_K,
+            Request::Checkpoint { .. } => op::CHECKPOINT,
+            Request::Stats { .. } => op::STATS,
+            Request::CloseSession { .. } => op::CLOSE_SESSION,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        match self {
+            Request::CreateSession {
+                name,
+                ell,
+                d,
+                shards,
+            } => {
+                w.put_str(name);
+                w.put_u32(*ell);
+                w.put_u32(*d);
+                w.put_u32(*shards);
+            }
+            Request::IngestBatch {
+                session,
+                shard,
+                rows,
+            } => return encode_ingest_batch(session, *shard, rows),
+            Request::MergeSketch {
+                session,
+                shard,
+                state,
+            } => {
+                w.put_str(session);
+                w.put_u32(*shard);
+                w.put_u32(state.ell);
+                w.put_u32(state.d);
+                w.put_u32(state.next_row);
+                w.put_u64(state.shrink_count);
+                w.put_u64(state.rows_seen);
+                w.put_f64(state.delta_sum);
+                w.put_f64(state.energy_seen);
+                w.put_f32_slice(&state.buf);
+            }
+            Request::Freeze { session } => w.put_str(session),
+            Request::Score {
+                session,
+                shard,
+                batch,
+            } => {
+                return encode_score(
+                    session,
+                    *shard,
+                    &batch.indices,
+                    &batch.labels,
+                    &batch.norms,
+                    &batch.losses,
+                    &batch.zhat,
+                )
+            }
+            Request::TopK {
+                session,
+                method,
+                k,
+                num_classes,
+                seed,
+            } => {
+                w.put_str(session);
+                w.put_str(method);
+                w.put_u64(*k);
+                w.put_u32(*num_classes);
+                w.put_u64(*seed);
+            }
+            Request::Checkpoint { session } => w.put_str(session),
+            Request::Stats { session } => w.put_str(session),
+            Request::CloseSession { session } => w.put_str(session),
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(opcode: u8, payload: &[u8]) -> Result<Request, String> {
+        let mut r = PayloadReader::new(payload);
+        let req = match opcode {
+            op::CREATE_SESSION => Request::CreateSession {
+                name: r.str()?,
+                ell: r.u32()?,
+                d: r.u32()?,
+                shards: r.u32()?,
+            },
+            op::INGEST_BATCH => Request::IngestBatch {
+                session: r.str()?,
+                shard: r.u32()?,
+                rows: r.matrix()?,
+            },
+            op::MERGE_SKETCH => {
+                let session = r.str()?;
+                let shard = r.u32()?;
+                let state = SketchState {
+                    ell: r.u32()?,
+                    d: r.u32()?,
+                    next_row: r.u32()?,
+                    shrink_count: r.u64()?,
+                    rows_seen: r.u64()?,
+                    delta_sum: r.f64()?,
+                    energy_seen: r.f64()?,
+                    buf: r.f32_slice()?,
+                };
+                Request::MergeSketch {
+                    session,
+                    shard,
+                    state,
+                }
+            }
+            op::FREEZE => Request::Freeze { session: r.str()? },
+            op::SCORE => Request::Score {
+                session: r.str()?,
+                shard: r.u32()?,
+                batch: ScoreBatch {
+                    indices: r.u64_slice()?,
+                    labels: r.u32_slice()?,
+                    norms: r.f32_slice()?,
+                    losses: r.f32_slice()?,
+                    zhat: r.matrix()?,
+                },
+            },
+            op::TOP_K => Request::TopK {
+                session: r.str()?,
+                method: r.str()?,
+                k: r.u64()?,
+                num_classes: r.u32()?,
+                seed: r.u64()?,
+            },
+            op::CHECKPOINT => Request::Checkpoint { session: r.str()? },
+            op::STATS => Request::Stats { session: r.str()? },
+            op::CLOSE_SESSION => Request::CloseSession { session: r.str()? },
+            other => return Err(format!("unknown opcode {other}")),
+        };
+        r.finish()?;
+        Ok(req)
+    }
+}
+
+/// Frozen-sketch payload returned by Freeze.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrozenSketch {
+    /// The frozen `ℓ × d` sketch S.
+    pub sketch: Matrix,
+    /// Online covariance-error certificate Σδ.
+    pub shift_bound: f64,
+    pub shrinks: u64,
+    pub rows_seen: u64,
+    /// O(ℓD) resident bytes of the session's merge buffer.
+    pub sketch_bytes: u64,
+}
+
+/// A decoded server response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Ok,
+    Error { message: String },
+    Ingested { rows_seen: u64 },
+    Frozen(FrozenSketch),
+    Selected { indices: Vec<u64>, weights: Vec<f32> },
+    Stats { pairs: Vec<(String, u64)> },
+    Checkpointed { path: String },
+}
+
+const RESP_OK: u8 = 0;
+const RESP_ERROR: u8 = 1;
+const RESP_INGESTED: u8 = 2;
+const RESP_FROZEN: u8 = 3;
+const RESP_SELECTED: u8 = 4;
+const RESP_STATS: u8 = 5;
+const RESP_CHECKPOINTED: u8 = 6;
+
+impl Response {
+    /// Frame status word: 0 ok, 1 application error.
+    pub fn status(&self) -> u16 {
+        match self {
+            Response::Error { .. } => 1,
+            _ => 0,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        match self {
+            Response::Ok => w.put_u8(RESP_OK),
+            Response::Error { message } => {
+                w.put_u8(RESP_ERROR);
+                w.put_str(message);
+            }
+            Response::Ingested { rows_seen } => {
+                w.put_u8(RESP_INGESTED);
+                w.put_u64(*rows_seen);
+            }
+            Response::Frozen(f) => {
+                w.put_u8(RESP_FROZEN);
+                w.put_matrix(&f.sketch);
+                w.put_f64(f.shift_bound);
+                w.put_u64(f.shrinks);
+                w.put_u64(f.rows_seen);
+                w.put_u64(f.sketch_bytes);
+            }
+            Response::Selected { indices, weights } => {
+                w.put_u8(RESP_SELECTED);
+                w.put_u64_slice(indices);
+                w.put_f32_slice(weights);
+            }
+            Response::Stats { pairs } => {
+                w.put_u8(RESP_STATS);
+                w.put_u32(pairs.len() as u32);
+                for (name, v) in pairs {
+                    w.put_str(name);
+                    w.put_u64(*v);
+                }
+            }
+            Response::Checkpointed { path } => {
+                w.put_u8(RESP_CHECKPOINTED);
+                w.put_str(path);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Response, String> {
+        let mut r = PayloadReader::new(payload);
+        let resp = match r.u8()? {
+            RESP_OK => Response::Ok,
+            RESP_ERROR => Response::Error { message: r.str()? },
+            RESP_INGESTED => Response::Ingested {
+                rows_seen: r.u64()?,
+            },
+            RESP_FROZEN => Response::Frozen(FrozenSketch {
+                sketch: r.matrix()?,
+                shift_bound: r.f64()?,
+                shrinks: r.u64()?,
+                rows_seen: r.u64()?,
+                sketch_bytes: r.u64()?,
+            }),
+            RESP_SELECTED => Response::Selected {
+                indices: r.u64_slice()?,
+                weights: r.f32_slice()?,
+            },
+            RESP_STATS => {
+                let n = r.u32()? as usize;
+                let mut pairs = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let name = r.str()?;
+                    let v = r.u64()?;
+                    pairs.push((name, v));
+                }
+                Response::Stats { pairs }
+            }
+            RESP_CHECKPOINTED => Response::Checkpointed { path: r.str()? },
+            other => return Err(format!("unknown response tag {other}")),
+        };
+        r.finish()?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_request(req: Request) {
+        let payload = req.encode();
+        let frame = encode_frame(req.opcode(), 0, &payload);
+        let mut cursor = &frame[..];
+        let back = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(back.opcode, req.opcode());
+        let decoded = Request::decode(back.opcode, &back.payload).unwrap();
+        assert_eq!(decoded, req);
+    }
+
+    #[test]
+    fn all_requests_round_trip() {
+        round_trip_request(Request::CreateSession {
+            name: "s1".into(),
+            ell: 8,
+            d: 64,
+            shards: 4,
+        });
+        round_trip_request(Request::IngestBatch {
+            session: "s1".into(),
+            shard: 2,
+            rows: Matrix::from_fn(3, 5, |r, c| (r * 5 + c) as f32 * 0.5),
+        });
+        round_trip_request(Request::MergeSketch {
+            session: "s1".into(),
+            shard: 0,
+            state: SketchState {
+                ell: 2,
+                d: 3,
+                next_row: 1,
+                shrink_count: 4,
+                rows_seen: 17,
+                delta_sum: 0.25,
+                energy_seen: 9.5,
+                buf: vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            },
+        });
+        round_trip_request(Request::Freeze {
+            session: "s1".into(),
+        });
+        round_trip_request(Request::Score {
+            session: "s1".into(),
+            shard: 1,
+            batch: ScoreBatch {
+                indices: vec![10, 11],
+                labels: vec![0, 3],
+                norms: vec![1.5, 0.25],
+                losses: vec![2.0, 0.5],
+                zhat: Matrix::from_fn(2, 4, |r, c| (r + c) as f32),
+            },
+        });
+        round_trip_request(Request::TopK {
+            session: "s1".into(),
+            method: "sage".into(),
+            k: 100,
+            num_classes: 10,
+            seed: 7,
+        });
+        round_trip_request(Request::Checkpoint {
+            session: "s1".into(),
+        });
+        round_trip_request(Request::Stats { session: "".into() });
+        round_trip_request(Request::CloseSession {
+            session: "s1".into(),
+        });
+    }
+
+    #[test]
+    fn all_responses_round_trip() {
+        let responses = vec![
+            Response::Ok,
+            Response::Error {
+                message: "nope".into(),
+            },
+            Response::Ingested { rows_seen: 42 },
+            Response::Frozen(FrozenSketch {
+                sketch: Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f32),
+                shift_bound: 1.25,
+                shrinks: 3,
+                rows_seen: 99,
+                sketch_bytes: 48,
+            }),
+            Response::Selected {
+                indices: vec![5, 1, 9],
+                weights: vec![],
+            },
+            Response::Stats {
+                pairs: vec![("a.rows".into(), 10), ("a.batches".into(), 2)],
+            },
+            Response::Checkpointed {
+                path: "/tmp/x.sagesess".into(),
+            },
+        ];
+        for resp in responses {
+            let payload = resp.encode();
+            let back = Response::decode(&payload).unwrap();
+            assert_eq!(back, resp);
+            assert_eq!(resp.status() == 0, !matches!(resp, Response::Error { .. }));
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let payload = Request::Freeze {
+            session: "abc".into(),
+        }
+        .encode();
+        let mut frame = encode_frame(op::FREEZE, 0, &payload);
+        let mid = frame.len() / 2;
+        frame[mid] ^= 0xFF;
+        let mut cursor = &frame[..];
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let payload = Request::Freeze {
+            session: "abc".into(),
+        }
+        .encode();
+        let frame = encode_frame(op::FREEZE, 0, &payload);
+        let mut cursor = &frame[..frame.len() - 3];
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let empty: &[u8] = &[];
+        let mut cursor = empty;
+        assert_eq!(read_frame(&mut cursor).unwrap(), None);
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let payload = Request::Freeze { session: "x".into() }.encode();
+        let mut frame = encode_frame(op::FREEZE, 0, &payload);
+        frame[4] = 99; // bump version; checksum covers it, so fix checksum
+        let body_len = frame.len() - 8;
+        let sum = fnv64(&frame[..body_len]);
+        let end = frame.len();
+        frame[body_len..end].copy_from_slice(&sum.to_le_bytes());
+        let mut cursor = &frame[..];
+        assert!(read_frame(&mut cursor).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn oversized_payload_rejected() {
+        // Hand-craft a header announcing an over-cap payload.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(MAGIC);
+        frame.extend_from_slice(&VERSION.to_le_bytes());
+        frame.push(op::FREEZE);
+        frame.push(0);
+        frame.extend_from_slice(&0u16.to_le_bytes());
+        frame.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cursor = &frame[..];
+        assert!(read_frame(&mut cursor).unwrap_err().contains("cap"));
+    }
+
+    #[test]
+    fn payload_reader_rejects_trailing_bytes() {
+        let mut payload = Request::Freeze { session: "x".into() }.encode();
+        payload.push(0);
+        assert!(Request::decode(op::FREEZE, &payload)
+            .unwrap_err()
+            .contains("trailing"));
+    }
+}

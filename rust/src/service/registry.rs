@@ -1,0 +1,866 @@
+//! Concurrent session registry — the server-side state of `sage-serve`.
+//!
+//! A [`Session`] promotes the pipeline's shard-local FD sketches from local
+//! variables to a served, sessioned resource: `shards` independent sketch
+//! slots fed through ONE bounded ingest channel (backpressure: producers
+//! block when the queue is full; the per-session ingest worker drains it),
+//! then frozen by merging the shard sketches **in shard order** — exactly
+//! the merge `pipeline::run_selection` performs, so a session fed the same
+//! gradient stream produces a byte-identical sketch. Phase-II scoring
+//! accumulates per-shard [`AgreementScorer`]s the same way, making served
+//! TopK queries reproduce offline selection exactly.
+//!
+//! The [`SessionRegistry`] enforces admission control (max sessions, max
+//! resident ℓ×D sketch bytes) and owns persistence/recovery through
+//! `service::checkpoint`.
+//!
+//! Determinism contract: one producer per shard slot. Concurrent producers
+//! on the *same* shard are accepted but interleave nondeterministically.
+
+use super::checkpoint::SessionCheckpoint;
+use super::protocol::{FrozenSketch, ScoreBatch};
+use crate::baselines::{select_weighted, SelectionInputs};
+use crate::config::Method;
+use crate::selection::{AgreementScorer, Scores};
+use crate::sketch::{FdSketch, SketchState};
+use crate::tensor::Matrix;
+use crate::util::channel::{bounded, Sender};
+use crate::util::metrics::{global as metrics, Counter};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Registry knobs (admission control + backpressure depth).
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Maximum concurrently resident sessions.
+    pub max_sessions: usize,
+    /// Maximum total resident sketch-buffer bytes across sessions
+    /// (each session accounts `shards × 2ℓ × D × 4`).
+    pub max_resident_bytes: usize,
+    /// Bounded ingest queue depth per session (backpressure).
+    pub ingest_queue_depth: usize,
+    /// Where `Checkpoint` ops persist sessions (None = op disabled).
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        Self {
+            max_sessions: 64,
+            max_resident_bytes: 1 << 30,
+            ingest_queue_depth: 8,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+/// Per-session counters, reported by the `Stats` wire op (prefixed
+/// `service.session.<name>.` in the response). Fleet-wide aggregates go to
+/// the global metrics registry under fixed `service.*` names instead —
+/// global counter names are interned forever, so they never embed
+/// client-chosen session names.
+#[derive(Default)]
+pub struct SessionStats {
+    pub rows_enqueued: AtomicU64,
+    pub rows_applied: AtomicU64,
+    pub batches: AtomicU64,
+    pub merges: AtomicU64,
+    pub scored_entries: AtomicU64,
+    pub topk_queries: AtomicU64,
+}
+
+type IngestMsg = (usize, Matrix);
+
+/// Hard caps on session shape. The protocol carries `ell`/`d`/`shards` as
+/// u32, so admission math must be overflow-proof against hostile values;
+/// under these caps `shards × 2ℓ × D × 4` stays well below `usize::MAX`.
+pub const MAX_ELL: usize = 1 << 16;
+pub const MAX_DIM: usize = 1 << 28;
+pub const MAX_SHARDS: usize = 4096;
+
+/// Validated resident-byte cost of a session (`shards × 2ℓ × D × 4`).
+fn session_bytes(ell: usize, d: usize, shards: usize) -> Result<usize, String> {
+    if ell == 0 || d == 0 || shards == 0 {
+        return Err("ell, d and shards must all be positive".into());
+    }
+    if ell > MAX_ELL || d > MAX_DIM || shards > MAX_SHARDS {
+        return Err(format!(
+            "session shape rejected: ell {ell} (max {MAX_ELL}), d {d} (max {MAX_DIM}), \
+             shards {shards} (max {MAX_SHARDS})"
+        ));
+    }
+    shards
+        .checked_mul(2)
+        .and_then(|v| v.checked_mul(ell))
+        .and_then(|v| v.checked_mul(d))
+        .and_then(|v| v.checked_mul(4))
+        .ok_or_else(|| "session byte accounting overflow".to_string())
+}
+
+/// One served sketch session.
+pub struct Session {
+    name: String,
+    ell: usize,
+    d: usize,
+    shards: usize,
+    ingest_tx: Mutex<Option<Sender<IngestMsg>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    sketches: Arc<Mutex<Vec<FdSketch>>>,
+    frozen: Mutex<Option<FrozenSketch>>,
+    scorers: Mutex<Vec<Option<AgreementScorer>>>,
+    scores: Mutex<Option<Scores>>,
+    stats: Arc<SessionStats>,
+    /// Fleet-wide aggregates (fixed names — global counters are interned
+    /// forever, so they must NOT embed client-chosen session names).
+    c_rows: &'static Counter,
+    c_batches: &'static Counter,
+    c_scored: &'static Counter,
+}
+
+impl Session {
+    /// New active session with per-shard sketches and a running ingest
+    /// worker fed by a bounded channel.
+    fn new_active(
+        name: &str,
+        ell: usize,
+        d: usize,
+        shards: usize,
+        queue_depth: usize,
+        shard_sketches: Vec<FdSketch>,
+    ) -> Session {
+        debug_assert_eq!(shard_sketches.len(), shards);
+        let stats = Arc::new(SessionStats::default());
+        let sketches = Arc::new(Mutex::new(shard_sketches));
+        let (tx, rx) = bounded::<IngestMsg>(queue_depth.max(1));
+        let w_sketches = sketches.clone();
+        let w_stats = stats.clone();
+        let c_rows_applied = metrics().counter("service.ingest.rows_applied");
+        let worker = std::thread::spawn(move || {
+            // close-then-drain: after Freeze closes the channel, recv keeps
+            // returning queued batches until empty, so no acked ingest is
+            // ever lost (see util::channel close semantics).
+            while let Some((shard, rows)) = rx.recv() {
+                let n = rows.rows() as u64;
+                w_sketches.lock().unwrap()[shard].insert_batch(&rows);
+                w_stats.rows_applied.fetch_add(n, Ordering::Relaxed);
+                c_rows_applied.add(n);
+            }
+        });
+        Session {
+            name: name.to_string(),
+            ell,
+            d,
+            shards,
+            ingest_tx: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+            sketches,
+            frozen: Mutex::new(None),
+            scorers: Mutex::new((0..shards).map(|_| Some(AgreementScorer::new(ell))).collect()),
+            scores: Mutex::new(None),
+            stats,
+            c_rows: metrics().counter("service.ingest.rows_enqueued"),
+            c_batches: metrics().counter("service.ingest.batches"),
+            c_scored: metrics().counter("service.score.entries"),
+        }
+    }
+
+    /// Rebuild an already-frozen session (checkpoint recovery): no ingest
+    /// worker, scoring starts fresh against the recovered sketch.
+    fn new_frozen(name: &str, ell: usize, d: usize, shards: usize, info: FrozenSketch) -> Session {
+        Session {
+            name: name.to_string(),
+            ell,
+            d,
+            shards,
+            ingest_tx: Mutex::new(None),
+            worker: Mutex::new(None),
+            sketches: Arc::new(Mutex::new(Vec::new())),
+            frozen: Mutex::new(Some(info)),
+            scorers: Mutex::new((0..shards).map(|_| Some(AgreementScorer::new(ell))).collect()),
+            scores: Mutex::new(None),
+            stats: Arc::new(SessionStats::default()),
+            c_rows: metrics().counter("service.ingest.rows_enqueued"),
+            c_batches: metrics().counter("service.ingest.batches"),
+            c_scored: metrics().counter("service.score.entries"),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn ell(&self) -> usize {
+        self.ell
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Resident sketch-buffer bytes this session accounts for (shapes are
+    /// validated at admission, so this cannot overflow; saturate anyway).
+    pub fn resident_bytes(&self) -> usize {
+        self.shards
+            .saturating_mul(2)
+            .saturating_mul(self.ell)
+            .saturating_mul(self.d)
+            .saturating_mul(4)
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen.lock().unwrap().is_some()
+    }
+
+    /// Enqueue raw gradient rows into one shard slot. Blocks when the
+    /// bounded ingest queue is full (backpressure propagates to the TCP
+    /// connection). Returns total rows acked so far.
+    pub fn ingest(&self, shard: usize, rows: Matrix) -> Result<u64, String> {
+        if shard >= self.shards {
+            return Err(format!(
+                "shard {shard} out of range (session '{}' has {} shards)",
+                self.name, self.shards
+            ));
+        }
+        if rows.cols() != self.d {
+            return Err(format!(
+                "ingest rows have {} cols, session dim is {}",
+                rows.cols(),
+                self.d
+            ));
+        }
+        let tx = match self.ingest_tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.clone(),
+            None => return Err(format!("session '{}' is frozen", self.name)),
+        };
+        let n = rows.rows() as u64;
+        tx.send((shard, rows))
+            .map_err(|_| format!("session '{}' was frozen during ingest", self.name))?;
+        self.c_rows.add(n);
+        self.c_batches.inc();
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        Ok(self.stats.rows_enqueued.fetch_add(n, Ordering::Relaxed) + n)
+    }
+
+    /// Merge a client-side FD sketch into one shard slot (FD mergeability:
+    /// the combined guarantee degrades by at most the sum of both
+    /// certificates). Deterministic for a fixed call sequence.
+    pub fn merge_sketch(&self, shard: usize, state: &SketchState) -> Result<(), String> {
+        if shard >= self.shards {
+            return Err(format!("shard {shard} out of range"));
+        }
+        if state.d as usize != self.d {
+            return Err(format!(
+                "sketch state dim {} != session dim {}",
+                state.d, self.d
+            ));
+        }
+        let mut other = FdSketch::from_state(state)?;
+        let mut guard = self.sketches.lock().unwrap();
+        if guard.is_empty() {
+            return Err(format!("session '{}' is frozen", self.name));
+        }
+        guard[shard].merge(&mut other);
+        drop(guard);
+        self.stats.merges.fetch_add(1, Ordering::Relaxed);
+        metrics().counter("service.merge.requests").inc();
+        Ok(())
+    }
+
+    /// Freeze: stop ingest, drain the queue (close-then-drain), join the
+    /// worker, merge shard sketches in shard order, cache the frozen S.
+    /// Idempotent — every scoring client calls it to fetch S.
+    pub fn freeze(&self) -> Result<FrozenSketch, String> {
+        let mut guard = self.frozen.lock().unwrap();
+        if let Some(info) = guard.as_ref() {
+            return Ok(info.clone());
+        }
+        if let Some(tx) = self.ingest_tx.lock().unwrap().take() {
+            tx.close();
+        }
+        if let Some(worker) = self.worker.lock().unwrap().take() {
+            worker
+                .join()
+                .map_err(|_| format!("session '{}': ingest worker panicked", self.name))?;
+        }
+        let mut shard_sketches = {
+            let mut g = self.sketches.lock().unwrap();
+            std::mem::take(&mut *g)
+        };
+        if shard_sketches.is_empty() {
+            return Err(format!("session '{}' has no sketch state", self.name));
+        }
+        // Same merge the offline pipeline performs: base = shard 0 (NOT an
+        // empty sketch — that would pre-shrink shard 0 and change the
+        // result), then fold the rest in shard order.
+        let mut merged = shard_sketches.remove(0);
+        for mut s in shard_sketches {
+            merged.merge(&mut s);
+        }
+        let sketch = merged.sketch();
+        let info = FrozenSketch {
+            sketch,
+            shift_bound: merged.shift_bound(),
+            shrinks: merged.shrink_count(),
+            rows_seen: merged.rows_seen(),
+            sketch_bytes: merged.memory_bytes() as u64,
+        };
+        *guard = Some(info.clone());
+        Ok(info)
+    }
+
+    /// Accumulate one Phase-II scoring batch into a shard's scorer.
+    pub fn score(&self, shard: usize, batch: &ScoreBatch) -> Result<(), String> {
+        if shard >= self.shards {
+            return Err(format!("shard {shard} out of range"));
+        }
+        if self.frozen.lock().unwrap().is_none() {
+            return Err(format!(
+                "session '{}': Score requires Freeze first",
+                self.name
+            ));
+        }
+        let n = batch.indices.len();
+        if batch.labels.len() != n
+            || batch.norms.len() != n
+            || batch.losses.len() != n
+            || batch.zhat.rows() != n
+        {
+            return Err("score batch: field lengths disagree".into());
+        }
+        if batch.zhat.cols() != self.ell {
+            return Err(format!(
+                "score batch: projections have dim {}, session ℓ is {}",
+                batch.zhat.cols(),
+                self.ell
+            ));
+        }
+        let indices: Vec<usize> = batch.indices.iter().map(|&i| i as usize).collect();
+        let mut guard = self.scorers.lock().unwrap();
+        match guard[shard].as_mut() {
+            Some(scorer) => {
+                scorer.add_batch(&indices, &batch.labels, &batch.zhat, &batch.norms, &batch.losses);
+            }
+            None => {
+                return Err(format!(
+                    "session '{}': scores already finalized",
+                    self.name
+                ))
+            }
+        }
+        drop(guard);
+        self.stats
+            .scored_entries
+            .fetch_add(n as u64, Ordering::Relaxed);
+        self.c_scored.add(n as u64);
+        Ok(())
+    }
+
+    /// Online selection query: finalize scores on first call (merging
+    /// shard scorers in shard order — the offline merge), then run the
+    /// selection rule. Repeated queries with different `(method, k)` reuse
+    /// the cached scores.
+    pub fn top_k(
+        &self,
+        method: Method,
+        k: usize,
+        num_classes: usize,
+        seed: u64,
+    ) -> Result<(Vec<usize>, Option<Vec<f32>>), String> {
+        if self.frozen.lock().unwrap().is_none() {
+            return Err(format!(
+                "session '{}': TopK requires Freeze first",
+                self.name
+            ));
+        }
+        if method == Method::Glister {
+            return Err("GLISTER needs a validation split; unsupported by the service".into());
+        }
+        let mut cache = self.scores.lock().unwrap();
+        if cache.is_none() {
+            let mut slots = self.scorers.lock().unwrap();
+            let total: u64 = slots
+                .iter()
+                .map(|s| s.as_ref().map(|sc| sc.count()).unwrap_or(0))
+                .sum();
+            if total == 0 {
+                return Err(format!(
+                    "session '{}': no scored examples — run Score first",
+                    self.name
+                ));
+            }
+            let mut acc: Option<AgreementScorer> = None;
+            for slot in slots.iter_mut() {
+                let scorer = slot
+                    .take()
+                    .ok_or_else(|| "scorer state missing".to_string())?;
+                acc = Some(match acc {
+                    None => scorer,
+                    Some(mut merged) => {
+                        merged.merge(scorer);
+                        merged
+                    }
+                });
+            }
+            drop(slots);
+            let scores = acc
+                .ok_or_else(|| "session has no shards".to_string())?
+                .finalize();
+            *cache = Some(scores);
+        }
+        let scores = cache.as_ref().unwrap();
+        let inputs = SelectionInputs {
+            scores,
+            val_consensus: None,
+            num_classes,
+            seed,
+        };
+        self.stats.topk_queries.fetch_add(1, Ordering::Relaxed);
+        Ok(select_weighted(method, &inputs, k))
+    }
+
+    /// Counter snapshot for the `Stats` wire op.
+    pub fn stats_pairs(&self) -> Vec<(String, u64)> {
+        let p = format!("service.session.{}", self.name);
+        let s = &self.stats;
+        vec![
+            (format!("{p}.ell"), self.ell as u64),
+            (format!("{p}.d"), self.d as u64),
+            (format!("{p}.shards"), self.shards as u64),
+            (format!("{p}.resident_bytes"), self.resident_bytes() as u64),
+            (format!("{p}.frozen"), u64::from(self.is_frozen())),
+            (
+                format!("{p}.rows_enqueued"),
+                s.rows_enqueued.load(Ordering::Relaxed),
+            ),
+            (
+                format!("{p}.rows_applied"),
+                s.rows_applied.load(Ordering::Relaxed),
+            ),
+            (format!("{p}.batches"), s.batches.load(Ordering::Relaxed)),
+            (format!("{p}.merges"), s.merges.load(Ordering::Relaxed)),
+            (
+                format!("{p}.scored_entries"),
+                s.scored_entries.load(Ordering::Relaxed),
+            ),
+            (
+                format!("{p}.topk_queries"),
+                s.topk_queries.load(Ordering::Relaxed),
+            ),
+        ]
+    }
+
+    /// Block until every acked ingest batch has been applied to its shard
+    /// sketch (bounded wait) — checkpoint consistency helper.
+    fn quiesce(&self, timeout: std::time::Duration) -> Result<(), String> {
+        let start = std::time::Instant::now();
+        loop {
+            let enq = self.stats.rows_enqueued.load(Ordering::Relaxed);
+            let app = self.stats.rows_applied.load(Ordering::Relaxed);
+            if app >= enq {
+                return Ok(());
+            }
+            if start.elapsed() > timeout {
+                return Err(format!(
+                    "session '{}': quiesce timed out ({app}/{enq} rows applied)",
+                    self.name
+                ));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    /// Snapshot into a checkpoint (quiesces acked ingest first).
+    pub fn to_checkpoint(&self) -> Result<SessionCheckpoint, String> {
+        self.quiesce(std::time::Duration::from_secs(10))?;
+        let frozen = self.frozen.lock().unwrap().clone();
+        let shard_states = if frozen.is_some() {
+            Vec::new()
+        } else {
+            let guard = self.sketches.lock().unwrap();
+            guard.iter().map(|s| s.export_state()).collect()
+        };
+        Ok(SessionCheckpoint {
+            name: self.name.clone(),
+            ell: self.ell as u32,
+            d: self.d as u32,
+            shards: self.shards as u32,
+            shard_states,
+            frozen,
+        })
+    }
+
+    /// Rebuild from a checkpoint (inverse of [`Session::to_checkpoint`]).
+    fn from_checkpoint(ck: &SessionCheckpoint, queue_depth: usize) -> Result<Session, String> {
+        let (ell, d, shards) = (ck.ell as usize, ck.d as usize, ck.shards as usize);
+        session_bytes(ell, d, shards)?; // validate recovered shapes too
+        if let Some(frozen) = &ck.frozen {
+            return Ok(Session::new_frozen(&ck.name, ell, d, shards, frozen.clone()));
+        }
+        if ck.shard_states.len() != shards {
+            return Err(format!(
+                "checkpoint '{}': {} shard states for {} shards",
+                ck.name,
+                ck.shard_states.len(),
+                shards
+            ));
+        }
+        let mut sketches = Vec::with_capacity(shards);
+        for st in &ck.shard_states {
+            if st.ell as usize != ell || st.d as usize != d {
+                return Err(format!("checkpoint '{}': shard state dims drift", ck.name));
+            }
+            sketches.push(FdSketch::from_state(st)?);
+        }
+        Ok(Session::new_active(
+            &ck.name,
+            ell,
+            d,
+            shards,
+            queue_depth,
+            sketches,
+        ))
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        if let Some(tx) = self.ingest_tx.lock().unwrap().take() {
+            tx.close();
+        }
+        if let Some(worker) = self.worker.lock().unwrap().take() {
+            let _ = worker.join();
+        }
+    }
+}
+
+fn valid_session_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+}
+
+/// Concurrent registry of live sessions with admission control.
+pub struct SessionRegistry {
+    cfg: RegistryConfig,
+    sessions: Mutex<BTreeMap<String, Arc<Session>>>,
+}
+
+impl SessionRegistry {
+    pub fn new(cfg: RegistryConfig) -> Self {
+        Self {
+            cfg,
+            sessions: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn config(&self) -> &RegistryConfig {
+        &self.cfg
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    /// Total resident sketch bytes across live sessions.
+    pub fn resident_bytes(&self) -> usize {
+        self.sessions
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| s.resident_bytes())
+            .sum()
+    }
+
+    /// Admission-controlled session creation.
+    pub fn create(&self, name: &str, ell: usize, d: usize, shards: usize) -> Result<(), String> {
+        if !valid_session_name(name) {
+            return Err(format!(
+                "invalid session name '{name}' (want [A-Za-z0-9._-], ≤ 64 chars)"
+            ));
+        }
+        let new_bytes = session_bytes(ell, d, shards)?;
+        let mut guard = self.sessions.lock().unwrap();
+        if guard.contains_key(name) {
+            return Err(format!("session '{name}' already exists"));
+        }
+        if guard.len() >= self.cfg.max_sessions {
+            return Err(format!(
+                "admission rejected: {} sessions resident (max {})",
+                guard.len(),
+                self.cfg.max_sessions
+            ));
+        }
+        let used: usize = guard.values().map(|s| s.resident_bytes()).sum();
+        if used + new_bytes > self.cfg.max_resident_bytes {
+            return Err(format!(
+                "admission rejected: {new_bytes} sketch bytes would exceed budget \
+                 ({used}/{} in use)",
+                self.cfg.max_resident_bytes
+            ));
+        }
+        let sketches = (0..shards).map(|_| FdSketch::new(ell, d)).collect();
+        let session = Session::new_active(
+            name,
+            ell,
+            d,
+            shards,
+            self.cfg.ingest_queue_depth,
+            sketches,
+        );
+        guard.insert(name.to_string(), Arc::new(session));
+        metrics().counter("service.registry.sessions_created").inc();
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<Session>, String> {
+        self.sessions
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("unknown session '{name}'"))
+    }
+
+    /// Remove a session and release its admission budget. The session's
+    /// ingest worker is joined by `Session::drop` once the last `Arc`
+    /// reference (in-flight requests included) goes away.
+    pub fn close(&self, name: &str) -> Result<(), String> {
+        let removed = self.sessions.lock().unwrap().remove(name);
+        match removed {
+            Some(_) => {
+                metrics().counter("service.registry.sessions_closed").inc();
+                Ok(())
+            }
+            None => Err(format!("unknown session '{name}'")),
+        }
+    }
+
+    /// Persist one session into the configured checkpoint directory.
+    pub fn checkpoint(&self, name: &str) -> Result<PathBuf, String> {
+        let dir = self
+            .cfg
+            .checkpoint_dir
+            .as_ref()
+            .ok_or_else(|| "server has no --checkpoint-dir configured".to_string())?
+            .clone();
+        let session = self.get(name)?;
+        let ck = session.to_checkpoint()?;
+        let path = dir.join(format!("{name}.sagesess"));
+        ck.save(&path)?;
+        metrics().counter("service.registry.checkpoints").inc();
+        Ok(path)
+    }
+
+    /// Recover every `*.sagesess` session from `dir` (server restart).
+    /// Returns the number of sessions recovered; unreadable files are
+    /// skipped with a warning so one bad checkpoint can't block startup.
+    pub fn recover(&self, dir: &Path) -> usize {
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(_) => return 0,
+        };
+        let mut recovered = 0usize;
+        for entry in entries.filter_map(|e| e.ok()) {
+            let path = entry.path();
+            if path.extension().map(|e| e != "sagesess").unwrap_or(true) {
+                continue;
+            }
+            match SessionCheckpoint::load(&path) {
+                Ok(ck) => {
+                    match Session::from_checkpoint(&ck, self.cfg.ingest_queue_depth) {
+                        Ok(session) => {
+                            let mut guard = self.sessions.lock().unwrap();
+                            let used: usize =
+                                guard.values().map(|s| s.resident_bytes()).sum();
+                            if guard.len() < self.cfg.max_sessions
+                                && used + session.resident_bytes()
+                                    <= self.cfg.max_resident_bytes
+                                && !guard.contains_key(&ck.name)
+                            {
+                                guard.insert(ck.name.clone(), Arc::new(session));
+                                recovered += 1;
+                            } else {
+                                crate::log_warn!(
+                                    "recovery skipped session '{}' (admission)",
+                                    ck.name
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            crate::log_warn!("recovery: bad session in {}: {e}", path.display())
+                        }
+                    }
+                }
+                Err(e) => crate::log_warn!("recovery: unreadable {}: {e}", path.display()),
+            }
+        }
+        recovered
+    }
+
+    /// Stats for the wire op: one session's counters, or (empty name)
+    /// registry-level counters plus every session's counters.
+    pub fn stats_pairs(&self, session: &str) -> Result<Vec<(String, u64)>, String> {
+        if !session.is_empty() {
+            return Ok(self.get(session)?.stats_pairs());
+        }
+        let mut pairs = vec![
+            (
+                "service.registry.sessions".to_string(),
+                self.session_count() as u64,
+            ),
+            (
+                "service.registry.resident_bytes".to_string(),
+                self.resident_bytes() as u64,
+            ),
+            (
+                "service.registry.max_sessions".to_string(),
+                self.cfg.max_sessions as u64,
+            ),
+            (
+                "service.registry.max_resident_bytes".to_string(),
+                self.cfg.max_resident_bytes as u64,
+            ),
+        ];
+        pairs.extend(metrics().snapshot_counters("service.server."));
+        pairs.extend(metrics().snapshot_counters("service.registry."));
+        let sessions: Vec<Arc<Session>> =
+            self.sessions.lock().unwrap().values().cloned().collect();
+        for s in sessions {
+            pairs.extend(s.stats_pairs());
+        }
+        Ok(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_rows(rng: &mut Pcg64, n: usize, d: usize) -> Matrix {
+        Matrix::from_fn(n, d, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn ingest_freeze_matches_local_sketch_exactly() {
+        let reg = SessionRegistry::new(RegistryConfig::default());
+        reg.create("s", 4, 8, 2).unwrap();
+        let session = reg.get("s").unwrap();
+
+        let mut rng = Pcg64::seeded(11);
+        let a = random_rows(&mut rng, 37, 8);
+        let b = random_rows(&mut rng, 21, 8);
+        session.ingest(0, a.clone()).unwrap();
+        session.ingest(1, b.clone()).unwrap();
+        let frozen = session.freeze().unwrap();
+
+        // Local replica of what the offline pipeline computes.
+        let mut s0 = FdSketch::new(4, 8);
+        let mut s1 = FdSketch::new(4, 8);
+        s0.insert_batch(&a);
+        s1.insert_batch(&b);
+        s0.merge(&mut s1);
+        assert_eq!(frozen.sketch.as_slice(), s0.sketch().as_slice());
+        assert_eq!(frozen.rows_seen, 58);
+        assert_eq!(frozen.shrinks, s0.shrink_count());
+    }
+
+    #[test]
+    fn freeze_is_idempotent_and_blocks_ingest() {
+        let reg = SessionRegistry::new(RegistryConfig::default());
+        reg.create("s", 2, 4, 1).unwrap();
+        let session = reg.get("s").unwrap();
+        session.ingest(0, Matrix::from_fn(3, 4, |r, c| (r + c) as f32)).unwrap();
+        let f1 = session.freeze().unwrap();
+        let f2 = session.freeze().unwrap();
+        assert_eq!(f1.sketch.as_slice(), f2.sketch.as_slice());
+        let err = session
+            .ingest(0, Matrix::zeros(1, 4))
+            .unwrap_err();
+        assert!(err.contains("frozen"), "{err}");
+    }
+
+    #[test]
+    fn admission_control_rejects_and_recovers_budget() {
+        let cfg = RegistryConfig {
+            max_sessions: 1,
+            ..Default::default()
+        };
+        let reg = SessionRegistry::new(cfg);
+        reg.create("a", 2, 4, 1).unwrap();
+        let err = reg.create("b", 2, 4, 1).unwrap_err();
+        assert!(err.contains("admission"), "{err}");
+        reg.close("a").unwrap();
+        reg.create("b", 2, 4, 1).unwrap();
+
+        let tiny = RegistryConfig {
+            max_resident_bytes: 100,
+            ..Default::default()
+        };
+        let reg2 = SessionRegistry::new(tiny);
+        // 1 shard × 2·2·4·4 = 64 bytes fits; a second does not.
+        reg2.create("x", 2, 4, 1).unwrap();
+        let err2 = reg2.create("y", 2, 4, 1).unwrap_err();
+        assert!(err2.contains("admission"), "{err2}");
+    }
+
+    #[test]
+    fn bad_inputs_are_rejected_loudly() {
+        let reg = SessionRegistry::new(RegistryConfig::default());
+        assert!(reg.create("bad name!", 2, 4, 1).is_err());
+        assert!(reg.create("ok", 0, 4, 1).is_err());
+        reg.create("ok", 2, 4, 2).unwrap();
+        let s = reg.get("ok").unwrap();
+        assert!(s.ingest(5, Matrix::zeros(1, 4)).is_err()); // shard range
+        assert!(s.ingest(0, Matrix::zeros(1, 3)).is_err()); // dim
+        assert!(s.score(0, &ScoreBatch {
+            indices: vec![0],
+            labels: vec![0],
+            norms: vec![1.0],
+            losses: vec![1.0],
+            zhat: Matrix::zeros(1, 2),
+        })
+        .is_err()); // not frozen
+        assert!(reg.get("missing").is_err());
+        assert!(reg.close("missing").is_err());
+    }
+
+    #[test]
+    fn duplicate_session_rejected() {
+        let reg = SessionRegistry::new(RegistryConfig::default());
+        reg.create("dup", 2, 4, 1).unwrap();
+        assert!(reg.create("dup", 2, 4, 1).unwrap_err().contains("exists"));
+    }
+
+    #[test]
+    fn stats_pairs_report_progress() {
+        let reg = SessionRegistry::new(RegistryConfig::default());
+        reg.create("st", 2, 4, 1).unwrap();
+        let s = reg.get("st").unwrap();
+        s.ingest(0, Matrix::from_fn(5, 4, |r, c| (r * 4 + c) as f32))
+            .unwrap();
+        s.freeze().unwrap();
+        let pairs = s.stats_pairs();
+        let get = |k: &str| {
+            pairs
+                .iter()
+                .find(|(n, _)| n.ends_with(k))
+                .map(|(_, v)| *v)
+                .unwrap()
+        };
+        assert_eq!(get(".rows_enqueued"), 5);
+        assert_eq!(get(".rows_applied"), 5);
+        assert_eq!(get(".frozen"), 1);
+        let all = reg.stats_pairs("").unwrap();
+        assert!(all.iter().any(|(n, v)| n == "service.registry.sessions" && *v == 1));
+    }
+}

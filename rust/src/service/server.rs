@@ -1,0 +1,291 @@
+//! `sage-serve` TCP server: thread-per-connection on `util::threadpool`,
+//! speaking the length-prefixed `service::protocol` frames against the
+//! shared [`SessionRegistry`].
+//!
+//! Backpressure composes end-to-end: a full per-session ingest queue blocks
+//! the connection thread in `Session::ingest`, which stops reading from the
+//! socket, which fills the kernel TCP window, which blocks the producer.
+//! When the connection pool itself is saturated or shut down, the acceptor
+//! never blocks: `ThreadPool::try_execute` fails fast and the new
+//! connection is rejected with an error frame, keeping accept (and
+//! shutdown) responsive no matter the load.
+
+use super::protocol::{read_frame_event, write_frame, ReadEvent, Request, Response};
+use super::registry::{RegistryConfig, SessionRegistry};
+use crate::config::Method;
+use crate::util::metrics::global as metrics;
+use crate::util::threadpool::ThreadPool;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Server knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks a free port (see [`Server::local_addr`]).
+    pub addr: String,
+    /// Connection-handler threads (thread-per-connection, pooled).
+    pub threads: usize,
+    pub registry: RegistryConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7009".to_string(),
+            threads: 16,
+            registry: RegistryConfig::default(),
+        }
+    }
+}
+
+/// A bound (not yet serving) server.
+pub struct Server {
+    listener: TcpListener,
+    registry: Arc<SessionRegistry>,
+    threads: usize,
+}
+
+impl Server {
+    /// Bind the listener, build the registry, and recover any checkpointed
+    /// sessions from the configured directory.
+    pub fn bind(cfg: &ServerConfig) -> Result<Server, String> {
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let registry = Arc::new(SessionRegistry::new(cfg.registry.clone()));
+        if let Some(dir) = &cfg.registry.checkpoint_dir {
+            let n = registry.recover(dir);
+            if n > 0 {
+                crate::log_info!("recovered {n} session(s) from {}", dir.display());
+            }
+        }
+        Ok(Server {
+            listener,
+            registry,
+            threads: cfg.threads.max(1),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("listener has local addr")
+    }
+
+    pub fn registry(&self) -> Arc<SessionRegistry> {
+        self.registry.clone()
+    }
+
+    /// Accept loop. Blocks the calling thread until `stop` flips (a wake-up
+    /// connection is enough to re-check it) or the listener dies. Open
+    /// connections poll `stop` between frames, so dropping the pool on exit
+    /// cannot deadlock on an idle client.
+    pub fn run(self, stop: Arc<AtomicBool>) -> Result<(), String> {
+        let pool = ThreadPool::new(self.threads);
+        crate::log_info!(
+            "sage-serve listening on {} ({} connection threads)",
+            self.local_addr(),
+            self.threads
+        );
+        for incoming in self.listener.incoming() {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let stream = match incoming {
+                Ok(s) => s,
+                Err(e) => {
+                    crate::log_warn!("accept failed: {e}");
+                    continue;
+                }
+            };
+            metrics().counter("service.server.connections").inc();
+            let registry = self.registry.clone();
+            let conn_stop = stop.clone();
+            let reject_stream = stream.try_clone().ok();
+            let submitted =
+                pool.try_execute(move || handle_connection(stream, registry, conn_stop));
+            if let Err(reason) = submitted {
+                // Graceful rejection: tell the peer and keep the acceptor
+                // alive and non-blocking. The operator sees the
+                // rejected-connection counter climb.
+                metrics().counter("service.server.rejected_connections").inc();
+                crate::log_warn!("connection rejected: {reason}");
+                if let Some(mut s) = reject_stream {
+                    let resp = Response::Error {
+                        message: format!("connection rejected: {reason}"),
+                    };
+                    let _ = write_frame(&mut s, 0, resp.status(), &resp.encode());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve in a background thread; returns a handle that can stop the
+    /// server and exposes the bound address (tests, examples, embedding).
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.local_addr();
+        let registry = self.registry();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::spawn(move || {
+            if let Err(e) = self.run(stop2) {
+                crate::log_warn!("server exited: {e}");
+            }
+        });
+        ServerHandle {
+            addr,
+            registry,
+            stop,
+            join: Some(join),
+        }
+    }
+}
+
+/// Handle to a background server (see [`Server::spawn`]).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    registry: Arc<SessionRegistry>,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn registry(&self) -> Arc<SessionRegistry> {
+        self.registry.clone()
+    }
+
+    /// Stop accepting, wake the accept loop, and join the acceptor thread.
+    /// In-flight connections finish their current request on pool threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.join.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// One connection: request/response frames until EOF, a framing error, or
+/// server shutdown (polled between frames via the socket read timeout).
+fn handle_connection(mut stream: TcpStream, registry: Arc<SessionRegistry>, stop: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let frame = match read_frame_event(&mut stream) {
+            Ok(ReadEvent::Frame(f)) => f,
+            Ok(ReadEvent::Eof) => break, // clean close between requests
+            Ok(ReadEvent::Idle) => continue, // timeout between frames: poll stop
+            Err(e) => {
+                crate::log_debug!("connection {peer}: {e}");
+                break;
+            }
+        };
+        metrics().counter("service.server.requests").inc();
+        let opcode = frame.opcode;
+        let response = match Request::decode(opcode, &frame.payload) {
+            Ok(request) => dispatch(&registry, request),
+            Err(e) => Response::Error {
+                message: format!("bad request: {e}"),
+            },
+        };
+        if matches!(response, Response::Error { .. }) {
+            metrics().counter("service.server.errors").inc();
+        }
+        let payload = response.encode();
+        if write_frame(&mut stream, opcode, response.status(), &payload).is_err() {
+            break; // peer went away mid-response
+        }
+    }
+}
+
+/// Apply one request to the registry.
+pub fn dispatch(registry: &SessionRegistry, request: Request) -> Response {
+    let result = match request {
+        Request::CreateSession {
+            name,
+            ell,
+            d,
+            shards,
+        } => registry
+            .create(&name, ell as usize, d as usize, shards as usize)
+            .map(|()| Response::Ok),
+        Request::IngestBatch {
+            session,
+            shard,
+            rows,
+        } => registry.get(&session).and_then(|s| {
+            s.ingest(shard as usize, rows)
+                .map(|rows_seen| Response::Ingested { rows_seen })
+        }),
+        Request::MergeSketch {
+            session,
+            shard,
+            state,
+        } => registry
+            .get(&session)
+            .and_then(|s| s.merge_sketch(shard as usize, &state).map(|()| Response::Ok)),
+        Request::Freeze { session } => registry
+            .get(&session)
+            .and_then(|s| s.freeze().map(Response::Frozen)),
+        Request::Score {
+            session,
+            shard,
+            batch,
+        } => registry
+            .get(&session)
+            .and_then(|s| s.score(shard as usize, &batch).map(|()| Response::Ok)),
+        Request::TopK {
+            session,
+            method,
+            k,
+            num_classes,
+            seed,
+        } => registry.get(&session).and_then(|s| {
+            let method = Method::parse(&method)?;
+            let (indices, weights) =
+                s.top_k(method, k as usize, num_classes as usize, seed)?;
+            Ok(Response::Selected {
+                indices: indices.iter().map(|&i| i as u64).collect(),
+                weights: weights.unwrap_or_default(),
+            })
+        }),
+        Request::Checkpoint { session } => registry.checkpoint(&session).map(|path| {
+            Response::Checkpointed {
+                path: path.display().to_string(),
+            }
+        }),
+        Request::Stats { session } => registry
+            .stats_pairs(&session)
+            .map(|pairs| Response::Stats { pairs }),
+        Request::CloseSession { session } => registry.close(&session).map(|()| Response::Ok),
+    };
+    match result {
+        Ok(resp) => resp,
+        Err(message) => Response::Error { message },
+    }
+}

@@ -251,6 +251,59 @@ mod tests {
     }
 
     #[test]
+    fn close_then_drain_loses_nothing_with_concurrent_senders() {
+        // The service freezes a session by closing its ingest channel while
+        // producer connections may still be mid-send. Correctness contract:
+        // every send that returned Ok() is drained by the consumer exactly
+        // once, and every send after (or interrupted by) close returns the
+        // item back via SendError — nothing is silently dropped.
+        for round in 0..20 {
+            let (tx, rx) = bounded::<usize>(2); // tiny: senders block often
+            let n_senders = 4;
+            let per = 50;
+            let mut senders = Vec::new();
+            for p in 0..n_senders {
+                let tx = tx.clone();
+                senders.push(thread::spawn(move || {
+                    let mut acked = Vec::new();
+                    for i in 0..per {
+                        let item = p * per + i;
+                        match tx.send(item) {
+                            Ok(()) => acked.push(item),
+                            Err(SendError(rejected)) => {
+                                assert_eq!(rejected, item);
+                                break; // closed mid-stream
+                            }
+                        }
+                    }
+                    acked
+                }));
+            }
+            // Consumer drains concurrently (like a session's ingest worker);
+            // `None` only after close + fully drained.
+            let consumer = thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            });
+            // Let both sides make progress, then freeze at an arbitrary point.
+            thread::sleep(Duration::from_millis(round % 5));
+            tx.close();
+            drop(tx);
+            let mut acked: Vec<usize> = senders
+                .into_iter()
+                .flat_map(|s| s.join().unwrap())
+                .collect();
+            let mut drained = consumer.join().unwrap();
+            acked.sort_unstable();
+            drained.sort_unstable();
+            assert_eq!(drained, acked, "round {round}: close lost items");
+        }
+    }
+
+    #[test]
     fn mpmc_all_items_delivered_once() {
         let (tx, rx) = bounded(4);
         let n_producers = 4;

@@ -178,6 +178,20 @@ impl Registry {
             .or_insert_with(|| Box::leak(Box::new(Histogram::new())))
     }
 
+    /// Snapshot of all counters whose name starts with `prefix`, sorted by
+    /// name. The service's per-session counters live under
+    /// `service.session.<name>.` and the `Stats` wire op reports them from
+    /// here; an empty prefix returns every counter.
+    pub fn snapshot_counters(&self, prefix: &str) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(name, _)| name.starts_with(prefix))
+            .map(|(name, c)| (name.clone(), c.get()))
+            .collect()
+    }
+
     /// Human-readable dump (sorted by name).
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -272,6 +286,18 @@ mod tests {
         assert_eq!(c1, c2);
         r.counter("x").inc();
         assert!(r.report().contains("x: 1"));
+    }
+
+    #[test]
+    fn snapshot_counters_filters_by_prefix() {
+        let r = Registry::default();
+        r.counter("service.session.a.rows").add(7);
+        r.counter("service.session.b.rows").add(9);
+        r.counter("other.rows").add(1);
+        let snap = r.snapshot_counters("service.session.a.");
+        assert_eq!(snap, vec![("service.session.a.rows".to_string(), 7)]);
+        let all = r.snapshot_counters("");
+        assert_eq!(all.len(), 3);
     }
 
     #[test]

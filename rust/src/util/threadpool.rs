@@ -14,6 +14,56 @@ use super::channel::{bounded, Sender};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Error returned by [`ThreadPool::execute`] when the worker threads are
+/// gone (pool shut down, or every worker died). Callers — the service's
+/// connection acceptor in particular — reject the work gracefully instead
+/// of crashing the submitting thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolClosed;
+
+impl std::fmt::Display for PoolClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "thread pool is shut down (worker threads gone)")
+    }
+}
+
+impl std::error::Error for PoolClosed {}
+
+/// Error returned by [`ThreadPool::try_execute`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Worker threads gone (pool shut down or every worker died).
+    Closed,
+    /// Job queue full — all workers busy and the backlog is at capacity.
+    Busy,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Closed => write!(f, "thread pool is shut down (worker threads gone)"),
+            SubmitError::Busy => write!(f, "thread pool is at capacity (queue full)"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Decrements the pool's pending-job count on drop (normal completion AND
+/// panic unwind take the same path).
+struct PendingGuard<'a>(&'a (Mutex<usize>, Condvar));
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let (lock, cv) = self.0;
+        let mut n = lock.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            cv.notify_all();
+        }
+    }
+}
+
 /// Fixed-size pool. Jobs run FIFO; `wait_idle` blocks until all submitted
 /// jobs completed (the pipeline's phase barrier).
 pub struct ThreadPool {
@@ -33,13 +83,11 @@ impl ThreadPool {
             let pending = pending.clone();
             workers.push(std::thread::spawn(move || {
                 while let Some(job) = rx.recv() {
+                    // Guard so a panicking job still decrements the pending
+                    // count during unwind — wait_idle must not deadlock on
+                    // jobs that will never report completion.
+                    let _done = PendingGuard(&*pending);
                     job();
-                    let (lock, cv) = &*pending;
-                    let mut n = lock.lock().unwrap();
-                    *n -= 1;
-                    if *n == 0 {
-                        cv.notify_all();
-                    }
                 }
             }));
         }
@@ -51,16 +99,60 @@ impl ThreadPool {
     }
 
     /// Submit a job (blocks if the queue is full — backpressure).
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+    ///
+    /// Returns `Err(PoolClosed)` instead of panicking when the worker
+    /// threads are gone (e.g. every worker died, or the pool was shut
+    /// down), so submitters can degrade gracefully.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), PoolClosed> {
         {
             let (lock, _) = &*self.pending;
             *lock.lock().unwrap() += 1;
         }
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .unwrap_or_else(|_| panic!("worker threads gone"));
+        let sent = match self.tx.as_ref() {
+            Some(tx) => tx.send(Box::new(f) as Job).is_ok(),
+            None => false,
+        };
+        if sent {
+            Ok(())
+        } else {
+            // The job never reached a worker: roll back the pending count so
+            // wait_idle does not hang forever on a job that will never run.
+            let (lock, cv) = &*self.pending;
+            let mut n = lock.lock().unwrap();
+            *n -= 1;
+            if *n == 0 {
+                cv.notify_all();
+            }
+            Err(PoolClosed)
+        }
+    }
+
+    /// Non-blocking submit: `Err(Busy)` when the queue is full instead of
+    /// blocking the caller. For submitters that must never stall — the
+    /// service's accept loop uses this so a saturated pool rejects new
+    /// connections instead of wedging accept (and shutdown) behind
+    /// long-lived connection jobs.
+    pub fn try_execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), SubmitError> {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        // The channel's try_send cannot distinguish a full queue from a
+        // closed one (all workers dead), so a dead pool also surfaces as
+        // Busy here; callers reject the work either way.
+        let outcome = match self.tx.as_ref() {
+            Some(tx) => tx.try_send(Box::new(f) as Job).map_err(|_| SubmitError::Busy),
+            None => Err(SubmitError::Closed),
+        };
+        if outcome.is_err() {
+            let (lock, cv) = &*self.pending;
+            let mut n = lock.lock().unwrap();
+            *n -= 1;
+            if *n == 0 {
+                cv.notify_all();
+            }
+        }
+        outcome
     }
 
     /// Block until every submitted job has finished.
@@ -140,10 +232,58 @@ mod tests {
             let c = counter.clone();
             pool.execute(move || {
                 c.fetch_add(1, Ordering::Relaxed);
-            });
+            })
+            .unwrap();
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn try_execute_rejects_when_queue_full() {
+        // 1 worker blocked on a gate + fill the 4-deep queue: the next
+        // try_execute must return Busy immediately instead of blocking.
+        let pool = ThreadPool::new(1);
+        let gate = Arc::new((Mutex::new(false), std::sync::Condvar::new()));
+        let g = gate.clone();
+        pool.execute(move || {
+            let (lock, cv) = &*g;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        })
+        .unwrap();
+        let mut busy = false;
+        for _ in 0..64 {
+            if pool.try_execute(|| {}) == Err(SubmitError::Busy) {
+                busy = true;
+                break;
+            }
+        }
+        assert!(busy, "queue should fill and reject");
+        // Open the gate so drop can drain the queue and join.
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn execute_rejects_gracefully_when_workers_gone() {
+        // Kill the only worker via a panicking job; subsequent submissions
+        // must return Err(PoolClosed) instead of panicking the caller.
+        let pool = ThreadPool::new(1);
+        let _ = pool.execute(|| panic!("worker down"));
+        let mut rejected = false;
+        for _ in 0..200 {
+            if pool.execute(|| {}).is_err() {
+                rejected = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(rejected, "execute should fail once the worker is gone");
     }
 
     #[test]
@@ -161,7 +301,8 @@ mod tests {
                 let c = counter.clone();
                 pool.execute(move || {
                     c.fetch_add(1, Ordering::Relaxed);
-                });
+                })
+                .unwrap();
             }
         } // drop waits for queue drain via channel close + join
         assert_eq!(counter.load(Ordering::Relaxed), 10);

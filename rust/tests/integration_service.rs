@@ -1,0 +1,285 @@
+//! Integration: the sage-serve subsystem end-to-end over real TCP.
+//!
+//! The headline test is the exactness contract: a spawned server with four
+//! concurrent client connections ingesting disjoint shards produces — via
+//! Freeze + Score + TopK — the exact same selected indices as the offline
+//! `pipeline::run_selection` on the same `(seed, workers)` configuration.
+
+use sage::config::Method;
+use sage::data::{generate, BenchmarkKind};
+use sage::grad::{MlpSpec, TrainHyper};
+use sage::pipeline::{
+    phase1_gradient_stream, phase2_score_stream, run_selection, shard_ranges, PipelineConfig,
+};
+use sage::runtime::{ModelBackend, ReferenceModelBackend};
+use sage::service::{RegistryConfig, Server, ServerConfig, ServerHandle, ServiceClient};
+use sage::sketch::{covariance_error, fd_bound, FdSketch};
+use sage::tensor::Matrix;
+use sage::util::rng::Pcg64;
+
+fn backend() -> ReferenceModelBackend {
+    ReferenceModelBackend::new(MlpSpec::new(8, 12, 10), TrainHyper::default(), 16, 16, 8)
+}
+
+fn spawn_server(registry: RegistryConfig) -> (ServerHandle, String) {
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 8,
+        registry,
+    })
+    .expect("bind server");
+    let addr = server.local_addr().to_string();
+    (server.spawn(), addr)
+}
+
+#[test]
+fn served_selection_equals_offline_run_selection() {
+    let workers = 4;
+    let n = 240;
+    let k = 60;
+    let b = backend();
+    let ds = generate(&BenchmarkKind::Cifar10.spec(8), n, 5, 0);
+    let cfg = PipelineConfig {
+        workers,
+        warmup_steps: 3,
+        seed: 7,
+        ..Default::default()
+    };
+    let offline = run_selection(&b, &ds, Method::Sage, k, &cfg, None).unwrap();
+
+    let (handle, addr) = spawn_server(RegistryConfig::default());
+    let mut control = ServiceClient::connect(&addr).unwrap();
+    control
+        .create_session("rt", b.ell(), b.spec().d(), workers)
+        .unwrap();
+
+    // Phase I: ≥ 4 concurrent client connections, one per disjoint shard.
+    let ranges = shard_ranges(n, workers);
+    assert_eq!(ranges.len(), 4);
+    let params = &offline.params;
+    let b_ref = &b;
+    let ds_ref = &ds;
+    std::thread::scope(|scope| {
+        for (shard, &range) in ranges.iter().enumerate() {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut client = ServiceClient::connect(&addr).unwrap();
+                phase1_gradient_stream(b_ref, ds_ref, params, range, |g| {
+                    client.ingest("rt", shard, g).map(|_| ())
+                })
+                .unwrap();
+            });
+        }
+    });
+
+    // Freeze merges shard sketches in shard order — byte-identical to the
+    // offline merge.
+    let frozen = control.freeze("rt").unwrap();
+    assert_eq!(frozen.sketch.rows(), offline.sketch.rows());
+    assert_eq!(frozen.sketch.as_slice(), offline.sketch.as_slice());
+    assert_eq!(frozen.shrinks, offline.shrinks);
+    assert_eq!(frozen.rows_seen, n as u64);
+
+    // Phase II: concurrent scorers per shard.
+    std::thread::scope(|scope| {
+        for (shard, &range) in ranges.iter().enumerate() {
+            let addr = addr.clone();
+            let sketch = &frozen.sketch;
+            scope.spawn(move || {
+                let mut client = ServiceClient::connect(&addr).unwrap();
+                phase2_score_stream(b_ref, ds_ref, params, sketch, range, |blk| {
+                    client.score("rt", shard, &blk)
+                })
+                .unwrap();
+            });
+        }
+    });
+
+    // Online TopK equals the offline selection exactly.
+    let (indices, weights) = control.top_k("rt", "sage", k, 10, cfg.seed).unwrap();
+    assert_eq!(indices, offline.indices);
+    assert!(weights.is_none());
+
+    // Online re-query with another method reuses the finalized scores.
+    let (cb, _) = control.top_k("rt", "cb-sage", k, 10, cfg.seed).unwrap();
+    assert_eq!(cb.len(), k);
+
+    // Stats reflect the run.
+    let stats = control.stats(Some("rt")).unwrap();
+    let get = |suffix: &str| {
+        stats
+            .iter()
+            .find(|(name, _)| name.ends_with(suffix))
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("missing stat {suffix}"))
+    };
+    assert_eq!(get(".rows_enqueued"), n as u64);
+    assert_eq!(get(".rows_applied"), n as u64);
+    assert_eq!(get(".scored_entries"), n as u64);
+    assert_eq!(get(".frozen"), 1);
+
+    handle.shutdown();
+}
+
+fn lowrankish(rng: &mut Pcg64, n: usize, d: usize, rank: usize, noise: f32) -> Matrix {
+    let u = Matrix::from_fn(n, rank, |_, _| rng.normal_f32());
+    let v = Matrix::from_fn(rank, d, |_, _| rng.normal_f32());
+    let mut g = u.matmul(&v);
+    for val in g.as_mut_slice() {
+        *val += noise * rng.normal_f32();
+    }
+    g
+}
+
+#[test]
+fn merge_sketch_path_is_deterministic_and_bounded() {
+    // Property: shard-order merge of per-shard client sketches through the
+    // service's MergeSketch op is (a) deterministic — two sessions fed the
+    // same sequence freeze to identical bytes — and (b) satisfies the FD
+    // covariance guarantee GᵀG − SᵀS ⪰ 0 within the hierarchical-merge
+    // bound, end-to-end over TCP.
+    let (handle, addr) = spawn_server(RegistryConfig::default());
+    let (ell, d, shards) = (6usize, 16usize, 3usize);
+
+    for case in 0..4u64 {
+        let mut rng = Pcg64::seeded(0xC0FFEE ^ case);
+        let shard_data: Vec<Matrix> = (0..shards)
+            .map(|_| lowrankish(&mut rng, 40, d, 4, 0.1))
+            .collect();
+
+        let mut client = ServiceClient::connect(&addr).unwrap();
+        let mut frozen = Vec::new();
+        for copy in 0..2 {
+            let name = format!("merge-{case}-{copy}");
+            client.create_session(&name, ell, d, shards).unwrap();
+            for (shard, g) in shard_data.iter().enumerate() {
+                let mut local = FdSketch::new(ell, d);
+                local.insert_batch(g);
+                client.merge_sketch(&name, shard, &local).unwrap();
+            }
+            frozen.push(client.freeze(&name).unwrap());
+            client.close_session(&name).unwrap();
+        }
+        // (a) determinism.
+        assert_eq!(
+            frozen[0].sketch.as_slice(),
+            frozen[1].sketch.as_slice(),
+            "case {case}: merge path not deterministic"
+        );
+        // (b) covariance guarantee with hierarchical-merge slack: client
+        // sketch -> shard slot merge -> freeze merge is two merge levels,
+        // each at most doubling the single-pass bound.
+        let refs: Vec<&Matrix> = shard_data.iter().collect();
+        let g = Matrix::vstack(&refs);
+        let s = &frozen[0].sketch;
+        let err = covariance_error(&g, s);
+        let min_eig = sage::sketch::covariance_diff_min_eig(&g, s);
+        assert!(
+            min_eig >= -1e-2 * err.max(1e-6),
+            "case {case}: GᵀG − SᵀS not PSD ({min_eig})"
+        );
+        let bound = 4.0 * fd_bound(&g, ell, ell / 2);
+        assert!(
+            err <= bound * (1.0 + 1e-3) + 1e-3,
+            "case {case}: covariance error {err} exceeds merge bound {bound}"
+        );
+        // The served certificate dominates the realized error.
+        assert!(
+            err <= frozen[0].shift_bound * (1.0 + 1e-3) + 1e-3,
+            "case {case}: error {err} exceeds shift bound {}",
+            frozen[0].shift_bound
+        );
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn admission_control_over_the_wire() {
+    let (handle, addr) = spawn_server(RegistryConfig {
+        max_sessions: 1,
+        ..Default::default()
+    });
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    client.create_session("only", 4, 8, 1).unwrap();
+    let err = client.create_session("second", 4, 8, 1).unwrap_err();
+    assert!(err.contains("admission"), "{err}");
+    client.close_session("only").unwrap();
+    client.create_session("second", 4, 8, 1).unwrap();
+    handle.shutdown();
+}
+
+#[test]
+fn frozen_session_rejects_ingest_and_unknown_session_errors() {
+    let (handle, addr) = spawn_server(RegistryConfig::default());
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    client.create_session("f", 2, 4, 1).unwrap();
+    client
+        .ingest("f", 0, &Matrix::from_fn(3, 4, |r, c| (r + c) as f32))
+        .unwrap();
+    client.freeze("f").unwrap();
+    let err = client.ingest("f", 0, &Matrix::zeros(1, 4)).unwrap_err();
+    assert!(err.contains("frozen"), "{err}");
+    let err = client.freeze("missing").unwrap_err();
+    assert!(err.contains("unknown session"), "{err}");
+    // TopK before any Score is a loud error, not a silent empty set.
+    let err = client.top_k("f", "sage", 5, 10, 0).unwrap_err();
+    assert!(err.contains("no scored examples"), "{err}");
+    handle.shutdown();
+}
+
+#[test]
+fn checkpoint_and_recovery_round_trip() {
+    let dir = std::env::temp_dir().join(format!("sage_srv_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let registry_cfg = RegistryConfig {
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let (handle, addr) = spawn_server(registry_cfg.clone());
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    client.create_session("persist", 4, 8, 2).unwrap();
+    let mut rng = Pcg64::seeded(42);
+    let a = Matrix::from_fn(30, 8, |_, _| rng.normal_f32());
+    let c = Matrix::from_fn(14, 8, |_, _| rng.normal_f32());
+    client.ingest("persist", 0, &a).unwrap();
+    client.ingest("persist", 1, &c).unwrap();
+    let path = client.checkpoint("persist").unwrap();
+    assert!(path.ends_with("persist.sagesess"), "{path}");
+    drop(client);
+    handle.shutdown();
+
+    // A fresh server recovers the session and freezes to the same sketch a
+    // local replica computes.
+    let (handle2, addr2) = spawn_server(registry_cfg);
+    let mut client2 = ServiceClient::connect(&addr2).unwrap();
+    let frozen = client2.freeze("persist").unwrap();
+    let mut s0 = FdSketch::new(4, 8);
+    let mut s1 = FdSketch::new(4, 8);
+    s0.insert_batch(&a);
+    s1.insert_batch(&c);
+    s0.merge(&mut s1);
+    assert_eq!(frozen.sketch.as_slice(), s0.sketch().as_slice());
+    assert_eq!(frozen.rows_seen, 44);
+    handle2.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn server_wide_stats_enumerate_sessions() {
+    let (handle, addr) = spawn_server(RegistryConfig::default());
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    client.create_session("stat-a", 2, 4, 1).unwrap();
+    client.create_session("stat-b", 2, 4, 1).unwrap();
+    let stats = client.stats(None).unwrap();
+    let find = |name: &str| stats.iter().find(|(n, _)| n == name).map(|(_, v)| *v);
+    assert_eq!(find("service.registry.sessions"), Some(2));
+    assert!(stats
+        .iter()
+        .any(|(n, _)| n.starts_with("service.session.stat-a.")));
+    assert!(stats
+        .iter()
+        .any(|(n, _)| n.starts_with("service.session.stat-b.")));
+    handle.shutdown();
+}
