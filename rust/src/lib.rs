@@ -20,7 +20,9 @@
 //! pre-compiled artifacts through the PJRT CPU client (`runtime`).
 //!
 //! Start with [`selection`] for the paper's algorithm, [`pipeline`] for the
-//! streaming system, and `examples/quickstart.rs` for the API tour.
+//! streaming system, and `examples/quickstart.rs` for the API tour. The
+//! service's design notes live in `docs/ARCHITECTURE.md`; its wire format
+//! is specified (and test-enforced) in `docs/PROTOCOL.md`.
 
 pub mod baselines;
 pub mod bench;

@@ -42,6 +42,11 @@
 //! With the same `(seed, shards)` the selected indices are byte-identical
 //! to the offline `sage select --backend reference --threads 4` — the
 //! service drives the same `pipeline` Phase-I/II loops.
+//!
+//! Service design notes live in docs/ARCHITECTURE.md (sharded registry,
+//! admission budgets, scorer spill) and docs/PROTOCOL.md (wire format,
+//! retry contract). A runnable in-process quickstart is the doc-example on
+//! `sage::service`.
 
 use sage::bench::runner::{run_cell, CellSpec};
 use sage::cli::{common_run_opts, App, Command, Opt, Parsed};
@@ -114,8 +119,10 @@ fn app() -> App {
                     Opt { name: "threads", takes_value: true, help: "connection threads", default: Some("16") },
                     Opt { name: "max-sessions", takes_value: true, help: "admission: max sessions", default: Some("64") },
                     Opt { name: "max-bytes-mb", takes_value: true, help: "admission: max resident sketch MiB", default: Some("1024") },
+                    Opt { name: "max-scorer-mb", takes_value: true, help: "admission: max resident Phase-II scorer MiB", default: Some("1024") },
+                    Opt { name: "registry-shards", takes_value: true, help: "session registry shards (rounded to a power of two, max 256)", default: Some("8") },
                     Opt { name: "queue-depth", takes_value: true, help: "per-session ingest queue depth", default: Some("8") },
-                    Opt { name: "checkpoint-dir", takes_value: true, help: "session checkpoint/recovery dir", default: None },
+                    Opt { name: "checkpoint-dir", takes_value: true, help: "session checkpoint/recovery + scorer spill dir", default: None },
                 ],
             },
             Command {
@@ -381,6 +388,8 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
         registry: sage::service::RegistryConfig {
             max_sessions: p.get_usize("max-sessions")?.unwrap_or(64).max(1),
             max_resident_bytes: p.get_usize("max-bytes-mb")?.unwrap_or(1024) << 20,
+            max_scorer_bytes: p.get_usize("max-scorer-mb")?.unwrap_or(1024) << 20,
+            registry_shards: p.get_usize("registry-shards")?.unwrap_or(8).max(1),
             ingest_queue_depth: p.get_usize("queue-depth")?.unwrap_or(8).max(1),
             checkpoint_dir: p.get("checkpoint-dir").map(std::path::PathBuf::from),
         },

@@ -20,7 +20,10 @@ mod scorer;
 pub mod streaming;
 mod topk;
 
-pub use scorer::{AgreementScorer, ScoreEntry, Scores};
+pub use scorer::{
+    scorer_state_bytes, scores_state_bytes, AgreementScorer, ScoreEntry, ScorerState, Scores,
+    ScoresState, ENTRY_BYTES,
+};
 pub use streaming::{streaming_select, ConsensusAccumulator, StreamingSelector};
 pub use topk::{top_k_indices, TopK};
 

@@ -1,6 +1,40 @@
-//! Streaming consensus accumulation + agreement scoring.
+//! Streaming consensus accumulation + agreement scoring (Phase II).
+//!
+//! [`AgreementScorer`] accumulates normalized projections in a streaming
+//! pass and [`Scores`] is its finalized output. Both have bit-exact
+//! serializable forms ([`ScorerState`], [`ScoresState`]) so the service can
+//! checkpoint, spill, and recover Phase-II state without perturbing ranks:
+//! the consensus accumulators are `f64` and round-trip as raw bits.
+//!
+//! The resident footprint of scorer state is `O(Nℓ)` (one cached ℓ-dim row
+//! plus [`ENTRY_BYTES`] of metadata per scored example). The service's
+//! admission control accounts it with [`scorer_state_bytes`] /
+//! [`scores_state_bytes`] — keep those formulas in sync with the struct
+//! layouts below.
 
 use crate::tensor::{self, Matrix};
+
+/// Accounted metadata bytes per scored example (index 8 + label 4 + norm 4
+/// + loss 4 + alpha 4) — the unit of the service's scorer-byte admission
+/// formula, deliberately layout-independent.
+pub const ENTRY_BYTES: usize = 24;
+
+/// Resident/serialized bytes of an [`AgreementScorer`] holding `n` entries
+/// of ℓ-dim rows: `n·(ENTRY_BYTES + 4ℓ)` for entries + cached rows, plus
+/// `8ℓ` for the f64 consensus accumulator.
+pub fn scorer_state_bytes(n: usize, ell: usize) -> usize {
+    n.saturating_mul(ENTRY_BYTES + 4 * ell)
+        .saturating_add(8 * ell)
+}
+
+/// Resident/serialized bytes of finalized [`Scores`] over `n` entries:
+/// `n·(ENTRY_BYTES + 4ℓ)` for entries + the ẑ cache, plus `4ℓ` for the f32
+/// consensus direction. Never exceeds [`scorer_state_bytes`] for the same
+/// `n`, so finalizing can only shrink the admission footprint.
+pub fn scores_state_bytes(n: usize, ell: usize) -> usize {
+    n.saturating_mul(ENTRY_BYTES + 4 * ell)
+        .saturating_add(4 * ell)
+}
 
 /// Metadata for one scored example.
 #[derive(Clone, Copy, Debug)]
@@ -24,6 +58,97 @@ pub struct Scores {
     pub entries: Vec<ScoreEntry>,
     /// Cached normalized projections, row r ↔ entries[r].
     pub zhat: Matrix,
+}
+
+/// Bit-exact serializable form of an (un-finalized) [`AgreementScorer`] —
+/// the service's checkpoint/spill representation of raw Phase-II state.
+/// Fields are parallel arrays over the scored entries; `rows` is the
+/// flattened `count × ℓ` ẑ cache. Entry `alpha` values are not carried
+/// (they are 0 until finalize fills them).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScorerState {
+    pub ell: u32,
+    pub count: u64,
+    /// f64 consensus accumulator — raw-bit round-trip keeps ranks exact.
+    pub consensus_acc: Vec<f64>,
+    pub indices: Vec<u64>,
+    pub labels: Vec<u32>,
+    pub norms: Vec<f32>,
+    pub losses: Vec<f32>,
+    pub rows: Vec<f32>,
+}
+
+/// Bit-exact serializable form of finalized [`Scores`] (the TopK cache).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoresState {
+    pub ell: u32,
+    pub consensus: Vec<f32>,
+    pub indices: Vec<u64>,
+    pub labels: Vec<u32>,
+    pub norms: Vec<f32>,
+    pub losses: Vec<f32>,
+    pub alphas: Vec<f32>,
+    /// `n × ℓ` cached normalized projections, row r ↔ indices[r].
+    pub zhat: Matrix,
+}
+
+impl Scores {
+    /// Accounted resident bytes of this cache ([`scores_state_bytes`]).
+    pub fn state_bytes(&self) -> usize {
+        scores_state_bytes(self.entries.len(), self.ell)
+    }
+
+    /// Export into the serializable checkpoint form. Bit-exact inverse of
+    /// [`Scores::from_state`].
+    pub fn export_state(&self) -> ScoresState {
+        ScoresState {
+            ell: self.ell as u32,
+            consensus: self.consensus.clone(),
+            indices: self.entries.iter().map(|e| e.index as u64).collect(),
+            labels: self.entries.iter().map(|e| e.label).collect(),
+            norms: self.entries.iter().map(|e| e.norm).collect(),
+            losses: self.entries.iter().map(|e| e.loss).collect(),
+            alphas: self.entries.iter().map(|e| e.alpha).collect(),
+            zhat: self.zhat.clone(),
+        }
+    }
+
+    /// Rebuild finalized scores from a checkpoint.
+    ///
+    /// # Errors
+    /// Rejects states whose parallel arrays or ẑ matrix dims disagree.
+    pub fn from_state(state: &ScoresState) -> Result<Scores, String> {
+        let ell = state.ell as usize;
+        if ell == 0 {
+            return Err("scores state: ell must be positive".into());
+        }
+        let n = state.indices.len();
+        if state.labels.len() != n
+            || state.norms.len() != n
+            || state.losses.len() != n
+            || state.alphas.len() != n
+            || state.consensus.len() != ell
+            || state.zhat.rows() != n
+            || state.zhat.cols() != ell
+        {
+            return Err("scores state: field lengths disagree".into());
+        }
+        let entries = (0..n)
+            .map(|r| ScoreEntry {
+                index: state.indices[r] as usize,
+                label: state.labels[r],
+                norm: state.norms[r],
+                loss: state.losses[r],
+                alpha: state.alphas[r],
+            })
+            .collect();
+        Ok(Scores {
+            ell,
+            consensus: state.consensus.clone(),
+            entries,
+            zhat: state.zhat.clone(),
+        })
+    }
 }
 
 /// Accumulates normalized projections ẑ_i and the running mean z̄ in a
@@ -54,6 +179,66 @@ impl AgreementScorer {
 
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    /// Accounted resident bytes of this scorer ([`scorer_state_bytes`]) —
+    /// grows by `ENTRY_BYTES + 4ℓ` per scored entry.
+    pub fn state_bytes(&self) -> usize {
+        scorer_state_bytes(self.entries.len(), self.ell)
+    }
+
+    /// Export into the serializable checkpoint form. Bit-exact inverse of
+    /// [`AgreementScorer::from_state`]: a recovered scorer finalizes to the
+    /// same ranks as the original.
+    pub fn export_state(&self) -> ScorerState {
+        ScorerState {
+            ell: self.ell as u32,
+            count: self.count,
+            consensus_acc: self.consensus_acc.clone(),
+            indices: self.entries.iter().map(|e| e.index as u64).collect(),
+            labels: self.entries.iter().map(|e| e.label).collect(),
+            norms: self.entries.iter().map(|e| e.norm).collect(),
+            losses: self.entries.iter().map(|e| e.loss).collect(),
+            rows: self.rows.clone(),
+        }
+    }
+
+    /// Rebuild a scorer from a checkpoint.
+    ///
+    /// # Errors
+    /// Rejects states whose parallel arrays, row cache, or accumulator
+    /// dims disagree.
+    pub fn from_state(state: &ScorerState) -> Result<AgreementScorer, String> {
+        let ell = state.ell as usize;
+        if ell == 0 {
+            return Err("scorer state: ell must be positive".into());
+        }
+        let n = state.indices.len();
+        if state.count != n as u64
+            || state.labels.len() != n
+            || state.norms.len() != n
+            || state.losses.len() != n
+            || state.consensus_acc.len() != ell
+            || state.rows.len() != n.saturating_mul(ell)
+        {
+            return Err("scorer state: field lengths disagree".into());
+        }
+        let entries = (0..n)
+            .map(|r| ScoreEntry {
+                index: state.indices[r] as usize,
+                label: state.labels[r],
+                norm: state.norms[r],
+                loss: state.losses[r],
+                alpha: 0.0, // filled by finalize
+            })
+            .collect();
+        Ok(AgreementScorer {
+            ell,
+            consensus_acc: state.consensus_acc.clone(),
+            count: state.count,
+            entries,
+            rows: state.rows.clone(),
+        })
     }
 
     /// Add a batch of *already normalized* projections (`zhat [b × ℓ]`,
@@ -216,5 +401,88 @@ mod tests {
         let mut scorer = AgreementScorer::new(3);
         let z = Matrix::zeros(1, 2);
         scorer.add_batch(&[0], &[0], &z, &[1.0], &[1.0]);
+    }
+
+    fn populated_scorer(rng: &mut crate::util::rng::Pcg64, n: usize, ell: usize) -> AgreementScorer {
+        let mut scorer = AgreementScorer::new(ell);
+        let mut z = Matrix::zeros(n, ell);
+        let mut norms = vec![0.0f32; n];
+        for i in 0..n {
+            let row = z.row_mut(i);
+            rng.fill_normal(row, 1.0);
+            norms[i] = tensor::normalize_in_place(row) as f32;
+        }
+        let idx: Vec<usize> = (0..n).collect();
+        let labels: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
+        scorer.add_batch(&idx, &labels, &z, &norms, &vec![0.5; n]);
+        scorer
+    }
+
+    #[test]
+    fn scorer_state_round_trip_finalizes_identically() {
+        let mut rng = crate::util::rng::Pcg64::seeded(17);
+        let scorer = populated_scorer(&mut rng, 33, 5);
+        let state = scorer.export_state();
+        assert_eq!(state.count, 33);
+        let back = AgreementScorer::from_state(&state).unwrap();
+        assert_eq!(back.export_state(), state); // bit-exact both ways
+        let s1 = scorer.finalize();
+        let s2 = back.finalize();
+        assert_eq!(s1.consensus, s2.consensus);
+        for (a, b) in s1.entries.iter().zip(&s2.entries) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.alpha.to_bits(), b.alpha.to_bits());
+        }
+    }
+
+    #[test]
+    fn scores_state_round_trip_is_bit_exact() {
+        let mut rng = crate::util::rng::Pcg64::seeded(23);
+        let scores = populated_scorer(&mut rng, 21, 4).finalize();
+        let state = scores.export_state();
+        let back = Scores::from_state(&state).unwrap();
+        assert_eq!(back.export_state(), state);
+        assert_eq!(back.zhat.as_slice(), scores.zhat.as_slice());
+        for (a, b) in scores.entries.iter().zip(&back.entries) {
+            assert_eq!(a.alpha.to_bits(), b.alpha.to_bits());
+        }
+    }
+
+    #[test]
+    fn state_validation_rejects_inconsistent_fields() {
+        let mut rng = crate::util::rng::Pcg64::seeded(29);
+        let scorer = populated_scorer(&mut rng, 8, 3);
+        let mut st = scorer.export_state();
+        st.labels.pop();
+        assert!(AgreementScorer::from_state(&st).is_err());
+        let mut st2 = scorer.export_state();
+        st2.rows.pop();
+        assert!(AgreementScorer::from_state(&st2).is_err());
+        let mut st3 = scorer.export_state();
+        st3.ell = 0;
+        assert!(AgreementScorer::from_state(&st3).is_err());
+
+        let scores = populated_scorer(&mut rng, 8, 3).finalize();
+        let mut ss = scores.export_state();
+        ss.alphas.pop();
+        assert!(Scores::from_state(&ss).is_err());
+    }
+
+    #[test]
+    fn byte_accounting_formulas_track_growth() {
+        let mut rng = crate::util::rng::Pcg64::seeded(31);
+        let ell = 6;
+        let fresh = AgreementScorer::new(ell);
+        assert_eq!(fresh.state_bytes(), scorer_state_bytes(0, ell));
+        assert_eq!(scorer_state_bytes(0, ell), 8 * ell);
+        let scorer = populated_scorer(&mut rng, 10, ell);
+        assert_eq!(
+            scorer.state_bytes(),
+            10 * (ENTRY_BYTES + 4 * ell) + 8 * ell
+        );
+        let scores = populated_scorer(&mut rng, 10, ell).finalize();
+        assert_eq!(scores.state_bytes(), scores_state_bytes(10, ell));
+        // Finalizing never grows the accounted footprint.
+        assert!(scores.state_bytes() <= scorer.state_bytes());
     }
 }

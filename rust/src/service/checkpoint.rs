@@ -3,12 +3,21 @@
 //! magic header, little-endian body, FNV-64 trailer, atomic tmp+rename
 //! writes. A torn write never recovers silently.
 //!
+//! Version 2 appends the session's Phase-II state (per-shard
+//! [`ScorerState`] slots and the finalized [`ScoresState`] cache) so a
+//! checkpoint→recover cycle restores scoring **bit-exactly**: the f64
+//! consensus accumulators round-trip as raw bits and a recovered session's
+//! TopK equals the pre-crash TopK. The same file doubles as the spill
+//! target when the registry evicts score caches under scorer-budget
+//! pressure (see `service::registry`). Version-1 files (no Phase-II
+//! section) still load; scoring then starts fresh.
+//!
 //! Layout:
 //!
 //! ```text
 //! magic    8B   "SAGESES1"
 //! body          PayloadWriter fields:
-//!   version u32
+//!   version u32   (2; readers accept 1)
 //!   name    str
 //!   ell     u32
 //!   d       u32
@@ -17,19 +26,25 @@
 //!   if frozen == 0:  shards × SketchState
 //!   if frozen == 1:  sketch matrix + shift_bound f64 + shrinks u64
 //!                    + rows_seen u64 + sketch_bytes u64
+//!   -- version ≥ 2 only --
+//!   scorer_slots u32
+//!   scorer_slots × (present u8; if 1: ScorerState fields)
+//!   scores_present u8; if 1: ScoresState fields
 //! fnv64    8B   checksum of magic + body
 //! ```
 
 use super::protocol::{fnv64, FrozenSketch, PayloadReader, PayloadWriter};
+use crate::selection::{ScorerState, ScoresState};
 use crate::sketch::SketchState;
 use std::io::Write;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"SAGESES1";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// Durable snapshot of one session (either still ingesting — per-shard
-/// sketch states — or frozen — the merged sketch and its certificate).
+/// Durable snapshot of one session: Phase-I state (either still ingesting —
+/// per-shard sketch states — or frozen — the merged sketch and its
+/// certificate) plus the Phase-II scorer state (v2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SessionCheckpoint {
     pub name: String,
@@ -39,6 +54,59 @@ pub struct SessionCheckpoint {
     /// Per-shard sketch states; empty when `frozen` is set.
     pub shard_states: Vec<SketchState>,
     pub frozen: Option<FrozenSketch>,
+    /// Per-shard Phase-II scorer slots (`None` once finalized). Empty for
+    /// legacy v1 files — recovery then starts scoring fresh.
+    pub scorers: Vec<Option<ScorerState>>,
+    /// Finalized score cache, present after a served TopK finalized scores.
+    pub scores: Option<ScoresState>,
+}
+
+fn write_scorer_state(w: &mut PayloadWriter, st: &ScorerState) {
+    w.put_u32(st.ell);
+    w.put_u64(st.count);
+    w.put_f64_slice(&st.consensus_acc);
+    w.put_u64_slice(&st.indices);
+    w.put_u32_slice(&st.labels);
+    w.put_f32_slice(&st.norms);
+    w.put_f32_slice(&st.losses);
+    w.put_f32_slice(&st.rows);
+}
+
+fn read_scorer_state(r: &mut PayloadReader<'_>) -> Result<ScorerState, String> {
+    Ok(ScorerState {
+        ell: r.u32()?,
+        count: r.u64()?,
+        consensus_acc: r.f64_slice()?,
+        indices: r.u64_slice()?,
+        labels: r.u32_slice()?,
+        norms: r.f32_slice()?,
+        losses: r.f32_slice()?,
+        rows: r.f32_slice()?,
+    })
+}
+
+fn write_scores_state(w: &mut PayloadWriter, st: &ScoresState) {
+    w.put_u32(st.ell);
+    w.put_f32_slice(&st.consensus);
+    w.put_u64_slice(&st.indices);
+    w.put_u32_slice(&st.labels);
+    w.put_f32_slice(&st.norms);
+    w.put_f32_slice(&st.losses);
+    w.put_f32_slice(&st.alphas);
+    w.put_matrix(&st.zhat);
+}
+
+fn read_scores_state(r: &mut PayloadReader<'_>) -> Result<ScoresState, String> {
+    Ok(ScoresState {
+        ell: r.u32()?,
+        consensus: r.f32_slice()?,
+        indices: r.u64_slice()?,
+        labels: r.u32_slice()?,
+        norms: r.f32_slice()?,
+        losses: r.f32_slice()?,
+        alphas: r.f32_slice()?,
+        zhat: r.matrix()?,
+    })
 }
 
 impl SessionCheckpoint {
@@ -72,10 +140,32 @@ impl SessionCheckpoint {
                 w.put_u64(f.sketch_bytes);
             }
         }
+        // v2 Phase-II section.
+        w.put_u32(self.scorers.len() as u32);
+        for slot in &self.scorers {
+            match slot {
+                Some(st) => {
+                    w.put_u8(1);
+                    write_scorer_state(&mut w, st);
+                }
+                None => w.put_u8(0),
+            }
+        }
+        match &self.scores {
+            Some(st) => {
+                w.put_u8(1);
+                write_scores_state(&mut w, st);
+            }
+            None => w.put_u8(0),
+        }
         w.into_bytes()
     }
 
     /// Write atomically (tmp file + rename), creating parent dirs.
+    ///
+    /// # Errors
+    /// I/O failures creating the directory, writing the tmp file, or
+    /// renaming it into place.
     pub fn save(&self, path: &Path) -> Result<(), String> {
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
@@ -100,6 +190,11 @@ impl SessionCheckpoint {
         std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
     }
 
+    /// Load and verify a checkpoint (v1 or v2).
+    ///
+    /// # Errors
+    /// I/O failures, checksum mismatches (torn writes), bad magic,
+    /// unsupported versions, and malformed bodies.
     pub fn load(path: &Path) -> Result<SessionCheckpoint, String> {
         let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
         if bytes.len() < 8 + 8 {
@@ -115,8 +210,10 @@ impl SessionCheckpoint {
         }
         let mut r = PayloadReader::new(&body_with_magic[8..]);
         let version = r.u32()?;
-        if version != VERSION {
-            return Err(format!("session checkpoint version {version} != {VERSION}"));
+        if version == 0 || version > VERSION {
+            return Err(format!(
+                "session checkpoint version {version} unsupported (max {VERSION})"
+            ));
         }
         let name = r.str()?;
         let ell = r.u32()?;
@@ -151,6 +248,32 @@ impl SessionCheckpoint {
             }
             other => return Err(format!("session checkpoint: bad frozen tag {other}")),
         };
+        let (scorers, scores) = if version >= 2 {
+            let slots = r.u32()? as usize;
+            if slots > shards as usize {
+                return Err(format!(
+                    "session checkpoint: {slots} scorer slots for {shards} shards"
+                ));
+            }
+            let mut scorers = Vec::with_capacity(slots.min(1024));
+            for _ in 0..slots {
+                scorers.push(match r.u8()? {
+                    0 => None,
+                    1 => Some(read_scorer_state(&mut r)?),
+                    other => {
+                        return Err(format!("session checkpoint: bad scorer tag {other}"))
+                    }
+                });
+            }
+            let scores = match r.u8()? {
+                0 => None,
+                1 => Some(read_scores_state(&mut r)?),
+                other => return Err(format!("session checkpoint: bad scores tag {other}")),
+            };
+            (scorers, scores)
+        } else {
+            (Vec::new(), None)
+        };
         r.finish()?;
         Ok(SessionCheckpoint {
             name,
@@ -159,6 +282,8 @@ impl SessionCheckpoint {
             shards,
             shard_states,
             frozen,
+            scorers,
+            scores,
         })
     }
 }
@@ -166,6 +291,7 @@ impl SessionCheckpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::selection::AgreementScorer;
     use crate::sketch::FdSketch;
     use crate::tensor::Matrix;
     use std::path::PathBuf;
@@ -186,23 +312,47 @@ mod tests {
             shards: 2,
             shard_states: vec![s0.export_state(), s1.export_state()],
             frozen: None,
+            scorers: vec![
+                Some(AgreementScorer::new(2).export_state()),
+                Some(AgreementScorer::new(2).export_state()),
+            ],
+            scores: None,
         }
     }
 
-    fn frozen_sample() -> SessionCheckpoint {
+    fn scored_sample() -> SessionCheckpoint {
+        let mut rng = crate::util::rng::Pcg64::seeded(77);
+        let ell = 3usize;
+        let mk_scorer = |rng: &mut crate::util::rng::Pcg64, n: usize| {
+            let mut scorer = AgreementScorer::new(ell);
+            let mut z = Matrix::zeros(n, ell);
+            let mut norms = vec![0.0f32; n];
+            for i in 0..n {
+                let row = z.row_mut(i);
+                rng.fill_normal(row, 1.0);
+                norms[i] = crate::tensor::normalize_in_place(row) as f32;
+            }
+            let idx: Vec<usize> = (0..n).collect();
+            let labels: Vec<u32> = (0..n).map(|i| (i % 2) as u32).collect();
+            scorer.add_batch(&idx, &labels, &z, &norms, &vec![1.0; n]);
+            scorer
+        };
+        let finalized = mk_scorer(&mut rng, 9).finalize();
         SessionCheckpoint {
             name: "frz".into(),
-            ell: 2,
+            ell: ell as u32,
             d: 4,
             shards: 2,
             shard_states: Vec::new(),
             frozen: Some(FrozenSketch {
-                sketch: Matrix::from_fn(2, 4, |r, c| (r * 4 + c) as f32),
+                sketch: Matrix::from_fn(ell, 4, |r, c| (r * 4 + c) as f32),
                 shift_bound: 0.5,
                 shrinks: 2,
                 rows_seen: 8,
-                sketch_bytes: 64,
+                sketch_bytes: 96,
             }),
+            scorers: vec![Some(mk_scorer(&mut rng, 7).export_state()), None],
+            scores: Some(finalized.export_state()),
         }
     }
 
@@ -217,12 +367,59 @@ mod tests {
     }
 
     #[test]
-    fn frozen_round_trip() {
+    fn scored_round_trip_is_bit_exact() {
         let path = tmp("frz");
-        let ck = frozen_sample();
+        let ck = scored_sample();
         ck.save(&path).unwrap();
         let back = SessionCheckpoint::load(&path).unwrap();
         assert_eq!(back, ck);
+        // f64 consensus accumulators survive as raw bits.
+        let orig = ck.scorers[0].as_ref().unwrap();
+        let rec = back.scorers[0].as_ref().unwrap();
+        for (a, b) in orig.consensus_acc.iter().zip(&rec.consensus_acc) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn legacy_v1_body_loads_without_scorer_section() {
+        // Hand-build a v1 body (no Phase-II section) and verify it loads
+        // with empty scorer state — recovery of old checkpoints must not
+        // break when the format moves forward.
+        let path = tmp("v1");
+        let f = FrozenSketch {
+            sketch: Matrix::from_fn(2, 4, |r, c| (r * 4 + c) as f32),
+            shift_bound: 0.25,
+            shrinks: 1,
+            rows_seen: 6,
+            sketch_bytes: 64,
+        };
+        let mut w = PayloadWriter::new();
+        w.put_u32(1); // version 1
+        w.put_str("old");
+        w.put_u32(2);
+        w.put_u32(4);
+        w.put_u32(1);
+        w.put_u8(1);
+        w.put_matrix(&f.sketch);
+        w.put_f64(f.shift_bound);
+        w.put_u64(f.shrinks);
+        w.put_u64(f.rows_seen);
+        w.put_u64(f.sketch_bytes);
+        let body = w.into_bytes();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&body);
+        let sum = fnv64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &out).unwrap();
+
+        let back = SessionCheckpoint::load(&path).unwrap();
+        assert_eq!(back.name, "old");
+        assert_eq!(back.frozen, Some(f));
+        assert!(back.scorers.is_empty());
+        assert!(back.scores.is_none());
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -243,10 +440,28 @@ mod tests {
     #[test]
     fn truncation_detected() {
         let path = tmp("trunc");
-        frozen_sample().save(&path).unwrap();
+        scored_sample().save(&path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 11]).unwrap();
         assert!(SessionCheckpoint::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let path = tmp("future");
+        scored_sample().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Version field is the first u32 after the 8-byte magic.
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let body_len = bytes.len() - 8;
+        let sum = fnv64(&bytes[..body_len]);
+        let end = bytes.len();
+        bytes[body_len..end].copy_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(SessionCheckpoint::load(&path)
+            .unwrap_err()
+            .contains("version"));
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -11,6 +11,18 @@
 //! score("run1", shard, block) ...             (Phase II, per batch)
 //! top_k("run1", "sage", k, classes, seed)     (online selection query)
 //! ```
+//!
+//! # Saturated-server backoff contract
+//!
+//! A server whose connection pool is saturated ACCEPTS the TCP connection,
+//! writes exactly one error frame (opcode 0, status 1, message prefixed
+//! `connection rejected`) and closes it — see docs/PROTOCOL.md
+//! §"Connection rejection and retry". That frame is a *retryable* signal:
+//! close the socket, wait `base × 2^attempt` (capped), reconnect, resend.
+//! [`request_with_retry`] implements the contract for one-shot requests;
+//! [`is_rejection`] classifies error messages for long-lived clients that
+//! manage their own connections. Application errors (status 1 on the
+//! echoed request opcode) are never retryable.
 
 use super::protocol::{
     encode_ingest_batch, encode_score, op, read_frame, write_frame, FrozenSketch, Request,
@@ -21,12 +33,70 @@ use crate::sketch::FdSketch;
 use crate::tensor::Matrix;
 use std::net::TcpStream;
 
+/// Whether an error message is the server's retryable connection-shed
+/// signal (see the module docs' backoff contract).
+pub fn is_rejection(message: &str) -> bool {
+    message.starts_with("connection rejected")
+}
+
+/// Ceiling on the exponential backoff between retry attempts.
+const RETRY_BACKOFF_CAP: std::time::Duration = std::time::Duration::from_secs(2);
+
+/// One-shot request with the documented saturated-server backoff: connect,
+/// send `request`, and on a connection-shed rejection (or a transport
+/// error, which shedding can race into — the server may reset the socket
+/// before the rejection frame is read) close, wait `base × 2^attempt`
+/// (capped at 2 s), and retry on a fresh connection.
+///
+/// Transport errors are retried too, so reserve this helper for idempotent
+/// requests (CreateSession, Freeze, TopK, Stats, Checkpoint, Close);
+/// a retried `IngestBatch`/`Score` whose first attempt was applied but
+/// whose response was lost would double-count.
+///
+/// Like [`ServiceClient::request`], a non-rejection application error
+/// frame is returned as `Ok(Response::Error { .. })` without retrying
+/// (resending would yield the same error) — match on the response.
+///
+/// # Errors
+/// Only exhaustion: the last rejection/connect/transport error once
+/// `attempts` are used up.
+pub fn request_with_retry(
+    addr: &str,
+    request: &Request,
+    attempts: u32,
+    base: std::time::Duration,
+) -> Result<Response, String> {
+    let attempts = attempts.max(1);
+    let mut last = String::from("no attempts made");
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            let backoff = base
+                .saturating_mul(1u32 << (attempt - 1).min(16))
+                .min(RETRY_BACKOFF_CAP);
+            std::thread::sleep(backoff);
+        }
+        match ServiceClient::connect(addr) {
+            Ok(mut client) => match client.request(request) {
+                Ok(Response::Error { message }) if is_rejection(&message) => last = message,
+                Ok(response) => return Ok(response),
+                Err(e) => last = e,
+            },
+            Err(e) => last = e,
+        }
+    }
+    Err(format!("request failed after {attempts} attempts: {last}"))
+}
+
 /// Blocking `sage-serve` client (not thread-safe; one per connection).
 pub struct ServiceClient {
     stream: TcpStream,
 }
 
 impl ServiceClient {
+    /// Open one connection (TCP_NODELAY — the protocol is request/response).
+    ///
+    /// # Errors
+    /// Connection failures (the OS error, prefixed with the address).
     pub fn connect(addr: &str) -> Result<ServiceClient, String> {
         let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
         let _ = stream.set_nodelay(true);

@@ -4,27 +4,64 @@
 //! this subsystem promotes the FD sketch from a local variable to a served,
 //! sessioned resource: external producers stream gradients in over a
 //! length-prefixed binary protocol, and consumers run online selection
-//! queries (Freeze / Score / TopK) against the evolving state.
+//! queries (Freeze / Score / TopK) against the evolving state. The full
+//! design is written up in docs/ARCHITECTURE.md; the wire format in
+//! docs/PROTOCOL.md.
 //!
 //! Layers:
 //! * [`protocol`] — versioned, checksummed wire frames and the typed op
 //!   surface (CreateSession / IngestBatch / MergeSketch / Freeze / Score /
 //!   TopK / Checkpoint / Stats / CloseSession).
-//! * [`registry`] — concurrent session registry: per-session bounded-channel
-//!   ingest with backpressure, shard-ordered deterministic merges, admission
-//!   control (max sessions, max resident ℓ×D bytes).
+//! * [`registry`] — **sharded** session registry (power-of-two shard array
+//!   keyed by session-name hash, per-shard `RwLock`, no cross-shard lock
+//!   ever held) with exact lock-free admission control over three budgets:
+//!   session slots, resident ℓ×D sketch bytes, and resident O(Nℓ) Phase-II
+//!   scorer bytes. Scorer state spills to disk under budget pressure and
+//!   reloads transparently.
 //! * [`checkpoint`] — session persistence/recovery (FNV-checksummed,
-//!   atomic-rename framing in the style of `trainer::checkpoint`).
+//!   atomic-rename framing in the style of `trainer::checkpoint`); v2
+//!   round-trips Phase-II scorer state bit-exactly.
 //! * [`server`] — TCP accept loop, thread-per-connection on
-//!   `util::threadpool`, graceful rejection when the pool is gone.
-//! * [`client`] — blocking client used by the CLI, the example, and tests.
+//!   `util::threadpool`, graceful load-shedding when the pool is
+//!   saturated (one `connection rejected` error frame, then close).
+//! * [`client`] — blocking client used by the CLI, the example, and tests,
+//!   plus the documented retry/backoff helper
+//!   [`client::request_with_retry`].
 //!
 //! Exactness contract: a session fed shard-by-shard through
 //! `pipeline::phase1_gradient_stream` / `phase2_score_stream` (one producer
 //! per shard, shards assigned by `pipeline::shard_ranges`) yields the SAME
 //! selected indices as `pipeline::run_selection` for the same
 //! `(seed, workers)` configuration — verified end-to-end by
-//! `tests/integration_service.rs`.
+//! `tests/integration_service.rs`, including across registry shards and
+//! through a checkpoint→recover cycle.
+//!
+//! # Quickstart (in-process)
+//!
+//! ```
+//! use sage::service::{RegistryConfig, Server, ServerConfig, ServiceClient};
+//! use sage::tensor::Matrix;
+//!
+//! let server = Server::bind(&ServerConfig {
+//!     addr: "127.0.0.1:0".into(), // port 0: pick a free port
+//!     threads: 2,
+//!     registry: RegistryConfig::default(),
+//! })
+//! .unwrap();
+//! let addr = server.local_addr().to_string();
+//! let handle = server.spawn();
+//!
+//! let mut client = ServiceClient::connect(&addr).unwrap();
+//! client.create_session("quickstart", 4, 8, 1).unwrap();
+//! client
+//!     .ingest("quickstart", 0, &Matrix::from_fn(16, 8, |r, c| (r + c) as f32))
+//!     .unwrap();
+//! let frozen = client.freeze("quickstart").unwrap();
+//! assert_eq!(frozen.rows_seen, 16);
+//! assert_eq!(frozen.sketch.rows(), 4);
+//! client.close_session("quickstart").unwrap();
+//! handle.shutdown();
+//! ```
 
 pub mod checkpoint;
 pub mod client;
@@ -33,7 +70,9 @@ pub mod registry;
 pub mod server;
 
 pub use checkpoint::SessionCheckpoint;
-pub use client::ServiceClient;
+pub use client::{is_rejection, request_with_retry, ServiceClient};
 pub use protocol::{FrozenSketch, Request, Response, ScoreBatch};
-pub use registry::{RegistryConfig, Session, SessionRegistry};
+pub use registry::{
+    ByteBudget, RegistryConfig, Session, SessionRegistry, SCORER_ADMISSION,
+};
 pub use server::{Server, ServerConfig, ServerHandle};

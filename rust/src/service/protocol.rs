@@ -73,6 +73,9 @@ pub fn encode_frame(opcode: u8, status: u16, payload: &[u8]) -> Vec<u8> {
 /// Write one frame. Rejects payloads over [`MAX_PAYLOAD`] locally with a
 /// descriptive error — the receiver would tear the connection on them
 /// anyway, and above u32 range the length field would silently truncate.
+///
+/// # Errors
+/// Over-cap payloads and I/O failures on write/flush.
 pub fn write_frame(
     w: &mut impl Write,
     opcode: u8,
@@ -101,8 +104,12 @@ pub enum ReadEvent {
     Idle,
 }
 
-/// Read one frame. `Ok(None)` on clean EOF before any header byte; `Err`
-/// on anything torn (including an idle timeout on a timeout-less reader).
+/// Read one frame. `Ok(None)` on clean EOF before any header byte.
+///
+/// # Errors
+/// Anything torn: bad magic, version mismatch, over-cap length, truncated
+/// payload/checksum, checksum mismatch, I/O errors, and an idle timeout on
+/// a reader without timeout handling (use [`read_frame_event`] to poll).
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, String> {
     match read_frame_event(r)? {
         ReadEvent::Frame(f) => Ok(Some(f)),
@@ -268,6 +275,13 @@ impl PayloadWriter {
         }
     }
 
+    pub fn put_f64_slice(&mut self, xs: &[f64]) {
+        self.put_u64(xs.len() as u64);
+        for &v in xs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
     pub fn put_matrix(&mut self, m: &Matrix) {
         self.put_u32(m.rows() as u32);
         self.put_u32(m.cols() as u32);
@@ -356,6 +370,15 @@ impl<'a> PayloadReader<'a> {
         Ok(bytes
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn f64_slice(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.slice_len()?;
+        let bytes = self.take(n * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
 
@@ -582,6 +605,11 @@ impl Request {
         w.into_bytes()
     }
 
+    /// Decode a request payload for `opcode`.
+    ///
+    /// # Errors
+    /// Unknown opcodes and malformed payloads (wrong field layout,
+    /// out-of-bounds reads, bad UTF-8, trailing bytes).
     pub fn decode(opcode: u8, payload: &[u8]) -> Result<Request, String> {
         let mut r = PayloadReader::new(payload);
         let req = match opcode {
@@ -727,6 +755,10 @@ impl Response {
         w.into_bytes()
     }
 
+    /// Decode a response payload (kind tag + fields).
+    ///
+    /// # Errors
+    /// Unknown kind tags and malformed payloads (see [`Request::decode`]).
     pub fn decode(payload: &[u8]) -> Result<Response, String> {
         let mut r = PayloadReader::new(payload);
         let resp = match r.u8()? {

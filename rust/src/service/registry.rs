@@ -10,29 +10,66 @@
 //! accumulates per-shard [`AgreementScorer`]s the same way, making served
 //! TopK queries reproduce offline selection exactly.
 //!
-//! The [`SessionRegistry`] enforces admission control (max sessions, max
-//! resident ℓ×D sketch bytes) and owns persistence/recovery through
-//! `service::checkpoint`.
+//! # Sharded registry
+//!
+//! The [`SessionRegistry`] is an array of `2^k` independent shards, each a
+//! `RwLock<BTreeMap>` of sessions, keyed by the FNV-64 hash of the session
+//! name. Requests for different sessions contend only when their names hash
+//! to the same registry shard, so throughput scales with connection threads
+//! instead of serializing on one global mutex. Invariants:
+//!
+//! * **No cross-shard lock is ever held.** Stats and spill candidate scans
+//!   visit shards one at a time; fleet-wide accounting reads per-shard
+//!   atomics and the reservation budgets, never a second lock.
+//! * **Admission is exact and lock-free.** Session slots, resident sketch
+//!   bytes, and resident Phase-II scorer bytes are reserved against
+//!   [`ByteBudget`]s whose `reserve` checks the cap and commits in a single
+//!   CAS — concurrent admissions can never jointly exceed a budget.
+//! * A session's reservations are released when its last `Arc` drops
+//!   (in-flight requests included), so budget can never be reclaimed while
+//!   a request still touches the session.
+//!
+//! # Scorer-state admission and spill
+//!
+//! Phase-II scorer state is `O(Nℓ)` per session — the one structure that
+//! would otherwise break SAGE's constant-memory story in a long-lived
+//! server. It is admission-controlled like sketch bytes:
+//!
+//! * `CreateSession` reserves the per-session baseline (`shards × 8ℓ`
+//!   consensus accumulators) and rejects when the scorer budget is full.
+//! * Each `Score` batch reserves `rows × (ENTRY_BYTES + 4ℓ)` **before**
+//!   applying; over-budget batches are rejected with a
+//!   `scorer admission rejected` error frame.
+//! * On rejection, if a checkpoint dir is configured, the registry spills
+//!   the least-recently-active other session's Phase-II state to its
+//!   `.sagesess` file, drops it from memory, and retries (see
+//!   [`SessionRegistry::score`]). Spilled state reloads transparently on
+//!   that session's next `Score`/`TopK` (re-reserving budget, which may in
+//!   turn spill someone else). Without a checkpoint dir the rejection is
+//!   final and the client must finalize, close, or raise the budget.
+//! * Finalizing scores (first `TopK`) converts raw scorer state into the
+//!   score cache, which is never larger, so finalize always *shrinks* the
+//!   accounted footprint.
 //!
 //! Determinism contract: one producer per shard slot. Concurrent producers
 //! on the *same* shard are accepted but interleave nondeterministically.
 
 use super::checkpoint::SessionCheckpoint;
-use super::protocol::{FrozenSketch, ScoreBatch};
+use super::protocol::{fnv64, FrozenSketch, ScoreBatch};
 use crate::baselines::{select_weighted, SelectionInputs};
 use crate::config::Method;
-use crate::selection::{AgreementScorer, Scores};
+use crate::selection::{scorer_state_bytes, AgreementScorer, Scores, ENTRY_BYTES};
 use crate::sketch::{FdSketch, SketchState};
 use crate::tensor::Matrix;
 use crate::util::channel::{bounded, Sender};
 use crate::util::metrics::{global as metrics, Counter};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 
-/// Registry knobs (admission control + backpressure depth).
+/// Registry knobs (admission control + backpressure depth + sharding).
 #[derive(Clone, Debug)]
 pub struct RegistryConfig {
     /// Maximum concurrently resident sessions.
@@ -40,9 +77,16 @@ pub struct RegistryConfig {
     /// Maximum total resident sketch-buffer bytes across sessions
     /// (each session accounts `shards × 2ℓ × D × 4`).
     pub max_resident_bytes: usize,
+    /// Maximum total resident Phase-II scorer bytes across sessions
+    /// (per-entry cost `ENTRY_BYTES + 4ℓ`; see `selection::scorer`).
+    pub max_scorer_bytes: usize,
     /// Bounded ingest queue depth per session (backpressure).
     pub ingest_queue_depth: usize,
-    /// Where `Checkpoint` ops persist sessions (None = op disabled).
+    /// Registry shard count; rounded up to a power of two in
+    /// `[1, MAX_REGISTRY_SHARDS]`.
+    pub registry_shards: usize,
+    /// Where `Checkpoint` ops persist sessions and where score caches are
+    /// spilled under scorer-budget pressure (None = both disabled).
     pub checkpoint_dir: Option<PathBuf>,
 }
 
@@ -51,10 +95,88 @@ impl Default for RegistryConfig {
         Self {
             max_sessions: 64,
             max_resident_bytes: 1 << 30,
+            max_scorer_bytes: 1 << 30,
             ingest_queue_depth: 8,
+            registry_shards: 8,
             checkpoint_dir: None,
         }
     }
+}
+
+/// Upper bound on registry shards (gauge names are interned per shard).
+pub const MAX_REGISTRY_SHARDS: usize = 256;
+
+fn normalize_shard_count(n: usize) -> usize {
+    n.clamp(1, MAX_REGISTRY_SHARDS)
+        .next_power_of_two()
+        .min(MAX_REGISTRY_SHARDS)
+}
+
+/// Exact lock-free cap accounting. `reserve` checks the cap and commits in
+/// one CAS, so concurrent admissions can never jointly exceed the budget;
+/// `release` saturates at zero.
+pub struct ByteBudget {
+    cap: usize,
+    used: AtomicUsize,
+}
+
+impl ByteBudget {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap,
+            used: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn used(&self) -> usize {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    /// Atomically reserve `n` units; false (nothing committed) if the cap
+    /// would be exceeded.
+    #[must_use]
+    pub fn reserve(&self, n: usize) -> bool {
+        self.used
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |u| {
+                u.checked_add(n).filter(|&t| t <= self.cap)
+            })
+            .is_ok()
+    }
+
+    pub fn release(&self, n: usize) {
+        let _ = self
+            .used
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |u| {
+                Some(u.saturating_sub(n))
+            });
+    }
+
+    /// Swap an `old` reservation for a `new` one without a cap check —
+    /// used only where the new footprint replaces the old (finalize), which
+    /// by construction never grows.
+    fn rebalance(&self, old: usize, new: usize) {
+        if new >= old {
+            self.used.fetch_add(new - old, Ordering::Relaxed);
+        } else {
+            self.release(old - new);
+        }
+    }
+}
+
+/// The three admission budgets, shared by the registry and every session
+/// (sessions release through their `Drop`).
+#[derive(Clone)]
+struct Budgets {
+    /// Unit: sessions.
+    slots: Arc<ByteBudget>,
+    /// Unit: resident sketch-buffer bytes.
+    sketch: Arc<ByteBudget>,
+    /// Unit: resident Phase-II scorer bytes.
+    scorer: Arc<ByteBudget>,
 }
 
 /// Per-session counters, reported by the `Stats` wire op (prefixed
@@ -81,6 +203,11 @@ pub const MAX_ELL: usize = 1 << 16;
 pub const MAX_DIM: usize = 1 << 28;
 pub const MAX_SHARDS: usize = 4096;
 
+/// Error-message prefix of a scorer-budget rejection — the marker the
+/// registry's spill-on-pressure retry loop matches on, and the retryable
+/// signal documented in docs/ARCHITECTURE.md.
+pub const SCORER_ADMISSION: &str = "scorer admission rejected";
+
 /// Validated resident-byte cost of a session (`shards × 2ℓ × D × 4`).
 fn session_bytes(ell: usize, d: usize, shards: usize) -> Result<usize, String> {
     if ell == 0 || d == 0 || shards == 0 {
@@ -100,6 +227,112 @@ fn session_bytes(ell: usize, d: usize, shards: usize) -> Result<usize, String> {
         .ok_or_else(|| "session byte accounting overflow".to_string())
 }
 
+/// Scorer-budget baseline a session reserves at creation: one empty
+/// [`AgreementScorer`] (`8ℓ` accumulator bytes) per shard slot.
+fn baseline_scorer_bytes(ell: usize, shards: usize) -> usize {
+    shards.saturating_mul(scorer_state_bytes(0, ell))
+}
+
+/// All Phase-II state of a session, guarded by ONE mutex so scoring,
+/// finalizing, spilling, and checkpointing can never deadlock on partial
+/// lock orders. Lock order within a session: `phase2` before `frozen`
+/// before `sketches` (and never the reverse).
+struct Phase2 {
+    /// Per-shard scorer slots; all `Some` until finalize takes them.
+    scorers: Vec<Option<AgreementScorer>>,
+    /// Finalized score cache (first TopK fills it).
+    scores: Option<Scores>,
+    /// Where spilled Phase-II state lives on disk; `scorers`/`scores` are
+    /// empty while `Some`.
+    spilled: Option<PathBuf>,
+}
+
+/// Accounted resident bytes of a session's Phase-II state.
+fn phase2_bytes(p: &Phase2) -> usize {
+    let mut total: usize = p.scorers.iter().flatten().map(|s| s.state_bytes()).sum();
+    if let Some(scores) = &p.scores {
+        total = total.saturating_add(scores.state_bytes());
+    }
+    total
+}
+
+fn fresh_scorers(ell: usize, shards: usize) -> Vec<Option<AgreementScorer>> {
+    (0..shards).map(|_| Some(AgreementScorer::new(ell))).collect()
+}
+
+/// Rebuild Phase-II state from a checkpoint. Legacy (v1) checkpoints carry
+/// no Phase-II section; scoring then starts fresh.
+fn restore_phase2(
+    ck: &SessionCheckpoint,
+    ell: usize,
+    shards: usize,
+) -> Result<(Vec<Option<AgreementScorer>>, Option<Scores>), String> {
+    let scorers = if ck.scorers.is_empty() {
+        fresh_scorers(ell, shards)
+    } else {
+        if ck.scorers.len() != shards {
+            return Err(format!(
+                "checkpoint '{}': {} scorer slots for {} shards",
+                ck.name,
+                ck.scorers.len(),
+                shards
+            ));
+        }
+        let mut slots = Vec::with_capacity(shards);
+        for slot in &ck.scorers {
+            slots.push(match slot {
+                Some(st) => {
+                    if st.ell as usize != ell {
+                        return Err(format!("checkpoint '{}': scorer ell drift", ck.name));
+                    }
+                    Some(AgreementScorer::from_state(st)?)
+                }
+                None => None,
+            });
+        }
+        slots
+    };
+    let scores = match &ck.scores {
+        Some(st) => {
+            if st.ell as usize != ell {
+                return Err(format!("checkpoint '{}': scores ell drift", ck.name));
+            }
+            Some(Scores::from_state(st)?)
+        }
+        None => None,
+    };
+    Ok((scorers, scores))
+}
+
+/// Accounted Phase-II bytes a checkpoint will occupy once restored — must
+/// agree exactly with `phase2_bytes(restore_phase2(ck))`.
+fn checkpoint_scorer_bytes(ck: &SessionCheckpoint, ell: usize, shards: usize) -> usize {
+    let mut total = if ck.scorers.is_empty() {
+        baseline_scorer_bytes(ell, shards)
+    } else {
+        ck.scorers
+            .iter()
+            .flatten()
+            .map(|st| scorer_state_bytes(st.indices.len(), ell))
+            .sum()
+    };
+    if let Some(sc) = &ck.scores {
+        total =
+            total.saturating_add(crate::selection::scores_state_bytes(sc.alphas.len(), ell));
+    }
+    total
+}
+
+fn scorer_admission_error(name: &str, need: usize, budget: &ByteBudget) -> String {
+    format!(
+        "{SCORER_ADMISSION}: session '{name}' needs {need} more scorer bytes \
+         ({}/{} in use; raise --max-scorer-mb, close sessions, or configure \
+         --checkpoint-dir so idle score caches can spill)",
+        budget.used(),
+        budget.cap()
+    )
+}
+
 /// One served sketch session.
 pub struct Session {
     name: String,
@@ -110,9 +343,20 @@ pub struct Session {
     worker: Mutex<Option<JoinHandle<()>>>,
     sketches: Arc<Mutex<Vec<FdSketch>>>,
     frozen: Mutex<Option<FrozenSketch>>,
-    scorers: Mutex<Vec<Option<AgreementScorer>>>,
-    scores: Mutex<Option<Scores>>,
+    phase2: Mutex<Phase2>,
     stats: Arc<SessionStats>,
+    /// Shared admission budgets; this session's reservations are released
+    /// in `Drop` (slot, sketch bytes, resident Phase-II bytes).
+    budgets: Budgets,
+    /// Sketch bytes reserved for this session at admission.
+    sketch_reserved: usize,
+    /// Registry activity clock value at last use (spill LRU order).
+    last_active: AtomicU64,
+    /// Whether a Checkpoint op explicitly persisted this session. Spill
+    /// files are transient (deleted on reload and on close) UNLESS the
+    /// client explicitly checkpointed — then the `.sagesess` file is the
+    /// client's durable state and is left alone.
+    explicitly_checkpointed: std::sync::atomic::AtomicBool,
     /// Fleet-wide aggregates (fixed names — global counters are interned
     /// forever, so they must NOT embed client-chosen session names).
     c_rows: &'static Counter,
@@ -122,7 +366,10 @@ pub struct Session {
 
 impl Session {
     /// New active session with per-shard sketches and a running ingest
-    /// worker fed by a bounded channel.
+    /// worker fed by a bounded channel. The caller must already hold
+    /// budget reservations of `sketch_reserved` sketch bytes, one session
+    /// slot, and `phase2_bytes` of the initial Phase-II state.
+    #[allow(clippy::too_many_arguments)]
     fn new_active(
         name: &str,
         ell: usize,
@@ -130,6 +377,8 @@ impl Session {
         shards: usize,
         queue_depth: usize,
         shard_sketches: Vec<FdSketch>,
+        budgets: Budgets,
+        sketch_reserved: usize,
     ) -> Session {
         debug_assert_eq!(shard_sketches.len(), shards);
         let stats = Arc::new(SessionStats::default());
@@ -158,9 +407,16 @@ impl Session {
             worker: Mutex::new(Some(worker)),
             sketches,
             frozen: Mutex::new(None),
-            scorers: Mutex::new((0..shards).map(|_| Some(AgreementScorer::new(ell))).collect()),
-            scores: Mutex::new(None),
+            phase2: Mutex::new(Phase2 {
+                scorers: fresh_scorers(ell, shards),
+                scores: None,
+                spilled: None,
+            }),
             stats,
+            budgets,
+            sketch_reserved,
+            last_active: AtomicU64::new(0),
+            explicitly_checkpointed: std::sync::atomic::AtomicBool::new(false),
             c_rows: metrics().counter("service.ingest.rows_enqueued"),
             c_batches: metrics().counter("service.ingest.batches"),
             c_scored: metrics().counter("service.score.entries"),
@@ -168,8 +424,17 @@ impl Session {
     }
 
     /// Rebuild an already-frozen session (checkpoint recovery): no ingest
-    /// worker, scoring starts fresh against the recovered sketch.
-    fn new_frozen(name: &str, ell: usize, d: usize, shards: usize, info: FrozenSketch) -> Session {
+    /// worker; Phase-II state starts fresh and is overwritten by
+    /// `from_checkpoint` when the checkpoint carries scorer state.
+    fn new_frozen(
+        name: &str,
+        ell: usize,
+        d: usize,
+        shards: usize,
+        info: FrozenSketch,
+        budgets: Budgets,
+        sketch_reserved: usize,
+    ) -> Session {
         Session {
             name: name.to_string(),
             ell,
@@ -179,9 +444,16 @@ impl Session {
             worker: Mutex::new(None),
             sketches: Arc::new(Mutex::new(Vec::new())),
             frozen: Mutex::new(Some(info)),
-            scorers: Mutex::new((0..shards).map(|_| Some(AgreementScorer::new(ell))).collect()),
-            scores: Mutex::new(None),
+            phase2: Mutex::new(Phase2 {
+                scorers: fresh_scorers(ell, shards),
+                scores: None,
+                spilled: None,
+            }),
             stats: Arc::new(SessionStats::default()),
+            budgets,
+            sketch_reserved,
+            last_active: AtomicU64::new(0),
+            explicitly_checkpointed: std::sync::atomic::AtomicBool::new(false),
             c_rows: metrics().counter("service.ingest.rows_enqueued"),
             c_batches: metrics().counter("service.ingest.batches"),
             c_scored: metrics().counter("service.score.entries"),
@@ -214,13 +486,43 @@ impl Session {
             .saturating_mul(4)
     }
 
+    /// Accounted resident Phase-II scorer bytes (0 while spilled).
+    pub fn scorer_bytes(&self) -> usize {
+        phase2_bytes(&self.phase2.lock().unwrap())
+    }
+
+    /// Whether this session's Phase-II state currently lives on disk.
+    pub fn is_spilled(&self) -> bool {
+        self.phase2.lock().unwrap().spilled.is_some()
+    }
+
     pub fn is_frozen(&self) -> bool {
         self.frozen.lock().unwrap().is_some()
+    }
+
+    fn touch(&self, tick: u64) {
+        self.last_active.store(tick, Ordering::Relaxed);
+    }
+
+    fn last_active(&self) -> u64 {
+        self.last_active.load(Ordering::Relaxed)
+    }
+
+    /// Whether spilling this session would free actual scored state (not
+    /// just the empty-scorer baseline).
+    fn has_spillable_scores(&self) -> bool {
+        let p = self.phase2.lock().unwrap();
+        p.spilled.is_none()
+            && (p.scores.is_some() || p.scorers.iter().flatten().any(|s| s.count() > 0))
     }
 
     /// Enqueue raw gradient rows into one shard slot. Blocks when the
     /// bounded ingest queue is full (backpressure propagates to the TCP
     /// connection). Returns total rows acked so far.
+    ///
+    /// # Errors
+    /// Shard index out of range, row dimension mismatch, or a frozen
+    /// session.
     pub fn ingest(&self, shard: usize, rows: Matrix) -> Result<u64, String> {
         if shard >= self.shards {
             return Err(format!(
@@ -251,6 +553,10 @@ impl Session {
     /// Merge a client-side FD sketch into one shard slot (FD mergeability:
     /// the combined guarantee degrades by at most the sum of both
     /// certificates). Deterministic for a fixed call sequence.
+    ///
+    /// # Errors
+    /// Shard index out of range, dimension mismatch, invalid sketch state,
+    /// or a frozen session.
     pub fn merge_sketch(&self, shard: usize, state: &SketchState) -> Result<(), String> {
         if shard >= self.shards {
             return Err(format!("shard {shard} out of range"));
@@ -276,6 +582,9 @@ impl Session {
     /// Freeze: stop ingest, drain the queue (close-then-drain), join the
     /// worker, merge shard sketches in shard order, cache the frozen S.
     /// Idempotent — every scoring client calls it to fetch S.
+    ///
+    /// # Errors
+    /// A panicked ingest worker, or a session with no sketch state.
     pub fn freeze(&self) -> Result<FrozenSketch, String> {
         let mut guard = self.frozen.lock().unwrap();
         if let Some(info) = guard.as_ref() {
@@ -315,7 +624,15 @@ impl Session {
         Ok(info)
     }
 
-    /// Accumulate one Phase-II scoring batch into a shard's scorer.
+    /// Accumulate one Phase-II scoring batch into a shard's scorer. The
+    /// batch's byte cost is reserved against the scorer budget **before**
+    /// it is applied; rejected batches leave no partial state.
+    ///
+    /// # Errors
+    /// Shard range / shape mismatches, an unfrozen session, already
+    /// finalized scores, or a [`SCORER_ADMISSION`]-prefixed budget
+    /// rejection (retryable through [`SessionRegistry::score`], which
+    /// spills idle sessions).
     pub fn score(&self, shard: usize, batch: &ScoreBatch) -> Result<(), String> {
         if shard >= self.shards {
             return Err(format!("shard {shard} out of range"));
@@ -342,9 +659,26 @@ impl Session {
             ));
         }
         let indices: Vec<usize> = batch.indices.iter().map(|&i| i as usize).collect();
-        let mut guard = self.scorers.lock().unwrap();
-        match guard[shard].as_mut() {
+        let delta = n.saturating_mul(ENTRY_BYTES + 4 * self.ell);
+        let mut p = self.phase2.lock().unwrap();
+        if p.spilled.is_some() {
+            self.unspill(&mut p)?;
+        }
+        if p.scorers.len() != self.shards {
+            return Err(format!(
+                "session '{}': scorer state unavailable",
+                self.name
+            ));
+        }
+        match p.scorers[shard].as_mut() {
             Some(scorer) => {
+                if !self.budgets.scorer.reserve(delta) {
+                    return Err(scorer_admission_error(
+                        &self.name,
+                        delta,
+                        &self.budgets.scorer,
+                    ));
+                }
                 scorer.add_batch(&indices, &batch.labels, &batch.zhat, &batch.norms, &batch.losses);
             }
             None => {
@@ -354,7 +688,7 @@ impl Session {
                 ))
             }
         }
-        drop(guard);
+        drop(p);
         self.stats
             .scored_entries
             .fetch_add(n as u64, Ordering::Relaxed);
@@ -365,7 +699,14 @@ impl Session {
     /// Online selection query: finalize scores on first call (merging
     /// shard scorers in shard order — the offline merge), then run the
     /// selection rule. Repeated queries with different `(method, k)` reuse
-    /// the cached scores.
+    /// the cached scores. Finalizing releases the raw-scorer budget excess
+    /// (the cache is never larger).
+    ///
+    /// # Errors
+    /// An unfrozen session, GLISTER (needs a validation split the service
+    /// does not hold), no scored examples, or a [`SCORER_ADMISSION`]
+    /// rejection while reloading spilled state (retryable through
+    /// [`SessionRegistry::top_k`]).
     pub fn top_k(
         &self,
         method: Method,
@@ -382,39 +723,54 @@ impl Session {
         if method == Method::Glister {
             return Err("GLISTER needs a validation split; unsupported by the service".into());
         }
-        let mut cache = self.scores.lock().unwrap();
-        if cache.is_none() {
-            let mut slots = self.scorers.lock().unwrap();
-            let total: u64 = slots
-                .iter()
-                .map(|s| s.as_ref().map(|sc| sc.count()).unwrap_or(0))
-                .sum();
+        let mut p = self.phase2.lock().unwrap();
+        if p.spilled.is_some() {
+            self.unspill(&mut p)?;
+        }
+        if p.scores.is_none() {
+            let total: u64 = p.scorers.iter().flatten().map(|sc| sc.count()).sum();
             if total == 0 {
                 return Err(format!(
                     "session '{}': no scored examples — run Score first",
                     self.name
                 ));
             }
+            let before = phase2_bytes(&p);
+            let slots = std::mem::take(&mut p.scorers);
             let mut acc: Option<AgreementScorer> = None;
-            for slot in slots.iter_mut() {
-                let scorer = slot
-                    .take()
-                    .ok_or_else(|| "scorer state missing".to_string())?;
-                acc = Some(match acc {
-                    None => scorer,
-                    Some(mut merged) => {
-                        merged.merge(scorer);
-                        merged
+            let mut missing = false;
+            for slot in slots {
+                match slot {
+                    Some(scorer) => {
+                        acc = Some(match acc {
+                            None => scorer,
+                            Some(mut merged) => {
+                                merged.merge(scorer);
+                                merged
+                            }
+                        });
                     }
-                });
+                    None => missing = true,
+                }
             }
-            drop(slots);
-            let scores = acc
-                .ok_or_else(|| "session has no shards".to_string())?
-                .finalize();
-            *cache = Some(scores);
+            // Slots stay taken after finalize: later Score calls get the
+            // "already finalized" error rather than silently diverging.
+            p.scorers = (0..self.shards).map(|_| None).collect();
+            let acc = match (missing, acc) {
+                (false, Some(acc)) => acc,
+                _ => {
+                    // Inconsistent slot state (only reachable from a
+                    // hand-crafted checkpoint): drop what we took and keep
+                    // the accounting exact.
+                    self.budgets.scorer.release(before);
+                    return Err(format!("session '{}': scorer state missing", self.name));
+                }
+            };
+            p.scores = Some(acc.finalize());
+            let after = phase2_bytes(&p);
+            self.budgets.scorer.rebalance(before, after);
         }
-        let scores = cache.as_ref().unwrap();
+        let scores = p.scores.as_ref().unwrap();
         let inputs = SelectionInputs {
             scores,
             val_consensus: None,
@@ -429,11 +785,18 @@ impl Session {
     pub fn stats_pairs(&self) -> Vec<(String, u64)> {
         let p = format!("service.session.{}", self.name);
         let s = &self.stats;
+        let (scorer_bytes, spilled, finalized) = {
+            let p2 = self.phase2.lock().unwrap();
+            (phase2_bytes(&p2), p2.spilled.is_some(), p2.scores.is_some())
+        };
         vec![
             (format!("{p}.ell"), self.ell as u64),
             (format!("{p}.d"), self.d as u64),
             (format!("{p}.shards"), self.shards as u64),
             (format!("{p}.resident_bytes"), self.resident_bytes() as u64),
+            (format!("{p}.scorer_bytes"), scorer_bytes as u64),
+            (format!("{p}.spilled"), u64::from(spilled)),
+            (format!("{p}.scores_finalized"), u64::from(finalized)),
             (format!("{p}.frozen"), u64::from(self.is_frozen())),
             (
                 format!("{p}.rows_enqueued"),
@@ -476,15 +839,29 @@ impl Session {
         }
     }
 
-    /// Snapshot into a checkpoint (quiesces acked ingest first).
-    pub fn to_checkpoint(&self) -> Result<SessionCheckpoint, String> {
-        self.quiesce(std::time::Duration::from_secs(10))?;
+    /// Build a checkpoint from already-locked Phase-II state. When the
+    /// Phase-II state is itself spilled, it is carried through from disk
+    /// unchanged so a Checkpoint op can never lose spilled scorer state.
+    fn checkpoint_locked(&self, p: &Phase2) -> Result<SessionCheckpoint, String> {
         let frozen = self.frozen.lock().unwrap().clone();
         let shard_states = if frozen.is_some() {
             Vec::new()
         } else {
             let guard = self.sketches.lock().unwrap();
             guard.iter().map(|s| s.export_state()).collect()
+        };
+        let (scorers, scores) = match &p.spilled {
+            Some(path) => {
+                let ck = SessionCheckpoint::load(path)?;
+                (ck.scorers, ck.scores)
+            }
+            None => (
+                p.scorers
+                    .iter()
+                    .map(|slot| slot.as_ref().map(|s| s.export_state()))
+                    .collect(),
+                p.scores.as_ref().map(|s| s.export_state()),
+            ),
         };
         Ok(SessionCheckpoint {
             name: self.name.clone(),
@@ -493,39 +870,156 @@ impl Session {
             shards: self.shards as u32,
             shard_states,
             frozen,
+            scorers,
+            scores,
         })
     }
 
-    /// Rebuild from a checkpoint (inverse of [`Session::to_checkpoint`]).
-    fn from_checkpoint(ck: &SessionCheckpoint, queue_depth: usize) -> Result<Session, String> {
-        let (ell, d, shards) = (ck.ell as usize, ck.d as usize, ck.shards as usize);
-        session_bytes(ell, d, shards)?; // validate recovered shapes too
-        if let Some(frozen) = &ck.frozen {
-            return Ok(Session::new_frozen(&ck.name, ell, d, shards, frozen.clone()));
+    /// Snapshot into a checkpoint (quiesces acked ingest first). Includes
+    /// the full Phase-II state, so recovery restores scoring bit-exactly.
+    ///
+    /// # Errors
+    /// Quiesce timeout, or an unreadable spill file.
+    pub fn to_checkpoint(&self) -> Result<SessionCheckpoint, String> {
+        self.quiesce(std::time::Duration::from_secs(10))?;
+        let p = self.phase2.lock().unwrap();
+        self.checkpoint_locked(&p)
+    }
+
+    /// Spill this session's Phase-II state to its `.sagesess` file in
+    /// `dir` and drop it from memory, releasing its scorer-budget
+    /// reservation. Returns the bytes freed (0 when already spilled or
+    /// nothing is resident). The state reloads transparently on the next
+    /// `Score`/`TopK`.
+    ///
+    /// # Errors
+    /// Quiesce timeout or a failed checkpoint write (state then stays
+    /// resident).
+    pub fn spill_scores(&self, dir: &Path) -> Result<usize, String> {
+        self.quiesce(std::time::Duration::from_secs(10))?;
+        let mut p = self.phase2.lock().unwrap();
+        if p.spilled.is_some() {
+            return Ok(0);
         }
-        if ck.shard_states.len() != shards {
+        let resident = phase2_bytes(&p);
+        if resident == 0 {
+            return Ok(0);
+        }
+        let ck = self.checkpoint_locked(&p)?;
+        let path = dir.join(format!("{}.sagesess", self.name));
+        ck.save(&path)?;
+        self.budgets.scorer.release(resident);
+        p.scorers = Vec::new();
+        p.scores = None;
+        p.spilled = Some(path);
+        metrics().counter("service.registry.spills").inc();
+        Ok(resident)
+    }
+
+    /// Reload spilled Phase-II state (caller holds the `phase2` lock),
+    /// re-reserving its scorer budget. The budget is reserved from the
+    /// checkpoint's *lengths* BEFORE the scorer structures are
+    /// materialized, so a failed reservation never transiently exceeds the
+    /// cap by the session's full footprint. A transient spill file (one
+    /// the client never explicitly checkpointed) is deleted after a
+    /// successful reload — the disk copy is no longer authoritative and
+    /// must not resurrect stale state on a later restart.
+    fn unspill(&self, p: &mut Phase2) -> Result<(), String> {
+        let path = match &p.spilled {
+            Some(path) => path.clone(),
+            None => return Ok(()),
+        };
+        let ck = SessionCheckpoint::load(&path)?;
+        if ck.ell as usize != self.ell
+            || ck.d as usize != self.d
+            || ck.shards as usize != self.shards
+        {
             return Err(format!(
-                "checkpoint '{}': {} shard states for {} shards",
-                ck.name,
-                ck.shard_states.len(),
-                shards
+                "spilled state {} does not match session '{}'",
+                path.display(),
+                self.name
             ));
         }
-        let mut sketches = Vec::with_capacity(shards);
-        for st in &ck.shard_states {
-            if st.ell as usize != ell || st.d as usize != d {
-                return Err(format!("checkpoint '{}': shard state dims drift", ck.name));
-            }
-            sketches.push(FdSketch::from_state(st)?);
+        let bytes = checkpoint_scorer_bytes(&ck, self.ell, self.shards);
+        if !self.budgets.scorer.reserve(bytes) {
+            return Err(scorer_admission_error(&self.name, bytes, &self.budgets.scorer));
         }
-        Ok(Session::new_active(
-            &ck.name,
-            ell,
-            d,
-            shards,
-            queue_depth,
-            sketches,
-        ))
+        let (scorers, scores) = match restore_phase2(&ck, self.ell, self.shards) {
+            Ok(restored) => restored,
+            Err(e) => {
+                self.budgets.scorer.release(bytes);
+                return Err(e);
+            }
+        };
+        p.scorers = scorers;
+        p.scores = scores;
+        p.spilled = None;
+        if !self.explicitly_checkpointed.load(Ordering::Relaxed) {
+            let _ = std::fs::remove_file(&path);
+        }
+        metrics().counter("service.registry.unspills").inc();
+        Ok(())
+    }
+
+    /// Rebuild from a checkpoint (inverse of [`Session::to_checkpoint`]).
+    /// The caller must already hold the matching budget reservations.
+    fn from_checkpoint(
+        ck: &SessionCheckpoint,
+        queue_depth: usize,
+        budgets: Budgets,
+        sketch_reserved: usize,
+    ) -> Result<Session, String> {
+        let (ell, d, shards) = (ck.ell as usize, ck.d as usize, ck.shards as usize);
+        session_bytes(ell, d, shards)?; // validate recovered shapes too
+        let (scorers, scores) = restore_phase2(ck, ell, shards)?;
+        let session = if let Some(frozen) = &ck.frozen {
+            Session::new_frozen(
+                &ck.name,
+                ell,
+                d,
+                shards,
+                frozen.clone(),
+                budgets,
+                sketch_reserved,
+            )
+        } else {
+            if ck.shard_states.len() != shards {
+                return Err(format!(
+                    "checkpoint '{}': {} shard states for {} shards",
+                    ck.name,
+                    ck.shard_states.len(),
+                    shards
+                ));
+            }
+            let mut sketches = Vec::with_capacity(shards);
+            for st in &ck.shard_states {
+                if st.ell as usize != ell || st.d as usize != d {
+                    return Err(format!("checkpoint '{}': shard state dims drift", ck.name));
+                }
+                sketches.push(FdSketch::from_state(st)?);
+            }
+            Session::new_active(
+                &ck.name,
+                ell,
+                d,
+                shards,
+                queue_depth,
+                sketches,
+                budgets,
+                sketch_reserved,
+            )
+        };
+        *session.phase2.lock().unwrap() = Phase2 {
+            scorers,
+            scores,
+            spilled: None,
+        };
+        // The file this session was recovered from may be a client's
+        // explicit checkpoint — never treat it as a transient spill file.
+        session
+            .explicitly_checkpointed
+            .store(true, Ordering::Relaxed);
+        Ok(session)
     }
 }
 
@@ -537,6 +1031,18 @@ impl Drop for Session {
         if let Some(worker) = self.worker.lock().unwrap().take() {
             let _ = worker.join();
         }
+        // Release this session's admission reservations. `get_mut` cannot
+        // block (we hold the only reference) and tolerates poisoning.
+        let resident = {
+            let p = match self.phase2.get_mut() {
+                Ok(p) => p,
+                Err(e) => e.into_inner(),
+            };
+            phase2_bytes(p)
+        };
+        self.budgets.scorer.release(resident);
+        self.budgets.sketch.release(self.sketch_reserved);
+        self.budgets.slots.release(1);
     }
 }
 
@@ -548,17 +1054,38 @@ fn valid_session_name(name: &str) -> bool {
             .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
 }
 
-/// Concurrent registry of live sessions with admission control.
+/// One registry shard: an independent session map plus lock-free occupancy
+/// counters so fleet-wide accounting never takes a second lock.
+#[derive(Default)]
+struct RegistryShard {
+    sessions: RwLock<BTreeMap<String, Arc<Session>>>,
+    session_count: AtomicUsize,
+    sketch_bytes: AtomicUsize,
+}
+
+/// Sharded concurrent registry of live sessions with exact lock-free
+/// admission control (see the module docs for the invariants).
 pub struct SessionRegistry {
     cfg: RegistryConfig,
-    sessions: Mutex<BTreeMap<String, Arc<Session>>>,
+    shards: Vec<RegistryShard>,
+    budgets: Budgets,
+    /// Monotonic activity clock ordering sessions for spill (LRU-ish).
+    clock: AtomicU64,
 }
 
 impl SessionRegistry {
     pub fn new(cfg: RegistryConfig) -> Self {
+        let count = normalize_shard_count(cfg.registry_shards);
+        let budgets = Budgets {
+            slots: Arc::new(ByteBudget::new(cfg.max_sessions)),
+            sketch: Arc::new(ByteBudget::new(cfg.max_resident_bytes)),
+            scorer: Arc::new(ByteBudget::new(cfg.max_scorer_bytes)),
+        };
         Self {
             cfg,
-            sessions: Mutex::new(BTreeMap::new()),
+            shards: (0..count).map(|_| RegistryShard::default()).collect(),
+            budgets,
+            clock: AtomicU64::new(1),
         }
     }
 
@@ -566,21 +1093,53 @@ impl SessionRegistry {
         &self.cfg
     }
 
+    /// Actual registry shard count (power of two).
+    pub fn registry_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which registry shard `name` lives in (FNV-64 of the name, masked).
+    pub fn shard_index(&self, name: &str) -> usize {
+        fnv64(name.as_bytes()) as usize & (self.shards.len() - 1)
+    }
+
     pub fn session_count(&self) -> usize {
-        self.sessions.lock().unwrap().len()
+        self.budgets.slots.used()
     }
 
     /// Total resident sketch bytes across live sessions.
     pub fn resident_bytes(&self) -> usize {
-        self.sessions
-            .lock()
-            .unwrap()
-            .values()
-            .map(|s| s.resident_bytes())
-            .sum()
+        self.budgets.sketch.used()
     }
 
-    /// Admission-controlled session creation.
+    /// Total resident Phase-II scorer bytes across live sessions.
+    pub fn scorer_bytes(&self) -> usize {
+        self.budgets.scorer.used()
+    }
+
+    /// Mirror shard `i`'s occupancy into the process-global metrics
+    /// gauges. The Stats wire op reads the registry-local atomics directly
+    /// (a test registry must not see another registry's numbers); the
+    /// global gauges exist for the operator-facing `metrics::report()`
+    /// dump (`SAGE_METRICS=1`), which has no reference to the registry.
+    fn publish_shard_gauges(&self, i: usize) {
+        let shard = &self.shards[i];
+        metrics()
+            .gauge(&format!("service.registry.shard.{i}.sessions"))
+            .set(shard.session_count.load(Ordering::Relaxed) as u64);
+        metrics()
+            .gauge(&format!("service.registry.shard.{i}.sketch_bytes"))
+            .set(shard.sketch_bytes.load(Ordering::Relaxed) as u64);
+    }
+
+    /// Admission-controlled session creation: reserves one session slot,
+    /// the session's sketch bytes, and its scorer baseline, all exactly
+    /// (single-CAS budgets), before touching the (single) registry shard
+    /// the name hashes to.
+    ///
+    /// # Errors
+    /// Invalid name/shape, duplicate name, or any exhausted budget
+    /// (messages all contain `admission`).
     pub fn create(&self, name: &str, ell: usize, d: usize, shards: usize) -> Result<(), String> {
         if !valid_session_name(name) {
             return Err(format!(
@@ -588,55 +1147,109 @@ impl SessionRegistry {
             ));
         }
         let new_bytes = session_bytes(ell, d, shards)?;
-        let mut guard = self.sessions.lock().unwrap();
-        if guard.contains_key(name) {
-            return Err(format!("session '{name}' already exists"));
-        }
-        if guard.len() >= self.cfg.max_sessions {
+        let scorer_baseline = baseline_scorer_bytes(ell, shards);
+        if !self.budgets.slots.reserve(1) {
             return Err(format!(
                 "admission rejected: {} sessions resident (max {})",
-                guard.len(),
+                self.budgets.slots.used(),
                 self.cfg.max_sessions
             ));
         }
-        let used: usize = guard.values().map(|s| s.resident_bytes()).sum();
-        if used + new_bytes > self.cfg.max_resident_bytes {
+        if !self.budgets.sketch.reserve(new_bytes) {
+            self.budgets.slots.release(1);
             return Err(format!(
                 "admission rejected: {new_bytes} sketch bytes would exceed budget \
-                 ({used}/{} in use)",
+                 ({}/{} in use)",
+                self.budgets.sketch.used(),
                 self.cfg.max_resident_bytes
             ));
         }
-        let sketches = (0..shards).map(|_| FdSketch::new(ell, d)).collect();
-        let session = Session::new_active(
-            name,
-            ell,
-            d,
-            shards,
-            self.cfg.ingest_queue_depth,
-            sketches,
-        );
-        guard.insert(name.to_string(), Arc::new(session));
+        if !self.budgets.scorer.reserve(scorer_baseline) {
+            self.budgets.sketch.release(new_bytes);
+            self.budgets.slots.release(1);
+            return Err(format!(
+                "admission rejected: session '{name}' needs {scorer_baseline} scorer \
+                 bytes, {}/{} in use (raise --max-scorer-mb)",
+                self.budgets.scorer.used(),
+                self.cfg.max_scorer_bytes
+            ));
+        }
+        let idx = self.shard_index(name);
+        let shard = &self.shards[idx];
+        {
+            let mut guard = shard.sessions.write().unwrap();
+            if guard.contains_key(name) {
+                drop(guard);
+                self.budgets.scorer.release(scorer_baseline);
+                self.budgets.sketch.release(new_bytes);
+                self.budgets.slots.release(1);
+                return Err(format!("session '{name}' already exists"));
+            }
+            let sketches = (0..shards).map(|_| FdSketch::new(ell, d)).collect();
+            let session = Session::new_active(
+                name,
+                ell,
+                d,
+                shards,
+                self.cfg.ingest_queue_depth,
+                sketches,
+                self.budgets.clone(),
+                new_bytes,
+            );
+            guard.insert(name.to_string(), Arc::new(session));
+            shard.session_count.fetch_add(1, Ordering::Relaxed);
+            shard.sketch_bytes.fetch_add(new_bytes, Ordering::Relaxed);
+        }
+        self.publish_shard_gauges(idx);
         metrics().counter("service.registry.sessions_created").inc();
         Ok(())
     }
 
+    /// Look up a live session (bumps its activity clock for spill order).
+    ///
+    /// # Errors
+    /// Unknown session name.
     pub fn get(&self, name: &str) -> Result<Arc<Session>, String> {
-        self.sessions
-            .lock()
+        let session = self.shards[self.shard_index(name)]
+            .sessions
+            .read()
             .unwrap()
             .get(name)
             .cloned()
-            .ok_or_else(|| format!("unknown session '{name}'"))
+            .ok_or_else(|| format!("unknown session '{name}'"))?;
+        session.touch(self.clock.fetch_add(1, Ordering::Relaxed));
+        Ok(session)
     }
 
-    /// Remove a session and release its admission budget. The session's
-    /// ingest worker is joined by `Session::drop` once the last `Arc`
-    /// reference (in-flight requests included) goes away.
+    /// Remove a session. Its admission reservations (slot, sketch bytes,
+    /// scorer bytes) are released when the last `Arc` reference — in-flight
+    /// requests included — goes away, via `Session::drop`, which also joins
+    /// the ingest worker.
+    ///
+    /// # Errors
+    /// Unknown session name.
     pub fn close(&self, name: &str) -> Result<(), String> {
-        let removed = self.sessions.lock().unwrap().remove(name);
+        let idx = self.shard_index(name);
+        let shard = &self.shards[idx];
+        let removed = shard.sessions.write().unwrap().remove(name);
         match removed {
-            Some(_) => {
+            Some(session) => {
+                shard.session_count.fetch_sub(1, Ordering::Relaxed);
+                shard
+                    .sketch_bytes
+                    .fetch_sub(session.resident_bytes(), Ordering::Relaxed);
+                // A transient spill file must not outlive its session — a
+                // later restart would resurrect a session the client
+                // closed. Explicit checkpoints are durable and stay.
+                if session.is_spilled()
+                    && !session.explicitly_checkpointed.load(Ordering::Relaxed)
+                {
+                    if let Some(dir) = &self.cfg.checkpoint_dir {
+                        let _ = std::fs::remove_file(dir.join(format!("{name}.sagesess")));
+                    }
+                }
+                drop(session);
+                self.publish_shard_gauges(idx);
                 metrics().counter("service.registry.sessions_closed").inc();
                 Ok(())
             }
@@ -644,7 +1257,106 @@ impl SessionRegistry {
         }
     }
 
+    /// Score with spill-on-pressure: on a scorer-budget rejection, spill
+    /// the least-recently-active *other* session's Phase-II state to the
+    /// checkpoint dir and retry. Bounded retries; without a checkpoint dir
+    /// the first rejection is final.
+    ///
+    /// # Errors
+    /// Everything [`Session::score`] returns; a [`SCORER_ADMISSION`] error
+    /// only after no further session can be spilled.
+    pub fn score(&self, name: &str, shard: usize, batch: &ScoreBatch) -> Result<(), String> {
+        let session = self.get(name)?;
+        let mut last = String::new();
+        for _ in 0..64 {
+            match session.score(shard, batch) {
+                Err(e) if e.starts_with(SCORER_ADMISSION) => {
+                    if !self.spill_one(name) {
+                        return Err(e);
+                    }
+                    last = e;
+                }
+                other => return other,
+            }
+        }
+        Err(last)
+    }
+
+    /// TopK with spill-on-pressure (reloading this session's spilled state
+    /// may need budget another session is holding — see
+    /// [`SessionRegistry::score`]).
+    ///
+    /// # Errors
+    /// Everything [`Session::top_k`] returns; a [`SCORER_ADMISSION`] error
+    /// only after no further session can be spilled.
+    pub fn top_k(
+        &self,
+        name: &str,
+        method: Method,
+        k: usize,
+        num_classes: usize,
+        seed: u64,
+    ) -> Result<(Vec<usize>, Option<Vec<f32>>), String> {
+        let session = self.get(name)?;
+        let mut last = String::new();
+        for _ in 0..64 {
+            match session.top_k(method, k, num_classes, seed) {
+                Err(e) if e.starts_with(SCORER_ADMISSION) => {
+                    if !self.spill_one(name) {
+                        return Err(e);
+                    }
+                    last = e;
+                }
+                other => return other,
+            }
+        }
+        Err(last)
+    }
+
+    /// Spill the least-recently-active session (excluding `exclude`) that
+    /// holds actual scored state. Returns false when spilling is disabled
+    /// (no checkpoint dir) or no candidate freed anything.
+    fn spill_one(&self, exclude: &str) -> bool {
+        let dir = match &self.cfg.checkpoint_dir {
+            Some(dir) => dir.clone(),
+            None => return false,
+        };
+        // Candidate scan visits shards one at a time — no cross-shard lock.
+        let mut candidates: Vec<(u64, Arc<Session>)> = Vec::new();
+        for shard in &self.shards {
+            let guard = shard.sessions.read().unwrap();
+            for (name, session) in guard.iter() {
+                if name != exclude && session.has_spillable_scores() {
+                    candidates.push((session.last_active(), session.clone()));
+                }
+            }
+        }
+        candidates.sort_by_key(|(tick, _)| *tick);
+        for (_, session) in candidates {
+            match session.spill_scores(&dir) {
+                Ok(freed) if freed > 0 => {
+                    crate::log_info!(
+                        "spilled {} scorer bytes of session '{}' under budget pressure",
+                        freed,
+                        session.name()
+                    );
+                    return true;
+                }
+                Ok(_) => continue,
+                Err(e) => {
+                    crate::log_warn!("spill of session '{}' failed: {e}", session.name());
+                    continue;
+                }
+            }
+        }
+        false
+    }
+
     /// Persist one session into the configured checkpoint directory.
+    ///
+    /// # Errors
+    /// No checkpoint dir configured, unknown session, quiesce timeout, or
+    /// a failed write.
     pub fn checkpoint(&self, name: &str) -> Result<PathBuf, String> {
         let dir = self
             .cfg
@@ -656,13 +1368,19 @@ impl SessionRegistry {
         let ck = session.to_checkpoint()?;
         let path = dir.join(format!("{name}.sagesess"));
         ck.save(&path)?;
+        // From here on the file is the client's durable state: spill
+        // reloads and CloseSession must leave it in place.
+        session
+            .explicitly_checkpointed
+            .store(true, Ordering::Relaxed);
         metrics().counter("service.registry.checkpoints").inc();
         Ok(path)
     }
 
     /// Recover every `*.sagesess` session from `dir` (server restart).
-    /// Returns the number of sessions recovered; unreadable files are
-    /// skipped with a warning so one bad checkpoint can't block startup.
+    /// Returns the number of sessions recovered; unreadable files and
+    /// sessions that no longer fit the admission budgets are skipped with
+    /// a warning so one bad checkpoint can't block startup.
     pub fn recover(&self, dir: &Path) -> usize {
         let entries = match std::fs::read_dir(dir) {
             Ok(e) => e,
@@ -675,39 +1393,78 @@ impl SessionRegistry {
                 continue;
             }
             match SessionCheckpoint::load(&path) {
-                Ok(ck) => {
-                    match Session::from_checkpoint(&ck, self.cfg.ingest_queue_depth) {
-                        Ok(session) => {
-                            let mut guard = self.sessions.lock().unwrap();
-                            let used: usize =
-                                guard.values().map(|s| s.resident_bytes()).sum();
-                            if guard.len() < self.cfg.max_sessions
-                                && used + session.resident_bytes()
-                                    <= self.cfg.max_resident_bytes
-                                && !guard.contains_key(&ck.name)
-                            {
-                                guard.insert(ck.name.clone(), Arc::new(session));
-                                recovered += 1;
-                            } else {
-                                crate::log_warn!(
-                                    "recovery skipped session '{}' (admission)",
-                                    ck.name
-                                );
-                            }
-                        }
-                        Err(e) => {
-                            crate::log_warn!("recovery: bad session in {}: {e}", path.display())
-                        }
+                Ok(ck) => match self.admit_recovered(&ck) {
+                    Ok(()) => recovered += 1,
+                    Err(e) => {
+                        crate::log_warn!("recovery skipped session '{}': {e}", ck.name)
                     }
-                }
+                },
                 Err(e) => crate::log_warn!("recovery: unreadable {}: {e}", path.display()),
             }
         }
         recovered
     }
 
+    /// Admit one recovered checkpoint under the same budgets as `create`.
+    fn admit_recovered(&self, ck: &SessionCheckpoint) -> Result<(), String> {
+        if !valid_session_name(&ck.name) {
+            return Err(format!("invalid session name '{}'", ck.name));
+        }
+        let (ell, d, shards) = (ck.ell as usize, ck.d as usize, ck.shards as usize);
+        let new_bytes = session_bytes(ell, d, shards)?;
+        let scorer_bytes = checkpoint_scorer_bytes(ck, ell, shards);
+        if !self.budgets.slots.reserve(1) {
+            return Err("admission: session slots exhausted".into());
+        }
+        if !self.budgets.sketch.reserve(new_bytes) {
+            self.budgets.slots.release(1);
+            return Err("admission: sketch budget exhausted".into());
+        }
+        if !self.budgets.scorer.reserve(scorer_bytes) {
+            self.budgets.sketch.release(new_bytes);
+            self.budgets.slots.release(1);
+            return Err("admission: scorer budget exhausted".into());
+        }
+        let release_all = |budgets: &Budgets| {
+            budgets.scorer.release(scorer_bytes);
+            budgets.sketch.release(new_bytes);
+            budgets.slots.release(1);
+        };
+        let session = match Session::from_checkpoint(
+            ck,
+            self.cfg.ingest_queue_depth,
+            self.budgets.clone(),
+            new_bytes,
+        ) {
+            Ok(session) => session,
+            Err(e) => {
+                release_all(&self.budgets);
+                return Err(e);
+            }
+        };
+        let idx = self.shard_index(&ck.name);
+        let shard = &self.shards[idx];
+        {
+            let mut guard = shard.sessions.write().unwrap();
+            if guard.contains_key(&ck.name) {
+                // Dropping the freshly built session releases its budgets.
+                return Err(format!("session '{}' already exists", ck.name));
+            }
+            guard.insert(ck.name.clone(), Arc::new(session));
+            shard.session_count.fetch_add(1, Ordering::Relaxed);
+            shard.sketch_bytes.fetch_add(new_bytes, Ordering::Relaxed);
+        }
+        self.publish_shard_gauges(idx);
+        Ok(())
+    }
+
     /// Stats for the wire op: one session's counters, or (empty name)
-    /// registry-level counters plus every session's counters.
+    /// registry-level counters — budgets, per-registry-shard occupancy —
+    /// plus every session's counters. Never holds more than one shard lock
+    /// at a time.
+    ///
+    /// # Errors
+    /// Unknown session name (non-empty `session` only).
     pub fn stats_pairs(&self, session: &str) -> Result<Vec<(String, u64)>, String> {
         if !session.is_empty() {
             return Ok(self.get(session)?.stats_pairs());
@@ -722,6 +1479,10 @@ impl SessionRegistry {
                 self.resident_bytes() as u64,
             ),
             (
+                "service.registry.scorer_bytes".to_string(),
+                self.scorer_bytes() as u64,
+            ),
+            (
                 "service.registry.max_sessions".to_string(),
                 self.cfg.max_sessions as u64,
             ),
@@ -729,13 +1490,33 @@ impl SessionRegistry {
                 "service.registry.max_resident_bytes".to_string(),
                 self.cfg.max_resident_bytes as u64,
             ),
+            (
+                "service.registry.max_scorer_bytes".to_string(),
+                self.cfg.max_scorer_bytes as u64,
+            ),
+            (
+                "service.registry.shards".to_string(),
+                self.shards.len() as u64,
+            ),
         ];
+        for (i, shard) in self.shards.iter().enumerate() {
+            pairs.push((
+                format!("service.registry.shard.{i}.sessions"),
+                shard.session_count.load(Ordering::Relaxed) as u64,
+            ));
+            pairs.push((
+                format!("service.registry.shard.{i}.sketch_bytes"),
+                shard.sketch_bytes.load(Ordering::Relaxed) as u64,
+            ));
+        }
         pairs.extend(metrics().snapshot_counters("service.server."));
         pairs.extend(metrics().snapshot_counters("service.registry."));
-        let sessions: Vec<Arc<Session>> =
-            self.sessions.lock().unwrap().values().cloned().collect();
-        for s in sessions {
-            pairs.extend(s.stats_pairs());
+        for shard in &self.shards {
+            let sessions: Vec<Arc<Session>> =
+                shard.sessions.read().unwrap().values().cloned().collect();
+            for s in sessions {
+                pairs.extend(s.stats_pairs());
+            }
         }
         Ok(pairs)
     }
@@ -748,6 +1529,20 @@ mod tests {
 
     fn random_rows(rng: &mut Pcg64, n: usize, d: usize) -> Matrix {
         Matrix::from_fn(n, d, |_, _| rng.normal_f32())
+    }
+
+    fn score_batch(n: usize, ell: usize, start: u64) -> ScoreBatch {
+        let mut zhat = Matrix::zeros(n, ell);
+        for i in 0..n {
+            zhat.set(i, (i + start as usize) % ell, 1.0);
+        }
+        ScoreBatch {
+            indices: (start..start + n as u64).collect(),
+            labels: vec![0; n],
+            norms: vec![1.0; n],
+            losses: vec![1.0; n],
+            zhat,
+        }
     }
 
     #[test]
@@ -814,6 +1609,81 @@ mod tests {
     }
 
     #[test]
+    fn byte_budget_is_exact_under_concurrency() {
+        let budget = Arc::new(ByteBudget::new(1000));
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let budget = budget.clone();
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        if budget.reserve(7) {
+                            budget.release(7);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(budget.used(), 0);
+        assert!(budget.reserve(1000));
+        assert!(!budget.reserve(1));
+        budget.release(2000); // saturates, no underflow
+        assert_eq!(budget.used(), 0);
+    }
+
+    #[test]
+    fn sessions_spread_across_registry_shards() {
+        let reg = SessionRegistry::new(RegistryConfig::default());
+        assert_eq!(reg.registry_shards(), 8);
+        for i in 0..16 {
+            reg.create(&format!("spread-{i}"), 2, 4, 1).unwrap();
+        }
+        assert_eq!(reg.session_count(), 16);
+        let pairs = reg.stats_pairs("").unwrap();
+        let occupied = (0..reg.registry_shards())
+            .filter(|i| {
+                pairs
+                    .iter()
+                    .any(|(n, v)| n == &format!("service.registry.shard.{i}.sessions") && *v > 0)
+            })
+            .count();
+        // FNV spreads 16 names over 8 shards; ≥2 occupied is guaranteed
+        // unless the hash is catastrophically broken.
+        assert!(occupied >= 2, "only {occupied} shards occupied");
+        // Per-shard counters sum to the global count.
+        let total: u64 = pairs
+            .iter()
+            .filter(|(n, _)| {
+                n.starts_with("service.registry.shard.") && n.ends_with(".sessions")
+            })
+            .map(|(_, v)| *v)
+            .sum();
+        assert_eq!(total, 16);
+        // Closing releases the right shard's accounting.
+        for i in 0..16 {
+            reg.close(&format!("spread-{i}")).unwrap();
+        }
+        assert_eq!(reg.session_count(), 0);
+        assert_eq!(reg.resident_bytes(), 0);
+        assert_eq!(reg.scorer_bytes(), 0);
+    }
+
+    #[test]
+    fn shard_count_is_normalized_to_power_of_two() {
+        assert_eq!(normalize_shard_count(0), 1);
+        assert_eq!(normalize_shard_count(1), 1);
+        assert_eq!(normalize_shard_count(5), 8);
+        assert_eq!(normalize_shard_count(8), 8);
+        assert_eq!(normalize_shard_count(1000), 256);
+        let reg = SessionRegistry::new(RegistryConfig {
+            registry_shards: 3,
+            ..Default::default()
+        });
+        assert_eq!(reg.registry_shards(), 4);
+        let name = "anywhere";
+        assert!(reg.shard_index(name) < 4);
+    }
+
+    #[test]
     fn bad_inputs_are_rejected_loudly() {
         let reg = SessionRegistry::new(RegistryConfig::default());
         assert!(reg.create("bad name!", 2, 4, 1).is_err());
@@ -839,6 +1709,11 @@ mod tests {
         let reg = SessionRegistry::new(RegistryConfig::default());
         reg.create("dup", 2, 4, 1).unwrap();
         assert!(reg.create("dup", 2, 4, 1).unwrap_err().contains("exists"));
+        // The failed create must not leak budget.
+        assert_eq!(reg.session_count(), 1);
+        reg.close("dup").unwrap();
+        assert_eq!(reg.session_count(), 0);
+        assert_eq!(reg.scorer_bytes(), 0);
     }
 
     #[test]
@@ -860,7 +1735,167 @@ mod tests {
         assert_eq!(get(".rows_enqueued"), 5);
         assert_eq!(get(".rows_applied"), 5);
         assert_eq!(get(".frozen"), 1);
+        assert_eq!(get(".spilled"), 0);
         let all = reg.stats_pairs("").unwrap();
         assert!(all.iter().any(|(n, v)| n == "service.registry.sessions" && *v == 1));
+        assert!(all
+            .iter()
+            .any(|(n, _)| n == "service.registry.max_scorer_bytes"));
+        assert!(all.iter().any(|(n, _)| n == "service.registry.shards"));
+    }
+
+    #[test]
+    fn scorer_budget_admission_create_and_score_time() {
+        // ℓ=4: baseline 8ℓ = 32 bytes per shard slot; entries cost
+        // ENTRY_BYTES + 4ℓ = 40 bytes each. Cap 100 fits one 1-shard
+        // session (32) + one entry (40) but not a 4-shard session (128)
+        // or a second entry (112 > 100).
+        let reg = SessionRegistry::new(RegistryConfig {
+            max_scorer_bytes: 100,
+            ..Default::default()
+        });
+        let err = reg.create("big", 4, 8, 4).unwrap_err();
+        assert!(err.contains("scorer"), "{err}");
+        assert_eq!(reg.scorer_bytes(), 0); // nothing leaked
+
+        reg.create("ok", 4, 8, 1).unwrap();
+        assert_eq!(reg.scorer_bytes(), 32);
+        let s = reg.get("ok").unwrap();
+        s.ingest(0, Matrix::from_fn(2, 8, |r, c| (r + c) as f32))
+            .unwrap();
+        s.freeze().unwrap();
+        s.score(0, &score_batch(1, 4, 0)).unwrap();
+        assert_eq!(reg.scorer_bytes(), 72);
+        let err2 = s.score(0, &score_batch(1, 4, 1)).unwrap_err();
+        assert!(err2.starts_with(SCORER_ADMISSION), "{err2}");
+        assert_eq!(reg.scorer_bytes(), 72); // rejected batch left no state
+
+        // Finalizing shrinks the accounted footprint (cache ≤ raw).
+        let (idx, _) = s.top_k(Method::Sage, 1, 2, 0).unwrap();
+        assert_eq!(idx.len(), 1);
+        assert!(reg.scorer_bytes() < 72, "{}", reg.scorer_bytes());
+
+        // Closing releases everything.
+        drop(s);
+        reg.close("ok").unwrap();
+        assert_eq!(reg.scorer_bytes(), 0);
+    }
+
+    #[test]
+    fn spill_on_pressure_frees_reloads_and_preserves_ranks() {
+        let dir = std::env::temp_dir().join(format!("sage_spill_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Cap 200, ℓ=4 (baseline 32, entry 40): session A with 3 entries
+        // is resident at 152; creating B adds 32 (184); B's first scored
+        // entry (40) would hit 224 > 200 and must spill A.
+        let reg = SessionRegistry::new(RegistryConfig {
+            max_scorer_bytes: 200,
+            checkpoint_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        for name in ["a", "b"] {
+            reg.create(name, 4, 8, 1).unwrap();
+            let s = reg.get(name).unwrap();
+            s.ingest(0, Matrix::from_fn(2, 8, |r, c| (r + c) as f32))
+                .unwrap();
+            s.freeze().unwrap();
+        }
+        reg.score("a", 0, &score_batch(3, 4, 0)).unwrap();
+        assert_eq!(reg.scorer_bytes(), 152 + 32);
+
+        // Expected ranks for A, computed on a local replica.
+        let expected = {
+            let mut local = AgreementScorer::new(4);
+            let b = score_batch(3, 4, 0);
+            let idx: Vec<usize> = b.indices.iter().map(|&i| i as usize).collect();
+            local.add_batch(&idx, &b.labels, &b.zhat, &b.norms, &b.losses);
+            let scores = local.finalize();
+            let inputs = SelectionInputs {
+                scores: &scores,
+                val_consensus: None,
+                num_classes: 2,
+                seed: 0,
+            };
+            select_weighted(Method::Sage, &inputs, 2).0
+        };
+
+        // B's score triggers the spill of A (the least-recently-active
+        // session holding scored state).
+        reg.score("b", 0, &score_batch(1, 4, 0)).unwrap();
+        let a = reg.get("a").unwrap();
+        assert!(a.is_spilled());
+        assert_eq!(a.scorer_bytes(), 0);
+        assert!(dir.join("a.sagesess").exists());
+
+        // TopK on A transparently reloads its state (spilling B in turn)
+        // and returns the same ranks as the never-spilled replica. The
+        // transient spill file is consumed by the reload — it must not
+        // linger to resurrect stale state after a restart.
+        let (idx, _) = reg.top_k("a", Method::Sage, 2, 2, 0).unwrap();
+        assert_eq!(idx, expected);
+        assert!(!reg.get("a").unwrap().is_spilled());
+        assert!(!dir.join("a.sagesess").exists());
+        assert!(reg.get("b").unwrap().is_spilled());
+        assert!(dir.join("b.sagesess").exists());
+
+        // And B reloads the same way for its own query (re-spilling A).
+        let (idx_b, _) = reg.top_k("b", Method::Sage, 1, 2, 0).unwrap();
+        assert_eq!(idx_b.len(), 1);
+        assert!(!dir.join("b.sagesess").exists());
+        assert!(reg.get("a").unwrap().is_spilled());
+
+        // Closing a spilled-but-never-checkpointed session removes its
+        // spill file: a restart must not resurrect a closed session.
+        reg.close("a").unwrap();
+        assert!(!dir.join("a.sagesess").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_without_checkpoint_dir_is_a_final_rejection() {
+        let reg = SessionRegistry::new(RegistryConfig {
+            max_scorer_bytes: 100,
+            ..Default::default()
+        });
+        reg.create("only", 4, 8, 1).unwrap();
+        let s = reg.get("only").unwrap();
+        s.ingest(0, Matrix::from_fn(2, 8, |r, c| (r + c) as f32))
+            .unwrap();
+        s.freeze().unwrap();
+        reg.score("only", 0, &score_batch(1, 4, 0)).unwrap();
+        let err = reg.score("only", 0, &score_batch(1, 4, 1)).unwrap_err();
+        assert!(err.starts_with(SCORER_ADMISSION), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_restores_scorer_state_bit_exactly() {
+        let dir = std::env::temp_dir().join(format!("sage_reg_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = RegistryConfig {
+            checkpoint_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let reg = SessionRegistry::new(cfg.clone());
+        reg.create("ck", 4, 8, 2).unwrap();
+        let s = reg.get("ck").unwrap();
+        let mut rng = Pcg64::seeded(3);
+        s.ingest(0, random_rows(&mut rng, 12, 8)).unwrap();
+        s.ingest(1, random_rows(&mut rng, 9, 8)).unwrap();
+        s.freeze().unwrap();
+        s.score(0, &score_batch(4, 4, 0)).unwrap();
+        s.score(1, &score_batch(3, 4, 4)).unwrap();
+        reg.checkpoint("ck").unwrap();
+        let (expected, _) = s.top_k(Method::Sage, 3, 2, 7).unwrap();
+        drop(s);
+
+        let reg2 = SessionRegistry::new(cfg);
+        assert_eq!(reg2.recover(&dir), 1);
+        let (got, _) = reg2.top_k("ck", Method::Sage, 3, 2, 7).unwrap();
+        assert_eq!(got, expected);
+        // Recovered scorer bytes are accounted.
+        assert!(reg2.scorer_bytes() > 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

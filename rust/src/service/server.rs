@@ -9,6 +9,14 @@
 //! never blocks: `ThreadPool::try_execute` fails fast and the new
 //! connection is rejected with an error frame, keeping accept (and
 //! shutdown) responsive no matter the load.
+//!
+//! Connection shedding is part of the wire contract (documented in
+//! docs/PROTOCOL.md §"Connection rejection and retry"): a shed connection
+//! receives exactly one error frame — opcode 0, status 1, message prefixed
+//! `connection rejected` — and is then closed. Clients retry with
+//! exponential backoff (`client::ServiceClient::request_with_retry`); the
+//! `service.server.rejected_connections` counter makes shedding observable
+//! through the Stats op.
 
 use super::protocol::{read_frame_event, write_frame, ReadEvent, Request, Response};
 use super::registry::{RegistryConfig, SessionRegistry};
@@ -252,23 +260,24 @@ pub fn dispatch(registry: &SessionRegistry, request: Request) -> Response {
         Request::Freeze { session } => registry
             .get(&session)
             .and_then(|s| s.freeze().map(Response::Frozen)),
+        // Score and TopK go through the registry (not the session) so the
+        // scorer-budget spill-on-pressure path can evict idle sessions.
         Request::Score {
             session,
             shard,
             batch,
         } => registry
-            .get(&session)
-            .and_then(|s| s.score(shard as usize, &batch).map(|()| Response::Ok)),
+            .score(&session, shard as usize, &batch)
+            .map(|()| Response::Ok),
         Request::TopK {
             session,
             method,
             k,
             num_classes,
             seed,
-        } => registry.get(&session).and_then(|s| {
-            let method = Method::parse(&method)?;
+        } => Method::parse(&method).and_then(|method| {
             let (indices, weights) =
-                s.top_k(method, k as usize, num_classes as usize, seed)?;
+                registry.top_k(&session, method, k as usize, num_classes as usize, seed)?;
             Ok(Response::Selected {
                 indices: indices.iter().map(|&i| i as u64).collect(),
                 weights: weights.unwrap_or_default(),

@@ -224,6 +224,10 @@ impl FdSketch {
     }
 
     /// Rebuild a sketch from an exported state (pure-Rust shrink backend).
+    ///
+    /// # Errors
+    /// Rejects states with zero `ell`/`d`, a buffer whose length is not
+    /// `2ℓ × d`, or `next_row > 2ℓ`.
     pub fn from_state(state: &SketchState) -> Result<FdSketch, String> {
         let (ell, d) = (state.ell as usize, state.d as usize);
         if ell == 0 || d == 0 {

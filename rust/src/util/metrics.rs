@@ -30,6 +30,38 @@ impl Counter {
     }
 }
 
+/// Last-write-wins gauge: a current value rather than a running sum
+/// (registry-shard occupancy, resident bytes, queue depths). Writers race
+/// benignly — the owner of the underlying state publishes the value it just
+/// computed after each mutation.
+#[derive(Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (a gauge never wraps below zero).
+    pub fn sub(&self, n: u64) {
+        let _ = self
+            .value
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(n))
+            });
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
 /// Log-linear histogram of nanosecond (or arbitrary u64) samples.
 /// 64 power-of-two decades x 4 sub-buckets; relative error <= 25%.
 pub struct Histogram {
@@ -162,6 +194,7 @@ impl Drop for ScopedTimer<'_> {
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, &'static Counter>>,
+    gauges: Mutex<BTreeMap<String, &'static Gauge>>,
     hists: Mutex<BTreeMap<String, &'static Histogram>>,
 }
 
@@ -170,6 +203,15 @@ impl Registry {
         let mut m = self.counters.lock().unwrap();
         m.entry(name.to_string())
             .or_insert_with(|| Box::leak(Box::new(Counter::default())))
+    }
+
+    /// Interned gauge. Like counters, gauge names live forever — callers
+    /// must use a bounded name set (e.g. the service's per-registry-shard
+    /// gauges, capped at the shard count), never client-chosen strings.
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| Box::leak(Box::new(Gauge::default())))
     }
 
     pub fn histogram(&self, name: &str) -> &'static Histogram {
@@ -192,11 +234,26 @@ impl Registry {
             .collect()
     }
 
+    /// Snapshot of all gauges whose name starts with `prefix`, sorted by
+    /// name (see [`Registry::snapshot_counters`]).
+    pub fn snapshot_gauges(&self, prefix: &str) -> Vec<(String, u64)> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(name, _)| name.starts_with(prefix))
+            .map(|(name, g)| (name.clone(), g.get()))
+            .collect()
+    }
+
     /// Human-readable dump (sorted by name).
     pub fn report(&self) -> String {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{name}: {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name}: {}\n", g.get()));
         }
         for (name, h) in self.hists.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -286,6 +343,36 @@ mod tests {
         assert_eq!(c1, c2);
         r.counter("x").inc();
         assert!(r.report().contains("x: 1"));
+    }
+
+    #[test]
+    fn gauge_set_add_sub_saturates() {
+        let g = Gauge::default();
+        g.set(10);
+        g.add(5);
+        assert_eq!(g.get(), 15);
+        g.sub(20); // saturates at zero, never wraps
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn registry_gauges_snapshot_and_report() {
+        let r = Registry::default();
+        r.gauge("shard.0.sessions").set(3);
+        r.gauge("shard.1.sessions").set(4);
+        r.gauge("other.depth").set(9);
+        let snap = r.snapshot_gauges("shard.");
+        assert_eq!(
+            snap,
+            vec![
+                ("shard.0.sessions".to_string(), 3),
+                ("shard.1.sessions".to_string(), 4)
+            ]
+        );
+        let g1 = r.gauge("shard.0.sessions") as *const _;
+        let g2 = r.gauge("shard.0.sessions") as *const _;
+        assert_eq!(g1, g2);
+        assert!(r.report().contains("other.depth: 9"));
     }
 
     #[test]

@@ -1,0 +1,112 @@
+//! docs/PROTOCOL.md is kept honest by construction: every example frame
+//! documented there is parsed out of the markdown, decoded through the real
+//! framing + op codecs, re-encoded, and compared byte-for-byte. If the wire
+//! format drifts from the spec — opcode numbering, field order, checksum,
+//! anything — this test fails until the doc is regenerated.
+//!
+//! Doc convention (see the "Example frames" section of the spec): an HTML
+//! comment `<!-- frame-example: request <Op> -->` or
+//! `<!-- frame-example: response <Kind> -->` immediately precedes a fenced
+//! code block of whitespace-separated hex bytes for one complete frame.
+
+use sage::service::protocol::{encode_frame, read_frame, Request, Response};
+
+struct DocFrame {
+    kind: String,
+    label: String,
+    bytes: Vec<u8>,
+}
+
+fn parse_doc_frames(doc: &str) -> Vec<DocFrame> {
+    let mut frames = Vec::new();
+    let mut lines = doc.lines();
+    while let Some(line) = lines.next() {
+        let trimmed = line.trim();
+        let Some(rest) = trimmed.strip_prefix("<!-- frame-example:") else {
+            continue;
+        };
+        let annotation = rest.trim_end_matches("-->").trim();
+        let mut words = annotation.split_whitespace();
+        let kind = words.next().expect("frame-example kind").to_string();
+        let label = words.collect::<Vec<_>>().join(" ");
+        // Skip to the opening fence.
+        for l in lines.by_ref() {
+            if l.trim().starts_with("```") {
+                break;
+            }
+        }
+        let mut hex = String::new();
+        for l in lines.by_ref() {
+            if l.trim().starts_with("```") {
+                break;
+            }
+            hex.push_str(l);
+            hex.push(' ');
+        }
+        let bytes: Vec<u8> = hex
+            .split_whitespace()
+            .map(|tok| {
+                u8::from_str_radix(tok, 16)
+                    .unwrap_or_else(|_| panic!("bad hex byte '{tok}' in example '{label}'"))
+            })
+            .collect();
+        frames.push(DocFrame { kind, label, bytes });
+    }
+    frames
+}
+
+#[test]
+fn every_documented_example_frame_round_trips_byte_for_byte() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/PROTOCOL.md");
+    let doc = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
+    let frames = parse_doc_frames(&doc);
+    // All nine request ops and all seven response kinds are documented.
+    assert!(
+        frames.len() >= 16,
+        "expected ≥16 documented example frames, found {}",
+        frames.len()
+    );
+    let requests = frames.iter().filter(|f| f.kind == "request").count();
+    let responses = frames.iter().filter(|f| f.kind == "response").count();
+    assert!(requests >= 9, "expected ≥9 request examples, found {requests}");
+    assert!(responses >= 7, "expected ≥7 response examples, found {responses}");
+
+    for frame in &frames {
+        let mut cursor = &frame.bytes[..];
+        let decoded = read_frame(&mut cursor)
+            .unwrap_or_else(|e| panic!("example '{}' unreadable: {e}", frame.label))
+            .unwrap_or_else(|| panic!("example '{}' is empty", frame.label));
+        assert!(
+            cursor.is_empty(),
+            "example '{}' has {} trailing bytes",
+            frame.label,
+            cursor.len()
+        );
+        let re_encoded = match frame.kind.as_str() {
+            "request" => {
+                let request = Request::decode(decoded.opcode, &decoded.payload)
+                    .unwrap_or_else(|e| panic!("example '{}' undecodable: {e}", frame.label));
+                assert_eq!(decoded.status, 0, "request '{}' has status", frame.label);
+                encode_frame(request.opcode(), 0, &request.encode())
+            }
+            "response" => {
+                let response = Response::decode(&decoded.payload)
+                    .unwrap_or_else(|e| panic!("example '{}' undecodable: {e}", frame.label));
+                assert_eq!(
+                    response.status(),
+                    decoded.status,
+                    "response '{}' status drift",
+                    frame.label
+                );
+                encode_frame(decoded.opcode, response.status(), &response.encode())
+            }
+            other => panic!("unknown frame-example kind '{other}'"),
+        };
+        assert_eq!(
+            re_encoded, frame.bytes,
+            "example '{}' does not round-trip byte-for-byte",
+            frame.label
+        );
+    }
+}

@@ -10,9 +10,14 @@ use sage::data::{generate, BenchmarkKind};
 use sage::grad::{MlpSpec, TrainHyper};
 use sage::pipeline::{
     phase1_gradient_stream, phase2_score_stream, run_selection, shard_ranges, PipelineConfig,
+    ScoreBlock,
 };
 use sage::runtime::{ModelBackend, ReferenceModelBackend};
-use sage::service::{RegistryConfig, Server, ServerConfig, ServerHandle, ServiceClient};
+use sage::service::registry::SessionRegistry;
+use sage::service::{
+    is_rejection, protocol, request_with_retry, RegistryConfig, Request, Response, Server,
+    ServerConfig, ServerHandle, ServiceClient,
+};
 use sage::sketch::{covariance_error, fd_bound, FdSketch};
 use sage::tensor::Matrix;
 use sage::util::rng::Pcg64;
@@ -118,6 +123,297 @@ fn served_selection_equals_offline_run_selection() {
     assert_eq!(get(".scored_entries"), n as u64);
     assert_eq!(get(".frozen"), 1);
 
+    handle.shutdown();
+}
+
+#[test]
+fn served_selection_exact_across_registry_shards() {
+    // Two concurrent sessions whose names hash to DIFFERENT registry
+    // shards, each fed by 4 concurrent producer connections (8 concurrent
+    // producers total). Both must freeze and select byte-identically to the
+    // same offline run — the sharded registry must not perturb the
+    // exactness contract under cross-shard concurrency.
+    let workers = 4;
+    let n = 200;
+    let k = 50;
+    let b = backend();
+    let ds = generate(&BenchmarkKind::Cifar10.spec(8), n, 5, 0);
+    let cfg = PipelineConfig {
+        workers,
+        warmup_steps: 3,
+        seed: 13,
+        ..Default::default()
+    };
+    let offline = run_selection(&b, &ds, Method::Sage, k, &cfg, None).unwrap();
+
+    // Pick session names in distinct registry shards (the hash is
+    // deterministic, so probe with a local registry).
+    let probe = SessionRegistry::new(RegistryConfig::default());
+    let name_a = "exact-a".to_string();
+    let name_b = (0..100)
+        .map(|i| format!("exact-b{i}"))
+        .find(|nm| probe.shard_index(nm) != probe.shard_index(&name_a))
+        .expect("some probe name lands in another shard");
+
+    let (handle, addr) = spawn_server(RegistryConfig::default());
+    let mut control = ServiceClient::connect(&addr).unwrap();
+    for name in [&name_a, &name_b] {
+        control
+            .create_session(name, b.ell(), b.spec().d(), workers)
+            .unwrap();
+    }
+    let registry = handle.registry();
+    assert_ne!(
+        registry.shard_index(&name_a),
+        registry.shard_index(&name_b)
+    );
+
+    let ranges = shard_ranges(n, workers);
+    let params = &offline.params;
+    let (b_ref, ds_ref) = (&b, &ds);
+
+    // Phase I: 8 producers at once, 4 per session, across 2 registry shards.
+    std::thread::scope(|scope| {
+        for name in [&name_a, &name_b] {
+            for (shard, &range) in ranges.iter().enumerate() {
+                let addr = addr.clone();
+                let name = name.clone();
+                scope.spawn(move || {
+                    let mut client = ServiceClient::connect(&addr).unwrap();
+                    phase1_gradient_stream(b_ref, ds_ref, params, range, |g| {
+                        client.ingest(&name, shard, g).map(|_| ())
+                    })
+                    .unwrap();
+                });
+            }
+        }
+    });
+
+    let frozen_a = control.freeze(&name_a).unwrap();
+    let frozen_b = control.freeze(&name_b).unwrap();
+    assert_eq!(frozen_a.sketch.as_slice(), offline.sketch.as_slice());
+    assert_eq!(frozen_b.sketch.as_slice(), offline.sketch.as_slice());
+
+    // Phase II: 8 concurrent scorers.
+    std::thread::scope(|scope| {
+        for (name, frozen) in [(&name_a, &frozen_a), (&name_b, &frozen_b)] {
+            for (shard, &range) in ranges.iter().enumerate() {
+                let addr = addr.clone();
+                let name = name.clone();
+                let sketch = &frozen.sketch;
+                scope.spawn(move || {
+                    let mut client = ServiceClient::connect(&addr).unwrap();
+                    phase2_score_stream(b_ref, ds_ref, params, sketch, range, |blk| {
+                        client.score(&name, shard, &blk)
+                    })
+                    .unwrap();
+                });
+            }
+        }
+    });
+
+    for name in [&name_a, &name_b] {
+        let (indices, _) = control.top_k(name, "sage", k, 10, cfg.seed).unwrap();
+        assert_eq!(indices, offline.indices, "session {name}");
+    }
+
+    // The server-wide stats must show sessions resident in ≥2 registry
+    // shards (lock-order-free per-shard counters).
+    let stats = control.stats(None).unwrap();
+    let occupied = stats
+        .iter()
+        .filter(|(n, v)| {
+            n.starts_with("service.registry.shard.") && n.ends_with(".sessions") && *v > 0
+        })
+        .count();
+    assert!(occupied >= 2, "sessions occupy only {occupied} registry shards");
+    handle.shutdown();
+}
+
+#[test]
+fn checkpoint_recovery_preserves_scorer_state_and_topk() {
+    // Ingest + freeze + score a session, checkpoint it BEFORE finalizing,
+    // restart the server, and verify the recovered session's TopK equals
+    // both the pre-restart TopK and the offline run — the scorer state
+    // (f64 consensus accumulators included) must round-trip bit-exactly.
+    let workers = 2;
+    let n = 120;
+    let k = 30;
+    let b = backend();
+    let ds = generate(&BenchmarkKind::Cifar10.spec(8), n, 5, 0);
+    let cfg = PipelineConfig {
+        workers,
+        warmup_steps: 3,
+        seed: 21,
+        ..Default::default()
+    };
+    let offline = run_selection(&b, &ds, Method::Sage, k, &cfg, None).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("sage_srv_scr_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let registry_cfg = RegistryConfig {
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+
+    let (handle, addr) = spawn_server(registry_cfg.clone());
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    client
+        .create_session("scr", b.ell(), b.spec().d(), workers)
+        .unwrap();
+    let ranges = shard_ranges(n, workers);
+    let params = &offline.params;
+    for (shard, &range) in ranges.iter().enumerate() {
+        phase1_gradient_stream(&b, &ds, params, range, |g| {
+            client.ingest("scr", shard, g).map(|_| ())
+        })
+        .unwrap();
+    }
+    let frozen = client.freeze("scr").unwrap();
+    assert_eq!(frozen.sketch.as_slice(), offline.sketch.as_slice());
+    for (shard, &range) in ranges.iter().enumerate() {
+        phase2_score_stream(&b, &ds, params, &frozen.sketch, range, |blk| {
+            client.score("scr", shard, &blk)
+        })
+        .unwrap();
+    }
+    // Raw (un-finalized) scorer state is resident and observable.
+    let stats = client.stats(Some("scr")).unwrap();
+    let scorer_bytes = stats
+        .iter()
+        .find(|(name, _)| name.ends_with(".scorer_bytes"))
+        .map(|(_, v)| *v)
+        .unwrap();
+    assert!(scorer_bytes > 0);
+
+    client.checkpoint("scr").unwrap();
+    let (before, _) = client.top_k("scr", "sage", k, 10, cfg.seed).unwrap();
+    assert_eq!(before, offline.indices);
+    drop(client);
+    handle.shutdown();
+
+    let (handle2, addr2) = spawn_server(registry_cfg);
+    let mut client2 = ServiceClient::connect(&addr2).unwrap();
+    let (after, _) = client2.top_k("scr", "sage", k, 10, cfg.seed).unwrap();
+    assert_eq!(after, offline.indices);
+    // And a class-balanced re-query over the recovered cache still works.
+    let (cb, _) = client2.top_k("scr", "cb-sage", k, 10, cfg.seed).unwrap();
+    assert_eq!(cb.len(), k);
+    handle2.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scorer_admission_over_the_wire() {
+    // ℓ=4: per-shard baseline 32 bytes, per-entry 40 bytes (see
+    // selection::scorer). Cap 100: a 4-shard session (128) is rejected at
+    // create; a 1-shard session fits but its second scored entry does not.
+    let (handle, addr) = spawn_server(RegistryConfig {
+        max_scorer_bytes: 100,
+        ..Default::default()
+    });
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    let err = client.create_session("scb-big", 4, 8, 4).unwrap_err();
+    assert!(err.contains("scorer"), "{err}");
+
+    client.create_session("scb", 4, 8, 1).unwrap();
+    client
+        .ingest("scb", 0, &Matrix::from_fn(2, 8, |r, c| (r + c) as f32))
+        .unwrap();
+    client.freeze("scb").unwrap();
+    let zhat = Matrix::from_fn(1, 4, |_, c| if c == 0 { 1.0 } else { 0.0 });
+    let blk = ScoreBlock {
+        indices: &[0],
+        labels: &[0],
+        norms: &[1.0],
+        losses: &[1.0],
+        zhat: &zhat,
+    };
+    client.score("scb", 0, &blk).unwrap();
+    let blk2 = ScoreBlock {
+        indices: &[1],
+        labels: &[0],
+        norms: &[1.0],
+        losses: &[1.0],
+        zhat: &zhat,
+    };
+    let err2 = client.score("scb", 0, &blk2).unwrap_err();
+    assert!(err2.starts_with("scorer admission rejected"), "{err2}");
+
+    // The cap and current usage are observable through the Stats op.
+    let stats = client.stats(None).unwrap();
+    let find = |name: &str| stats.iter().find(|(n, _)| n == name).map(|(_, v)| *v);
+    assert_eq!(find("service.registry.max_scorer_bytes"), Some(100));
+    assert_eq!(find("service.registry.scorer_bytes"), Some(72));
+    handle.shutdown();
+}
+
+#[test]
+fn saturated_server_sheds_with_error_frame_and_retry_succeeds() {
+    // threads=1: one running connection + a queue of 4 (threads × 4)
+    // saturates the pool. The next connection must be shed with the
+    // documented rejection frame (opcode 0, status 1, `connection
+    // rejected` prefix), and request_with_retry must succeed once the
+    // holders disconnect.
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 1,
+        registry: RegistryConfig::default(),
+    })
+    .expect("bind server");
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn();
+
+    // Occupy the single worker thread (a stats round trip proves the
+    // connection handler is running, not queued) ...
+    let mut first = ServiceClient::connect(&addr).unwrap();
+    first.stats(None).unwrap();
+    // ... then fill the 4-deep submission queue with idle connections.
+    let holders: Vec<ServiceClient> = (0..4)
+        .map(|_| ServiceClient::connect(&addr).unwrap())
+        .collect();
+
+    // The accept loop processes connections in order, so by the time this
+    // raw socket is accepted the pool is saturated: the server writes the
+    // rejection frame without waiting for any request bytes.
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    let frame = protocol::read_frame(&mut raw)
+        .expect("rejection frame readable")
+        .expect("rejection frame present");
+    assert_eq!(frame.opcode, 0);
+    assert_eq!(frame.status, 1);
+    match Response::decode(&frame.payload).unwrap() {
+        Response::Error { message } => {
+            assert!(is_rejection(&message), "{message}");
+        }
+        other => panic!("expected error frame, got {other:?}"),
+    }
+    drop(raw);
+
+    // Free the pool and retry per the documented backoff contract.
+    drop(first);
+    drop(holders);
+    let response = request_with_retry(
+        &addr,
+        &Request::Stats {
+            session: String::new(),
+        },
+        20,
+        std::time::Duration::from_millis(50),
+    )
+    .expect("retry succeeds once the pool drains");
+    match response {
+        Response::Stats { pairs } => {
+            let shed = pairs
+                .iter()
+                .find(|(n, _)| n == "service.server.rejected_connections")
+                .map(|(_, v)| *v)
+                .unwrap_or(0);
+            assert!(shed >= 1, "rejected_connections counter not visible");
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
     handle.shutdown();
 }
 
