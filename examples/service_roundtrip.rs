@@ -47,6 +47,7 @@ fn main() {
     let server = Server::bind(&ServerConfig {
         addr: "127.0.0.1:0".into(), // free port
         threads: 8,
+        compute_workers: 2, // parallel kernels; selections identical to serial
         registry: RegistryConfig::default(),
     })
     .unwrap();

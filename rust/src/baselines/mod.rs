@@ -12,7 +12,7 @@
 
 use crate::config::Method;
 use crate::selection::{select_class_balanced, select_top_k, Scores, TopK};
-use crate::tensor::{self, Matrix};
+use crate::tensor::{self, ComputeBackend, Matrix};
 use crate::util::rng::Pcg64;
 
 /// Everything a selection rule may use.
@@ -23,6 +23,11 @@ pub struct SelectionInputs<'a> {
     pub val_consensus: Option<Vec<f32>>,
     pub num_classes: usize,
     pub seed: u64,
+    /// Kernel backend for the rules' `N × ℓ` matrix products (GLISTER /
+    /// GradMatch gain scans, CRAIG similarity sweeps, GRAFT's MaxVol
+    /// residual scan). Bit-identical across serial/parallel backends, so
+    /// selections never depend on the worker count.
+    pub compute: &'a dyn ComputeBackend,
 }
 
 /// Dispatch a method by name. `k` is the subset budget.
@@ -131,13 +136,14 @@ fn glister(inputs: &SelectionInputs, k: usize) -> Vec<usize> {
     let damp = 1.0 / (k.max(1) as f64);
     for _ in 0..k {
         let rf: Vec<f32> = residual.iter().map(|&v| v as f32).collect();
+        // One kernel-layer matvec per pick: gains = Ẑ·r over all rows.
+        let gains = inputs.compute.matvec(&scores.zhat, &rf);
         let mut best = usize::MAX;
         let mut best_gain = f32::NEG_INFINITY;
-        for r in 0..n {
+        for (r, &gain) in gains.iter().enumerate() {
             if chosen[r] {
                 continue;
             }
-            let gain = tensor::dot(scores.zhat.row(r), &rf);
             if gain > best_gain {
                 best_gain = gain;
                 best = r;
@@ -185,11 +191,11 @@ fn craig_weighted(inputs: &SelectionInputs, k: usize) -> (Vec<usize>, Option<Vec
             if chosen[r] {
                 continue;
             }
-            // Marginal facility-location gain of adding r.
-            let zr = scores.zhat.row(r);
+            // Marginal facility-location gain of adding r: one kernel-layer
+            // similarity sweep sims = Ẑ·ẑ_r over all rows.
+            let sims = inputs.compute.matvec(&scores.zhat, scores.zhat.row(r));
             let mut gain = 0.0f32;
-            for i in 0..n {
-                let sim = tensor::dot(zr, scores.zhat.row(i));
+            for (i, &sim) in sims.iter().enumerate() {
                 let cur = if best_sim[i] == f32::NEG_INFINITY { 0.0 } else { best_sim[i] };
                 if sim > cur {
                     gain += sim - cur;
@@ -210,9 +216,8 @@ fn craig_weighted(inputs: &SelectionInputs, k: usize) -> (Vec<usize>, Option<Vec
         chosen[best_row] = true;
         out.push(scores.entries[best_row].index);
         selected_rows.push(best_row);
-        let zb = scores.zhat.row(best_row).to_vec();
-        for i in 0..n {
-            let sim = tensor::dot(&zb, scores.zhat.row(i));
+        let sims = inputs.compute.matvec(&scores.zhat, scores.zhat.row(best_row));
+        for (i, &sim) in sims.iter().enumerate() {
             if sim > best_sim[i] {
                 best_sim[i] = sim;
                 best_medoid[i] = best_row;
@@ -258,13 +263,14 @@ fn gradmatch(inputs: &SelectionInputs, k: usize) -> Vec<usize> {
     let mut out = Vec::with_capacity(k);
     for _ in 0..k {
         let rf: Vec<f32> = residual.iter().map(|&v| v as f32).collect();
+        // Matching-pursuit gain scan through the kernel layer.
+        let gains = inputs.compute.matvec(&scores.zhat, &rf);
         let mut best = usize::MAX;
         let mut best_val = f32::NEG_INFINITY;
-        for r in 0..n {
+        for (r, &v) in gains.iter().enumerate() {
             if chosen[r] {
                 continue;
             }
-            let v = tensor::dot(scores.zhat.row(r), &rf);
             if v > best_val {
                 best_val = v;
                 best = r;
@@ -332,35 +338,37 @@ fn graft(inputs: &SelectionInputs, k: usize, warm: bool) -> Vec<usize> {
     let mut out_rows: Vec<usize> = Vec::with_capacity(k);
     let maxvol_steps = k.min(ell);
     for _ in 0..maxvol_steps {
-        // Largest residual row.
+        // Largest residual row: batched row-energy scan through the kernel
+        // layer (‖·‖² — monotone in the norm, same argmax).
+        let energies = inputs.compute.row_energies(&work);
         let mut best = usize::MAX;
-        let mut best_norm = 0.0f64;
-        for p in 0..pool.len() {
+        let mut best_energy = 0.0f64;
+        for (p, &en) in energies.iter().enumerate() {
             if chosen_pool[p] {
                 continue;
             }
-            let nrm = tensor::norm2(work.row(p));
-            if nrm > best_norm {
-                best_norm = nrm;
+            if en > best_energy {
+                best_energy = en;
                 best = p;
             }
         }
-        if best == usize::MAX || best_norm < 1e-9 {
+        if best == usize::MAX || best_energy < 1e-18 {
             break; // span exhausted
         }
         chosen_pool[best] = true;
         out_rows.push(pool[best]);
-        // Orthogonalize remaining rows against the chosen direction.
+        // Orthogonalize remaining rows against the chosen direction: the
+        // coefficient scan is one kernel-layer matvec, the rank-1 update a
+        // row sweep of axpys.
         let mut q = work.row(best).to_vec();
         tensor::normalize_in_place(&mut q);
-        for p in 0..pool.len() {
+        let coefs = inputs.compute.matvec(&work, &q);
+        for (p, &c) in coefs.iter().enumerate() {
             if chosen_pool[p] {
                 continue;
             }
-            let row = work.row_mut(p);
-            let c = tensor::dot(row, &q);
             if c != 0.0 {
-                tensor::axpy(-c, &q, row);
+                tensor::axpy(-c, &q, work.row_mut(p));
             }
         }
     }
@@ -414,12 +422,15 @@ mod tests {
         scorer.finalize()
     }
 
+    static SERIAL: crate::tensor::SerialBackend = crate::tensor::SerialBackend;
+
     fn inputs<'a>(scores: &'a Scores, classes: usize) -> SelectionInputs<'a> {
         SelectionInputs {
             scores,
             val_consensus: None,
             num_classes: classes,
             seed: 7,
+            compute: &SERIAL,
         }
     }
 
@@ -568,6 +579,7 @@ mod tests {
             val_consensus: Some(v),
             num_classes: 4,
             seed: 7,
+            compute: &SERIAL,
         };
         let sel = select(Method::Glister, &inp, 10);
         // Selected rows should have above-average first coordinate.

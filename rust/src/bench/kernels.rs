@@ -1,0 +1,341 @@
+//! Kernel-layer benchmark: serial vs threadpool-parallel throughput of the
+//! four hot contractions at paper-scale shapes, emitted as the repo-root
+//! `BENCH_kernels.json` perf trajectory (subsequent PRs beat these numbers).
+//!
+//! Ops measured (shapes from the paper's large configuration, ℓ = 256,
+//! D = 16384 by default):
+//!
+//! * `gram`    — FD shrink Gram, `2ℓ × D` buffer → `2ℓ × 2ℓ`
+//! * `project` — Phase-II projection `G·Sᵀ`, `B × D` · `(ℓ × D)ᵀ`
+//! * `shrink`  — one full FD shrink (Gram + eig + rotation) end to end
+//! * `score`   — consensus matvec `α = Ẑ·u` over `N × ℓ`
+//!
+//! Every parallel result is checked bit-identical against serial before it
+//! is timed — a bench that silently measured diverging kernels would be
+//! worthless as a perf trajectory.
+//!
+//! Driven by `sage bench kernels [--quick]`; `--quick` additionally gates
+//! (non-zero exit upstream) when a parallel kernel loses to serial.
+
+use crate::sketch::FdSketch;
+use crate::tensor::{ComputeBackend, Matrix, ParallelBackend, SerialBackend};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Shapes + measurement knobs for one bench run.
+#[derive(Clone, Debug)]
+pub struct KernelBenchSpec {
+    /// Sketch size ℓ (buffer rows = 2ℓ).
+    pub ell: usize,
+    /// Gradient dimension D.
+    pub d: usize,
+    /// Phase-II scoring batch B.
+    pub batch: usize,
+    /// Scored examples N for the consensus matvec.
+    pub n_examples: usize,
+    /// Parallel worker threads.
+    pub workers: usize,
+    /// Timed iterations per op (1 warmup on top).
+    pub iters: usize,
+}
+
+impl Default for KernelBenchSpec {
+    fn default() -> Self {
+        Self {
+            ell: 256,
+            d: 16384,
+            batch: 256,
+            n_examples: 100_000,
+            workers: crate::util::threadpool::default_threads(),
+            iters: 5,
+        }
+    }
+}
+
+impl KernelBenchSpec {
+    /// CI smoke shapes: same paper-scale dims, fewer iterations.
+    pub fn quick(mut self) -> Self {
+        self.iters = 3;
+        self
+    }
+}
+
+/// One op's serial vs parallel measurement.
+#[derive(Clone, Debug)]
+pub struct OpResult {
+    pub name: &'static str,
+    pub shape: String,
+    /// Multiply-adds per iteration (×2 = FLOPs).
+    pub madds: f64,
+    pub serial_ns: f64,
+    pub parallel_ns: f64,
+    /// Outputs compared bit-for-bit before timing.
+    pub bits_equal: bool,
+}
+
+impl OpResult {
+    pub fn speedup(&self) -> f64 {
+        if self.parallel_ns <= 0.0 {
+            0.0
+        } else {
+            self.serial_ns / self.parallel_ns
+        }
+    }
+
+    fn gflops(&self, ns: f64) -> f64 {
+        if ns <= 0.0 {
+            0.0
+        } else {
+            2.0 * self.madds / ns
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("op".into(), Json::Str(self.name.into()));
+        m.insert("shape".into(), Json::Str(self.shape.clone()));
+        m.insert("serial_ns".into(), Json::Num(self.serial_ns));
+        m.insert("parallel_ns".into(), Json::Num(self.parallel_ns));
+        m.insert("speedup".into(), Json::Num(self.speedup()));
+        m.insert("serial_gflops".into(), Json::Num(self.gflops(self.serial_ns)));
+        m.insert(
+            "parallel_gflops".into(),
+            Json::Num(self.gflops(self.parallel_ns)),
+        );
+        m.insert("bits_equal".into(), Json::Bool(self.bits_equal));
+        Json::Obj(m)
+    }
+}
+
+/// Full bench report (serialize with [`KernelBenchReport::to_json_string`]).
+pub struct KernelBenchReport {
+    pub spec: KernelBenchSpec,
+    pub host_threads: usize,
+    pub ops: Vec<OpResult>,
+}
+
+impl KernelBenchReport {
+    /// Result row for `name`, if measured.
+    pub fn op(&self, name: &str) -> Option<&OpResult> {
+        self.ops.iter().find(|o| o.name == name)
+    }
+
+    /// CI quick-gate condition ("parallel must not lose"): the two pure
+    /// paper-scale contractions — `gram` and `project` — must be at least
+    /// as fast parallel as serial, bit-equal everywhere. (`shrink` embeds a
+    /// serial eigendecomposition and `score` is a sub-10 ms matvec; both
+    /// are reported but too noise-prone to gate a shared runner on.)
+    pub fn parallel_holds(&self) -> bool {
+        self.ops.iter().all(|o| o.bits_equal)
+            && ["gram", "project"]
+                .iter()
+                .all(|name| self.op(name).is_some_and(|o| o.speedup() >= 1.0))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("bench".into(), Json::Str("kernels".into()));
+        m.insert("ell".into(), Json::Num(self.spec.ell as f64));
+        m.insert("d".into(), Json::Num(self.spec.d as f64));
+        m.insert("batch".into(), Json::Num(self.spec.batch as f64));
+        m.insert("n_examples".into(), Json::Num(self.spec.n_examples as f64));
+        m.insert("workers".into(), Json::Num(self.spec.workers as f64));
+        m.insert("iters".into(), Json::Num(self.spec.iters as f64));
+        m.insert("host_threads".into(), Json::Num(self.host_threads as f64));
+        m.insert(
+            "ops".into(),
+            Json::Arr(self.ops.iter().map(|o| o.to_json()).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        crate::util::json::write(&self.to_json())
+    }
+}
+
+/// Best-of-iters timing of `f` (1 unmeasured warmup). Best-of is the right
+/// statistic for a regression gate: it is the least noise-sensitive.
+fn best_ns(iters: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        if ns < best {
+            best = ns;
+        }
+    }
+    best
+}
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Run the kernel bench: serial reference vs a `workers`-thread
+/// [`ParallelBackend`], verifying bit-identity per op before timing it.
+pub fn run_kernel_bench(spec: &KernelBenchSpec) -> KernelBenchReport {
+    let serial = SerialBackend;
+    let parallel = ParallelBackend::with_threads(spec.workers);
+    let mut rng = Pcg64::seeded(0xBE7C);
+    let m = 2 * spec.ell;
+
+    let buf = Matrix::from_fn(m, spec.d, |_, _| rng.normal_f32());
+    let grads = Matrix::from_fn(spec.batch, spec.d, |_, _| rng.normal_f32());
+    let sketch = Matrix::from_fn(spec.ell, spec.d, |_, _| 0.1 * rng.normal_f32());
+    let zhat = Matrix::from_fn(spec.n_examples, spec.ell, |_, _| rng.normal_f32());
+    let u: Vec<f32> = (0..spec.ell).map(|_| rng.normal_f32()).collect();
+
+    let mut ops = Vec::new();
+
+    // --- gram: the FD shrink's m×m Gram over the 2ℓ×D buffer ---
+    {
+        let s_out = serial.gram(&buf);
+        let p_out = parallel.gram(&buf);
+        let eq = bits_equal(s_out.as_slice(), p_out.as_slice());
+        let serial_ns = best_ns(spec.iters, || {
+            std::hint::black_box(serial.gram(std::hint::black_box(&buf)));
+        });
+        let parallel_ns = best_ns(spec.iters, || {
+            std::hint::black_box(parallel.gram(std::hint::black_box(&buf)));
+        });
+        ops.push(OpResult {
+            name: "gram",
+            shape: format!("{m}x{} -> {m}x{m}", spec.d),
+            madds: (m * m) as f64 / 2.0 * spec.d as f64,
+            serial_ns,
+            parallel_ns,
+            bits_equal: eq,
+        });
+    }
+
+    // --- project: Phase-II G·Sᵀ ---
+    {
+        let s_out = serial.matmul_transb(&grads, &sketch);
+        let p_out = parallel.matmul_transb(&grads, &sketch);
+        let eq = bits_equal(s_out.as_slice(), p_out.as_slice());
+        let serial_ns = best_ns(spec.iters, || {
+            std::hint::black_box(
+                serial.matmul_transb(std::hint::black_box(&grads), std::hint::black_box(&sketch)),
+            );
+        });
+        let parallel_ns = best_ns(spec.iters, || {
+            std::hint::black_box(
+                parallel.matmul_transb(std::hint::black_box(&grads), std::hint::black_box(&sketch)),
+            );
+        });
+        ops.push(OpResult {
+            name: "project",
+            shape: format!("{}x{} @ ({}x{})T", spec.batch, spec.d, spec.ell, spec.d),
+            madds: (spec.batch * spec.ell * spec.d) as f64,
+            serial_ns,
+            parallel_ns,
+            bits_equal: eq,
+        });
+    }
+
+    // --- shrink: one full FD contraction (gram + eig + apply_rot) ---
+    {
+        let refill = Matrix::from_fn(spec.ell, spec.d, |_, _| rng.normal_f32());
+        let shrink_once = |backend: std::sync::Arc<dyn ComputeBackend>| {
+            let mut fd = FdSketch::with_backend(spec.ell, spec.d, backend);
+            fd.insert_batch(&buf); // fills 2ℓ rows exactly
+            move |fd_refill: &Matrix| {
+                // Each call: refill ℓ rows (buffer ℓ -> 2ℓ), then one
+                // shrink via sketch().
+                fd.insert_batch(fd_refill);
+                std::hint::black_box(fd.sketch());
+            }
+        };
+        // Bit-identity: two sketches fed the same stream on each backend.
+        let eq = {
+            let mut a =
+                FdSketch::with_backend(spec.ell, spec.d, std::sync::Arc::new(SerialBackend));
+            let mut b = FdSketch::with_backend(
+                spec.ell,
+                spec.d,
+                std::sync::Arc::new(ParallelBackend::with_threads(spec.workers)),
+            );
+            a.insert_batch(&buf);
+            b.insert_batch(&buf);
+            bits_equal(a.sketch().as_slice(), b.sketch().as_slice())
+        };
+        let mut s_run = shrink_once(std::sync::Arc::new(SerialBackend));
+        let serial_ns = best_ns(spec.iters, || s_run(&refill));
+        let mut p_run = shrink_once(std::sync::Arc::new(ParallelBackend::with_threads(
+            spec.workers,
+        )));
+        let parallel_ns = best_ns(spec.iters, || p_run(&refill));
+        ops.push(OpResult {
+            name: "shrink",
+            shape: format!("ell={} D={}", spec.ell, spec.d),
+            // Dominated by gram (m²D/2) + apply_rot (ℓ·m·D).
+            madds: (m * m) as f64 / 2.0 * spec.d as f64 + (spec.ell * m * spec.d) as f64,
+            serial_ns,
+            parallel_ns,
+            bits_equal: eq,
+        });
+    }
+
+    // --- score: consensus matvec over all scored examples ---
+    {
+        let s_out = serial.matvec(&zhat, &u);
+        let p_out = parallel.matvec(&zhat, &u);
+        let eq = bits_equal(&s_out, &p_out);
+        let serial_ns = best_ns(spec.iters, || {
+            std::hint::black_box(serial.matvec(std::hint::black_box(&zhat), &u));
+        });
+        let parallel_ns = best_ns(spec.iters, || {
+            std::hint::black_box(parallel.matvec(std::hint::black_box(&zhat), &u));
+        });
+        ops.push(OpResult {
+            name: "score",
+            shape: format!("{}x{} matvec", spec.n_examples, spec.ell),
+            madds: (spec.n_examples * spec.ell) as f64,
+            serial_ns,
+            parallel_ns,
+            bits_equal: eq,
+        });
+    }
+
+    KernelBenchReport {
+        spec: spec.clone(),
+        host_threads: crate::util::threadpool::default_threads(),
+        ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_bench_produces_all_ops_and_valid_json() {
+        // Tiny shapes: exercises the full bench path in milliseconds.
+        let spec = KernelBenchSpec {
+            ell: 4,
+            d: 64,
+            batch: 8,
+            n_examples: 64,
+            workers: 2,
+            iters: 1,
+        };
+        let report = run_kernel_bench(&spec);
+        assert_eq!(report.ops.len(), 4);
+        for op in &report.ops {
+            assert!(op.bits_equal, "{} diverged", op.name);
+            assert!(op.serial_ns > 0.0 && op.parallel_ns > 0.0, "{}", op.name);
+        }
+        for name in ["gram", "project", "shrink", "score"] {
+            assert!(report.op(name).is_some(), "missing {name}");
+        }
+        let text = report.to_json_string();
+        let parsed = crate::util::json::parse(&text).expect("valid json");
+        assert_eq!(parsed.get("bench").and_then(|j| j.as_str()), Some("kernels"));
+        assert_eq!(parsed.get("ops").and_then(|j| j.as_arr()).map(|a| a.len()), Some(4));
+    }
+}

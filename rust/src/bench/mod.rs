@@ -1,15 +1,19 @@
 //! Benchmark harness library: experiment runner (one (dataset, method,
 //! fraction, seed) cell of the paper's evaluation), the generalized
-//! exponential fit + R² used by Figure 1, small-sample statistics, and
-//! markdown/CSV report writers. The `cargo bench` targets in
-//! `rust/benches/` are thin drivers over this module.
+//! exponential fit + R² used by Figure 1, small-sample statistics, the
+//! kernel-layer serial-vs-parallel bench behind `sage bench kernels`
+//! (emits `BENCH_kernels.json`), and markdown/CSV report writers. The
+//! `cargo bench` targets in `rust/benches/` are thin drivers over this
+//! module.
 
 pub mod fit;
+pub mod kernels;
 pub mod report;
 pub mod runner;
 pub mod timing;
 
 pub use fit::{exp_fit, r_squared, ExpFit};
+pub use kernels::{run_kernel_bench, KernelBenchReport, KernelBenchSpec};
 pub use report::{write_csv, write_markdown_table};
 pub use runner::{run_cell, CellResult, CellSpec};
 pub use timing::{time_fn, Timing};

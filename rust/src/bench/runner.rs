@@ -99,6 +99,7 @@ pub fn run_cell(
             warmup_steps: spec.warmup_steps,
             warmup_lr: spec.base_lr,
             seed: spec.seed,
+            compute: crate::tensor::compute_backend(spec.workers),
             ..Default::default()
         };
         let out = run_selection(backend, &train_ds, spec.method, k, &pcfg, shrink)?;

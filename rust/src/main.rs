@@ -8,6 +8,7 @@
 //!   serve      run the sage-serve session server (TCP)
 //!   ingest     stream Phase-I gradients / Phase-II scores into a session
 //!   query      freeze / top-k / stats / checkpoint against a session
+//!   bench      kernel-layer serial-vs-parallel bench -> BENCH_kernels.json
 //!
 //! The runtime path requires `make artifacts` (AOT-lowered HLO). Pass
 //! `--backend reference` to run the pure-Rust model instead.
@@ -58,6 +59,7 @@ use sage::runtime::{
     EngineActor, ModelBackend, ReferenceModelBackend, XlaModelBackend, XlaShrinkBackend,
 };
 use sage::sketch::ShrinkBackend;
+use sage::tensor::ComputeBackend;
 use std::sync::Arc;
 
 fn app() -> App {
@@ -117,6 +119,7 @@ fn app() -> App {
                 opts: vec![
                     Opt { name: "addr", takes_value: true, help: "bind address", default: Some("127.0.0.1:7009") },
                     Opt { name: "threads", takes_value: true, help: "connection threads", default: Some("16") },
+                    Opt { name: "compute-workers", takes_value: true, help: "kernel-backend worker threads (1 = serial; results identical)", default: None },
                     Opt { name: "max-sessions", takes_value: true, help: "admission: max sessions", default: Some("64") },
                     Opt { name: "max-bytes-mb", takes_value: true, help: "admission: max resident sketch MiB", default: Some("1024") },
                     Opt { name: "max-scorer-mb", takes_value: true, help: "admission: max resident Phase-II scorer MiB", default: Some("1024") },
@@ -140,6 +143,20 @@ fn app() -> App {
                     ]);
                     opts
                 },
+            },
+            Command {
+                name: "bench",
+                about: "run a built-in benchmark suite (currently: kernels)",
+                opts: vec![
+                    Opt { name: "ell", takes_value: true, help: "sketch size ℓ (buffer = 2ℓ rows)", default: Some("256") },
+                    Opt { name: "d", takes_value: true, help: "gradient dimension D", default: Some("16384") },
+                    Opt { name: "batch", takes_value: true, help: "Phase-II scoring batch B", default: Some("256") },
+                    Opt { name: "n-examples", takes_value: true, help: "scored examples N (score matvec)", default: Some("100000") },
+                    Opt { name: "workers", takes_value: true, help: "parallel worker threads", default: None },
+                    Opt { name: "iters", takes_value: true, help: "timed iterations per op", default: None },
+                    Opt { name: "out", takes_value: true, help: "output JSON path", default: Some("BENCH_kernels.json") },
+                    Opt { name: "quick", takes_value: false, help: "CI smoke: fewer iters; exit non-zero if a parallel kernel loses to serial", default: None },
+                ],
             },
             Command {
                 name: "query",
@@ -167,8 +184,13 @@ struct BackendChoice {
 
 /// The CLI's canonical reference backend for `dataset`. Both `sage select
 /// --backend reference` and the served `sage ingest` path build from HERE —
-/// the served-equals-offline guarantee depends on them never diverging.
-fn reference_backend(dataset: BenchmarkKind) -> ReferenceModelBackend {
+/// the served-equals-offline guarantee depends on them never diverging
+/// (the kernel backend may differ freely: serial and parallel are
+/// bit-identical by the determinism contract).
+fn reference_backend(
+    dataset: BenchmarkKind,
+    compute: Arc<dyn ComputeBackend>,
+) -> ReferenceModelBackend {
     let c = dataset.num_classes();
     ReferenceModelBackend::new(
         sage::grad::MlpSpec::new(64, 64, c),
@@ -177,14 +199,19 @@ fn reference_backend(dataset: BenchmarkKind) -> ReferenceModelBackend {
         64,
         32,
     )
+    .with_compute(compute)
 }
 
-fn make_backend(p: &Parsed, dataset: BenchmarkKind) -> Result<BackendChoice, String> {
+fn make_backend(
+    p: &Parsed,
+    dataset: BenchmarkKind,
+    compute: Arc<dyn ComputeBackend>,
+) -> Result<BackendChoice, String> {
     let artifacts = p.get_or("artifacts", "artifacts");
     let model = p.get_or("model", "small");
     match p.get("backend").unwrap_or("xla") {
         "reference" => Ok(BackendChoice {
-            backend: Box::new(reference_backend(dataset)),
+            backend: Box::new(reference_backend(dataset, compute)),
             shrink: None,
             _actor: None,
         }),
@@ -233,7 +260,10 @@ fn parse_cell(p: &Parsed) -> Result<CellSpec, String> {
 
 fn cmd_select(p: &Parsed) -> Result<(), String> {
     let spec = parse_cell(p)?;
-    let choice = make_backend(p, spec.dataset)?;
+    // One shared kernel backend for the whole run, threaded down into the
+    // model backend, the FD shrink, and the selection rules.
+    let compute = sage::tensor::compute_backend(spec.workers);
+    let choice = make_backend(p, spec.dataset, compute.clone())?;
     let mspec = choice.backend.spec();
     if mspec.c != spec.dataset.num_classes() {
         return Err(format!(
@@ -250,6 +280,7 @@ fn cmd_select(p: &Parsed) -> Result<(), String> {
         warmup_steps: spec.warmup_steps,
         warmup_lr: spec.base_lr,
         seed: spec.seed,
+        compute,
         ..Default::default()
     };
     log_info!(
@@ -297,7 +328,8 @@ fn cmd_select(p: &Parsed) -> Result<(), String> {
 
 fn cmd_train(p: &Parsed) -> Result<(), String> {
     let spec = parse_cell(p)?;
-    let choice = make_backend(p, spec.dataset)?;
+    let compute = sage::tensor::compute_backend(spec.workers);
+    let choice = make_backend(p, spec.dataset, compute)?;
     log_info!(
         "cell: {} / {} / f={} / seed={} (backend {})",
         spec.dataset.name(),
@@ -385,6 +417,10 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
     let cfg = sage::service::ServerConfig {
         addr: p.get_or("addr", "127.0.0.1:7009"),
         threads: p.get_usize("threads")?.unwrap_or(16).max(1),
+        compute_workers: p
+            .get_usize("compute-workers")?
+            .unwrap_or_else(sage::util::threadpool::default_threads)
+            .max(1),
         registry: sage::service::RegistryConfig {
             max_sessions: p.get_usize("max-sessions")?.unwrap_or(64).max(1),
             max_resident_bytes: p.get_usize("max-bytes-mb")?.unwrap_or(1024) << 20,
@@ -403,7 +439,7 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
 
 fn cmd_ingest(p: &Parsed) -> Result<(), String> {
     let spec = parse_cell(p)?;
-    let backend = reference_backend(spec.dataset);
+    let backend = reference_backend(spec.dataset, sage::tensor::compute_backend(spec.workers));
     let (train_ds, _) = sage::bench::runner::cell_datasets(&spec, backend.spec().f);
     let shards = p.get_usize("shards")?.unwrap_or(4).max(1);
     let shard = p.get_usize("shard")?.unwrap_or(0);
@@ -460,6 +496,80 @@ fn cmd_ingest(p: &Parsed) -> Result<(), String> {
             );
         }
         other => return Err(format!("unknown --phase '{other}' (sketch|score)")),
+    }
+    Ok(())
+}
+
+fn cmd_bench(p: &Parsed) -> Result<(), String> {
+    match p.positional.first().map(|s| s.as_str()) {
+        Some("kernels") | None => {}
+        Some(other) => return Err(format!("unknown bench suite '{other}' (suites: kernels)")),
+    }
+    let quick = p.has_flag("quick");
+    let mut spec = sage::bench::KernelBenchSpec {
+        ell: p.get_usize("ell")?.unwrap_or(256).max(1),
+        d: p.get_usize("d")?.unwrap_or(16384).max(1),
+        batch: p.get_usize("batch")?.unwrap_or(256).max(1),
+        n_examples: p.get_usize("n-examples")?.unwrap_or(100_000).max(1),
+        ..Default::default()
+    };
+    if let Some(w) = p.get_usize("workers")? {
+        spec.workers = w.max(1);
+    }
+    if quick {
+        spec = spec.quick();
+    }
+    if let Some(iters) = p.get_usize("iters")? {
+        spec.iters = iters.max(1);
+    }
+    log_info!(
+        "bench kernels: ell={} D={} B={} N={} workers={} iters={}",
+        spec.ell,
+        spec.d,
+        spec.batch,
+        spec.n_examples,
+        spec.workers,
+        spec.iters
+    );
+    let report = sage::bench::run_kernel_bench(&spec);
+    println!(
+        "{:<10} {:>14} {:>14} {:>9} {:>9}",
+        "op", "serial", "parallel", "speedup", "bits"
+    );
+    for op in &report.ops {
+        println!(
+            "{:<10} {:>12.2}ms {:>12.2}ms {:>8.2}x {:>9}",
+            op.name,
+            op.serial_ns / 1e6,
+            op.parallel_ns / 1e6,
+            op.speedup(),
+            if op.bits_equal { "equal" } else { "DIVERGED" },
+        );
+    }
+    let out = p.get_or("out", "BENCH_kernels.json");
+    std::fs::write(&out, report.to_json_string() + "\n").map_err(|e| format!("{out}: {e}"))?;
+    println!("wrote {out}");
+    if report.ops.iter().any(|o| !o.bits_equal) {
+        return Err("parallel kernels diverged from the serial reference".into());
+    }
+    if quick && spec.workers <= 1 {
+        // A 1-worker ParallelBackend runs chunks inline: "parallel" is
+        // serial plus noise, so a >= 1.0x gate would be a coin flip.
+        println!("quick gate skipped: single-worker host (speedup is noise)");
+        return Ok(());
+    }
+    if quick && !report.parallel_holds() {
+        return Err(format!(
+            "quick gate: parallel kernels lost to serial (host has {} threads): {}",
+            report.host_threads,
+            report
+                .ops
+                .iter()
+                .filter(|o| o.speedup() < 1.0)
+                .map(|o| format!("{} {:.2}x", o.name, o.speedup()))
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
     }
     Ok(())
 }
@@ -544,6 +654,7 @@ fn main() {
         "gen-data" => cmd_gen_data(&parsed),
         "serve" => cmd_serve(&parsed),
         "ingest" => cmd_ingest(&parsed),
+        "bench" => cmd_bench(&parsed),
         "query" => cmd_query(&parsed),
         other => Err(format!("unhandled command {other}")),
     };

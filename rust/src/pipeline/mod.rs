@@ -25,10 +25,10 @@
 use crate::baselines::{select_weighted, SelectionInputs};
 use crate::config::Method;
 use crate::data::{Dataset, StreamBatches};
-use crate::selection::{AgreementScorer, Scores};
+use crate::selection::{AgreementScorer, ProjectionScratch, Scores};
 use crate::sketch::{FdSketch, ShrinkBackend};
 use crate::runtime::ModelBackend;
-use crate::tensor::Matrix;
+use crate::tensor::{ComputeBackend, Matrix};
 use crate::util::channel::bounded;
 use std::sync::Arc;
 use std::time::Instant;
@@ -46,6 +46,11 @@ pub struct PipelineConfig {
     /// Held-out fraction used for GLISTER's validation direction.
     pub val_fraction: f64,
     pub seed: u64,
+    /// Kernel backend for the hot contractions (FD shrink, projection,
+    /// consensus matvec, selection-rule scans). Serial by default;
+    /// `main.rs` threads a shared `tensor::ParallelBackend` down here.
+    /// Selections are bit-identical across backends and worker counts.
+    pub compute: Arc<dyn ComputeBackend>,
 }
 
 impl Default for PipelineConfig {
@@ -57,6 +62,7 @@ impl Default for PipelineConfig {
             warmup_lr: 0.05,
             val_fraction: 0.1,
             seed: 0,
+            compute: crate::tensor::serial(),
         }
     }
 }
@@ -169,10 +175,14 @@ pub fn phase2_score_stream(
     let b = backend.score_batch();
     let mut batches = 0u64;
     let hist = crate::util::metrics::global().histogram("pipeline.phase2.batch.ns");
+    // One projection buffer for the whole shard stream: each batch's ẑ is
+    // written into it and recycled after the sink consumed the block.
+    let mut scratch = ProjectionScratch::new();
     for (start, batch) in StreamBatches::new(&shard, b) {
         let _t = crate::util::metrics::ScopedTimer::new(hist);
         let y = batch.one_hot();
-        let (zhat, norms, losses) = backend.score_fused(params, sketch, &batch.features, &y)?;
+        let (zhat, norms, losses) =
+            backend.score_fused_with(params, sketch, &batch.features, &y, &mut scratch)?;
         let global: Vec<usize> = (0..batch.len()).map(|r| range.0 + start + r).collect();
         sink(ScoreBlock {
             indices: &global,
@@ -181,6 +191,7 @@ pub fn phase2_score_stream(
             norms: &norms,
             losses: &losses,
         })?;
+        scratch.recycle(zhat);
         batches += 1;
     }
     Ok(batches)
@@ -255,6 +266,9 @@ pub fn run_selection(
     let warmup_seconds = t0.elapsed().as_secs_f64();
 
     // --- Phase I: sharded streaming sketch + ordered merge ---
+    // Shard sketches shrink on the explicit shrink backend when given (the
+    // XLA artifacts), otherwise on the pipeline's kernel backend.
+    let shrink: Arc<dyn ShrinkBackend> = shrink_backend.unwrap_or_else(|| cfg.compute.clone());
     let t1 = Instant::now();
     let ranges = shard_ranges(n, cfg.workers);
     let mut results: Vec<Option<Result<(FdSketch, u64), String>>> =
@@ -266,7 +280,7 @@ pub fn run_selection(
             for (i, &range) in ranges.iter().enumerate() {
                 let results = &results;
                 let params = &params;
-                let sb = shrink_backend.clone();
+                let sb = Some(shrink.clone());
                 scope.spawn(move || {
                     let r = phase1_shard(backend, ds, params, range, ell, sb);
                     results.lock().unwrap()[i] = Some(r);
@@ -324,7 +338,7 @@ pub fn run_selection(
             }
         });
     }
-    let scores = scorer.unwrap().finalize();
+    let scores = scorer.unwrap().finalize_with(cfg.compute.as_ref());
     let phase2 = PhaseStats {
         seconds: t2.elapsed().as_secs_f64(),
         batches: p2_batches,
@@ -339,15 +353,13 @@ pub fn run_selection(
         let val = ds.subset(&val_idx);
         let mut acc = vec![0.0f64; ell];
         let b = backend.score_batch();
+        let mut scratch = ProjectionScratch::new();
         for (_s, batch) in StreamBatches::new(&val, b) {
             let y = batch.one_hot();
-            let (zhat, _norms, _l) =
-                backend.score_fused(&params, &sketch_matrix, &batch.features, &y)?;
-            for r in 0..zhat.rows() {
-                for (j, &v) in zhat.row(r).iter().enumerate() {
-                    acc[j] += v as f64;
-                }
-            }
+            let (zhat, _norms, _l) = backend
+                .score_fused_with(&params, &sketch_matrix, &batch.features, &y, &mut scratch)?;
+            cfg.compute.accumulate_col_sums(&zhat, &mut acc);
+            scratch.recycle(zhat);
         }
         let mut u: Vec<f32> = acc.iter().map(|&v| v as f32).collect();
         crate::tensor::normalize_in_place(&mut u);
@@ -363,6 +375,7 @@ pub fn run_selection(
         val_consensus,
         num_classes: ds.num_classes,
         seed: cfg.seed,
+        compute: cfg.compute.as_ref(),
     };
     let (indices, weights) = select_weighted(method, &inputs, k);
     let select_seconds = t3.elapsed().as_secs_f64();
@@ -419,7 +432,7 @@ pub fn stream_sketch(
             let ws = &ws;
             let params = &params;
             scope.spawn(move || {
-                let mut sk = FdSketch::new(ell, d);
+                let mut sk = FdSketch::with_backend(ell, d, cfg.compute.clone());
                 let mut batches = 0u64;
                 let mut failed: Option<String> = None;
                 while let Some((_start, batch)) = rx.recv() {

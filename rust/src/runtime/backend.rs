@@ -14,8 +14,10 @@
 use super::actor::{EngineHandle, OwnedTensor};
 use super::manifest::ModelCfg;
 use crate::grad::{MlpSpec, TrainHyper};
+use crate::selection::ProjectionScratch;
 use crate::sketch::ShrinkBackend;
-use crate::tensor::{self, Matrix};
+use crate::tensor::{ComputeBackend, Matrix};
+use std::sync::Arc;
 
 /// Backend-agnostic model interface used by pipeline + trainer.
 pub trait ModelBackend: Send + Sync {
@@ -51,6 +53,24 @@ pub trait ModelBackend: Send + Sync {
         let (g, losses) = self.per_example_grads(params, x, y)?;
         let (zhat, norms) = self.project(sketch, &g)?;
         Ok((zhat, norms, losses))
+    }
+
+    /// [`score_fused`] with a caller-provided projection scratch: backends
+    /// that build ẑ host-side write it into the reused buffer instead of
+    /// allocating per batch; `phase2_score_stream` recycles the returned
+    /// matrix after each sink call. The default ignores the scratch (XLA
+    /// outputs arrive as fresh host buffers anyway).
+    ///
+    /// [`score_fused`]: ModelBackend::score_fused
+    fn score_fused_with(
+        &self,
+        params: &[f32],
+        sketch: &Matrix,
+        x: &Matrix,
+        y: &Matrix,
+        _scratch: &mut ProjectionScratch,
+    ) -> Result<(Matrix, Vec<f32>, Vec<f32>), String> {
+        self.score_fused(params, sketch, x, y)
     }
 
     /// One SGD+momentum step in place; x must have exactly train_batch rows.
@@ -112,6 +132,10 @@ pub struct ReferenceModelBackend {
     b: usize,
     bt: usize,
     ell: usize,
+    /// Kernel backend for the Phase-II projection/normalization (serial by
+    /// default; `with_compute` threads the shared parallel backend in —
+    /// results are bit-identical either way).
+    compute: Arc<dyn ComputeBackend>,
 }
 
 impl ReferenceModelBackend {
@@ -122,7 +146,14 @@ impl ReferenceModelBackend {
             b,
             bt,
             ell,
+            compute: crate::tensor::serial(),
         }
+    }
+
+    /// Route this backend's matrix kernels through `compute`.
+    pub fn with_compute(mut self, compute: Arc<dyn ComputeBackend>) -> Self {
+        self.compute = compute;
+        self
     }
 
     /// Mirror an artifact config's shapes without requiring artifacts.
@@ -168,12 +199,24 @@ impl ModelBackend for ReferenceModelBackend {
     }
 
     fn project(&self, sketch: &Matrix, g: &Matrix) -> Result<(Matrix, Vec<f32>), String> {
-        let mut zhat = g.matmul_transb(sketch);
-        let mut norms = Vec::with_capacity(zhat.rows());
-        for r in 0..zhat.rows() {
-            norms.push(tensor::normalize_in_place(zhat.row_mut(r)) as f32);
-        }
+        let mut zhat = self.compute.matmul_transb(g, sketch);
+        let norms = self.compute.normalize_rows(&mut zhat);
         Ok((zhat, norms))
+    }
+
+    fn score_fused_with(
+        &self,
+        params: &[f32],
+        sketch: &Matrix,
+        x: &Matrix,
+        y: &Matrix,
+        scratch: &mut ProjectionScratch,
+    ) -> Result<(Matrix, Vec<f32>, Vec<f32>), String> {
+        let (g, losses) = self.per_example_grads(params, x, y)?;
+        let mut zhat = scratch.take(g.rows(), sketch.rows());
+        self.compute.matmul_transb_into(&g, sketch, &mut zhat);
+        let norms = self.compute.normalize_rows(&mut zhat);
+        Ok((zhat, norms, losses))
     }
 
     fn train_step(
@@ -399,6 +442,12 @@ impl ModelBackend for XlaModelBackend {
 /// Runs the FD shrink contractions (L1 Pallas `gram` / `apply_rot` kernels)
 /// through the PJRT actor. Buffers with fewer than `m` live rows are
 /// zero-padded; padding is exact for both contractions.
+///
+/// Implements the **widened** [`ShrinkBackend`] (= the full
+/// `tensor::ComputeBackend` kernel layer): the shrink pair dispatches to
+/// the AOT artifacts, while the remaining ops (projection, matvec, row
+/// norms/energies) inherit the serial reference kernels until their Pallas
+/// artifacts land.
 pub struct XlaShrinkBackend {
     handle: EngineHandle,
     cfg: ModelCfg,
@@ -412,6 +461,10 @@ impl XlaShrinkBackend {
 }
 
 impl ShrinkBackend for XlaShrinkBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
     fn gram(&self, buf: &Matrix) -> Matrix {
         let (m, d) = (self.cfg.m, self.cfg.d);
         let mp = buf.rows();

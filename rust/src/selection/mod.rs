@@ -21,8 +21,8 @@ pub mod streaming;
 mod topk;
 
 pub use scorer::{
-    scorer_state_bytes, scores_state_bytes, AgreementScorer, ScoreEntry, ScorerState, Scores,
-    ScoresState, ENTRY_BYTES,
+    scorer_state_bytes, scores_state_bytes, AgreementScorer, ProjectionScratch, ScoreEntry,
+    ScorerState, Scores, ScoresState, ENTRY_BYTES,
 };
 pub use streaming::{streaming_select, ConsensusAccumulator, StreamingSelector};
 pub use topk::{top_k_indices, TopK};

@@ -12,7 +12,37 @@
 //! [`scores_state_bytes`] — keep those formulas in sync with the struct
 //! layouts below.
 
-use crate::tensor::{self, Matrix};
+use crate::tensor::{self, kernels, ComputeBackend, Matrix};
+
+/// Reusable Phase-II projection buffer. Callers streaming batches hold one
+/// per shard and pass it to `ModelBackend::score_fused_with`, so each
+/// batch's `b × ℓ` ẑ matrix reuses a single allocation instead of
+/// reallocating per batch: `take` shapes the buffer into a Matrix, and
+/// `recycle` returns the storage once the batch is consumed.
+#[derive(Default)]
+pub struct ProjectionScratch {
+    buf: Vec<f32>,
+}
+
+impl ProjectionScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Shape the scratch storage into a zeroed `rows × cols` matrix
+    /// (allocation-free once the buffer has grown to the working size).
+    pub fn take(&mut self, rows: usize, cols: usize) -> Matrix {
+        let mut buf = std::mem::take(&mut self.buf);
+        buf.clear();
+        buf.resize(rows * cols, 0.0);
+        Matrix::from_vec(rows, cols, buf)
+    }
+
+    /// Return a matrix's storage for the next batch.
+    pub fn recycle(&mut self, m: Matrix) {
+        self.buf = m.into_vec();
+    }
+}
 
 /// Accounted metadata bytes per scored example (index 8 + label 4 + norm 4
 /// + loss 4 + alpha 4) — the unit of the service's scorer-byte admission
@@ -256,11 +286,10 @@ impl AgreementScorer {
         assert_eq!(indices.len(), norms.len());
         assert_eq!(indices.len(), losses.len());
         assert_eq!(zhat.cols(), self.ell, "projection dim");
+        // Row-sequential f64 column sums — the kernel layer's accumulator
+        // op, whose fixed order the exactness guarantee pins down.
+        kernels::accumulate_col_sums(zhat, &mut self.consensus_acc);
         for r in 0..zhat.rows() {
-            let row = zhat.row(r);
-            for (j, &v) in row.iter().enumerate() {
-                self.consensus_acc[j] += v as f64;
-            }
             self.count += 1;
             self.entries.push(ScoreEntry {
                 index: indices[r],
@@ -269,7 +298,7 @@ impl AgreementScorer {
                 loss: losses[r],
                 alpha: 0.0, // filled by finalize
             });
-            self.rows.extend_from_slice(row);
+            self.rows.extend_from_slice(zhat.row(r));
         }
     }
 
@@ -284,16 +313,27 @@ impl AgreementScorer {
         self.rows.extend(other.rows);
     }
 
-    /// Compute u and all α_i (Algorithm 1 lines 14-15).
-    pub fn finalize(mut self) -> Scores {
+    /// Compute u and all α_i (Algorithm 1 lines 14-15) on the serial
+    /// kernel backend.
+    pub fn finalize(self) -> Scores {
+        self.finalize_with(tensor::serial().as_ref())
+    }
+
+    /// [`AgreementScorer::finalize`] with an explicit kernel backend: the
+    /// `N × ℓ` consensus matvec (`α = Ẑ·u`) runs through `compute`, and is
+    /// bit-identical across serial/parallel backends and worker counts by
+    /// the determinism contract — served TopK equals offline TopK no
+    /// matter which backend either side runs.
+    pub fn finalize_with(mut self, compute: &dyn ComputeBackend) -> Scores {
         let n = self.count.max(1) as f64;
         let mut u: Vec<f32> = self.consensus_acc.iter().map(|&v| (v / n) as f32).collect();
         let norm = tensor::normalize_in_place(&mut u);
         let consensus = if norm > 0.0 { u } else { vec![0.0; self.ell] };
 
         let zhat = Matrix::from_vec(self.entries.len(), self.ell, std::mem::take(&mut self.rows));
-        for (r, e) in self.entries.iter_mut().enumerate() {
-            e.alpha = tensor::dot(zhat.row(r), &consensus);
+        let alphas = compute.matvec(&zhat, &consensus);
+        for (e, alpha) in self.entries.iter_mut().zip(alphas) {
+            e.alpha = alpha;
         }
         Scores {
             ell: self.ell,

@@ -9,7 +9,7 @@
 //! (quantified in `cargo bench --bench ablation`, section F).
 
 use super::topk::TopK;
-use crate::tensor::{self, Matrix};
+use crate::tensor::{self, kernels, Matrix};
 
 /// Pass 2a: consensus accumulation (ℓ-dim, mergeable).
 pub struct ConsensusAccumulator {
@@ -85,11 +85,14 @@ impl StreamingSelector {
     }
 
     /// Score one batch of normalized projections with global indices.
+    /// Alphas come from the same `dot8` microkernel as
+    /// `AgreementScorer::finalize_with`'s consensus matvec, keeping the
+    /// streaming and cached scoring paths bit-identical.
     pub fn add(&mut self, indices: &[usize], zhat: &Matrix) {
         assert_eq!(indices.len(), zhat.rows());
         assert_eq!(zhat.cols(), self.consensus.len());
         for (r, &idx) in indices.iter().enumerate() {
-            let alpha = tensor::dot(zhat.row(r), &self.consensus);
+            let alpha = kernels::dot8(zhat.row(r), &self.consensus);
             self.heap.push(alpha, idx);
             self.scored += 1;
         }

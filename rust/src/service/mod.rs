@@ -45,6 +45,7 @@
 //! let server = Server::bind(&ServerConfig {
 //!     addr: "127.0.0.1:0".into(), // port 0: pick a free port
 //!     threads: 2,
+//!     compute_workers: 1, // serial kernels (any value selects identically)
 //!     registry: RegistryConfig::default(),
 //! })
 //! .unwrap();

@@ -60,7 +60,7 @@ use crate::baselines::{select_weighted, SelectionInputs};
 use crate::config::Method;
 use crate::selection::{scorer_state_bytes, AgreementScorer, Scores, ENTRY_BYTES};
 use crate::sketch::{FdSketch, SketchState};
-use crate::tensor::Matrix;
+use crate::tensor::{ComputeBackend, Matrix};
 use crate::util::channel::{bounded, Sender};
 use crate::util::metrics::{global as metrics, Counter};
 use std::collections::BTreeMap;
@@ -362,6 +362,10 @@ pub struct Session {
     c_rows: &'static Counter,
     c_batches: &'static Counter,
     c_scored: &'static Counter,
+    /// Kernel backend for finalize (consensus matvec) and the selection
+    /// rules — the registry's configured backend; bit-identical to serial,
+    /// so served TopK matches offline selection for ANY worker count.
+    compute: Arc<dyn ComputeBackend>,
 }
 
 impl Session {
@@ -379,6 +383,7 @@ impl Session {
         shard_sketches: Vec<FdSketch>,
         budgets: Budgets,
         sketch_reserved: usize,
+        compute: Arc<dyn ComputeBackend>,
     ) -> Session {
         debug_assert_eq!(shard_sketches.len(), shards);
         let stats = Arc::new(SessionStats::default());
@@ -420,12 +425,14 @@ impl Session {
             c_rows: metrics().counter("service.ingest.rows_enqueued"),
             c_batches: metrics().counter("service.ingest.batches"),
             c_scored: metrics().counter("service.score.entries"),
+            compute,
         }
     }
 
     /// Rebuild an already-frozen session (checkpoint recovery): no ingest
     /// worker; Phase-II state starts fresh and is overwritten by
     /// `from_checkpoint` when the checkpoint carries scorer state.
+    #[allow(clippy::too_many_arguments)]
     fn new_frozen(
         name: &str,
         ell: usize,
@@ -434,6 +441,7 @@ impl Session {
         info: FrozenSketch,
         budgets: Budgets,
         sketch_reserved: usize,
+        compute: Arc<dyn ComputeBackend>,
     ) -> Session {
         Session {
             name: name.to_string(),
@@ -457,6 +465,7 @@ impl Session {
             c_rows: metrics().counter("service.ingest.rows_enqueued"),
             c_batches: metrics().counter("service.ingest.batches"),
             c_scored: metrics().counter("service.score.entries"),
+            compute,
         }
     }
 
@@ -567,7 +576,7 @@ impl Session {
                 state.d, self.d
             ));
         }
-        let mut other = FdSketch::from_state(state)?;
+        let mut other = FdSketch::from_state_with(state, self.compute.clone())?;
         let mut guard = self.sketches.lock().unwrap();
         if guard.is_empty() {
             return Err(format!("session '{}' is frozen", self.name));
@@ -766,7 +775,7 @@ impl Session {
                     return Err(format!("session '{}': scorer state missing", self.name));
                 }
             };
-            p.scores = Some(acc.finalize());
+            p.scores = Some(acc.finalize_with(self.compute.as_ref()));
             let after = phase2_bytes(&p);
             self.budgets.scorer.rebalance(before, after);
         }
@@ -776,6 +785,7 @@ impl Session {
             val_consensus: None,
             num_classes,
             seed,
+            compute: self.compute.as_ref(),
         };
         self.stats.topk_queries.fetch_add(1, Ordering::Relaxed);
         Ok(select_weighted(method, &inputs, k))
@@ -968,6 +978,7 @@ impl Session {
         queue_depth: usize,
         budgets: Budgets,
         sketch_reserved: usize,
+        compute: Arc<dyn ComputeBackend>,
     ) -> Result<Session, String> {
         let (ell, d, shards) = (ck.ell as usize, ck.d as usize, ck.shards as usize);
         session_bytes(ell, d, shards)?; // validate recovered shapes too
@@ -981,6 +992,7 @@ impl Session {
                 frozen.clone(),
                 budgets,
                 sketch_reserved,
+                compute,
             )
         } else {
             if ck.shard_states.len() != shards {
@@ -996,7 +1008,7 @@ impl Session {
                 if st.ell as usize != ell || st.d as usize != d {
                     return Err(format!("checkpoint '{}': shard state dims drift", ck.name));
                 }
-                sketches.push(FdSketch::from_state(st)?);
+                sketches.push(FdSketch::from_state_with(st, compute.clone())?);
             }
             Session::new_active(
                 &ck.name,
@@ -1007,6 +1019,7 @@ impl Session {
                 sketches,
                 budgets,
                 sketch_reserved,
+                compute,
             )
         };
         *session.phase2.lock().unwrap() = Phase2 {
@@ -1071,10 +1084,20 @@ pub struct SessionRegistry {
     budgets: Budgets,
     /// Monotonic activity clock ordering sessions for spill (LRU-ish).
     clock: AtomicU64,
+    /// Kernel backend every session runs its contractions on (FD shrink,
+    /// finalize matvec, selection rules). Serial by default; the server
+    /// threads its shared `tensor::ParallelBackend` in. Bit-identical
+    /// results across backends keep served ≡ offline selection exact.
+    compute: Arc<dyn ComputeBackend>,
 }
 
 impl SessionRegistry {
     pub fn new(cfg: RegistryConfig) -> Self {
+        Self::with_compute(cfg, crate::tensor::serial())
+    }
+
+    /// Registry over an explicit kernel backend (see the `compute` field).
+    pub fn with_compute(cfg: RegistryConfig, compute: Arc<dyn ComputeBackend>) -> Self {
         let count = normalize_shard_count(cfg.registry_shards);
         let budgets = Budgets {
             slots: Arc::new(ByteBudget::new(cfg.max_sessions)),
@@ -1086,6 +1109,7 @@ impl SessionRegistry {
             shards: (0..count).map(|_| RegistryShard::default()).collect(),
             budgets,
             clock: AtomicU64::new(1),
+            compute,
         }
     }
 
@@ -1185,7 +1209,9 @@ impl SessionRegistry {
                 self.budgets.slots.release(1);
                 return Err(format!("session '{name}' already exists"));
             }
-            let sketches = (0..shards).map(|_| FdSketch::new(ell, d)).collect();
+            let sketches = (0..shards)
+                .map(|_| FdSketch::with_backend(ell, d, self.compute.clone()))
+                .collect();
             let session = Session::new_active(
                 name,
                 ell,
@@ -1195,6 +1221,7 @@ impl SessionRegistry {
                 sketches,
                 self.budgets.clone(),
                 new_bytes,
+                self.compute.clone(),
             );
             guard.insert(name.to_string(), Arc::new(session));
             shard.session_count.fetch_add(1, Ordering::Relaxed);
@@ -1435,6 +1462,7 @@ impl SessionRegistry {
             self.cfg.ingest_queue_depth,
             self.budgets.clone(),
             new_bytes,
+            self.compute.clone(),
         ) {
             Ok(session) => session,
             Err(e) => {
@@ -1816,6 +1844,7 @@ mod tests {
                 val_consensus: None,
                 num_classes: 2,
                 seed: 0,
+                compute: &crate::tensor::SerialBackend,
             };
             select_weighted(Method::Sage, &inputs, 2).0
         };

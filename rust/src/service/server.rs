@@ -35,6 +35,13 @@ pub struct ServerConfig {
     pub addr: String,
     /// Connection-handler threads (thread-per-connection, pooled).
     pub threads: usize,
+    /// Kernel-backend workers for the compute hot paths (FD shrink,
+    /// finalize matvec, selection rules): ≤ 1 runs the serial reference,
+    /// otherwise a shared `tensor::ParallelBackend` pool of this size —
+    /// a *separate* pool from the connection threads, shared by every
+    /// session. Results are bit-identical across all settings, so this
+    /// never perturbs the served ≡ offline exactness guarantee.
+    pub compute_workers: usize,
     pub registry: RegistryConfig,
 }
 
@@ -43,6 +50,7 @@ impl Default for ServerConfig {
         Self {
             addr: "127.0.0.1:7009".to_string(),
             threads: 16,
+            compute_workers: 1,
             registry: RegistryConfig::default(),
         }
     }
@@ -61,7 +69,10 @@ impl Server {
     pub fn bind(cfg: &ServerConfig) -> Result<Server, String> {
         let listener =
             TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
-        let registry = Arc::new(SessionRegistry::new(cfg.registry.clone()));
+        // One kernel backend for the whole server: every session's shrink,
+        // finalize, and selection rules run on this shared pool.
+        let compute = crate::tensor::compute_backend(cfg.compute_workers);
+        let registry = Arc::new(SessionRegistry::with_compute(cfg.registry.clone(), compute));
         if let Some(dir) = &cfg.registry.checkpoint_dir {
             let n = registry.recover(dir);
             if n > 0 {

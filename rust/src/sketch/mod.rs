@@ -22,30 +22,31 @@
 //! exposes the tighter online certificate `Σ δ_shrinks`.
 
 use crate::linalg::eigh_jacobi;
-use crate::tensor::Matrix;
+use crate::tensor::{ComputeBackend, Matrix};
 use std::sync::Arc;
 
-/// Backend for the two O(ℓD) shrink contractions. The default
-/// [`CpuShrinkBackend`] runs them on the Rust tensor substrate; the runtime
-/// swaps in the AOT-compiled Pallas kernels (`runtime::XlaShrinkBackend`).
-pub trait ShrinkBackend: Send + Sync {
-    /// `buf bufᵀ` for the `m × d` buffer (m = 2ℓ).
-    fn gram(&self, buf: &Matrix) -> Matrix;
-    /// `rot @ buf` for the `ℓ × m` rotation.
-    fn apply_rot(&self, rot: &Matrix, buf: &Matrix) -> Matrix;
-}
+/// Backend for the O(ℓD) shrink contractions — **widened** into the full
+/// [`tensor::ComputeBackend`] kernel layer: beyond the original
+/// `gram` / `apply_rot` pair it now also covers the Phase-II projection
+/// (`scores = G·Sᵀ`), the consensus matvec, and batched row-norm/energy
+/// accumulation, so one backend object serves the whole two-pass pipeline.
+/// The default is the serial reference ([`CpuShrinkBackend`]); the runtime
+/// swaps in the AOT-compiled Pallas kernels (`runtime::XlaShrinkBackend`)
+/// for the shrink pair, and `tensor::ParallelBackend` parallelizes every op
+/// with bit-identical results.
+///
+/// [`tensor::ComputeBackend`]: crate::tensor::ComputeBackend
+pub use crate::tensor::ComputeBackend as ShrinkBackend;
 
-/// Pure-Rust shrink contractions (reference backend).
-#[derive(Default)]
+/// Pure-Rust shrink contractions (the serial reference backend) — identical
+/// to [`crate::tensor::SerialBackend`]; the name survives the
+/// [`ShrinkBackend`] widening for callers that ask for "the CPU shrink".
+#[derive(Default, Debug, Clone, Copy)]
 pub struct CpuShrinkBackend;
 
-impl ShrinkBackend for CpuShrinkBackend {
-    fn gram(&self, buf: &Matrix) -> Matrix {
-        buf.gram()
-    }
-
-    fn apply_rot(&self, rot: &Matrix, buf: &Matrix) -> Matrix {
-        rot.matmul(buf)
+impl ComputeBackend for CpuShrinkBackend {
+    fn name(&self) -> &'static str {
+        "cpu-serial"
     }
 }
 
@@ -81,9 +82,9 @@ pub struct FdSketch {
 }
 
 impl FdSketch {
-    /// New sketch with the pure-Rust backend.
+    /// New sketch with the pure-Rust serial backend.
     pub fn new(ell: usize, d: usize) -> Self {
-        Self::with_backend(ell, d, Arc::new(CpuShrinkBackend))
+        Self::with_backend(ell, d, crate::tensor::serial())
     }
 
     pub fn with_backend(ell: usize, d: usize, backend: Arc<dyn ShrinkBackend>) -> Self {
@@ -132,23 +133,35 @@ impl FdSketch {
         self.buf.as_slice().len() * std::mem::size_of::<f32>()
     }
 
-    /// Stream one gradient row into the sketch (Algorithm 1 line 5).
-    pub fn insert(&mut self, row: &[f32]) {
-        assert_eq!(row.len(), self.d, "row dim mismatch");
+    /// The one place the shrink schedule lives: shrink when the buffer is
+    /// full, copy the row in, bump the counters, fold in its energy. Both
+    /// ingest paths ([`FdSketch::insert`], [`FdSketch::insert_batch`]) call
+    /// this, so they cannot drift apart.
+    fn insert_row_with_energy(&mut self, row: &[f32], energy: f64) {
         if self.next_row == 2 * self.ell {
             self.shrink();
         }
         self.buf.row_mut(self.next_row).copy_from_slice(row);
         self.next_row += 1;
         self.rows_seen += 1;
-        self.energy_seen += crate::tensor::dot_f64(row, row);
+        self.energy_seen += energy;
     }
 
-    /// Stream a batch `[b × d]` of rows (amortizes the shrink checks).
+    /// Stream one gradient row into the sketch (Algorithm 1 line 5).
+    pub fn insert(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d, "row dim mismatch");
+        self.insert_row_with_energy(row, crate::tensor::dot_f64(row, row));
+    }
+
+    /// Stream a batch `[b × d]` of rows: batched row-energy accumulation
+    /// through the kernel backend, then the same per-row schedule as
+    /// [`FdSketch::insert`] (bit-identical result — per-row energies use
+    /// the same f64 kernel, summed in row order).
     pub fn insert_batch(&mut self, rows: &Matrix) {
         assert_eq!(rows.cols(), self.d, "batch dim mismatch");
+        let energies = self.backend.row_energies(rows);
         for r in 0..rows.rows() {
-            self.insert(rows.row(r));
+            self.insert_row_with_energy(rows.row(r), energies[r]);
         }
     }
 
@@ -223,12 +236,25 @@ impl FdSketch {
         }
     }
 
-    /// Rebuild a sketch from an exported state (pure-Rust shrink backend).
+    /// Rebuild a sketch from an exported state (pure-Rust serial backend).
     ///
     /// # Errors
     /// Rejects states with zero `ell`/`d`, a buffer whose length is not
     /// `2ℓ × d`, or `next_row > 2ℓ`.
     pub fn from_state(state: &SketchState) -> Result<FdSketch, String> {
+        Self::from_state_with(state, crate::tensor::serial())
+    }
+
+    /// [`FdSketch::from_state`] with an explicit kernel backend (the
+    /// service recovers sessions onto its configured backend; results are
+    /// bit-identical across backends by the determinism contract).
+    ///
+    /// # Errors
+    /// Same validation as [`FdSketch::from_state`].
+    pub fn from_state_with(
+        state: &SketchState,
+        backend: Arc<dyn ShrinkBackend>,
+    ) -> Result<FdSketch, String> {
         let (ell, d) = (state.ell as usize, state.d as usize);
         if ell == 0 || d == 0 {
             return Err("sketch state: ell and d must be positive".into());
@@ -256,7 +282,7 @@ impl FdSketch {
             rows_seen: state.rows_seen,
             delta_sum: state.delta_sum,
             energy_seen: state.energy_seen,
-            backend: Arc::new(CpuShrinkBackend),
+            backend,
         })
     }
 

@@ -1,0 +1,392 @@
+//! The [`ComputeBackend`] kernel layer: one trait for every hot contraction
+//! (FD shrink Gram + rotation, Phase-II projection, consensus matvec,
+//! batched row norms/energies), with a serial reference implementation and
+//! a threadpool-parallel implementation that is **bit-identical** to it.
+//!
+//! # Determinism contract
+//!
+//! Every operation's output is defined by the serial microkernels in
+//! [`kernels`]: each output element is produced by exactly one kernel call
+//! with a fixed internal accumulation order. [`ParallelBackend`] splits the
+//! output row grid into *fixed, worker-count-independent* chunks
+//! ([`kernels::row_chunk`]) and runs the same kernels per chunk, so for any
+//! op `B` and inputs `x`:
+//!
+//! ```text
+//! ParallelBackend(w).op(x) ≡ SerialBackend.op(x)   bitwise, ∀ w
+//! ```
+//!
+//! This is what lets the service guarantee "served selection ≡ offline
+//! `run_selection`" survive arbitrary `--workers` settings on either side
+//! (docs/ARCHITECTURE.md, "Kernel layer & determinism contract").
+//!
+//! Trait methods have serial default implementations, so narrow backends
+//! (e.g. the XLA shrink backend, which accelerates only `gram`/`apply_rot`)
+//! widen to the full kernel layer for free.
+
+use super::{kernels, Matrix};
+use crate::util::threadpool::ThreadPool;
+use std::sync::{Arc, OnceLock};
+
+/// Minimum number of inner-loop multiply-adds before the parallel backend
+/// forks; below this the fork/join overhead dominates and the serial
+/// kernels run inline (results are identical either way — same kernels).
+const PAR_MIN_FLOPS: usize = 1 << 20;
+
+/// Backend over the compute substrate's hot kernels. See the module docs
+/// for the determinism contract all implementations must uphold.
+pub trait ComputeBackend: Send + Sync {
+    /// Human-readable backend name (for logs/benches).
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    /// `buf·bufᵀ` for the FD shrink's `m × d` buffer (m = 2ℓ).
+    fn gram(&self, buf: &Matrix) -> Matrix {
+        kernels::gram(buf)
+    }
+
+    /// `rot·buf` for the FD shrink's `ℓ × m` rotation against the buffer.
+    fn apply_rot(&self, rot: &Matrix, buf: &Matrix) -> Matrix {
+        assert_eq!(rot.cols(), buf.rows(), "apply_rot inner dim");
+        let mut out = Matrix::zeros(rot.rows(), buf.cols());
+        kernels::matmul_rows(rot, buf, 0, rot.rows(), out.as_mut_slice());
+        out
+    }
+
+    /// `A·Bᵀ` into a caller-provided output (the Phase-II projection shape
+    /// `scores = G·Sᵀ`; callers reuse `out` across batches via
+    /// `selection::ProjectionScratch`).
+    fn matmul_transb_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        assert_eq!(a.cols(), b.cols(), "matmul_transb inner dim");
+        assert_eq!((out.rows(), out.cols()), (a.rows(), b.rows()));
+        kernels::matmul_transb_rows(a, b, 0, a.rows(), out.as_mut_slice());
+    }
+
+    /// Allocating form of [`matmul_transb_into`].
+    ///
+    /// [`matmul_transb_into`]: ComputeBackend::matmul_transb_into
+    fn matmul_transb(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows(), b.rows());
+        self.matmul_transb_into(a, b, &mut out);
+        out
+    }
+
+    /// `m·x` — the consensus matvec (`α = Ẑ·u`) and the selection rules'
+    /// gain scans over all scored rows.
+    fn matvec(&self, m: &Matrix, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m.rows()];
+        kernels::matvec_rows(m, x, 0, m.rows(), &mut out);
+        out
+    }
+
+    /// Per-row squared Euclidean norms in f64 (batched energy accumulation
+    /// for the FD certificate and GRAFT's residual scan).
+    fn row_energies(&self, m: &Matrix) -> Vec<f64> {
+        let mut out = vec![0.0f64; m.rows()];
+        kernels::row_energies_rows(m, 0, m.rows(), &mut out);
+        out
+    }
+
+    /// Normalize every row of `m` in place, returning the pre-normalization
+    /// norms (the Phase-II `‖S gᵢ‖` output; zero rows stay zero).
+    fn normalize_rows(&self, m: &mut Matrix) -> Vec<f32> {
+        let mut norms = vec![0.0f32; m.rows()];
+        kernels::normalize_rows_rows(m, 0, m.rows(), &mut norms);
+        norms
+    }
+
+    /// `acc[j] += Σ_r m[r][j]` in f64, row order fixed — the streaming
+    /// consensus accumulator. Serial on every backend by contract: the
+    /// row-sequential f64 order is part of the exactness guarantee.
+    fn accumulate_col_sums(&self, m: &Matrix, acc: &mut [f64]) {
+        kernels::accumulate_col_sums(m, acc);
+    }
+}
+
+impl std::fmt::Debug for dyn ComputeBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ComputeBackend({})", self.name())
+    }
+}
+
+/// Pure-serial reference backend: the trait's default kernels, verbatim.
+#[derive(Default, Debug, Clone, Copy)]
+pub struct SerialBackend;
+
+impl ComputeBackend for SerialBackend {}
+
+/// The shared serial backend (cheap to clone; used as the default wherever
+/// no explicit backend is threaded through).
+pub fn serial() -> Arc<dyn ComputeBackend> {
+    static SERIAL: OnceLock<Arc<SerialBackend>> = OnceLock::new();
+    let backend: Arc<SerialBackend> = SERIAL.get_or_init(|| Arc::new(SerialBackend)).clone();
+    backend
+}
+
+/// Build the backend for a `--workers`-style setting: serial for ≤ 1,
+/// otherwise a [`ParallelBackend`] over a dedicated pool of `workers`
+/// threads. Selections are bit-identical across all settings.
+pub fn compute_backend(workers: usize) -> Arc<dyn ComputeBackend> {
+    if workers <= 1 {
+        serial()
+    } else {
+        Arc::new(ParallelBackend::with_threads(workers))
+    }
+}
+
+/// Raw output cursor handed to parallel chunks. Each chunk derives a
+/// disjoint slice from it (the chunks partition the output row grid), so
+/// no two threads ever alias a byte.
+#[derive(Clone, Copy)]
+struct OutPtr<T>(*mut T);
+
+// SAFETY: chunks write disjoint row ranges (enforced by the fixed row
+// grid), and the owning buffer outlives the fork/join region.
+unsafe impl<T: Send> Send for OutPtr<T> {}
+unsafe impl<T: Send> Sync for OutPtr<T> {}
+
+/// Threadpool-parallel kernel backend. Work splits along the fixed row grid
+/// of [`kernels::row_chunk`] and runs the *same* serial microkernels per
+/// chunk, so results are bit-identical to [`SerialBackend`] for every
+/// worker count (verified per-op by `tests/kernel_determinism.rs`).
+pub struct ParallelBackend {
+    pool: Arc<ThreadPool>,
+    /// Minimum multiply-adds before forking (0 = always fork; tests use
+    /// this to force the parallel path on tiny shapes).
+    min_flops: usize,
+}
+
+impl ParallelBackend {
+    /// Wrap a shared pool (the instance `main.rs` / server startup threads
+    /// through every layer).
+    pub fn new(pool: Arc<ThreadPool>) -> Self {
+        Self {
+            pool,
+            min_flops: PAR_MIN_FLOPS,
+        }
+    }
+
+    /// Dedicated pool of `threads` workers.
+    pub fn with_threads(threads: usize) -> Self {
+        Self::new(Arc::new(ThreadPool::new(threads.max(1))))
+    }
+
+    /// Override the serial-inline threshold (0 forces every op parallel).
+    pub fn with_min_flops(mut self, min_flops: usize) -> Self {
+        self.min_flops = min_flops;
+        self
+    }
+
+    /// The shared pool (e.g. to reuse it for other subsystems).
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
+    }
+
+    /// Fork `rows` of output across the fixed row grid; `f(r0, r1)` must
+    /// write only rows `[r0, r1)` of its output.
+    fn for_row_chunks(&self, rows: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        let chunk = kernels::row_chunk(rows);
+        let n_chunks = kernels::row_chunks(rows);
+        self.pool.run_chunks(n_chunks, &|c| {
+            let r0 = c * chunk;
+            let r1 = (r0 + chunk).min(rows);
+            f(r0, r1);
+        });
+    }
+}
+
+impl ComputeBackend for ParallelBackend {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn gram(&self, buf: &Matrix) -> Matrix {
+        let m = buf.rows();
+        // Lower-triangle work ≈ m²d/2.
+        if m * m * buf.cols() / 2 < self.min_flops || m == 0 {
+            return kernels::gram(buf);
+        }
+        let mut out = Matrix::zeros(m, m);
+        let optr = OutPtr(out.as_mut_slice().as_mut_ptr());
+        self.for_row_chunks(m, &|r0, r1| {
+            // SAFETY: rows [r0, r1) of `out`; chunks are disjoint and the
+            // buffer outlives the fork/join (see OutPtr).
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * m), (r1 - r0) * m) };
+            kernels::gram_rows(buf, r0, r1, slice);
+        });
+        kernels::mirror_lower(&mut out);
+        out
+    }
+
+    fn apply_rot(&self, rot: &Matrix, buf: &Matrix) -> Matrix {
+        assert_eq!(rot.cols(), buf.rows(), "apply_rot inner dim");
+        let (m, n) = (rot.rows(), buf.cols());
+        let mut out = Matrix::zeros(m, n);
+        if m * rot.cols() * n < self.min_flops || m == 0 {
+            kernels::matmul_rows(rot, buf, 0, m, out.as_mut_slice());
+            return out;
+        }
+        let optr = OutPtr(out.as_mut_slice().as_mut_ptr());
+        self.for_row_chunks(m, &|r0, r1| {
+            // SAFETY: disjoint row ranges of `out` (see OutPtr).
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * n), (r1 - r0) * n) };
+            kernels::matmul_rows(rot, buf, r0, r1, slice);
+        });
+        out
+    }
+
+    fn matmul_transb_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        assert_eq!(a.cols(), b.cols(), "matmul_transb inner dim");
+        assert_eq!((out.rows(), out.cols()), (a.rows(), b.rows()));
+        let (m, n) = (a.rows(), b.rows());
+        if m * n * a.cols() < self.min_flops || m == 0 {
+            kernels::matmul_transb_rows(a, b, 0, m, out.as_mut_slice());
+            return;
+        }
+        let optr = OutPtr(out.as_mut_slice().as_mut_ptr());
+        self.for_row_chunks(m, &|r0, r1| {
+            // SAFETY: disjoint row ranges of `out` (see OutPtr).
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * n), (r1 - r0) * n) };
+            kernels::matmul_transb_rows(a, b, r0, r1, slice);
+        });
+    }
+
+    fn matvec(&self, m: &Matrix, x: &[f32]) -> Vec<f32> {
+        let rows = m.rows();
+        let mut out = vec![0.0f32; rows];
+        if rows * m.cols() < self.min_flops || rows == 0 {
+            kernels::matvec_rows(m, x, 0, rows, &mut out);
+            return out;
+        }
+        let optr = OutPtr(out.as_mut_ptr());
+        self.for_row_chunks(rows, &|r0, r1| {
+            // SAFETY: disjoint element ranges of `out` (see OutPtr).
+            let slice = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0), r1 - r0) };
+            kernels::matvec_rows(m, x, r0, r1, slice);
+        });
+        out
+    }
+
+    fn row_energies(&self, m: &Matrix) -> Vec<f64> {
+        let rows = m.rows();
+        let mut out = vec![0.0f64; rows];
+        if rows * m.cols() < self.min_flops || rows == 0 {
+            kernels::row_energies_rows(m, 0, rows, &mut out);
+            return out;
+        }
+        let optr = OutPtr(out.as_mut_ptr());
+        self.for_row_chunks(rows, &|r0, r1| {
+            // SAFETY: disjoint element ranges of `out` (see OutPtr).
+            let slice = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0), r1 - r0) };
+            kernels::row_energies_rows(m, r0, r1, slice);
+        });
+        out
+    }
+
+    fn normalize_rows(&self, m: &mut Matrix) -> Vec<f32> {
+        let rows = m.rows();
+        let cols = m.cols();
+        let mut norms = vec![0.0f32; rows];
+        if rows * cols < self.min_flops || rows == 0 {
+            kernels::normalize_rows_rows(m, 0, rows, &mut norms);
+            return norms;
+        }
+        let mptr = OutPtr(m.as_mut_slice().as_mut_ptr());
+        let nptr = OutPtr(norms.as_mut_ptr());
+        self.for_row_chunks(rows, &|r0, r1| {
+            // SAFETY: disjoint row ranges of `m` and element ranges of
+            // `norms` (see OutPtr). The chunk view is rebuilt as a Matrix
+            // so the kernel sees proper row geometry.
+            let rows_slice =
+                unsafe { std::slice::from_raw_parts_mut(mptr.0.add(r0 * cols), (r1 - r0) * cols) };
+            let nslice = unsafe { std::slice::from_raw_parts_mut(nptr.0.add(r0), r1 - r0) };
+            for (k, chunk_row) in rows_slice.chunks_mut(cols).enumerate() {
+                nslice[k] = super::ops::normalize_in_place(chunk_row) as f32;
+            }
+        });
+        norms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    fn random_matrix(rng: &mut crate::util::rng::Pcg64, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what} length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn parallel_ops_bit_identical_to_serial() {
+        let serial = SerialBackend;
+        for workers in [2usize, 3] {
+            let par = ParallelBackend::with_threads(workers).with_min_flops(0);
+            forall("backend_parity", 6, |rng| {
+                let m = 1 + rng.below(33) as usize;
+                let d = 1 + rng.below(60) as usize;
+                let l = 1 + rng.below(17) as usize;
+                let a = random_matrix(rng, m, d);
+                let b = random_matrix(rng, l, d);
+                assert_bits_eq(
+                    par.matmul_transb(&a, &b).as_slice(),
+                    serial.matmul_transb(&a, &b).as_slice(),
+                    "matmul_transb",
+                );
+                assert_bits_eq(par.gram(&a).as_slice(), serial.gram(&a).as_slice(), "gram");
+                let rot = random_matrix(rng, l, m);
+                assert_bits_eq(
+                    par.apply_rot(&rot, &a).as_slice(),
+                    serial.apply_rot(&rot, &a).as_slice(),
+                    "apply_rot",
+                );
+                let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+                assert_bits_eq(&par.matvec(&a, &x), &serial.matvec(&a, &x), "matvec");
+                let ep: Vec<f64> = par.row_energies(&a);
+                let es: Vec<f64> = serial.row_energies(&a);
+                for (x, y) in ep.iter().zip(es.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "row_energies");
+                }
+                let mut ma = a.clone();
+                let mut mb = a.clone();
+                let np = par.normalize_rows(&mut ma);
+                let ns = serial.normalize_rows(&mut mb);
+                assert_bits_eq(&np, &ns, "norms");
+                assert_bits_eq(ma.as_slice(), mb.as_slice(), "normalized rows");
+            });
+        }
+    }
+
+    #[test]
+    fn compute_backend_picks_serial_for_one_worker() {
+        assert_eq!(compute_backend(1).name(), "serial");
+        assert_eq!(compute_backend(0).name(), "serial");
+        assert_eq!(compute_backend(3).name(), "parallel");
+    }
+
+    #[test]
+    fn gating_keeps_small_ops_inline() {
+        // Below the flop threshold the parallel backend runs serial kernels
+        // inline — results must (trivially) still match.
+        let par = ParallelBackend::with_threads(2);
+        let mut rng = crate::util::rng::Pcg64::seeded(11);
+        let a = random_matrix(&mut rng, 4, 6);
+        let b = random_matrix(&mut rng, 3, 6);
+        assert_bits_eq(
+            par.matmul_transb(&a, &b).as_slice(),
+            SerialBackend.matmul_transb(&a, &b).as_slice(),
+            "gated matmul_transb",
+        );
+    }
+}

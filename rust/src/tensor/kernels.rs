@@ -1,0 +1,348 @@
+//! Serial compute microkernels — the single source of truth for every hot
+//! contraction in the system (FD shrink, Phase-II projection, consensus
+//! matvec, batched row norms/energies).
+//!
+//! Each kernel is written in *row-grid* form: it computes a contiguous row
+//! range `[r0, r1)` of its output. The serial [`ComputeBackend`] calls it
+//! once with the full range; the parallel backend calls it once per chunk
+//! of a **fixed, worker-count-independent row grid** (see [`row_chunk`]).
+//! Because every output element is produced by exactly one kernel call with
+//! a fixed intra-kernel accumulation order, the split never changes results:
+//! parallel output is bit-identical to serial for any worker count.
+//!
+//! The dot microkernel is [`dot8`]: 8-wide unrolled with 8 independent
+//! accumulators, which the compiler auto-vectorizes (two 4-lane or one
+//! 8-lane FMA stream); matrix kernels tile their loops so the smaller
+//! operand stays cache-resident while the larger one streams.
+//!
+//! [`ComputeBackend`]: super::ComputeBackend
+
+use super::ops;
+use super::Matrix;
+
+/// f32 dot product, 8-wide unrolled with 8 independent accumulators.
+/// The multi-accumulator shape both enables SIMD and fixes the reduction
+/// tree, so results are reproducible anywhere this kernel runs.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let j = c * 8;
+        let aw = &a[j..j + 8];
+        let bw = &b[j..j + 8];
+        for ((s, &x), &y) in acc.iter_mut().zip(aw.iter()).zip(bw.iter()) {
+            *s += x * y;
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for j in chunks * 8..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Fixed row-chunk size for a `rows`-row output grid. Depends ONLY on the
+/// shape — never on the worker count — so the chunk boundaries (and with
+/// them the results) are identical for every `--workers` setting.
+pub fn row_chunk(rows: usize) -> usize {
+    (rows / 64).clamp(4, 256)
+}
+
+/// Number of chunks in the fixed row grid over `rows` rows.
+pub fn row_chunks(rows: usize) -> usize {
+    rows.div_ceil(row_chunk(rows))
+}
+
+/// B-row tile width for [`matmul_transb_rows`]: the tile of B rows stays
+/// cache-hot while the A rows of the chunk stream past it.
+const B_TILE: usize = 8;
+
+/// Rows `[r0, r1)` of `C = A·Bᵀ` (the Phase-II projection shape: A = the
+/// `b × D` gradient block, B = the `ℓ × D` sketch) into `out`, which holds
+/// exactly those rows (`(r1-r0) × b.rows()`, row-major). Each element is
+/// one [`dot8`].
+pub fn matmul_transb_rows(a: &Matrix, b: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
+    let n = b.rows();
+    debug_assert_eq!(a.cols(), b.cols(), "matmul_transb inner dim");
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + B_TILE).min(n);
+        for i in r0..r1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
+            for j in j0..j1 {
+                orow[j] = dot8(arow, b.row(j));
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// Rows `[r0, r1)` of the symmetric Gram `G = A·Aᵀ`, lower triangle only
+/// (`j ≤ i`); `out` holds full rows. Callers mirror the strict upper
+/// triangle afterwards with [`mirror_lower`] — a cheap serial pass that
+/// keeps the two triangles bit-identical by construction.
+pub fn gram_rows(a: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
+    let n = a.rows();
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    for i in r0..r1 {
+        let arow = a.row(i);
+        let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
+        let mut j0 = 0;
+        while j0 <= i {
+            let j1 = (j0 + B_TILE).min(i + 1);
+            for j in j0..j1 {
+                orow[j] = dot8(arow, a.row(j));
+            }
+            j0 = j1;
+        }
+    }
+}
+
+/// Copy the lower triangle of a square matrix onto its strict upper
+/// triangle (the mirror step after [`gram_rows`]).
+pub fn mirror_lower(g: &mut Matrix) {
+    debug_assert_eq!(g.rows(), g.cols());
+    let n = g.rows();
+    let data = g.as_mut_slice();
+    for i in 0..n {
+        for j in 0..i {
+            data[j * n + i] = data[i * n + j];
+        }
+    }
+}
+
+/// Full serial Gram via the row-grid kernel + mirror (the serial backend's
+/// `gram`, and the reference the parallel path must match bit-for-bit).
+pub fn gram(a: &Matrix) -> Matrix {
+    let n = a.rows();
+    let mut out = Matrix::zeros(n, n);
+    gram_rows(a, 0, n, out.as_mut_slice());
+    mirror_lower(&mut out);
+    out
+}
+
+/// Rows `[r0, r1)` of `C = A·B` (the FD shrink's `R·S` contraction shape)
+/// into `out` (`(r1-r0) × b.cols()`). Row-major ikj loop: each output row
+/// accumulates `a[i][k] · b_k` with a fixed k order via `axpy`, so the row
+/// split never changes results. Zero `a[i][k]` terms are skipped (adding
+/// `0 · x` is exact for finite `x`; rotation rows are built finite).
+pub fn matmul_rows(a: &Matrix, b: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
+    let n = b.cols();
+    debug_assert_eq!(a.cols(), b.rows(), "matmul inner dim");
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    for i in r0..r1 {
+        let arow = a.row(i);
+        let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
+        orow.fill(0.0);
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik != 0.0 {
+                ops::axpy(aik, b.row(k), orow);
+            }
+        }
+    }
+}
+
+/// `out[i - r0] = ⟨m_i, x⟩` for rows `[r0, r1)` — the consensus matvec
+/// (`α = Ẑ·u`) and the selection rules' gain scans. One [`dot8`] per row.
+pub fn matvec_rows(m: &Matrix, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+    debug_assert_eq!(m.cols(), x.len(), "matvec dim");
+    debug_assert_eq!(out.len(), r1 - r0);
+    for i in r0..r1 {
+        out[i - r0] = dot8(m.row(i), x);
+    }
+}
+
+/// `out[i - r0] = ‖m_i‖²` in f64 for rows `[r0, r1)` — the batched
+/// row-energy accumulation under `FdSketch::insert_batch` and GRAFT's
+/// residual scan. Same sequential-f64 semantics as `ops::dot_f64(row, row)`
+/// so the streamed energy certificate is unchanged by the kernel routing.
+pub fn row_energies_rows(m: &Matrix, r0: usize, r1: usize, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), r1 - r0);
+    for i in r0..r1 {
+        let row = m.row(i);
+        out[i - r0] = ops::dot_f64(row, row);
+    }
+}
+
+/// Normalize rows `[r0, r1)` of `m` in place, recording each row's
+/// pre-normalization Euclidean norm (the Phase-II `‖S gᵢ‖` output). Zero
+/// rows stay zero, matching Algorithm 1's `ẑᵢ = 0` convention.
+pub fn normalize_rows_rows(m: &mut Matrix, r0: usize, r1: usize, norms: &mut [f32]) {
+    debug_assert_eq!(norms.len(), r1 - r0);
+    for i in r0..r1 {
+        norms[i - r0] = ops::normalize_in_place(m.row_mut(i)) as f32;
+    }
+}
+
+/// `acc[j] += Σ_rows m[r][j]` in f64, accumulating row-by-row in row order —
+/// the consensus accumulator of `AgreementScorer::add_batch`. Serial by
+/// contract: batches are small (≤ the score batch) and the row order IS the
+/// accumulation order the exactness guarantee pins down.
+pub fn accumulate_col_sums(m: &Matrix, acc: &mut [f64]) {
+    debug_assert_eq!(m.cols(), acc.len());
+    for r in 0..m.rows() {
+        for (j, &v) in m.row(r).iter().enumerate() {
+            acc[j] += v as f64;
+        }
+    }
+}
+
+/// Cache-blocked transpose tile edge (32×32 f32 tiles = two 4 KiB faces).
+const T_TILE: usize = 32;
+
+/// `dst = srcᵀ` via square tiling so both the source rows and destination
+/// rows stay within cache lines per tile (the naive row-major transpose
+/// strides `dst` by `src.rows()` floats per element).
+pub fn transpose_into(src: &Matrix, dst: &mut Matrix) {
+    let (r, c) = (src.rows(), src.cols());
+    debug_assert_eq!((dst.rows(), dst.cols()), (c, r));
+    let s = src.as_slice();
+    let d = dst.as_mut_slice();
+    let mut i0 = 0;
+    while i0 < r {
+        let i1 = (i0 + T_TILE).min(r);
+        let mut j0 = 0;
+        while j0 < c {
+            let j1 = (j0 + T_TILE).min(c);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    d[j * r + i] = s[i * c + j];
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    fn random_matrix(rng: &mut crate::util::rng::Pcg64, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn dot8_matches_f64_reference() {
+        forall("dot8", 30, |rng| {
+            let n = rng.below(300) as usize;
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let fast = dot8(&a, &b) as f64;
+            let slow = ops::dot_f64(&a, &b);
+            assert!(
+                (fast - slow).abs() < 1e-3 * (1.0 + slow.abs()),
+                "{fast} vs {slow}"
+            );
+        });
+    }
+
+    #[test]
+    fn row_grid_is_worker_count_free() {
+        for rows in [1usize, 5, 63, 64, 65, 512, 100_000] {
+            let chunk = row_chunk(rows);
+            assert!((4..=256).contains(&chunk));
+            assert_eq!(row_chunks(rows), rows.div_ceil(chunk));
+        }
+    }
+
+    #[test]
+    fn split_kernel_calls_match_full_range() {
+        // The determinism contract at kernel granularity: computing the
+        // row grid chunk-by-chunk reproduces the full-range call bit-for-bit.
+        forall("kernel_split", 10, |rng| {
+            let m = 1 + rng.below(33) as usize;
+            let k = 1 + rng.below(70) as usize;
+            let n = 1 + rng.below(19) as usize;
+            let a = random_matrix(rng, m, k);
+            let b = random_matrix(rng, n, k);
+
+            let mut full = vec![0.0f32; m * n];
+            matmul_transb_rows(&a, &b, 0, m, &mut full);
+            let mut split = vec![0.0f32; m * n];
+            let mut r0 = 0;
+            while r0 < m {
+                let r1 = (r0 + 3).min(m);
+                matmul_transb_rows(&a, &b, r0, r1, &mut split[r0 * n..r1 * n]);
+                r0 = r1;
+            }
+            for (x, y) in full.iter().zip(split.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn gram_matches_matmul_transb_self_bitwise() {
+        forall("kernel_gram", 10, |rng| {
+            let m = 1 + rng.below(20) as usize;
+            let d = 1 + rng.below(40) as usize;
+            let a = random_matrix(rng, m, d);
+            let g = gram(&a);
+            let mut full = vec![0.0f32; m * m];
+            matmul_transb_rows(&a, &a, 0, m, &mut full);
+            // Lower triangle (incl. diagonal) is computed by the same dot8
+            // calls; the upper triangle is the mirror.
+            for i in 0..m {
+                for j in 0..m {
+                    let want = if j <= i { full[i * m + j] } else { full[j * m + i] };
+                    assert_eq!(g.get(i, j).to_bits(), want.to_bits(), "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_rows_matches_matrix_matmul() {
+        forall("kernel_matmul", 10, |rng| {
+            let m = 1 + rng.below(12) as usize;
+            let k = 1 + rng.below(12) as usize;
+            let n = 1 + rng.below(12) as usize;
+            let a = random_matrix(rng, m, k);
+            let b = random_matrix(rng, k, n);
+            let mut out = vec![0.0f32; m * n];
+            matmul_rows(&a, &b, 0, m, &mut out);
+            let want = a.matmul(&b);
+            for (x, y) in out.iter().zip(want.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_tiles_match_naive() {
+        forall("kernel_transpose", 10, |rng| {
+            let r = 1 + rng.below(70) as usize;
+            let c = 1 + rng.below(70) as usize;
+            let a = random_matrix(rng, r, c);
+            let mut t = Matrix::zeros(c, r);
+            transpose_into(&a, &mut t);
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t.get(j, i).to_bits(), a.get(i, j).to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn row_energies_match_dot_f64() {
+        forall("kernel_energy", 10, |rng| {
+            let m = 1 + rng.below(9) as usize;
+            let d = 1 + rng.below(50) as usize;
+            let a = random_matrix(rng, m, d);
+            let mut en = vec![0.0f64; m];
+            row_energies_rows(&a, 0, m, &mut en);
+            for (i, &e) in en.iter().enumerate() {
+                assert_eq!(e.to_bits(), ops::dot_f64(a.row(i), a.row(i)).to_bits());
+            }
+        });
+    }
+}

@@ -87,13 +87,12 @@ impl Matrix {
         self.data.fill(v);
     }
 
+    /// Cache-blocked tile transpose (32×32 tiles — the naive row-major
+    /// version strides the destination by `rows` floats per element and
+    /// thrashes for the wide Phase-II shapes).
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out.data[c * self.rows + r] = self.data[r * self.cols + c];
-            }
-        }
+        super::kernels::transpose_into(self, &mut out);
         out
     }
 
@@ -117,36 +116,28 @@ impl Matrix {
     }
 
     /// C = A @ Bᵀ — the projection shape (rows of B are the sketch rows).
+    /// Runs on the tiled 8-wide microkernel (`tensor::kernels`), the same
+    /// code path the `ComputeBackend` layer parallelizes.
     pub fn matmul_transb(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.cols, "matmul_transb inner dim");
         let mut out = Matrix::zeros(self.rows, b.rows);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            for j in 0..b.rows {
-                out.data[i * b.rows + j] = ops::dot(arow, b.row(j));
-            }
-        }
+        super::kernels::matmul_transb_rows(self, b, 0, self.rows, &mut out.data);
         out
     }
 
-    /// G = A @ Aᵀ (symmetric Gram; only computes the lower triangle once).
+    /// G = A @ Aᵀ (symmetric Gram; computes the lower triangle once and
+    /// mirrors it — `tensor::kernels` tiled microkernel).
     pub fn gram(&self) -> Matrix {
-        let n = self.rows;
-        let mut out = Matrix::zeros(n, n);
-        for i in 0..n {
-            for j in 0..=i {
-                let v = ops::dot(self.row(i), self.row(j));
-                out.data[i * n + j] = v;
-                out.data[j * n + i] = v;
-            }
-        }
-        out
+        super::kernels::gram(self)
     }
 
-    /// y = A @ x for a vector x.
+    /// y = A @ x for a vector x (same `dot8` microkernel as the
+    /// `ComputeBackend` matvec, so the two stay bit-identical).
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, x.len(), "matvec dim");
-        (0..self.rows).map(|i| ops::dot(self.row(i), x)).collect()
+        let mut out = vec![0.0f32; self.rows];
+        super::kernels::matvec_rows(self, x, 0, self.rows, &mut out);
+        out
     }
 
     /// y = Aᵀ @ x.

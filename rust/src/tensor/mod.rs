@@ -5,9 +5,19 @@
 //! uses), row views, norms, and in-place BLAS-1 helpers. Accumulations that
 //! feed decisions (norms, dot products) run in f64 to keep the Rust
 //! reference numerically comparable to the XLA artifacts.
+//!
+//! The hot contractions live in [`kernels`] (tiled, 8-wide-unrolled serial
+//! microkernels) behind the [`ComputeBackend`] layer: [`SerialBackend`] is
+//! the reference, [`ParallelBackend`] splits the same kernels over a shared
+//! threadpool along fixed, worker-count-independent chunk boundaries —
+//! bit-identical results for every worker count (the service's exactness
+//! guarantee depends on this; see docs/ARCHITECTURE.md).
 
+mod backend;
+pub mod kernels;
 mod matrix;
 mod ops;
 
+pub use backend::{compute_backend, serial, ComputeBackend, ParallelBackend, SerialBackend};
 pub use matrix::Matrix;
-pub use ops::{dot, dot_f64, norm2, normalize_in_place, axpy, scale_in_place};
+pub use ops::{axpy, dot, dot_f64, norm2, normalize_in_place, scale_in_place};

@@ -6,7 +6,7 @@
 //! common "split a big slice across cores" pattern on std scoped threads
 //! with zero allocation of intermediate Vecs beyond the output.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -155,6 +155,71 @@ impl ThreadPool {
         outcome
     }
 
+    /// Run `f(0)..f(chunks-1)` cooperatively across the pool and the
+    /// calling thread, returning once every chunk has completed. This is
+    /// the scoped fork/join primitive under `tensor::ParallelBackend`: the
+    /// chunk *grid* is fixed by the caller (it must depend only on the
+    /// problem shape), while which thread executes which chunk is dynamic —
+    /// safe for bitwise determinism as long as each chunk's output is
+    /// independent of the others.
+    ///
+    /// Scheduling is work-stealing-free: chunk indices are popped from a
+    /// shared counter. Helper jobs are submitted with [`try_execute`]
+    /// (never blocking), and the caller participates, so a saturated or
+    /// shut-down pool degrades to inline serial execution instead of
+    /// deadlocking — including when `run_chunks` is called from inside a
+    /// pool job.
+    ///
+    /// Panics in `f` are propagated to the caller after all in-flight
+    /// chunks finish (a panicking chunk also kills the worker thread that
+    /// ran it, matching `execute`'s contract for panicking jobs).
+    ///
+    /// [`try_execute`]: ThreadPool::try_execute
+    pub fn run_chunks(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        if chunks == 1 || self.threads() <= 1 {
+            for i in 0..chunks {
+                f(i);
+            }
+            return;
+        }
+        let region = Arc::new(ChunkRegion {
+            next: AtomicUsize::new(0),
+            total: chunks,
+            state: Mutex::new(RegionState {
+                in_flight: 0,
+                done: 0,
+                cancelled: false,
+            }),
+            cv: Condvar::new(),
+            poisoned: AtomicBool::new(false),
+        });
+        // SAFETY of the lifetime erasure below: `f` is dereferenced only
+        // between an `in_flight` increment and the matching decrement (both
+        // under the region mutex, decrement on the unwind path too), and
+        // `RegionWait` pins this frame — on return AND on unwind — until
+        // either every chunk completed (`done == total`) or, when
+        // unwinding, `cancelled` is set under the mutex and `in_flight`
+        // drained; a straggler job observing `cancelled` or an exhausted
+        // index exits without ever touching the pointer.
+        let fp = RawChunkFn(f as *const (dyn Fn(usize) + Sync));
+        let helpers = self.threads().min(chunks - 1);
+        for _ in 0..helpers {
+            let region = region.clone();
+            if self.try_execute(move || region.work(fp)).is_err() {
+                break; // pool saturated/closed: remaining chunks run here
+            }
+        }
+        let wait = RegionWait { region: &region };
+        region.work(fp);
+        drop(wait); // blocks until the region is quiescent
+        if region.poisoned.load(Ordering::Relaxed) {
+            panic!("ThreadPool::run_chunks: a parallel chunk panicked");
+        }
+    }
+
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
         let (lock, cv) = &*self.pending;
@@ -174,6 +239,104 @@ impl Drop for ThreadPool {
         drop(self.tx.take());
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+/// Type-erased pointer to the chunk closure of one [`ThreadPool::run_chunks`]
+/// region. Only dereferenced under the region's liveness protocol (see the
+/// SAFETY comment in `run_chunks`).
+#[derive(Clone, Copy)]
+struct RawChunkFn(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from many threads are fine)
+// and the region protocol guarantees it outlives every dereference.
+unsafe impl Send for RawChunkFn {}
+unsafe impl Sync for RawChunkFn {}
+
+struct RegionState {
+    /// Chunks popped but not yet finished (bounds the waiter on unwind).
+    in_flight: usize,
+    /// Chunks finished (executed or unwound).
+    done: usize,
+    /// Set by an unwinding waiter: stop popping new chunks.
+    cancelled: bool,
+}
+
+/// Shared state of one `run_chunks` region.
+struct ChunkRegion {
+    next: AtomicUsize,
+    total: usize,
+    state: Mutex<RegionState>,
+    cv: Condvar,
+    poisoned: AtomicBool,
+}
+
+impl ChunkRegion {
+    /// Pop-and-execute until the grid is exhausted (or cancelled).
+    fn work(&self, f: RawChunkFn) {
+        loop {
+            {
+                let mut s = self.state.lock().unwrap();
+                if s.cancelled {
+                    return;
+                }
+                s.in_flight += 1;
+            }
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                let mut s = self.state.lock().unwrap();
+                s.in_flight -= 1;
+                self.cv.notify_all();
+                return;
+            }
+            // Guard fires on unwind too, so the waiter never hangs on a
+            // panicked chunk.
+            let _done = ChunkDoneGuard { region: self };
+            // SAFETY: in_flight > 0 for this thread and i < total, so the
+            // waiter is still pinned inside `run_chunks` (see SAFETY there).
+            let f = unsafe { &*f.0 };
+            f(i);
+        }
+    }
+}
+
+struct ChunkDoneGuard<'a> {
+    region: &'a ChunkRegion,
+}
+
+impl Drop for ChunkDoneGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.region.poisoned.store(true, Ordering::Relaxed);
+        }
+        let mut s = self.region.state.lock().unwrap();
+        s.in_flight -= 1;
+        s.done += 1;
+        self.region.cv.notify_all();
+    }
+}
+
+/// Pins a `run_chunks` frame until its region is quiescent: all chunks done
+/// on the normal path, or (on unwind) the region cancelled and every
+/// in-flight chunk finished.
+struct RegionWait<'a> {
+    region: &'a ChunkRegion,
+}
+
+impl Drop for RegionWait<'_> {
+    fn drop(&mut self) {
+        let region = self.region;
+        let mut s = region.state.lock().unwrap();
+        if std::thread::panicking() {
+            s.cancelled = true;
+            while s.in_flight > 0 {
+                s = region.cv.wait(s).unwrap();
+            }
+        } else {
+            while s.done < region.total {
+                s = region.cv.wait(s).unwrap();
+            }
         }
     }
 }
@@ -306,6 +469,65 @@ mod tests {
             }
         } // drop waits for queue drain via channel close + join
         assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn run_chunks_executes_every_chunk_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for chunks in [1usize, 2, 3, 7, 64, 129] {
+            let hits: Vec<AtomicU64> = (0..chunks).map(|_| AtomicU64::new(0)).collect();
+            pool.run_chunks(chunks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} of {chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks_on_saturated_pool_degrades_to_caller() {
+        // Block every worker behind a gate: helper jobs stay queued, the
+        // caller runs every chunk itself and returns. The queued helpers
+        // then fire as stragglers after the region is gone — they must pop
+        // an exhausted grid and exit without touching anything.
+        let pool = ThreadPool::new(2);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        for _ in 0..2 {
+            let g = gate.clone();
+            pool.execute(move || {
+                let (lock, cv) = &*g;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            })
+            .unwrap();
+        }
+        let counter = AtomicU64::new(0);
+        pool.run_chunks(32, &|_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
+        // Release the workers; the straggler helper jobs must drain cleanly.
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 32, "stragglers re-ran chunks");
+    }
+
+    #[test]
+    fn run_chunks_propagates_chunk_panic() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_chunks(8, &|i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "chunk panic must reach the caller");
     }
 
     #[test]

@@ -30,6 +30,10 @@ fn spawn_server(registry: RegistryConfig) -> (ServerHandle, String) {
     let server = Server::bind(&ServerConfig {
         addr: "127.0.0.1:0".into(),
         threads: 8,
+        // Parallel kernel backend on the server side: the exactness
+        // assertions below double as the cross-worker-count contract
+        // (offline runs serial kernels; results must match bit-for-bit).
+        compute_workers: 3,
         registry,
     })
     .expect("bind server");
@@ -359,6 +363,7 @@ fn saturated_server_sheds_with_error_frame_and_retry_succeeds() {
     let server = Server::bind(&ServerConfig {
         addr: "127.0.0.1:0".into(),
         threads: 1,
+        compute_workers: 1,
         registry: RegistryConfig::default(),
     })
     .expect("bind server");
