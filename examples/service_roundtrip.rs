@@ -49,6 +49,7 @@ fn main() {
         threads: 8,
         compute_workers: 2, // parallel kernels; selections identical to serial
         registry: RegistryConfig::default(),
+        ..ServerConfig::default()
     })
     .unwrap();
     let addr = server.local_addr().to_string();

@@ -7,7 +7,8 @@
 //!   gen-data   write a simulated benchmark to a sharded directory
 //!   serve      run the sage-serve session server (TCP)
 //!   ingest     stream Phase-I gradients / Phase-II scores into a session
-//!   query      freeze / top-k / stats / checkpoint against a session
+//!   query      freeze / top-k / stats / metrics / checkpoint against a session
+//!   trace      export recorded spans as Chrome trace_event JSON
 //!   bench      kernel-layer serial-vs-parallel bench -> BENCH_kernels.json
 //!
 //! The runtime path requires `make artifacts` (AOT-lowered HLO). Pass
@@ -126,6 +127,8 @@ fn app() -> App {
                     Opt { name: "registry-shards", takes_value: true, help: "session registry shards (rounded to a power of two, max 256)", default: Some("8") },
                     Opt { name: "queue-depth", takes_value: true, help: "per-session ingest queue depth", default: Some("8") },
                     Opt { name: "checkpoint-dir", takes_value: true, help: "session checkpoint/recovery + scorer spill dir", default: None },
+                    Opt { name: "metrics-addr", takes_value: true, help: "serve Prometheus /metrics + /healthz on this HOST:PORT", default: None },
+                    Opt { name: "slow-op-ms", takes_value: true, help: "warn (with trace id) when an op handler exceeds this many ms (0 = off)", default: Some("0") },
                 ],
             },
             Command {
@@ -140,6 +143,7 @@ fn app() -> App {
                         Opt { name: "shard", takes_value: true, help: "this producer's shard index", default: Some("0") },
                         Opt { name: "phase", takes_value: true, help: "sketch (Phase I) | score (Phase II)", default: Some("sketch") },
                         Opt { name: "create", takes_value: false, help: "create the session first", default: None },
+                        Opt { name: "trace", takes_value: false, help: "start a trace; its id rides every frame (fetch spans with `sage trace export`)", default: None },
                     ]);
                     opts
                 },
@@ -160,15 +164,24 @@ fn app() -> App {
             },
             Command {
                 name: "query",
-                about: "query a served session: freeze | topk | stats | checkpoint | close",
+                about: "query a served session: freeze | topk | stats | metrics | checkpoint | close",
                 opts: vec![
                     Opt { name: "addr", takes_value: true, help: "server address", default: Some("127.0.0.1:7009") },
                     Opt { name: "session", takes_value: true, help: "session name ('' = server stats)", default: Some("run1") },
-                    Opt { name: "op", takes_value: true, help: "freeze | topk | stats | checkpoint | close", default: Some("stats") },
+                    Opt { name: "op", takes_value: true, help: "freeze | topk | stats | metrics | checkpoint | close", default: Some("stats") },
                     Opt { name: "method", takes_value: true, help: "selection method (topk)", default: Some("sage") },
                     Opt { name: "k", takes_value: true, help: "subset size (topk)", default: Some("100") },
                     Opt { name: "classes", takes_value: true, help: "class count (topk)", default: Some("10") },
                     Opt { name: "seed", takes_value: true, help: "selection seed (topk)", default: Some("0") },
+                    Opt { name: "prefix", takes_value: true, help: "metric-name prefix filter (metrics)", default: Some("") },
+                ],
+            },
+            Command {
+                name: "trace",
+                about: "export spans as Chrome trace_event JSON (load in chrome://tracing)",
+                opts: vec![
+                    Opt { name: "addr", takes_value: true, help: "server address", default: Some("127.0.0.1:7009") },
+                    Opt { name: "out", takes_value: true, help: "output JSON path", default: Some("trace.json") },
                 ],
             },
         ],
@@ -429,9 +442,14 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
             ingest_queue_depth: p.get_usize("queue-depth")?.unwrap_or(8).max(1),
             checkpoint_dir: p.get("checkpoint-dir").map(std::path::PathBuf::from),
         },
+        metrics_addr: p.get("metrics-addr").map(str::to_string),
+        slow_op_ms: p.get_usize("slow-op-ms")?.unwrap_or(0) as u64,
     };
     let server = sage::service::Server::bind(&cfg)?;
     println!("sage-serve listening on {}", server.local_addr());
+    if let Some(addr) = server.metrics_addr() {
+        println!("metrics on http://{addr}/metrics");
+    }
     server.run(std::sync::Arc::new(std::sync::atomic::AtomicBool::new(
         false,
     )))
@@ -462,6 +480,13 @@ fn cmd_ingest(p: &Parsed) -> Result<(), String> {
         spec.seed,
     )?;
     let mut client = sage::service::ServiceClient::connect(&addr)?;
+    let _trace_root = if p.has_flag("trace") {
+        let root = sage::util::trace::start_trace("ingest");
+        println!("trace id {:016x}", root.ctx().trace_id);
+        Some(root)
+    } else {
+        None
+    };
     if p.has_flag("create") {
         client.create_session(&session, backend.ell(), backend.spec().d(), shards)?;
         log_info!("created session '{session}' ({shards} shards)");
@@ -614,6 +639,22 @@ fn cmd_query(p: &Parsed) -> Result<(), String> {
                 println!("{name}: {value}");
             }
         }
+        "metrics" => {
+            let prefix = p.get_or("prefix", "");
+            let (counters, gauges, hists) = client.metrics_snapshot(&prefix)?;
+            for (name, value) in counters {
+                println!("counter {name}: {value}");
+            }
+            for (name, value) in gauges {
+                println!("gauge {name}: {value}");
+            }
+            for (name, s) in hists {
+                println!(
+                    "hist {name}: count={} mean={:.1} p50={} p99={} max={}",
+                    s.count, s.mean, s.p50, s.p99, s.max
+                );
+            }
+        }
         "checkpoint" => {
             let path = client.checkpoint(&session)?;
             println!("checkpointed '{session}' to {path}");
@@ -624,10 +665,32 @@ fn cmd_query(p: &Parsed) -> Result<(), String> {
         }
         other => {
             return Err(format!(
-                "unknown --op '{other}' (freeze|topk|stats|checkpoint|close)"
+                "unknown --op '{other}' (freeze|topk|stats|metrics|checkpoint|close)"
             ))
         }
     }
+    Ok(())
+}
+
+fn cmd_trace(p: &Parsed) -> Result<(), String> {
+    match p.positional.first().map(|s| s.as_str()) {
+        Some("export") | None => {}
+        Some(other) => return Err(format!("unknown trace action '{other}' (actions: export)")),
+    }
+    let addr = p.get_or("addr", "127.0.0.1:7009");
+    let out = p.get_or("out", "trace.json");
+    let mut client = sage::service::ServiceClient::connect(&addr)?;
+    let mut spans = client.trace_export()?;
+    // Merge anything this process recorded (e.g. client.<op> spans from an
+    // in-process run) so one file holds the full hierarchy.
+    spans.extend(sage::util::trace::collect());
+    spans.sort_by_key(|s| (s.start_unix_ns, s.span_id));
+    let json = sage::util::trace::chrome_trace_json(&spans);
+    std::fs::write(&out, json + "\n").map_err(|e| format!("{out}: {e}"))?;
+    println!(
+        "wrote {} spans to {out} (open in chrome://tracing or https://ui.perfetto.dev)",
+        spans.len()
+    );
     Ok(())
 }
 
@@ -656,6 +719,7 @@ fn main() {
         "ingest" => cmd_ingest(&parsed),
         "bench" => cmd_bench(&parsed),
         "query" => cmd_query(&parsed),
+        "trace" => cmd_trace(&parsed),
         other => Err(format!("unhandled command {other}")),
     };
     if let Err(e) = result {

@@ -256,6 +256,7 @@ pub fn run_selection(
 
     // Warm-up the model so selection gradients carry label signal.
     let t0 = Instant::now();
+    let warmup_span = crate::util::trace::span("pipeline.warmup");
     let params = crate::trainer::warmup_params(
         backend,
         ds,
@@ -263,13 +264,19 @@ pub fn run_selection(
         cfg.warmup_lr,
         cfg.seed,
     )?;
-    let warmup_seconds = t0.elapsed().as_secs_f64();
+    drop(warmup_span);
+    let warmup_elapsed = t0.elapsed();
+    let warmup_seconds = warmup_elapsed.as_secs_f64();
+    crate::util::metrics::global()
+        .histogram("pipeline.warmup.ns")
+        .record(warmup_elapsed.as_nanos() as u64);
 
     // --- Phase I: sharded streaming sketch + ordered merge ---
     // Shard sketches shrink on the explicit shrink backend when given (the
     // XLA artifacts), otherwise on the pipeline's kernel backend.
     let shrink: Arc<dyn ShrinkBackend> = shrink_backend.unwrap_or_else(|| cfg.compute.clone());
     let t1 = Instant::now();
+    let phase1_span = crate::util::trace::span("pipeline.phase1");
     let ranges = shard_ranges(n, cfg.workers);
     let mut results: Vec<Option<Result<(FdSketch, u64), String>>> =
         Vec::with_capacity(ranges.len());
@@ -300,14 +307,19 @@ pub fn run_selection(
         merged.merge(&mut s);
     }
     let sketch_matrix = merged.sketch();
+    drop(phase1_span);
     let phase1 = PhaseStats {
         seconds: t1.elapsed().as_secs_f64(),
         batches: p1_batches,
         examples: n as u64,
     };
+    crate::util::metrics::global()
+        .histogram("pipeline.phase1.ns")
+        .record(t1.elapsed().as_nanos() as u64);
 
     // --- Phase II: fused scoring against the frozen sketch ---
     let t2 = Instant::now();
+    let phase2_span = crate::util::trace::span("pipeline.phase2");
     let mut results2: Vec<Option<Result<(AgreementScorer, u64), String>>> =
         Vec::with_capacity(ranges.len());
     results2.resize_with(ranges.len(), || None);
@@ -339,11 +351,15 @@ pub fn run_selection(
         });
     }
     let scores = scorer.unwrap().finalize_with(cfg.compute.as_ref());
+    drop(phase2_span);
     let phase2 = PhaseStats {
         seconds: t2.elapsed().as_secs_f64(),
         batches: p2_batches,
         examples: n as u64,
     };
+    crate::util::metrics::global()
+        .histogram("pipeline.phase2.ns")
+        .record(t2.elapsed().as_nanos() as u64);
 
     // --- validation consensus for GLISTER ---
     let val_consensus = if method == Method::Glister && cfg.val_fraction > 0.0 {
@@ -370,6 +386,7 @@ pub fn run_selection(
 
     // --- selection rule ---
     let t3 = Instant::now();
+    let select_span = crate::util::trace::span("pipeline.select");
     let inputs = SelectionInputs {
         scores: &scores,
         val_consensus,
@@ -378,7 +395,11 @@ pub fn run_selection(
         compute: cfg.compute.as_ref(),
     };
     let (indices, weights) = select_weighted(method, &inputs, k);
+    drop(select_span);
     let select_seconds = t3.elapsed().as_secs_f64();
+    crate::util::metrics::global()
+        .histogram("pipeline.select.ns")
+        .record(t3.elapsed().as_nanos() as u64);
 
     Ok(SelectionOutcome {
         indices,

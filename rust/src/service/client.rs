@@ -25,12 +25,14 @@
 //! echoed request opcode) are never retryable.
 
 use super::protocol::{
-    encode_ingest_batch, encode_score, op, read_frame, write_frame, FrozenSketch, Request,
-    Response,
+    encode_ingest_batch, encode_score, op, read_frame, write_frame_traced, FrozenSketch,
+    Request, Response,
 };
 use crate::pipeline::ScoreBlock;
 use crate::sketch::FdSketch;
 use crate::tensor::Matrix;
+use crate::util::metrics::HistogramStats;
+use crate::util::trace::{self, SpanRecord};
 use std::net::TcpStream;
 
 /// Whether an error message is the server's retryable connection-shed
@@ -109,9 +111,13 @@ impl ServiceClient {
         self.roundtrip(request.opcode(), &payload)
     }
 
-    /// Write one pre-encoded request payload and read its response.
+    /// Write one pre-encoded request payload and read its response. When a
+    /// trace is active on this thread (see `util::trace`), a `client.<op>`
+    /// span wraps the round trip and its context rides the frame's trace
+    /// extension, so the server's `serve.<op>` span becomes its child.
     fn roundtrip(&mut self, opcode: u8, payload: &[u8]) -> Result<Response, String> {
-        write_frame(&mut self.stream, opcode, 0, payload)?;
+        let _span = trace::span(&format!("client.{}", op::name(opcode)));
+        write_frame_traced(&mut self.stream, opcode, 0, payload, trace::current())?;
         let frame = read_frame(&mut self.stream)?
             .ok_or_else(|| "server closed the connection".to_string())?;
         let response = Response::decode(&frame.payload)?;
@@ -260,6 +266,44 @@ impl ServiceClient {
         })? {
             Response::Stats { pairs } => Ok(pairs),
             other => Err(format!("unexpected stats response {other:?}")),
+        }
+    }
+
+    /// Server-side metrics snapshot: counters, gauges, and histogram
+    /// summaries (p50/p99/max/mean) whose names start with `prefix`
+    /// (empty prefix = everything). See docs/OBSERVABILITY.md for the
+    /// metric catalog.
+    #[allow(clippy::type_complexity)]
+    pub fn metrics_snapshot(
+        &mut self,
+        prefix: &str,
+    ) -> Result<
+        (
+            Vec<(String, u64)>,
+            Vec<(String, u64)>,
+            Vec<(String, HistogramStats)>,
+        ),
+        String,
+    > {
+        match self.expect(&Request::MetricsSnapshot {
+            prefix: prefix.to_string(),
+        })? {
+            Response::Metrics {
+                counters,
+                gauges,
+                hists,
+            } => Ok((counters, gauges, hists)),
+            other => Err(format!("unexpected metrics response {other:?}")),
+        }
+    }
+
+    /// Drain the server's recorded trace spans (the server-side half of
+    /// `sage trace export` — merge with local `trace::collect()` and feed
+    /// `trace::chrome_trace_json` for a Chrome-loadable timeline).
+    pub fn trace_export(&mut self) -> Result<Vec<SpanRecord>, String> {
+        match self.expect(&Request::TraceExport)? {
+            Response::Trace { spans } => Ok(spans),
+            other => Err(format!("unexpected trace response {other:?}")),
         }
     }
 

@@ -1,0 +1,130 @@
+//! Minimal HTTP/1.0 metrics exposition endpoint for `sage serve
+//! --metrics-addr HOST:PORT` — just enough HTTP for a Prometheus scraper
+//! or `curl`, from scratch like the rest of the stack (no hyper offline).
+//!
+//! Routes:
+//!
+//! - `GET /metrics` — the process metrics registry in Prometheus text
+//!   format 0.0.4 (`util::metrics::Registry::render_prometheus`): counters,
+//!   gauges, and histograms with cumulative `_bucket`/`_sum`/`_count`
+//!   series derived from the log-linear bucket layout.
+//! - `GET /healthz` — `ok` while the server is up (liveness probe).
+//!
+//! Everything else is a 404; non-GET methods get a 405. One short-lived
+//! connection per request (`Connection: close` semantics), handled inline
+//! on the acceptor thread — a scrape is tiny and the endpoint is not on
+//! the data path.
+
+use crate::util::metrics;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Accept loop for the metrics endpoint. Mirrors the main server's
+/// shutdown protocol: blocks in `accept`, re-checks `stop` per connection,
+/// and is woken by a throwaway connection (see `ServerHandle`).
+pub fn spawn(listener: TcpListener, stop: Arc<AtomicBool>) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        for incoming in listener.incoming() {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match incoming {
+                Ok(stream) => handle(stream),
+                Err(e) => crate::log_warn!("metrics accept failed: {e}"),
+            }
+        }
+    })
+}
+
+fn handle(mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    // One read is enough for any real scraper's GET; we only need the
+    // request line and tolerate unread trailing headers.
+    let mut buf = [0u8; 4096];
+    let n = match stream.read(&mut buf) {
+        Ok(n) if n > 0 => n,
+        _ => return,
+    };
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, content_type, body) = route(method, path);
+    let response = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.flush();
+}
+
+fn route(method: &str, path: &str) -> (&'static str, &'static str, String) {
+    if method != "GET" {
+        return (
+            "405 Method Not Allowed",
+            "text/plain; charset=utf-8",
+            "method not allowed\n".to_string(),
+        );
+    }
+    match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            metrics::global().render_prometheus(),
+        ),
+        "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        _ => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found\n".to_string(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: std::net::SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(format!("GET {path} HTTP/1.0\r\nHost: x\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_healthz_and_404() {
+        metrics::global().counter("service.test.http_exposition").inc();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let join = spawn(listener, stop.clone());
+
+        let health = get(addr, "/healthz");
+        assert!(health.starts_with("HTTP/1.0 200 OK"), "{health}");
+        assert!(health.ends_with("ok\n"), "{health}");
+
+        let scrape = get(addr, "/metrics");
+        assert!(scrape.starts_with("HTTP/1.0 200 OK"), "{scrape}");
+        assert!(scrape.contains("text/plain; version=0.0.4"), "{scrape}");
+        assert!(
+            scrape.contains("# TYPE service_test_http_exposition counter"),
+            "{scrape}"
+        );
+
+        let missing = get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.0 404"), "{missing}");
+
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(addr); // wake the acceptor
+        join.join().unwrap();
+    }
+}

@@ -24,9 +24,18 @@
 //! * [`server`] — TCP accept loop, thread-per-connection on
 //!   `util::threadpool`, graceful load-shedding when the pool is
 //!   saturated (one `connection rejected` error frame, then close).
+//! * [`metrics_http`] — minimal HTTP/1.0 Prometheus exposition endpoint
+//!   (`sage serve --metrics-addr`): `GET /metrics` + `GET /healthz`. The
+//!   metric catalog lives in docs/OBSERVABILITY.md.
 //! * [`client`] — blocking client used by the CLI, the example, and tests,
 //!   plus the documented retry/backoff helper
 //!   [`client::request_with_retry`].
+//!
+//! Observability: every request frame may carry a trace extension
+//! (`util::trace` context, docs/PROTOCOL.md §7); the server adopts it as a
+//! `serve.<op>` → `registry.<op>` → `kernel.<op>` span hierarchy, echoes
+//! it on the response (error frames included), and serves recorded spans
+//! back through the TraceExport op (`sage trace export`).
 //!
 //! Exactness contract: a session fed shard-by-shard through
 //! `pipeline::phase1_gradient_stream` / `phase2_score_stream` (one producer
@@ -47,6 +56,7 @@
 //!     threads: 2,
 //!     compute_workers: 1, // serial kernels (any value selects identically)
 //!     registry: RegistryConfig::default(),
+//!     ..ServerConfig::default()
 //! })
 //! .unwrap();
 //! let addr = server.local_addr().to_string();
@@ -66,6 +76,7 @@
 
 pub mod checkpoint;
 pub mod client;
+pub mod metrics_http;
 pub mod protocol;
 pub mod registry;
 pub mod server;

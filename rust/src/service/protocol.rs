@@ -9,21 +9,33 @@
 //! magic    4B   "SGW1"
 //! version  u16
 //! opcode   u8    (response frames echo the request opcode)
-//! flags    u8    (reserved, 0)
+//! flags    u8    (bit 0 = trace extension present; other bits reserved, 0)
 //! status   u16   (0 = ok; requests always 0)
 //! len      u32   payload byte length
+//! [trace   16B]  when flags bit 0 is set: trace_id u64 + span_id u64
 //! payload  len bytes
-//! fnv64    u64   checksum of header + payload
+//! fnv64    u64   checksum of header + extensions + payload
 //! ```
+//!
+//! The trace extension (see `util::trace` and docs/PROTOCOL.md §7) is a
+//! versioned frame extension: frames without it are byte-identical to the
+//! pre-extension wire format, so it is a payload-compatible addition under
+//! the §7 versioning policy. Servers echo a request's trace context on the
+//! response frame — including error frames — so client→server causality
+//! survives failures. Unknown flag bits are rejected (torn stream), which
+//! is what makes future extensions *versioned* rather than silent.
 //!
 //! Payloads are flat field sequences written by [`PayloadWriter`] and read
 //! back by [`PayloadReader`]; strings are `u32` length + UTF-8, slices are
 //! `u32`/`u64` element count + raw little-endian values. [`Request`] and
 //! [`Response`] give the typed op surface: CreateSession / IngestBatch /
-//! MergeSketch / Freeze / Score / TopK / Checkpoint / Stats / CloseSession.
+//! MergeSketch / Freeze / Score / TopK / Checkpoint / Stats / CloseSession
+//! / MetricsSnapshot / TraceExport.
 
 use crate::sketch::SketchState;
 use crate::tensor::Matrix;
+use crate::util::metrics::HistogramStats;
+use crate::util::trace::{SpanRecord, TraceCtx};
 use std::io::{Read, Write};
 
 pub const MAGIC: &[u8; 4] = b"SGW1";
@@ -32,6 +44,10 @@ pub const VERSION: u16 = 1;
 /// unbounded allocation on a corrupt or hostile length field.
 pub const MAX_PAYLOAD: usize = 256 << 20;
 const HEADER_LEN: usize = 14;
+/// Flags bit 0: a 16-byte trace extension (trace_id + span_id, both u64 LE)
+/// sits between the header and the payload.
+pub const FLAG_TRACE: u8 = 0x01;
+const TRACE_EXT_LEN: usize = 16;
 
 /// FNV-1a 64-bit, shared by framing and session checkpoints.
 pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
@@ -53,17 +69,38 @@ pub struct Frame {
     pub opcode: u8,
     pub status: u16,
     pub payload: Vec<u8>,
+    /// Trace context carried in the frame's trace extension, if any.
+    pub trace: Option<TraceCtx>,
 }
 
 /// Serialize a frame into one contiguous buffer (header + payload + fnv64).
+/// Emits the pre-extension wire format byte for byte (flags = 0).
 pub fn encode_frame(opcode: u8, status: u16, payload: &[u8]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 8);
+    encode_frame_traced(opcode, status, payload, None)
+}
+
+/// [`encode_frame`] with an optional trace extension. `trace: None` is
+/// byte-identical to the historical format; `Some` sets flags bit 0 and
+/// inserts the 16-byte extension between header and payload (covered by
+/// the checksum; the `len` field still counts payload bytes only).
+pub fn encode_frame_traced(
+    opcode: u8,
+    status: u16,
+    payload: &[u8],
+    trace: Option<TraceCtx>,
+) -> Vec<u8> {
+    let ext = if trace.is_some() { TRACE_EXT_LEN } else { 0 };
+    let mut out = Vec::with_capacity(HEADER_LEN + ext + payload.len() + 8);
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.push(opcode);
-    out.push(0); // flags
+    out.push(if trace.is_some() { FLAG_TRACE } else { 0 });
     out.extend_from_slice(&status.to_le_bytes());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    if let Some(t) = trace {
+        out.extend_from_slice(&t.trace_id.to_le_bytes());
+        out.extend_from_slice(&t.span_id.to_le_bytes());
+    }
     out.extend_from_slice(payload);
     let sum = fnv64(&out);
     out.extend_from_slice(&sum.to_le_bytes());
@@ -82,6 +119,21 @@ pub fn write_frame(
     status: u16,
     payload: &[u8],
 ) -> Result<(), String> {
+    write_frame_traced(w, opcode, status, payload, None)
+}
+
+/// [`write_frame`] with an optional trace extension (see
+/// [`encode_frame_traced`]).
+///
+/// # Errors
+/// Over-cap payloads and I/O failures on write/flush.
+pub fn write_frame_traced(
+    w: &mut impl Write,
+    opcode: u8,
+    status: u16,
+    payload: &[u8],
+    trace: Option<TraceCtx>,
+) -> Result<(), String> {
     if payload.len() > MAX_PAYLOAD {
         return Err(format!(
             "frame payload {} bytes exceeds the {MAX_PAYLOAD}-byte wire cap; \
@@ -89,7 +141,7 @@ pub fn write_frame(
             payload.len()
         ));
     }
-    let buf = encode_frame(opcode, status, payload);
+    let buf = encode_frame_traced(opcode, status, payload, trace);
     w.write_all(&buf).map_err(|e| format!("frame write: {e}"))?;
     w.flush().map_err(|e| format!("frame flush: {e}"))
 }
@@ -137,11 +189,27 @@ pub fn read_frame_event(r: &mut impl Read) -> Result<ReadEvent, String> {
         return Err(format!("frame: version {version} != {VERSION}"));
     }
     let opcode = header[6];
+    let flags = header[7];
+    if flags & !FLAG_TRACE != 0 {
+        return Err(format!("frame: unknown flags {flags:#04x}"));
+    }
     let status = u16::from_le_bytes([header[8], header[9]]);
     let len = u32::from_le_bytes([header[10], header[11], header[12], header[13]]) as usize;
     if len > MAX_PAYLOAD {
         return Err(format!("frame: payload {len} exceeds cap {MAX_PAYLOAD}"));
     }
+    let mut ext = [0u8; TRACE_EXT_LEN];
+    let trace = if flags & FLAG_TRACE != 0 {
+        if !matches!(fill(r, &mut ext, false)?, Fill::Full) {
+            return Err("frame: truncated trace extension".into());
+        }
+        Some(TraceCtx {
+            trace_id: u64::from_le_bytes(ext[0..8].try_into().unwrap()),
+            span_id: u64::from_le_bytes(ext[8..16].try_into().unwrap()),
+        })
+    } else {
+        None
+    };
     let mut payload = vec![0u8; len];
     if !matches!(fill(r, &mut payload, false)?, Fill::Full) {
         return Err("frame: truncated payload".into());
@@ -151,8 +219,11 @@ pub fn read_frame_event(r: &mut impl Read) -> Result<ReadEvent, String> {
         return Err("frame: truncated checksum".into());
     }
     let stored = u64::from_le_bytes(sum_bytes);
-    let mut check = Vec::with_capacity(HEADER_LEN + len);
+    let mut check = Vec::with_capacity(HEADER_LEN + TRACE_EXT_LEN + len);
     check.extend_from_slice(&header);
+    if trace.is_some() {
+        check.extend_from_slice(&ext);
+    }
     check.extend_from_slice(&payload);
     if fnv64(&check) != stored {
         return Err("frame: checksum mismatch (corrupt frame)".into());
@@ -161,6 +232,7 @@ pub fn read_frame_event(r: &mut impl Read) -> Result<ReadEvent, String> {
         opcode,
         status,
         payload,
+        trace,
     }))
 }
 
@@ -424,6 +496,28 @@ pub mod op {
     pub const CHECKPOINT: u8 = 7;
     pub const STATS: u8 = 8;
     pub const CLOSE_SESSION: u8 = 9;
+    pub const METRICS_SNAPSHOT: u8 = 10;
+    pub const TRACE_EXPORT: u8 = 11;
+
+    /// Stable op name for logs, per-op latency metrics, and trace span
+    /// names (`serve.<name>`). A bounded set — safe to embed in interned
+    /// metric names.
+    pub fn name(opcode: u8) -> &'static str {
+        match opcode {
+            CREATE_SESSION => "create_session",
+            INGEST_BATCH => "ingest_batch",
+            MERGE_SKETCH => "merge_sketch",
+            FREEZE => "freeze",
+            SCORE => "score",
+            TOP_K => "top_k",
+            CHECKPOINT => "checkpoint",
+            STATS => "stats",
+            CLOSE_SESSION => "close_session",
+            METRICS_SNAPSHOT => "metrics_snapshot",
+            TRACE_EXPORT => "trace_export",
+            _ => "unknown",
+        }
+    }
 }
 
 /// One Phase-II scoring batch on the wire (mirrors
@@ -484,6 +578,12 @@ pub enum Request {
     Stats { session: String },
     /// Tear the session down and release its admission budget.
     CloseSession { session: String },
+    /// Histogram-grade metrics: every counter, gauge, and histogram summary
+    /// (p50/p99/max/mean) in the server's registry whose name starts with
+    /// `prefix` (empty = everything).
+    MetricsSnapshot { prefix: String },
+    /// Snapshot the server's span rings (for `sage trace export`).
+    TraceExport,
 }
 
 /// Borrow-encoding fast path for the hot Phase-I op: serialize an
@@ -531,6 +631,8 @@ impl Request {
             Request::Checkpoint { .. } => op::CHECKPOINT,
             Request::Stats { .. } => op::STATS,
             Request::CloseSession { .. } => op::CLOSE_SESSION,
+            Request::MetricsSnapshot { .. } => op::METRICS_SNAPSHOT,
+            Request::TraceExport => op::TRACE_EXPORT,
         }
     }
 
@@ -601,6 +703,8 @@ impl Request {
             Request::Checkpoint { session } => w.put_str(session),
             Request::Stats { session } => w.put_str(session),
             Request::CloseSession { session } => w.put_str(session),
+            Request::MetricsSnapshot { prefix } => w.put_str(prefix),
+            Request::TraceExport => {}
         }
         w.into_bytes()
     }
@@ -665,6 +769,8 @@ impl Request {
             op::CHECKPOINT => Request::Checkpoint { session: r.str()? },
             op::STATS => Request::Stats { session: r.str()? },
             op::CLOSE_SESSION => Request::CloseSession { session: r.str()? },
+            op::METRICS_SNAPSHOT => Request::MetricsSnapshot { prefix: r.str()? },
+            op::TRACE_EXPORT => Request::TraceExport,
             other => return Err(format!("unknown opcode {other}")),
         };
         r.finish()?;
@@ -695,6 +801,15 @@ pub enum Response {
     Selected { indices: Vec<u64>, weights: Vec<f32> },
     Stats { pairs: Vec<(String, u64)> },
     Checkpointed { path: String },
+    /// Full registry snapshot: counters + gauges as name/value pairs,
+    /// histograms as scalar summaries (the MetricsSnapshot reply).
+    Metrics {
+        counters: Vec<(String, u64)>,
+        gauges: Vec<(String, u64)>,
+        hists: Vec<(String, HistogramStats)>,
+    },
+    /// Recorded spans from the server's trace rings (the TraceExport reply).
+    Trace { spans: Vec<SpanRecord> },
 }
 
 const RESP_OK: u8 = 0;
@@ -704,6 +819,27 @@ const RESP_FROZEN: u8 = 3;
 const RESP_SELECTED: u8 = 4;
 const RESP_STATS: u8 = 5;
 const RESP_CHECKPOINTED: u8 = 6;
+const RESP_METRICS: u8 = 7;
+const RESP_TRACE: u8 = 8;
+
+fn put_pairs(w: &mut PayloadWriter, pairs: &[(String, u64)]) {
+    w.put_u32(pairs.len() as u32);
+    for (name, v) in pairs {
+        w.put_str(name);
+        w.put_u64(*v);
+    }
+}
+
+fn get_pairs(r: &mut PayloadReader) -> Result<Vec<(String, u64)>, String> {
+    let n = r.u32()? as usize;
+    let mut pairs = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let name = r.str()?;
+        let v = r.u64()?;
+        pairs.push((name, v));
+    }
+    Ok(pairs)
+}
 
 impl Response {
     /// Frame status word: 0 ok, 1 application error.
@@ -741,15 +877,44 @@ impl Response {
             }
             Response::Stats { pairs } => {
                 w.put_u8(RESP_STATS);
-                w.put_u32(pairs.len() as u32);
-                for (name, v) in pairs {
-                    w.put_str(name);
-                    w.put_u64(*v);
-                }
+                put_pairs(&mut w, pairs);
             }
             Response::Checkpointed { path } => {
                 w.put_u8(RESP_CHECKPOINTED);
                 w.put_str(path);
+            }
+            Response::Metrics {
+                counters,
+                gauges,
+                hists,
+            } => {
+                w.put_u8(RESP_METRICS);
+                put_pairs(&mut w, counters);
+                put_pairs(&mut w, gauges);
+                w.put_u32(hists.len() as u32);
+                for (name, h) in hists {
+                    w.put_str(name);
+                    w.put_u64(h.count);
+                    w.put_u64(h.sum);
+                    w.put_u64(h.max);
+                    w.put_f64(h.mean);
+                    w.put_u64(h.p50);
+                    w.put_u64(h.p99);
+                }
+            }
+            Response::Trace { spans } => {
+                w.put_u8(RESP_TRACE);
+                w.put_u32(spans.len() as u32);
+                for s in spans {
+                    w.put_str(&s.name);
+                    w.put_u64(s.trace_id);
+                    w.put_u64(s.span_id);
+                    w.put_u64(s.parent_id);
+                    w.put_u64(s.start_unix_ns);
+                    w.put_u64(s.dur_ns);
+                    w.put_u32(s.pid);
+                    w.put_u32(s.tid);
+                }
             }
         }
         w.into_bytes()
@@ -778,17 +943,52 @@ impl Response {
                 indices: r.u64_slice()?,
                 weights: r.f32_slice()?,
             },
-            RESP_STATS => {
+            RESP_STATS => Response::Stats {
+                pairs: get_pairs(&mut r)?,
+            },
+            RESP_CHECKPOINTED => Response::Checkpointed { path: r.str()? },
+            RESP_METRICS => {
+                let counters = get_pairs(&mut r)?;
+                let gauges = get_pairs(&mut r)?;
                 let n = r.u32()? as usize;
-                let mut pairs = Vec::with_capacity(n.min(4096));
+                let mut hists = Vec::with_capacity(n.min(4096));
                 for _ in 0..n {
                     let name = r.str()?;
-                    let v = r.u64()?;
-                    pairs.push((name, v));
+                    hists.push((
+                        name,
+                        HistogramStats {
+                            count: r.u64()?,
+                            sum: r.u64()?,
+                            max: r.u64()?,
+                            mean: r.f64()?,
+                            p50: r.u64()?,
+                            p99: r.u64()?,
+                        },
+                    ));
                 }
-                Response::Stats { pairs }
+                Response::Metrics {
+                    counters,
+                    gauges,
+                    hists,
+                }
             }
-            RESP_CHECKPOINTED => Response::Checkpointed { path: r.str()? },
+            RESP_TRACE => {
+                let n = r.u32()? as usize;
+                let mut spans = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    spans.push(SpanRecord {
+                        name: r.str()?,
+                        trace_id: r.u64()?,
+                        span_id: r.u64()?,
+                        parent_id: r.u64()?,
+                        start_unix_ns: r.u64()?,
+                        dur_ns: r.u64()?,
+                        pid: r.u32()?,
+                        tid: r.u32()?,
+                    });
+                }
+                Response::Trace { spans }
+            }
             other => return Err(format!("unknown response tag {other}")),
         };
         r.finish()?;
@@ -865,6 +1065,10 @@ mod tests {
         round_trip_request(Request::CloseSession {
             session: "s1".into(),
         });
+        round_trip_request(Request::MetricsSnapshot {
+            prefix: "service.".into(),
+        });
+        round_trip_request(Request::TraceExport);
     }
 
     #[test]
@@ -892,6 +1096,33 @@ mod tests {
             Response::Checkpointed {
                 path: "/tmp/x.sagesess".into(),
             },
+            Response::Metrics {
+                counters: vec![("service.server.requests".into(), 12)],
+                gauges: vec![("service.ingest.queue_depth".into(), 3)],
+                hists: vec![(
+                    "service.server.handle.ns".into(),
+                    HistogramStats {
+                        count: 12,
+                        sum: 24_000,
+                        max: 9_000,
+                        mean: 2_000.0,
+                        p50: 1_024,
+                        p99: 8_192,
+                    },
+                )],
+            },
+            Response::Trace {
+                spans: vec![SpanRecord {
+                    name: "serve.freeze".into(),
+                    trace_id: 0xaa,
+                    span_id: 0xbb,
+                    parent_id: 0x11,
+                    start_unix_ns: 1_000,
+                    dur_ns: 250,
+                    pid: 7,
+                    tid: 3,
+                }],
+            },
         ];
         for resp in responses {
             let payload = resp.encode();
@@ -899,6 +1130,60 @@ mod tests {
             assert_eq!(back, resp);
             assert_eq!(resp.status() == 0, !matches!(resp, Response::Error { .. }));
         }
+    }
+
+    #[test]
+    fn trace_extension_round_trips_and_is_checksummed() {
+        let payload = Request::Freeze {
+            session: "abc".into(),
+        }
+        .encode();
+        let ctx = TraceCtx {
+            trace_id: 0xdead_beef_cafe_f00d,
+            span_id: 0x0123_4567_89ab_cdef,
+        };
+        let frame = encode_frame_traced(op::FREEZE, 0, &payload, Some(ctx));
+        let mut cursor = &frame[..];
+        let back = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(back.trace, Some(ctx));
+        assert_eq!(back.opcode, op::FREEZE);
+        assert_eq!(back.payload, payload);
+        // Flip a bit inside the extension: the checksum must catch it.
+        let mut torn = frame.clone();
+        torn[HEADER_LEN + 3] ^= 0x40;
+        let mut cursor = &torn[..];
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn untraced_encoding_is_byte_identical_to_legacy() {
+        // The trace extension must be strictly additive: a frame without it
+        // is the historical wire format, which the documented example frames
+        // in docs/PROTOCOL.md pin byte for byte.
+        let payload = Request::Freeze {
+            session: "abc".into(),
+        }
+        .encode();
+        assert_eq!(
+            encode_frame(op::FREEZE, 0, &payload),
+            encode_frame_traced(op::FREEZE, 0, &payload, None)
+        );
+        let frame = encode_frame(op::FREEZE, 0, &payload);
+        assert_eq!(frame[7], 0, "flags byte must stay 0 without extension");
+        let mut cursor = &frame[..];
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap().trace, None);
+    }
+
+    #[test]
+    fn unknown_flag_bits_rejected() {
+        let payload = Request::Freeze { session: "x".into() }.encode();
+        let mut frame = encode_frame(op::FREEZE, 0, &payload);
+        frame[7] = 0x02; // reserved bit; fix the checksum so only flags differ
+        let body_len = frame.len() - 8;
+        let sum = fnv64(&frame[..body_len]);
+        frame[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let mut cursor = &frame[..];
+        assert!(read_frame(&mut cursor).unwrap_err().contains("flags"));
     }
 
     #[test]

@@ -553,6 +553,12 @@ impl Session {
         let n = rows.rows() as u64;
         tx.send((shard, rows))
             .map_err(|_| format!("session '{}' was frozen during ingest", self.name))?;
+        // Post-send depth: how far behind the drain worker is running. A
+        // gauge (last-writer-wins) plus a histogram so /metrics exposes
+        // both the instantaneous and the distributional view.
+        let depth = tx.len() as u64;
+        metrics().gauge("service.ingest.queue_depth").set(depth);
+        metrics().histogram("service.ingest.queue_depth.dist").record(depth);
         self.c_rows.add(n);
         self.c_batches.inc();
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
@@ -682,6 +688,7 @@ impl Session {
         match p.scorers[shard].as_mut() {
             Some(scorer) => {
                 if !self.budgets.scorer.reserve(delta) {
+                    metrics().counter("service.admission.rejected.scorer").inc();
                     return Err(scorer_admission_error(
                         &self.name,
                         delta,
@@ -923,6 +930,9 @@ impl Session {
         p.scores = None;
         p.spilled = Some(path);
         metrics().counter("service.registry.spills").inc();
+        metrics()
+            .counter("service.registry.spill_bytes")
+            .add(resident as u64);
         Ok(resident)
     }
 
@@ -952,6 +962,7 @@ impl Session {
         }
         let bytes = checkpoint_scorer_bytes(&ck, self.ell, self.shards);
         if !self.budgets.scorer.reserve(bytes) {
+            metrics().counter("service.admission.rejected.scorer").inc();
             return Err(scorer_admission_error(&self.name, bytes, &self.budgets.scorer));
         }
         let (scorers, scores) = match restore_phase2(&ck, self.ell, self.shards) {
@@ -968,6 +979,9 @@ impl Session {
             let _ = std::fs::remove_file(&path);
         }
         metrics().counter("service.registry.unspills").inc();
+        metrics()
+            .counter("service.registry.unspill_bytes")
+            .add(bytes as u64);
         Ok(())
     }
 
@@ -1173,6 +1187,7 @@ impl SessionRegistry {
         let new_bytes = session_bytes(ell, d, shards)?;
         let scorer_baseline = baseline_scorer_bytes(ell, shards);
         if !self.budgets.slots.reserve(1) {
+            metrics().counter("service.admission.rejected.slots").inc();
             return Err(format!(
                 "admission rejected: {} sessions resident (max {})",
                 self.budgets.slots.used(),
@@ -1181,6 +1196,7 @@ impl SessionRegistry {
         }
         if !self.budgets.sketch.reserve(new_bytes) {
             self.budgets.slots.release(1);
+            metrics().counter("service.admission.rejected.sketch").inc();
             return Err(format!(
                 "admission rejected: {new_bytes} sketch bytes would exceed budget \
                  ({}/{} in use)",
@@ -1191,6 +1207,7 @@ impl SessionRegistry {
         if !self.budgets.scorer.reserve(scorer_baseline) {
             self.budgets.sketch.release(new_bytes);
             self.budgets.slots.release(1);
+            metrics().counter("service.admission.rejected.scorer").inc();
             return Err(format!(
                 "admission rejected: session '{name}' needs {scorer_baseline} scorer \
                  bytes, {}/{} in use (raise --max-scorer-mb)",

@@ -18,15 +18,21 @@
 //! `service.server.rejected_connections` counter makes shedding observable
 //! through the Stats op.
 
-use super::protocol::{read_frame_event, write_frame, ReadEvent, Request, Response};
+use super::metrics_http;
+use super::protocol::{
+    op, read_frame_event, write_frame, write_frame_traced, ReadEvent, Request, Response,
+};
 use super::registry::{RegistryConfig, SessionRegistry};
 use crate::config::Method;
 use crate::util::metrics::global as metrics;
+use crate::util::metrics::Histogram;
 use crate::util::threadpool::ThreadPool;
+use crate::util::trace;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Server knobs.
 #[derive(Clone, Debug)]
@@ -42,6 +48,13 @@ pub struct ServerConfig {
     /// session. Results are bit-identical across all settings, so this
     /// never perturbs the served ≡ offline exactness guarantee.
     pub compute_workers: usize,
+    /// Bind address for the Prometheus `/metrics` + `/healthz` HTTP
+    /// endpoint (`None` = no exposition endpoint).
+    pub metrics_addr: Option<String>,
+    /// Requests whose registry dispatch takes at least this many
+    /// milliseconds get a WARN log line carrying the op name and trace ID
+    /// (0 = disabled).
+    pub slow_op_ms: u64,
     pub registry: RegistryConfig,
 }
 
@@ -51,6 +64,8 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7009".to_string(),
             threads: 16,
             compute_workers: 1,
+            metrics_addr: None,
+            slow_op_ms: 0,
             registry: RegistryConfig::default(),
         }
     }
@@ -59,8 +74,10 @@ impl Default for ServerConfig {
 /// A bound (not yet serving) server.
 pub struct Server {
     listener: TcpListener,
+    metrics_listener: Option<TcpListener>,
     registry: Arc<SessionRegistry>,
     threads: usize,
+    slow_op_ms: u64,
 }
 
 impl Server {
@@ -69,6 +86,12 @@ impl Server {
     pub fn bind(cfg: &ServerConfig) -> Result<Server, String> {
         let listener =
             TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let metrics_listener = match &cfg.metrics_addr {
+            Some(addr) => Some(
+                TcpListener::bind(addr).map_err(|e| format!("bind metrics {addr}: {e}"))?,
+            ),
+            None => None,
+        };
         // One kernel backend for the whole server: every session's shrink,
         // finalize, and selection rules run on this shared pool.
         let compute = crate::tensor::compute_backend(cfg.compute_workers);
@@ -81,13 +104,21 @@ impl Server {
         }
         Ok(Server {
             listener,
+            metrics_listener,
             registry,
             threads: cfg.threads.max(1),
+            slow_op_ms: cfg.slow_op_ms,
         })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
         self.listener.local_addr().expect("listener has local addr")
+    }
+
+    /// Bound address of the `/metrics` endpoint, when configured (port 0
+    /// in `metrics_addr` resolves here, like [`Server::local_addr`]).
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_listener.as_ref().and_then(|l| l.local_addr().ok())
     }
 
     pub fn registry(&self) -> Arc<SessionRegistry> {
@@ -105,6 +136,13 @@ impl Server {
             self.local_addr(),
             self.threads
         );
+        let metrics_join = self.metrics_listener.map(|listener| {
+            if let Ok(addr) = listener.local_addr() {
+                crate::log_info!("metrics exposition on http://{addr}/metrics");
+            }
+            metrics_http::spawn(listener, stop.clone())
+        });
+        let slow_op_ms = self.slow_op_ms;
         for incoming in self.listener.incoming() {
             if stop.load(Ordering::Relaxed) {
                 break;
@@ -121,7 +159,7 @@ impl Server {
             let conn_stop = stop.clone();
             let reject_stream = stream.try_clone().ok();
             let submitted =
-                pool.try_execute(move || handle_connection(stream, registry, conn_stop));
+                pool.try_execute(move || handle_connection(stream, registry, conn_stop, slow_op_ms));
             if let Err(reason) = submitted {
                 // Graceful rejection: tell the peer and keep the acceptor
                 // alive and non-blocking. The operator sees the
@@ -136,6 +174,9 @@ impl Server {
                 }
             }
         }
+        if let Some(join) = metrics_join {
+            let _ = join.join();
+        }
         Ok(())
     }
 
@@ -143,6 +184,7 @@ impl Server {
     /// server and exposes the bound address (tests, examples, embedding).
     pub fn spawn(self) -> ServerHandle {
         let addr = self.local_addr();
+        let metrics_addr = self.metrics_addr();
         let registry = self.registry();
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
@@ -153,6 +195,7 @@ impl Server {
         });
         ServerHandle {
             addr,
+            metrics_addr,
             registry,
             stop,
             join: Some(join),
@@ -163,6 +206,7 @@ impl Server {
 /// Handle to a background server (see [`Server::spawn`]).
 pub struct ServerHandle {
     addr: SocketAddr,
+    metrics_addr: Option<SocketAddr>,
     registry: Arc<SessionRegistry>,
     stop: Arc<AtomicBool>,
     join: Option<JoinHandle<()>>,
@@ -171,6 +215,11 @@ pub struct ServerHandle {
 impl ServerHandle {
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Bound `/metrics` endpoint address, when configured.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
     }
 
     pub fn registry(&self) -> Arc<SessionRegistry> {
@@ -188,8 +237,12 @@ impl ServerHandle {
             return;
         }
         self.stop.store(true, Ordering::Relaxed);
-        // Wake the blocking accept with a throwaway connection.
+        // Wake the blocking accepts with throwaway connections (the metrics
+        // acceptor runs its own loop on the same stop flag).
         let _ = TcpStream::connect(self.addr);
+        if let Some(m) = self.metrics_addr {
+            let _ = TcpStream::connect(m);
+        }
         if let Some(join) = self.join.take() {
             let _ = join.join();
         }
@@ -202,15 +255,51 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Per-op server latency histograms, interned once (the op set is fixed,
+/// so the name set is bounded). `decode`/`handle`/`encode`/`write` split
+/// one request's wall clock into its four server-side stages; `per_op` is
+/// the handle stage broken out by opcode.
+struct ServerHists {
+    decode: &'static Histogram,
+    handle: &'static Histogram,
+    encode: &'static Histogram,
+    write: &'static Histogram,
+    per_op: Vec<&'static Histogram>,
+}
+
+fn server_hists() -> &'static ServerHists {
+    static HISTS: OnceLock<ServerHists> = OnceLock::new();
+    HISTS.get_or_init(|| {
+        let reg = metrics();
+        ServerHists {
+            decode: reg.histogram("service.server.decode.ns"),
+            handle: reg.histogram("service.server.handle.ns"),
+            encode: reg.histogram("service.server.encode.ns"),
+            write: reg.histogram("service.server.write.ns"),
+            per_op: (0..=op::TRACE_EXPORT)
+                .map(|code| {
+                    reg.histogram(&format!("service.server.op.{}.ns", op::name(code)))
+                })
+                .collect(),
+        }
+    })
+}
+
 /// One connection: request/response frames until EOF, a framing error, or
 /// server shutdown (polled between frames via the socket read timeout).
-fn handle_connection(mut stream: TcpStream, registry: Arc<SessionRegistry>, stop: Arc<AtomicBool>) {
+fn handle_connection(
+    mut stream: TcpStream,
+    registry: Arc<SessionRegistry>,
+    stop: Arc<AtomicBool>,
+    slow_op_ms: u64,
+) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "?".to_string());
+    let hists = server_hists();
     loop {
         if stop.load(Ordering::Relaxed) {
             break;
@@ -226,17 +315,62 @@ fn handle_connection(mut stream: TcpStream, registry: Arc<SessionRegistry>, stop
         };
         metrics().counter("service.server.requests").inc();
         let opcode = frame.opcode;
-        let response = match Request::decode(opcode, &frame.payload) {
-            Ok(request) => dispatch(&registry, request),
+        // A traced frame makes the client's span the parent of one
+        // server-side root span covering decode → handle → encode → write.
+        let _request_span = frame
+            .trace
+            .map(|ctx| trace::adopt(&format!("serve.{}", op::name(opcode)), ctx));
+
+        let t = Instant::now();
+        let decoded = {
+            let _s = trace::span("serve.decode");
+            Request::decode(opcode, &frame.payload)
+        };
+        hists.decode.record(t.elapsed().as_nanos() as u64);
+
+        let t = Instant::now();
+        let response = match decoded {
+            Ok(request) => {
+                let _s = trace::span("serve.handle");
+                dispatch(&registry, request)
+            }
             Err(e) => Response::Error {
                 message: format!("bad request: {e}"),
             },
         };
+        let handle_ns = t.elapsed().as_nanos() as u64;
+        hists.handle.record(handle_ns);
+        if let Some(h) = hists.per_op.get(opcode as usize) {
+            h.record(handle_ns);
+        }
+        if slow_op_ms > 0 && handle_ns >= slow_op_ms.saturating_mul(1_000_000) {
+            crate::log_warn!(
+                "slow op {}: {:.1}ms (threshold {slow_op_ms}ms) trace={:016x}",
+                op::name(opcode),
+                handle_ns as f64 / 1e6,
+                frame.trace.map(|c| c.trace_id).unwrap_or(0)
+            );
+        }
         if matches!(response, Response::Error { .. }) {
             metrics().counter("service.server.errors").inc();
         }
-        let payload = response.encode();
-        if write_frame(&mut stream, opcode, response.status(), &payload).is_err() {
+
+        let t = Instant::now();
+        let payload = {
+            let _s = trace::span("serve.encode");
+            response.encode()
+        };
+        hists.encode.record(t.elapsed().as_nanos() as u64);
+
+        let t = Instant::now();
+        // Echo the request's trace context on the response — error frames
+        // included — so the client can stitch causality across failures.
+        let written = {
+            let _s = trace::span("serve.write");
+            write_frame_traced(&mut stream, opcode, response.status(), &payload, frame.trace)
+        };
+        hists.write.record(t.elapsed().as_nanos() as u64);
+        if written.is_err() {
             break; // peer went away mid-response
         }
     }
@@ -244,6 +378,7 @@ fn handle_connection(mut stream: TcpStream, registry: Arc<SessionRegistry>, stop
 
 /// Apply one request to the registry.
 pub fn dispatch(registry: &SessionRegistry, request: Request) -> Response {
+    let _s = trace::span(registry_span_name(&request));
     let result = match request {
         Request::CreateSession {
             name,
@@ -303,9 +438,38 @@ pub fn dispatch(registry: &SessionRegistry, request: Request) -> Response {
             .stats_pairs(&session)
             .map(|pairs| Response::Stats { pairs }),
         Request::CloseSession { session } => registry.close(&session).map(|()| Response::Ok),
+        Request::MetricsSnapshot { prefix } => {
+            let reg = metrics();
+            Ok(Response::Metrics {
+                counters: reg.snapshot_counters(&prefix),
+                gauges: reg.snapshot_gauges(&prefix),
+                hists: reg.snapshot_histograms(&prefix),
+            })
+        }
+        Request::TraceExport => Ok(Response::Trace {
+            spans: trace::collect(),
+        }),
     };
     match result {
         Ok(resp) => resp,
         Err(message) => Response::Error { message },
+    }
+}
+
+/// Trace span name for one registry dispatch (the `registry.<op>` level of
+/// the `serve.<op>` → `registry.<op>` → `kernel.<op>` hierarchy).
+fn registry_span_name(request: &Request) -> &'static str {
+    match request {
+        Request::CreateSession { .. } => "registry.create",
+        Request::IngestBatch { .. } => "registry.ingest",
+        Request::MergeSketch { .. } => "registry.merge_sketch",
+        Request::Freeze { .. } => "registry.freeze",
+        Request::Score { .. } => "registry.score",
+        Request::TopK { .. } => "registry.top_k",
+        Request::Checkpoint { .. } => "registry.checkpoint",
+        Request::Stats { .. } => "registry.stats",
+        Request::CloseSession { .. } => "registry.close",
+        Request::MetricsSnapshot { .. } => "registry.metrics_snapshot",
+        Request::TraceExport => "registry.trace_export",
     }
 }

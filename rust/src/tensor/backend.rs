@@ -26,6 +26,7 @@
 
 use super::{kernels, Matrix};
 use crate::util::threadpool::ThreadPool;
+use crate::util::{metrics, trace};
 use std::sync::{Arc, OnceLock};
 
 /// Minimum number of inner-loop multiply-adds before the parallel backend
@@ -126,12 +127,104 @@ pub fn serial() -> Arc<dyn ComputeBackend> {
 
 /// Build the backend for a `--workers`-style setting: serial for ≤ 1,
 /// otherwise a [`ParallelBackend`] over a dedicated pool of `workers`
-/// threads. Selections are bit-identical across all settings.
+/// threads — wrapped in a [`TimedBackend`] so kernel-layer op timings land
+/// in the process metrics registry. Selections are bit-identical across
+/// all settings (the wrapper is pure delegation).
 pub fn compute_backend(workers: usize) -> Arc<dyn ComputeBackend> {
-    if workers <= 1 {
+    let inner: Arc<dyn ComputeBackend> = if workers <= 1 {
         serial()
     } else {
         Arc::new(ParallelBackend::with_threads(workers))
+    };
+    Arc::new(TimedBackend::new(inner))
+}
+
+/// Observability shim over any [`ComputeBackend`]: every op records its
+/// wall-clock nanoseconds into a `kernel.<op>.ns` histogram in the global
+/// metrics registry, and the coarse shrink/score ops additionally emit a
+/// `kernel.<op>` trace span when a trace is active on the calling thread
+/// (matvec and the other per-row helpers are called in tight selection
+/// loops — spanning each call would flood the trace ring, so they get
+/// histograms only).
+///
+/// The wrapper is **pure delegation**: same kernels, same call order, no
+/// math — so the wrapped backend's bit-exactness contract is untouched.
+/// `tests/kernel_determinism.rs` runs the full worker grid through it.
+pub struct TimedBackend {
+    inner: Arc<dyn ComputeBackend>,
+    gram_ns: &'static metrics::Histogram,
+    apply_rot_ns: &'static metrics::Histogram,
+    matmul_transb_ns: &'static metrics::Histogram,
+    matvec_ns: &'static metrics::Histogram,
+    row_energies_ns: &'static metrics::Histogram,
+    normalize_rows_ns: &'static metrics::Histogram,
+    col_sums_ns: &'static metrics::Histogram,
+}
+
+impl TimedBackend {
+    pub fn new(inner: Arc<dyn ComputeBackend>) -> Self {
+        let reg = metrics::global();
+        Self {
+            inner,
+            gram_ns: reg.histogram("kernel.gram.ns"),
+            apply_rot_ns: reg.histogram("kernel.apply_rot.ns"),
+            matmul_transb_ns: reg.histogram("kernel.matmul_transb.ns"),
+            matvec_ns: reg.histogram("kernel.matvec.ns"),
+            row_energies_ns: reg.histogram("kernel.row_energies.ns"),
+            normalize_rows_ns: reg.histogram("kernel.normalize_rows.ns"),
+            col_sums_ns: reg.histogram("kernel.accumulate_col_sums.ns"),
+        }
+    }
+}
+
+impl ComputeBackend for TimedBackend {
+    fn name(&self) -> &'static str {
+        // Transparent: callers (benches, logs) see the real backend.
+        self.inner.name()
+    }
+
+    fn gram(&self, buf: &Matrix) -> Matrix {
+        let _s = trace::span("kernel.gram");
+        let _t = metrics::ScopedTimer::new(self.gram_ns);
+        self.inner.gram(buf)
+    }
+
+    fn apply_rot(&self, rot: &Matrix, buf: &Matrix) -> Matrix {
+        let _s = trace::span("kernel.apply_rot");
+        let _t = metrics::ScopedTimer::new(self.apply_rot_ns);
+        self.inner.apply_rot(rot, buf)
+    }
+
+    fn matmul_transb_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        let _s = trace::span("kernel.matmul_transb");
+        let _t = metrics::ScopedTimer::new(self.matmul_transb_ns);
+        self.inner.matmul_transb_into(a, b, out);
+    }
+
+    fn matmul_transb(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let _s = trace::span("kernel.matmul_transb");
+        let _t = metrics::ScopedTimer::new(self.matmul_transb_ns);
+        self.inner.matmul_transb(a, b)
+    }
+
+    fn matvec(&self, m: &Matrix, x: &[f32]) -> Vec<f32> {
+        let _t = metrics::ScopedTimer::new(self.matvec_ns);
+        self.inner.matvec(m, x)
+    }
+
+    fn row_energies(&self, m: &Matrix) -> Vec<f64> {
+        let _t = metrics::ScopedTimer::new(self.row_energies_ns);
+        self.inner.row_energies(m)
+    }
+
+    fn normalize_rows(&self, m: &mut Matrix) -> Vec<f32> {
+        let _t = metrics::ScopedTimer::new(self.normalize_rows_ns);
+        self.inner.normalize_rows(m)
+    }
+
+    fn accumulate_col_sums(&self, m: &Matrix, acc: &mut [f64]) {
+        let _t = metrics::ScopedTimer::new(self.col_sums_ns);
+        self.inner.accumulate_col_sums(m, acc)
     }
 }
 

@@ -18,6 +18,8 @@ pub mod kernels;
 mod matrix;
 mod ops;
 
-pub use backend::{compute_backend, serial, ComputeBackend, ParallelBackend, SerialBackend};
+pub use backend::{
+    compute_backend, serial, ComputeBackend, ParallelBackend, SerialBackend, TimedBackend,
+};
 pub use matrix::Matrix;
 pub use ops::{axpy, dot, dot_f64, norm2, normalize_in_place, scale_in_place};

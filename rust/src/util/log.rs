@@ -82,6 +82,8 @@ macro_rules! log_warn { ($($a:tt)*) => { $crate::util::log::log($crate::util::lo
 macro_rules! log_info { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, module_path!(), &format!($($a)*)) } }
 #[macro_export]
 macro_rules! log_debug { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), &format!($($a)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Trace, module_path!(), &format!($($a)*)) } }
 
 #[cfg(test)]
 mod tests {

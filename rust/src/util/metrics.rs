@@ -114,10 +114,30 @@ impl Histogram {
         }
     }
 
+    /// Largest value that maps to bucket `idx` — the inclusive `le` upper
+    /// edge for Prometheus. Decades 0 and 1 have no sub-bucket resolution
+    /// (`bucket_of` pins frac to 0 there), so their whole decade collapses
+    /// into the frac=0 bucket; the last bucket's edge saturates to u64::MAX.
+    fn bucket_high(idx: usize) -> u64 {
+        let log2 = idx / SUB;
+        if log2 >= 2 {
+            let width = 1u64 << (log2 - 2);
+            Self::bucket_low(idx).saturating_add(width - 1)
+        } else {
+            (1u64 << (log2 + 1)) - 1
+        }
+    }
+
     pub fn record(&self, v: u64) {
         self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum.fetch_add(v, Ordering::Relaxed);
+        // Saturating: a u64::MAX sample must pin `sum` at the ceiling, not
+        // wrap it back past zero and corrupt `mean()`.
+        let _ = self
+            .sum
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| {
+                Some(s.saturating_add(v))
+            });
         self.max.fetch_max(v, Ordering::Relaxed);
     }
 
@@ -161,11 +181,76 @@ impl Histogram {
         }
         self.count
             .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
-        self.sum
-            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        let other_sum = other.sum.load(Ordering::Relaxed);
+        let _ = self
+            .sum
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |s| {
+                Some(s.saturating_add(other_sum))
+            });
         self.max
             .fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
     }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative-bucket snapshot for Prometheus exposition. Each entry is
+    /// `(inclusive upper edge, cumulative count of samples <= edge)` for an
+    /// occupied bucket. `count` is derived from the bucket sweep itself (not
+    /// the separate `count` atomic) so the `le="+Inf"` cumulative count and
+    /// `_count` agree by construction even under concurrent `record` calls.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = Vec::new();
+        let mut cumulative = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            cumulative += n;
+            buckets.push((Self::bucket_high(idx), cumulative));
+        }
+        HistogramSnapshot {
+            buckets,
+            count: cumulative,
+            sum: self.sum(),
+            max: self.max(),
+        }
+    }
+
+    /// Scalar summary used by the `MetricsSnapshot` wire op.
+    pub fn stats(&self) -> HistogramStats {
+        HistogramStats {
+            count: self.count(),
+            sum: self.sum(),
+            max: self.max(),
+            mean: self.mean(),
+            p50: self.quantile(0.5),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+/// See [`Histogram::snapshot`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<(u64, u64)>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+/// See [`Histogram::stats`]. This is the per-histogram record the service's
+/// `MetricsSnapshot` wire response carries.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct HistogramStats {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p99: u64,
 }
 
 /// Times a scope and records nanoseconds into a histogram on drop.
@@ -246,6 +331,51 @@ impl Registry {
             .collect()
     }
 
+    /// Snapshot of all histograms whose name starts with `prefix`, sorted
+    /// by name, as scalar summaries (see [`Registry::snapshot_counters`]).
+    pub fn snapshot_histograms(&self, prefix: &str) -> Vec<(String, HistogramStats)> {
+        self.hists
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(name, _)| name.starts_with(prefix))
+            .map(|(name, h)| (name.clone(), h.stats()))
+            .collect()
+    }
+
+    /// Prometheus text exposition (format version 0.0.4) of every metric in
+    /// the registry, sorted by name within each kind (counters, then gauges,
+    /// then histograms — the underlying `BTreeMap`s make the order stable).
+    /// Dots in metric names become underscores; histogram values keep their
+    /// native u64 unit (nanoseconds for timers — the `_ns` suffix in the
+    /// source name carries through rather than rescaling to seconds).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let n = prom_name(name);
+            let snap = h.snapshot();
+            out.push_str(&format!("# TYPE {n} histogram\n"));
+            for (upper, cumulative) in &snap.buckets {
+                if *upper == u64::MAX {
+                    continue; // open-ended bucket folds into +Inf below
+                }
+                out.push_str(&format!("{n}_bucket{{le=\"{upper}\"}} {cumulative}\n"));
+            }
+            out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", snap.count));
+            out.push_str(&format!("{n}_sum {}\n", snap.sum));
+            out.push_str(&format!("{n}_count {}\n", snap.count));
+        }
+        out
+    }
+
     /// Human-readable dump (sorted by name).
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -267,6 +397,20 @@ impl Registry {
         }
         out
     }
+}
+
+/// Sanitize an internal dotted metric name into the Prometheus identifier
+/// charset `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 1);
+    for (i, ch) in name.chars().enumerate() {
+        let ok = ch.is_ascii_alphanumeric() || ch == '_' || ch == ':';
+        if i == 0 && ch.is_ascii_digit() {
+            out.push('_');
+        }
+        out.push(if ok { ch } else { '_' });
+    }
+    out
 }
 
 /// Process-global registry.
@@ -385,6 +529,127 @@ mod tests {
         assert_eq!(snap, vec![("service.session.a.rows".to_string(), 7)]);
         let all = r.snapshot_counters("");
         assert_eq!(all.len(), 3);
+    }
+
+    #[test]
+    fn histogram_sum_saturates_instead_of_wrapping() {
+        // Regression: `record(u64::MAX)` used to wrap `sum` and corrupt
+        // `mean()` (it came out near zero after a max-value sample).
+        let h = Histogram::new();
+        h.record(100);
+        h.record(u64::MAX);
+        assert_eq!(h.sum(), u64::MAX, "sum must saturate, not wrap");
+        let mean = h.mean();
+        assert!(
+            mean >= u64::MAX as f64 / 2.1,
+            "mean must stay sane after a max-value sample, got {mean}"
+        );
+        // merge_from has the same saturation contract.
+        let other = Histogram::new();
+        other.record(u64::MAX);
+        h.merge_from(&other);
+        assert_eq!(h.sum(), u64::MAX);
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn snapshot_cumulative_buckets_monotone_and_consistent() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 7, 7, 900, 1 << 30] {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 6);
+        assert_eq!(snap.sum, 15 + 900 + (1 << 30));
+        assert_eq!(snap.max, 1 << 30);
+        let mut last_upper = 0u64;
+        let mut last_cum = 0u64;
+        for &(upper, cum) in &snap.buckets {
+            assert!(upper > last_upper || last_cum == 0, "upper edges ascend");
+            assert!(cum > last_cum, "cumulative counts strictly ascend");
+            last_upper = upper;
+            last_cum = cum;
+        }
+        // The final cumulative count is the +Inf bucket == _count invariant.
+        assert_eq!(last_cum, snap.count);
+        // Every sample is <= its bucket's inclusive upper edge.
+        assert!(snap.buckets.iter().any(|&(u, _)| 7 <= u));
+    }
+
+    #[test]
+    fn prometheus_exposition_golden() {
+        let r = Registry::default();
+        r.counter("service.server.requests").add(3);
+        r.gauge("service.ingest.queue_depth").set(2);
+        let h = r.histogram("pipeline.phase1.batch.ns");
+        h.record(5);
+        h.record(6);
+        let text = r.render_prometheus();
+        // Golden: exact output, which also pins the stable sort order
+        // (counters, gauges, histograms; BTreeMap order within each kind)
+        // and the cumulative `le="+Inf"` == `_count` invariant.
+        // Samples 5 and 6 land in log-linear buckets [5,6) and [6,7):
+        // inclusive upper edges 5 and 6.
+        let expected = "\
+# TYPE service_server_requests counter
+service_server_requests 3
+# TYPE service_ingest_queue_depth gauge
+service_ingest_queue_depth 2
+# TYPE pipeline_phase1_batch_ns histogram
+pipeline_phase1_batch_ns_bucket{le=\"5\"} 1
+pipeline_phase1_batch_ns_bucket{le=\"6\"} 2
+pipeline_phase1_batch_ns_bucket{le=\"+Inf\"} 2
+pipeline_phase1_batch_ns_sum 11
+pipeline_phase1_batch_ns_count 2
+";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn prometheus_plus_inf_equals_count_even_for_huge_samples() {
+        let r = Registry::default();
+        let h = r.histogram("x.ns");
+        h.record(u64::MAX); // lands in the open-ended last bucket
+        h.record(1);
+        let text = r.render_prometheus();
+        assert!(text.contains("x_ns_bucket{le=\"+Inf\"} 2\n"), "{text}");
+        assert!(text.contains("x_ns_count 2\n"), "{text}");
+        // The open-ended bucket must not leak a u64::MAX-edged series.
+        assert!(!text.contains(&format!("le=\"{}\"", u64::MAX)), "{text}");
+    }
+
+    #[test]
+    fn histogram_stats_summary() {
+        let h = Histogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let s = h.stats();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.sum, 5050);
+        assert_eq!(s.max, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!(s.p50 >= 32 && s.p50 <= 72, "p50={}", s.p50);
+        assert!(s.p99 >= 64 && s.p99 <= 100, "p99={}", s.p99);
+    }
+
+    #[test]
+    fn snapshot_histograms_filters_by_prefix() {
+        let r = Registry::default();
+        r.histogram("a.ns").record(4);
+        r.histogram("b.ns").record(9);
+        let snap = r.snapshot_histograms("a.");
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].0, "a.ns");
+        assert_eq!(snap[0].1.count, 1);
+        assert_eq!(r.snapshot_histograms("").len(), 2);
+    }
+
+    #[test]
+    fn prom_name_sanitizes() {
+        assert_eq!(prom_name("service.server.requests"), "service_server_requests");
+        assert_eq!(prom_name("kernel.gram.ns"), "kernel_gram_ns");
+        assert_eq!(prom_name("9lives"), "_9lives");
     }
 
     #[test]

@@ -10,3 +10,4 @@ pub mod log;
 pub mod metrics;
 pub mod rng;
 pub mod threadpool;
+pub mod trace;

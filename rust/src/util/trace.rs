@@ -1,0 +1,405 @@
+//! Lightweight span tracing: process-unique trace IDs minted per request,
+//! hierarchical spans recorded into lock-cheap thread-striped ring buffers,
+//! exportable as Chrome `trace_event` JSON (`chrome://tracing`, Perfetto).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when idle.** `span()` checks a thread-local `Cell` and
+//!    returns `None` unless a trace is active on the calling thread — no
+//!    allocation, no clock read, no lock. Traces only become active when a
+//!    client frame carries a trace context (see `service::protocol`) or a
+//!    root span is opened explicitly.
+//! 2. **Lock-cheap recording.** Finished spans go into one of a fixed set
+//!    of ring buffers striped by thread id. A thread almost always has its
+//!    stripe to itself, so the per-record `Mutex` is uncontended; striping
+//!    (rather than a leaked ring per thread) keeps memory bounded under the
+//!    server's thread-per-connection model. Each ring caps at
+//!    [`RING_CAPACITY`] spans, dropping the oldest.
+//! 3. **Mergeable across processes.** Span IDs are derived from a per-process
+//!    seed so client and server spans can be unioned into one trace without
+//!    collisions; timestamps are Unix nanoseconds (a per-process monotonic
+//!    clock pinned to the wall clock once at startup) so cross-process spans
+//!    land on a shared axis.
+//!
+//! Span exit lines are routed through `log_trace!` — run with
+//! `SAGE_LOG=trace` to watch spans close in real time.
+
+use crate::log_trace;
+use crate::util::json::Json;
+use crate::util::log;
+use std::cell::Cell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Max spans retained per ring stripe (oldest dropped first).
+pub const RING_CAPACITY: usize = 4096;
+const STRIPES: usize = 64;
+
+/// The identity a span executes under: which trace it belongs to and which
+/// span is the current parent. This is what rides the wire in the frame
+/// trace extension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+/// One finished span, as stored in the rings and shipped by the
+/// `TraceExport` wire op.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub name: String,
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// 0 for a root span.
+    pub parent_id: u64,
+    pub start_unix_ns: u64,
+    pub dur_ns: u64,
+    pub pid: u32,
+    pub tid: u32,
+}
+
+// ---------------------------------------------------------------------------
+// Clocks and IDs
+// ---------------------------------------------------------------------------
+
+/// (monotonic anchor, wall-clock at the anchor in unix ns), captured once so
+/// span timestamps are monotone within the process but comparable across
+/// processes.
+fn epoch() -> &'static (Instant, u64) {
+    static EPOCH: OnceLock<(Instant, u64)> = OnceLock::new();
+    EPOCH.get_or_init(|| {
+        let wall = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        (Instant::now(), wall)
+    })
+}
+
+fn now_unix_ns() -> u64 {
+    let (anchor, wall) = epoch();
+    wall.saturating_add(anchor.elapsed().as_nanos() as u64)
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Process-unique, never-zero ID. A per-process seed (pid mixed with the
+/// wall clock) is folded into a sequence counter so IDs minted by a client
+/// and a server do not collide when their spans are merged into one export.
+fn next_id() -> u64 {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    static SEED: OnceLock<u64> = OnceLock::new();
+    let seed = *SEED.get_or_init(|| {
+        splitmix64((std::process::id() as u64) << 32 ^ epoch().1)
+    });
+    let id = splitmix64(seed.wrapping_add(SEQ.fetch_add(1, Ordering::Relaxed)));
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+fn tid() -> u32 {
+    static NEXT: AtomicU32 = AtomicU32::new(1);
+    thread_local! {
+        static TID: u32 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+// ---------------------------------------------------------------------------
+// Rings
+// ---------------------------------------------------------------------------
+
+fn rings() -> &'static [Mutex<VecDeque<SpanRecord>>] {
+    static RINGS: OnceLock<Vec<Mutex<VecDeque<SpanRecord>>>> = OnceLock::new();
+    RINGS.get_or_init(|| (0..STRIPES).map(|_| Mutex::new(VecDeque::new())).collect())
+}
+
+fn record(rec: SpanRecord) {
+    let ring = &rings()[rec.tid as usize % STRIPES];
+    let mut g = ring.lock().unwrap();
+    if g.len() >= RING_CAPACITY {
+        g.pop_front();
+    }
+    g.push_back(rec);
+}
+
+/// Snapshot every recorded span (all stripes), sorted by start time. Does
+/// not drain the rings; they keep rolling.
+pub fn collect() -> Vec<SpanRecord> {
+    let mut out = Vec::new();
+    for ring in rings() {
+        out.extend(ring.lock().unwrap().iter().cloned());
+    }
+    out.sort_by_key(|s| (s.start_unix_ns, s.span_id));
+    out
+}
+
+/// Drop every recorded span.
+pub fn clear() {
+    for ring in rings() {
+        ring.lock().unwrap().clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CURRENT: Cell<Option<TraceCtx>> = const { Cell::new(None) };
+}
+
+/// The trace context active on this thread, if any. The service client
+/// attaches this to outgoing frames.
+pub fn current() -> Option<TraceCtx> {
+    CURRENT.with(|c| c.get())
+}
+
+/// An open span. Records itself into the ring (and restores the previous
+/// thread-local context) on drop.
+pub struct Span {
+    name: String,
+    ctx: TraceCtx,
+    parent_id: u64,
+    prev: Option<TraceCtx>,
+    start_unix_ns: u64,
+    start: Instant,
+}
+
+impl Span {
+    fn begin(name: String, trace_id: u64, parent_id: u64) -> Span {
+        let ctx = TraceCtx {
+            trace_id,
+            span_id: next_id(),
+        };
+        let prev = CURRENT.with(|c| c.replace(Some(ctx)));
+        Span {
+            name,
+            ctx,
+            parent_id,
+            prev,
+            start_unix_ns: now_unix_ns(),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn ctx(&self) -> TraceCtx {
+        self.ctx
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+        let dur_ns = self.start.elapsed().as_nanos() as u64;
+        if log::enabled(log::Level::Trace) {
+            log_trace!(
+                "span exit {} trace={:016x} span={:016x} dur={}ns",
+                self.name,
+                self.ctx.trace_id,
+                self.ctx.span_id,
+                dur_ns
+            );
+        }
+        record(SpanRecord {
+            name: std::mem::take(&mut self.name),
+            trace_id: self.ctx.trace_id,
+            span_id: self.ctx.span_id,
+            parent_id: self.parent_id,
+            start_unix_ns: self.start_unix_ns,
+            dur_ns,
+            pid: std::process::id(),
+            tid: tid(),
+        });
+    }
+}
+
+/// Open a root span under a freshly minted trace ID and make it the
+/// thread's active context.
+pub fn start_trace(name: &str) -> Span {
+    Span::begin(name.to_string(), next_id(), 0)
+}
+
+/// Open a root-on-this-process span adopting a caller-supplied context —
+/// the server side of trace propagation: the client's span becomes the
+/// parent, the client's trace ID is kept.
+pub fn adopt(name: &str, ctx: TraceCtx) -> Span {
+    Span::begin(name.to_string(), ctx.trace_id, ctx.span_id)
+}
+
+/// Open a child of the thread's active span, or `None` (a no-op, nothing
+/// allocated or locked) when no trace is active. Bind the result to keep
+/// the span open: `let _s = trace::span("registry.ingest");`
+pub fn span(name: &str) -> Option<Span> {
+    current().map(|c| Span::begin(name.to_string(), c.trace_id, c.span_id))
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace_event export
+// ---------------------------------------------------------------------------
+
+/// Render spans (typically `collect()`, or a client/server merge) as Chrome
+/// `trace_event` JSON — complete events (`"ph":"X"`), microsecond
+/// timestamps, IDs as zero-padded hex strings (u64 does not survive a
+/// round-trip through JSON's f64 numbers).
+pub fn chrome_trace_json(spans: &[SpanRecord]) -> String {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            let mut args = BTreeMap::new();
+            args.insert("trace_id".to_string(), Json::Str(format!("{:016x}", s.trace_id)));
+            args.insert("span_id".to_string(), Json::Str(format!("{:016x}", s.span_id)));
+            args.insert(
+                "parent_id".to_string(),
+                Json::Str(format!("{:016x}", s.parent_id)),
+            );
+            let mut ev = BTreeMap::new();
+            ev.insert("name".to_string(), Json::Str(s.name.clone()));
+            ev.insert("cat".to_string(), Json::Str("sage".to_string()));
+            ev.insert("ph".to_string(), Json::Str("X".to_string()));
+            ev.insert("ts".to_string(), Json::Num(s.start_unix_ns as f64 / 1_000.0));
+            ev.insert("dur".to_string(), Json::Num(s.dur_ns as f64 / 1_000.0));
+            ev.insert("pid".to_string(), Json::Num(s.pid as f64));
+            ev.insert("tid".to_string(), Json::Num(s.tid as f64));
+            ev.insert("args".to_string(), Json::Obj(args));
+            Json::Obj(ev)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(events));
+    root.insert(
+        "displayTimeUnit".to_string(),
+        Json::Str("ms".to_string()),
+    );
+    crate::util::json::write(&Json::Obj(root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The rings are global and thread-striped; tests that record and then
+    // collect serialize here so a concurrent test filling a shared stripe
+    // cannot evict their spans mid-assertion.
+    static RING_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn span_is_inert_without_active_trace() {
+        assert!(current().is_none());
+        assert!(span("nothing").is_none());
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn spans_nest_and_restore_context() {
+        let _g = RING_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let root = start_trace("test.root");
+        let root_ctx = root.ctx();
+        assert_eq!(current(), Some(root_ctx));
+        {
+            let child = span("test.child").expect("trace active");
+            let child_ctx = child.ctx();
+            assert_eq!(child_ctx.trace_id, root_ctx.trace_id);
+            assert_ne!(child_ctx.span_id, root_ctx.span_id);
+            assert_eq!(current(), Some(child_ctx));
+        }
+        assert_eq!(current(), Some(root_ctx), "child drop restores parent");
+        drop(root);
+        assert!(current().is_none());
+
+        let spans: Vec<SpanRecord> = collect()
+            .into_iter()
+            .filter(|s| s.trace_id == root_ctx.trace_id)
+            .collect();
+        assert_eq!(spans.len(), 2);
+        let child_rec = spans.iter().find(|s| s.name == "test.child").unwrap();
+        assert_eq!(child_rec.parent_id, root_ctx.span_id);
+        let root_rec = spans.iter().find(|s| s.name == "test.root").unwrap();
+        assert_eq!(root_rec.parent_id, 0);
+    }
+
+    #[test]
+    fn adopt_preserves_remote_trace_and_parent() {
+        let _g = RING_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let remote = TraceCtx {
+            trace_id: 0xabcd,
+            span_id: 0x1234,
+        };
+        let ctx = {
+            let s = adopt("serve.request", remote);
+            s.ctx()
+        };
+        assert_eq!(ctx.trace_id, 0xabcd);
+        let rec = collect()
+            .into_iter()
+            .find(|s| s.span_id == ctx.span_id)
+            .unwrap();
+        assert_eq!(rec.parent_id, 0x1234);
+        assert_eq!(rec.trace_id, 0xabcd);
+    }
+
+    #[test]
+    fn ring_caps_at_capacity() {
+        let _g = RING_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // All spans from one thread land in one stripe.
+        let root = start_trace("cap.root");
+        let trace_id = root.ctx().trace_id;
+        for _ in 0..RING_CAPACITY + 10 {
+            let _s = span("cap.filler");
+        }
+        drop(root);
+        let mine = collect()
+            .into_iter()
+            .filter(|s| s.trace_id == trace_id)
+            .count();
+        assert!(mine <= RING_CAPACITY, "ring must cap, kept {mine}");
+    }
+
+    #[test]
+    fn ids_are_unique_and_nonzero() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let id = next_id();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "duplicate id {id}");
+        }
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_ids() {
+        let rec = SpanRecord {
+            name: "serve.decode".to_string(),
+            trace_id: 0xdead_beef,
+            span_id: 5,
+            parent_id: 3,
+            start_unix_ns: 2_000_000,
+            dur_ns: 1_500,
+            pid: 42,
+            tid: 7,
+        };
+        let out = chrome_trace_json(&[rec]);
+        let parsed = crate::util::json::parse(&out).expect("valid json");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        let ev = &events[0];
+        assert_eq!(ev.get("name").unwrap().as_str(), Some("serve.decode"));
+        assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(ev.get("ts").unwrap().as_f64(), Some(2000.0));
+        assert_eq!(ev.get("dur").unwrap().as_f64(), Some(1.5));
+        assert_eq!(
+            ev.get("args").unwrap().get("trace_id").unwrap().as_str(),
+            Some("00000000deadbeef")
+        );
+    }
+}

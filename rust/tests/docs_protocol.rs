@@ -9,7 +9,7 @@
 //! `<!-- frame-example: response <Kind> -->` immediately precedes a fenced
 //! code block of whitespace-separated hex bytes for one complete frame.
 
-use sage::service::protocol::{encode_frame, read_frame, Request, Response};
+use sage::service::protocol::{encode_frame_traced, read_frame, Request, Response};
 
 struct DocFrame {
     kind: String,
@@ -61,16 +61,21 @@ fn every_documented_example_frame_round_trips_byte_for_byte() {
     let doc = std::fs::read_to_string(path)
         .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
     let frames = parse_doc_frames(&doc);
-    // All nine request ops and all seven response kinds are documented.
+    // All eleven request ops (plus the traced-frame example from §7) and
+    // all nine response kinds are documented.
     assert!(
-        frames.len() >= 16,
-        "expected ≥16 documented example frames, found {}",
+        frames.len() >= 21,
+        "expected ≥21 documented example frames, found {}",
         frames.len()
     );
     let requests = frames.iter().filter(|f| f.kind == "request").count();
     let responses = frames.iter().filter(|f| f.kind == "response").count();
-    assert!(requests >= 9, "expected ≥9 request examples, found {requests}");
-    assert!(responses >= 7, "expected ≥7 response examples, found {responses}");
+    assert!(requests >= 12, "expected ≥12 request examples, found {requests}");
+    assert!(responses >= 9, "expected ≥9 response examples, found {responses}");
+    assert!(
+        frames.iter().any(|f| f.label.contains("traced")),
+        "expected a traced-frame example (PROTOCOL.md §7)"
+    );
 
     for frame in &frames {
         let mut cursor = &frame.bytes[..];
@@ -83,12 +88,14 @@ fn every_documented_example_frame_round_trips_byte_for_byte() {
             frame.label,
             cursor.len()
         );
+        // Re-encode with the decoded trace context (if any), so traced
+        // examples stay honest too — §7's extension is part of the spec.
         let re_encoded = match frame.kind.as_str() {
             "request" => {
                 let request = Request::decode(decoded.opcode, &decoded.payload)
                     .unwrap_or_else(|e| panic!("example '{}' undecodable: {e}", frame.label));
                 assert_eq!(decoded.status, 0, "request '{}' has status", frame.label);
-                encode_frame(request.opcode(), 0, &request.encode())
+                encode_frame_traced(request.opcode(), 0, &request.encode(), decoded.trace)
             }
             "response" => {
                 let response = Response::decode(&decoded.payload)
@@ -99,7 +106,12 @@ fn every_documented_example_frame_round_trips_byte_for_byte() {
                     "response '{}' status drift",
                     frame.label
                 );
-                encode_frame(decoded.opcode, response.status(), &response.encode())
+                encode_frame_traced(
+                    decoded.opcode,
+                    response.status(),
+                    &response.encode(),
+                    decoded.trace,
+                )
             }
             other => panic!("unknown frame-example kind '{other}'"),
         };

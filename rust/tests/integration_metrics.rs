@@ -1,0 +1,184 @@
+//! Observability end to end, over real TCP:
+//!
+//! * a server booted with `--metrics-addr`-style config serves Prometheus
+//!   text on `GET /metrics` (and `ok` on `/healthz`) with series covering
+//!   server op latency, ingest queue depth, admission rejections, and
+//!   kernel op timings;
+//! * a traced client round trip (create → ingest → freeze → score → TopK)
+//!   propagates ONE trace ID through `client.<op>` → `serve.<op>` →
+//!   `registry.<op>` → `kernel.<op>` spans, all recoverable through the
+//!   TraceExport op and renderable as Chrome `trace_event` JSON;
+//! * the MetricsSnapshot op returns histogram-grade summaries over the
+//!   wire.
+
+use sage::data::{generate, BenchmarkKind};
+use sage::grad::{MlpSpec, TrainHyper};
+use sage::pipeline::{phase1_gradient_stream, phase2_score_stream, shard_ranges};
+use sage::runtime::{ModelBackend, ReferenceModelBackend};
+use sage::service::{RegistryConfig, Server, ServerConfig, ServiceClient};
+use sage::util::trace;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+fn backend() -> ReferenceModelBackend {
+    ReferenceModelBackend::new(MlpSpec::new(8, 12, 10), TrainHyper::default(), 16, 16, 8)
+}
+
+fn http_get(addr: &std::net::SocketAddr, path: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect metrics endpoint");
+    stream
+        .write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())
+        .expect("write request");
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("read response");
+    response
+}
+
+#[test]
+fn served_roundtrip_exposes_metrics_and_one_trace_id_end_to_end() {
+    let shards = 2;
+    let n = 160;
+    // Timed kernel wrapper on the client-side model too, so Phase-II's
+    // fused projection emits kernel.* spans under the client's trace (the
+    // server side gets its own through `compute_backend(compute_workers)`).
+    let b = backend().with_compute(sage::tensor::compute_backend(1));
+    let ds = generate(&BenchmarkKind::Cifar10.spec(8), n, 5, 0);
+    let params = sage::trainer::warmup_params(&b, &ds, 3, 0.05, 7).unwrap();
+
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 4,
+        compute_workers: 2,
+        metrics_addr: Some("127.0.0.1:0".into()),
+        registry: RegistryConfig {
+            max_sessions: 1,
+            ..RegistryConfig::default()
+        },
+        ..ServerConfig::default()
+    })
+    .expect("bind server");
+    let addr = server.local_addr().to_string();
+    let metrics_addr = server.metrics_addr().expect("metrics endpoint bound");
+    let handle = server.spawn();
+
+    // The whole round trip under ONE trace. Requests stamp the client's
+    // current span on the wire; the in-process server adopts it, so every
+    // layer's spans land in the same (process-global) rings with the same
+    // trace ID.
+    let root = trace::start_trace("roundtrip");
+    let root_trace = root.ctx().trace_id;
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    client
+        .create_session("obs", b.ell(), b.spec().d(), shards)
+        .unwrap();
+
+    // Admission rejection by cause: the single session slot is taken.
+    let err = client
+        .create_session("overflow", b.ell(), b.spec().d(), shards)
+        .expect_err("second session must be rejected");
+    assert!(err.contains("admission"), "unexpected rejection: {err}");
+
+    let ranges = shard_ranges(n, shards);
+    for (shard, &range) in ranges.iter().enumerate() {
+        phase1_gradient_stream(&b, &ds, &params, range, |g| {
+            client.ingest("obs", shard, g).map(|_| ())
+        })
+        .unwrap();
+    }
+    let frozen = client.freeze("obs").unwrap();
+    assert!(frozen.shrinks > 0, "want shrinks so kernel timings exist");
+    for (shard, &range) in ranges.iter().enumerate() {
+        phase2_score_stream(&b, &ds, &params, &frozen.sketch, range, |blk| {
+            client.score("obs", shard, &blk)
+        })
+        .unwrap();
+    }
+    let (indices, _) = client.top_k("obs", "sage", 40, 10, 7).unwrap();
+    assert_eq!(indices.len(), 40);
+    drop(root);
+
+    // --- MetricsSnapshot over the wire: histogram-grade summaries ---
+    let (counters, _gauges, hists) = client.metrics_snapshot("service.").unwrap();
+    assert!(
+        counters
+            .iter()
+            .any(|(name, v)| name == "service.admission.rejected.slots" && *v >= 1),
+        "admission rejection counter missing: {counters:?}"
+    );
+    let handle_hist = hists
+        .iter()
+        .find(|(name, _)| name == "service.server.handle.ns")
+        .map(|(_, s)| *s)
+        .expect("server handle histogram");
+    assert!(handle_hist.count > 0);
+    assert!(handle_hist.p50 <= handle_hist.p99);
+    assert!(handle_hist.p99 <= handle_hist.max);
+
+    // --- /metrics scrape over raw TCP: Prometheus exposition ---
+    let scrape = http_get(&metrics_addr, "/metrics");
+    assert!(
+        scrape.starts_with("HTTP/1.0 200 OK\r\n"),
+        "bad status: {}",
+        scrape.lines().next().unwrap_or("")
+    );
+    assert!(scrape.contains("Content-Type: text/plain; version=0.0.4"));
+    for series in [
+        // per-op server latency (decode/handle/encode/write + per-op)
+        "service_server_handle_ns_bucket{le=\"+Inf\"}",
+        "service_server_decode_ns_count",
+        "service_server_op_ingest_batch_ns_count",
+        // ingest channel queue depth
+        "service_ingest_queue_depth",
+        // admission rejections by cause
+        "service_admission_rejected_slots",
+        // kernel op timings (the TimedBackend wrapper)
+        "kernel_gram_ns_bucket{le=\"+Inf\"}",
+        "kernel_gram_ns_count",
+    ] {
+        assert!(scrape.contains(series), "scrape missing {series}:\n{scrape}");
+    }
+    assert!(http_get(&metrics_addr, "/healthz").contains("ok"));
+
+    // --- TraceExport: one trace ID across every layer ---
+    let spans = client.trace_export().unwrap();
+    let ours: Vec<_> = spans
+        .iter()
+        .filter(|s| s.trace_id == root_trace)
+        .collect();
+    for prefix in ["client.", "serve.", "registry.", "kernel."] {
+        assert!(
+            ours.iter().any(|s| s.name.starts_with(prefix)),
+            "no {prefix}* span with the root trace id; got: {:?}",
+            ours.iter().map(|s| &s.name).collect::<Vec<_>>()
+        );
+    }
+    // Parent chain: the serve.freeze span's parent is the client.freeze
+    // span — the wire extension carried (trace_id, span_id) across.
+    let client_freeze = ours
+        .iter()
+        .find(|s| s.name == "client.freeze")
+        .expect("client.freeze span");
+    assert!(
+        ours.iter()
+            .any(|s| s.name == "serve.freeze" && s.parent_id == client_freeze.span_id),
+        "serve.freeze must be a child of client.freeze"
+    );
+
+    // Chrome export is valid JSON and carries the shared trace id.
+    let json = trace::chrome_trace_json(
+        &ours.iter().map(|s| (*s).clone()).collect::<Vec<_>>(),
+    );
+    let parsed = sage::util::json::parse(&json).expect("valid chrome trace json");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(|j| j.as_arr())
+        .expect("traceEvents array");
+    assert_eq!(events.len(), ours.len());
+    let id_hex = format!("{root_trace:016x}");
+    assert!(
+        json.contains(&id_hex),
+        "chrome export must carry the trace id {id_hex}"
+    );
+
+    handle.shutdown();
+}

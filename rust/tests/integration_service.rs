@@ -35,6 +35,7 @@ fn spawn_server(registry: RegistryConfig) -> (ServerHandle, String) {
         // (offline runs serial kernels; results must match bit-for-bit).
         compute_workers: 3,
         registry,
+        ..ServerConfig::default()
     })
     .expect("bind server");
     let addr = server.local_addr().to_string();
@@ -365,6 +366,7 @@ fn saturated_server_sheds_with_error_frame_and_retry_succeeds() {
         threads: 1,
         compute_workers: 1,
         registry: RegistryConfig::default(),
+        ..ServerConfig::default()
     })
     .expect("bind server");
     let addr = server.local_addr().to_string();

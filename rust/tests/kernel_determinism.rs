@@ -26,7 +26,7 @@ use sage::runtime::{ModelBackend, ReferenceModelBackend};
 use sage::service::registry::SessionRegistry;
 use sage::service::{RegistryConfig, ScoreBatch};
 use sage::sketch::FdSketch;
-use sage::tensor::{ComputeBackend, Matrix, ParallelBackend, SerialBackend};
+use sage::tensor::{ComputeBackend, Matrix, ParallelBackend, SerialBackend, TimedBackend};
 use sage::util::rng::Pcg64;
 use std::sync::Arc;
 
@@ -126,6 +126,83 @@ fn fd_sketch_stream_bit_identical_across_backends() {
         );
         assert_bits_eq(&state.buf, &ref_state.buf, &format!("sketch buf w={workers}"));
     }
+}
+
+/// The observability timing wrapper must be invisible to the determinism
+/// contract: pure delegation, so every op is bit-identical with and
+/// without it, on both backends (and `name()` passes through, which is
+/// what keeps `compute_backend(1)` reporting "serial").
+#[test]
+fn timed_backend_wrapper_preserves_bit_identity() {
+    let backends: [(Arc<dyn ComputeBackend>, Arc<dyn ComputeBackend>); 2] = [
+        (
+            Arc::new(SerialBackend),
+            Arc::new(TimedBackend::new(Arc::new(SerialBackend))),
+        ),
+        (
+            Arc::new(ParallelBackend::with_threads(3).with_min_flops(0)),
+            Arc::new(TimedBackend::new(Arc::new(
+                ParallelBackend::with_threads(3).with_min_flops(0),
+            ))),
+        ),
+    ];
+    let mut rng = Pcg64::seeded(23);
+    let (m, d, l) = (17, 33, 5);
+    let a = random_matrix(&mut rng, m, d);
+    let b = random_matrix(&mut rng, l, d);
+    let rot = random_matrix(&mut rng, l, m);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    for (bare, timed) in &backends {
+        assert_eq!(bare.name(), timed.name(), "name must delegate");
+        assert_bits_eq(
+            timed.matmul_transb(&a, &b).as_slice(),
+            bare.matmul_transb(&a, &b).as_slice(),
+            &format!("timed matmul_transb ({})", bare.name()),
+        );
+        assert_bits_eq(
+            timed.gram(&a).as_slice(),
+            bare.gram(&a).as_slice(),
+            &format!("timed gram ({})", bare.name()),
+        );
+        assert_bits_eq(
+            timed.apply_rot(&rot, &a).as_slice(),
+            bare.apply_rot(&rot, &a).as_slice(),
+            &format!("timed apply_rot ({})", bare.name()),
+        );
+        assert_bits_eq(
+            &timed.matvec(&a, &x),
+            &bare.matvec(&a, &x),
+            &format!("timed matvec ({})", bare.name()),
+        );
+        let et = timed.row_energies(&a);
+        let eb = bare.row_energies(&a);
+        for (i, (t, s)) in et.iter().zip(eb.iter()).enumerate() {
+            assert_eq!(t.to_bits(), s.to_bits(), "timed row_energies[{i}]");
+        }
+        let mut at = a.clone();
+        let mut ab = a.clone();
+        let nt = timed.normalize_rows(&mut at);
+        let nb = bare.normalize_rows(&mut ab);
+        assert_bits_eq(&nt, &nb, "timed norms");
+        assert_bits_eq(at.as_slice(), ab.as_slice(), "timed normalized rows");
+        let mut acc_t = vec![0.0f64; d];
+        let mut acc_b = vec![0.0f64; d];
+        timed.accumulate_col_sums(&a, &mut acc_t);
+        bare.accumulate_col_sums(&a, &mut acc_b);
+        for (i, (t, s)) in acc_t.iter().zip(acc_b.iter()).enumerate() {
+            assert_eq!(t.to_bits(), s.to_bits(), "timed col_sums[{i}]");
+        }
+    }
+    // And the wrapper actually records: the kernel histograms are live.
+    let stats: Vec<String> = sage::util::metrics::global()
+        .snapshot_histograms("kernel.")
+        .into_iter()
+        .map(|(name, _)| name)
+        .collect();
+    assert!(
+        stats.iter().any(|n| n == "kernel.gram.ns"),
+        "kernel.gram.ns histogram missing: {stats:?}"
+    );
 }
 
 fn model() -> ReferenceModelBackend {
