@@ -127,6 +127,8 @@ fn app() -> App {
                     Opt { name: "registry-shards", takes_value: true, help: "session registry shards (rounded to a power of two, max 256)", default: Some("8") },
                     Opt { name: "queue-depth", takes_value: true, help: "per-session ingest queue depth", default: Some("8") },
                     Opt { name: "checkpoint-dir", takes_value: true, help: "session checkpoint/recovery + scorer spill dir", default: None },
+                    Opt { name: "durability", takes_value: true, help: "write-ahead log mode: none | async | sync (needs --checkpoint-dir; replays on restart)", default: Some("none") },
+                    Opt { name: "wal-compact-mb", takes_value: true, help: "compact a WAL shard into checkpoints past this many MiB (0 = never)", default: Some("64") },
                     Opt { name: "metrics-addr", takes_value: true, help: "serve Prometheus /metrics + /healthz on this HOST:PORT", default: None },
                     Opt { name: "slow-op-ms", takes_value: true, help: "warn (with trace id) when an op handler exceeds this many ms (0 = off)", default: Some("0") },
                 ],
@@ -441,6 +443,11 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
             registry_shards: p.get_usize("registry-shards")?.unwrap_or(8).max(1),
             ingest_queue_depth: p.get_usize("queue-depth")?.unwrap_or(8).max(1),
             checkpoint_dir: p.get("checkpoint-dir").map(std::path::PathBuf::from),
+            durability: sage::service::Durability::parse(&p.get_or("durability", "none"))?,
+            wal_compact_bytes: (p.get_usize("wal-compact-mb")?.unwrap_or(64) as u64) << 20,
+            // Crash-injection hooks for the durability test harness; unset
+            // in normal operation.
+            wal_fault: sage::service::WalFaultPlan::from_env(),
         },
         metrics_addr: p.get("metrics-addr").map(str::to_string),
         slow_op_ms: p.get_usize("slow-op-ms")?.unwrap_or(0) as u64,
@@ -656,8 +663,8 @@ fn cmd_query(p: &Parsed) -> Result<(), String> {
             }
         }
         "checkpoint" => {
-            let path = client.checkpoint(&session)?;
-            println!("checkpointed '{session}' to {path}");
+            let (path, wal_seq) = client.checkpoint(&session)?;
+            println!("checkpointed '{session}' to {path} (wal seq {wal_seq})");
         }
         "close" => {
             client.close_session(&session)?;

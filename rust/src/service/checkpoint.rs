@@ -9,15 +9,24 @@
 //! consensus accumulators round-trip as raw bits and a recovered session's
 //! TopK equals the pre-crash TopK. The same file doubles as the spill
 //! target when the registry evicts score caches under scorer-budget
-//! pressure (see `service::registry`). Version-1 files (no Phase-II
-//! section) still load; scoring then starts fresh.
+//! pressure (see `service::registry`). Version 3 appends the session's WAL
+//! replay watermark (`wal_seq`): on recovery the registry skips log
+//! records at or below it (see `service::wal`). Version-1 files (no
+//! Phase-II section) and version-2 files (no watermark) still load;
+//! scoring then starts fresh / replay starts from the log's beginning.
+//!
+//! Writes are atomic against crashes: the image goes to a sibling temp
+//! file, is fsynced, and only then renamed over the previous checkpoint —
+//! a crash at any byte leaves either the complete old file or the complete
+//! new one, never a torn mix (`mid_write_failure_never_corrupts_...`
+//! injects exactly that crash).
 //!
 //! Layout:
 //!
 //! ```text
 //! magic    8B   "SAGESES1"
 //! body          PayloadWriter fields:
-//!   version u32   (2; readers accept 1)
+//!   version u32   (3; readers accept 1 and 2)
 //!   name    str
 //!   ell     u32
 //!   d       u32
@@ -30,6 +39,8 @@
 //!   scorer_slots u32
 //!   scorer_slots × (present u8; if 1: ScorerState fields)
 //!   scores_present u8; if 1: ScoresState fields
+//!   -- version ≥ 3 only --
+//!   wal_seq u64
 //! fnv64    8B   checksum of magic + body
 //! ```
 
@@ -40,7 +51,7 @@ use std::io::Write;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"SAGESES1";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 /// Durable snapshot of one session: Phase-I state (either still ingesting —
 /// per-shard sketch states — or frozen — the merged sketch and its
@@ -59,6 +70,10 @@ pub struct SessionCheckpoint {
     pub scorers: Vec<Option<ScorerState>>,
     /// Finalized score cache, present after a served TopK finalized scores.
     pub scores: Option<ScoresState>,
+    /// WAL replay watermark: the highest log sequence number whose effect
+    /// is already contained in this snapshot. Recovery skips records at or
+    /// below it. 0 for pre-v3 files and for sessions without a WAL.
+    pub wal_seq: u64,
 }
 
 fn write_scorer_state(w: &mut PayloadWriter, st: &ScorerState) {
@@ -158,39 +173,33 @@ impl SessionCheckpoint {
             }
             None => w.put_u8(0),
         }
+        w.put_u64(self.wal_seq);
         w.into_bytes()
     }
 
-    /// Write atomically (tmp file + rename), creating parent dirs.
-    ///
-    /// # Errors
-    /// I/O failures creating the directory, writing the tmp file, or
-    /// renaming it into place.
-    pub fn save(&self, path: &Path) -> Result<(), String> {
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)
-                    .map_err(|e| format!("{}: {e}", parent.display()))?;
-            }
-        }
+    /// The complete on-disk image: magic + body + fnv64 trailer.
+    fn file_bytes(&self) -> Vec<u8> {
         let body = self.body_bytes();
         let mut out = Vec::with_capacity(8 + body.len() + 8);
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&body);
         let sum = fnv64(&out);
         out.extend_from_slice(&sum.to_le_bytes());
-        let tmp = path.with_extension("tmp");
-        {
-            let mut f = std::io::BufWriter::new(
-                std::fs::File::create(&tmp).map_err(|e| format!("{}: {e}", tmp.display()))?,
-            );
-            f.write_all(&out).map_err(|e| e.to_string())?;
-            f.flush().map_err(|e| e.to_string())?;
-        }
-        std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+        out
     }
 
-    /// Load and verify a checkpoint (v1 or v2).
+    /// Write atomically (tmp file + fsync + rename), creating parent dirs.
+    /// A crash at any point leaves either the previous complete checkpoint
+    /// or the new complete checkpoint at `path`, never a torn mix.
+    ///
+    /// # Errors
+    /// I/O failures creating the directory, writing or syncing the tmp
+    /// file, or renaming it into place.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        write_atomic(path, &self.file_bytes(), None)
+    }
+
+    /// Load and verify a checkpoint (v1, v2, or v3).
     ///
     /// # Errors
     /// I/O failures, checksum mismatches (torn writes), bad magic,
@@ -274,6 +283,7 @@ impl SessionCheckpoint {
         } else {
             (Vec::new(), None)
         };
+        let wal_seq = if version >= 3 { r.u64()? } else { 0 };
         r.finish()?;
         Ok(SessionCheckpoint {
             name,
@@ -284,8 +294,40 @@ impl SessionCheckpoint {
             frozen,
             scorers,
             scores,
+            wal_seq,
         })
     }
+}
+
+/// Crash-safe write: the image goes to a sibling `.tmp` file which is
+/// fsynced *before* being renamed over `path`, so power loss at any byte
+/// leaves either the old complete file or the new complete file.
+///
+/// `fail_after` is a test-only injection point: write that many bytes of
+/// the image, then fail as if the process died mid-write — the torn
+/// `.tmp` is left behind and `path` is untouched.
+fn write_atomic(path: &Path, bytes: &[u8], fail_after: Option<usize>) -> Result<(), String> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).map_err(|e| format!("{}: {e}", parent.display()))?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    let mut f = std::fs::File::create(&tmp).map_err(|e| format!("{}: {e}", tmp.display()))?;
+    if let Some(n) = fail_after {
+        let n = n.min(bytes.len());
+        f.write_all(&bytes[..n]).map_err(|e| e.to_string())?;
+        let _ = f.sync_all();
+        return Err(format!(
+            "injected failure after {n} of {} bytes ({})",
+            bytes.len(),
+            tmp.display()
+        ));
+    }
+    f.write_all(bytes).map_err(|e| e.to_string())?;
+    f.sync_all().map_err(|e| format!("{}: {e}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
 }
 
 #[cfg(test)]
@@ -317,6 +359,7 @@ mod tests {
                 Some(AgreementScorer::new(2).export_state()),
             ],
             scores: None,
+            wal_seq: 7,
         }
     }
 
@@ -353,6 +396,7 @@ mod tests {
             }),
             scorers: vec![Some(mk_scorer(&mut rng, 7).export_state()), None],
             scores: Some(finalized.export_state()),
+            wal_seq: 41,
         }
     }
 
@@ -420,7 +464,76 @@ mod tests {
         assert_eq!(back.frozen, Some(f));
         assert!(back.scorers.is_empty());
         assert!(back.scores.is_none());
+        assert_eq!(back.wal_seq, 0);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn legacy_v2_body_loads_with_zero_wal_watermark() {
+        // A v2 body carries the Phase-II section but no trailing wal_seq;
+        // it must keep loading and report watermark 0 (replay from the
+        // log's beginning).
+        let path = tmp("v2");
+        let f = FrozenSketch {
+            sketch: Matrix::from_fn(2, 4, |r, c| (r + c) as f32 * 0.5),
+            shift_bound: 0.75,
+            shrinks: 3,
+            rows_seen: 12,
+            sketch_bytes: 64,
+        };
+        let mut w = PayloadWriter::new();
+        w.put_u32(2); // version 2
+        w.put_str("mid");
+        w.put_u32(2);
+        w.put_u32(4);
+        w.put_u32(1);
+        w.put_u8(1);
+        w.put_matrix(&f.sketch);
+        w.put_f64(f.shift_bound);
+        w.put_u64(f.shrinks);
+        w.put_u64(f.rows_seen);
+        w.put_u64(f.sketch_bytes);
+        w.put_u32(0); // no scorer slots
+        w.put_u8(0); // no score cache
+        let body = w.into_bytes();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&body);
+        let sum = fnv64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &out).unwrap();
+
+        let back = SessionCheckpoint::load(&path).unwrap();
+        assert_eq!(back.name, "mid");
+        assert_eq!(back.frozen, Some(f));
+        assert_eq!(back.wal_seq, 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn mid_write_failure_never_corrupts_the_previous_checkpoint() {
+        // Satellite: crash during checkpoint must never corrupt the
+        // previous good .sagesess. Inject a death at several points inside
+        // the write — including "everything written but not renamed" —
+        // and verify the old image still loads byte-for-byte.
+        let path = tmp("midwrite");
+        let old = scored_sample();
+        old.save(&path).unwrap();
+
+        let mut newer = old.clone();
+        newer.wal_seq = 999;
+        newer.frozen.as_mut().unwrap().rows_seen = 1000;
+        let image = newer.file_bytes();
+        for cut in [0usize, 1, image.len() / 2, image.len()] {
+            let err = write_atomic(&path, &image, Some(cut)).unwrap_err();
+            assert!(err.contains("injected"), "unexpected error: {err}");
+            assert_eq!(SessionCheckpoint::load(&path).unwrap(), old);
+        }
+        // A retry after the crash replaces the checkpoint cleanly.
+        newer.save(&path).unwrap();
+        assert_eq!(SessionCheckpoint::load(&path).unwrap(), newer);
+        std::fs::remove_file(&path).unwrap();
+        let _ = std::fs::remove_file(path.with_extension("tmp"));
     }
 
     #[test]

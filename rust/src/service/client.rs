@@ -250,11 +250,13 @@ impl ServiceClient {
         }
     }
 
-    pub fn checkpoint(&mut self, session: &str) -> Result<String, String> {
+    /// Persist the session server-side. Returns the checkpoint path and
+    /// the WAL sequence watermark it covers (0 with `--durability none`).
+    pub fn checkpoint(&mut self, session: &str) -> Result<(String, u64), String> {
         match self.expect(&Request::Checkpoint {
             session: session.to_string(),
         })? {
-            Response::Checkpointed { path } => Ok(path),
+            Response::Checkpointed { path, wal_seq } => Ok((path, wal_seq)),
             other => Err(format!("unexpected checkpoint response {other:?}")),
         }
     }

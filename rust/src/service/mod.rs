@@ -19,8 +19,19 @@
 //!   scorer bytes. Scorer state spills to disk under budget pressure and
 //!   reloads transparently.
 //! * [`checkpoint`] — session persistence/recovery (FNV-checksummed,
-//!   atomic-rename framing in the style of `trainer::checkpoint`); v2
-//!   round-trips Phase-II scorer state bit-exactly.
+//!   temp-file + fsync + atomic-rename framing in the style of
+//!   `trainer::checkpoint`); v2 round-trips Phase-II scorer state
+//!   bit-exactly, v3 adds the WAL watermark.
+//! * [`wal`] / [`storage`] — the durability layer (`sage serve
+//!   --durability {none,async,sync}`): every state-mutating op appends a
+//!   length-prefixed, FNV-checksummed, globally-sequenced record to a
+//!   per-shard write-ahead log behind the [`storage::StorageBackend`]
+//!   trait. Because FD insertion, shard-order merging, and scoring are
+//!   deterministic, replaying the log on top of the newest checkpoint
+//!   reproduces session state *bit-exactly*. Torn tails truncate with a
+//!   WARN; segments compact into checkpoints past `--wal-compact-mb`.
+//!   Design notes in docs/ARCHITECTURE.md §Durability, record format in
+//!   docs/PROTOCOL.md §9.
 //! * [`server`] — TCP accept loop, thread-per-connection on
 //!   `util::threadpool`, graceful load-shedding when the pool is
 //!   saturated (one `connection rejected` error frame, then close).
@@ -80,6 +91,8 @@ pub mod metrics_http;
 pub mod protocol;
 pub mod registry;
 pub mod server;
+pub mod storage;
+pub mod wal;
 
 pub use checkpoint::SessionCheckpoint;
 pub use client::{is_rejection, request_with_retry, ServiceClient};
@@ -88,3 +101,5 @@ pub use registry::{
     ByteBudget, RegistryConfig, Session, SessionRegistry, SCORER_ADMISSION,
 };
 pub use server::{Server, ServerConfig, ServerHandle};
+pub use storage::{LocalDirBackend, MemStorage, StorageBackend};
+pub use wal::{Durability, Wal, WalConfig, WalFaultPlan};

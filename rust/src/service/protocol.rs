@@ -597,6 +597,25 @@ pub fn encode_ingest_batch(session: &str, shard: u32, rows: &Matrix) -> Vec<u8> 
     w.into_bytes()
 }
 
+/// Borrow-encoding path for MergeSketch (see [`encode_ingest_batch`]):
+/// serialize the payload straight from a borrowed sketch state. The WAL
+/// logs merge ops through this helper so log records and wire frames
+/// share one layout definition.
+pub fn encode_merge_sketch(session: &str, shard: u32, state: &SketchState) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_str(session);
+    w.put_u32(shard);
+    w.put_u32(state.ell);
+    w.put_u32(state.d);
+    w.put_u32(state.next_row);
+    w.put_u64(state.shrink_count);
+    w.put_u64(state.rows_seen);
+    w.put_f64(state.delta_sum);
+    w.put_f64(state.energy_seen);
+    w.put_f32_slice(&state.buf);
+    w.into_bytes()
+}
+
 /// Borrow-encoding fast path for the hot Phase-II op (see
 /// [`encode_ingest_batch`]).
 pub fn encode_score(
@@ -659,18 +678,7 @@ impl Request {
                 session,
                 shard,
                 state,
-            } => {
-                w.put_str(session);
-                w.put_u32(*shard);
-                w.put_u32(state.ell);
-                w.put_u32(state.d);
-                w.put_u32(state.next_row);
-                w.put_u64(state.shrink_count);
-                w.put_u64(state.rows_seen);
-                w.put_f64(state.delta_sum);
-                w.put_f64(state.energy_seen);
-                w.put_f32_slice(&state.buf);
-            }
+            } => return encode_merge_sketch(session, *shard, state),
             Request::Freeze { session } => w.put_str(session),
             Request::Score {
                 session,
@@ -800,7 +808,12 @@ pub enum Response {
     Frozen(FrozenSketch),
     Selected { indices: Vec<u64>, weights: Vec<f32> },
     Stats { pairs: Vec<(String, u64)> },
-    Checkpointed { path: String },
+    Checkpointed {
+        path: String,
+        /// Highest WAL sequence number the checkpoint covers (0 when the
+        /// server runs with `--durability none`).
+        wal_seq: u64,
+    },
     /// Full registry snapshot: counters + gauges as name/value pairs,
     /// histograms as scalar summaries (the MetricsSnapshot reply).
     Metrics {
@@ -879,9 +892,10 @@ impl Response {
                 w.put_u8(RESP_STATS);
                 put_pairs(&mut w, pairs);
             }
-            Response::Checkpointed { path } => {
+            Response::Checkpointed { path, wal_seq } => {
                 w.put_u8(RESP_CHECKPOINTED);
                 w.put_str(path);
+                w.put_u64(*wal_seq);
             }
             Response::Metrics {
                 counters,
@@ -946,7 +960,10 @@ impl Response {
             RESP_STATS => Response::Stats {
                 pairs: get_pairs(&mut r)?,
             },
-            RESP_CHECKPOINTED => Response::Checkpointed { path: r.str()? },
+            RESP_CHECKPOINTED => Response::Checkpointed {
+                path: r.str()?,
+                wal_seq: r.u64()?,
+            },
             RESP_METRICS => {
                 let counters = get_pairs(&mut r)?;
                 let gauges = get_pairs(&mut r)?;
@@ -1095,6 +1112,7 @@ mod tests {
             },
             Response::Checkpointed {
                 path: "/tmp/x.sagesess".into(),
+                wal_seq: 17,
             },
             Response::Metrics {
                 counters: vec![("service.server.requests".into(), 12)],

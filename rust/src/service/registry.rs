@@ -55,7 +55,12 @@
 //! on the *same* shard are accepted but interleave nondeterministically.
 
 use super::checkpoint::SessionCheckpoint;
-use super::protocol::{fnv64, FrozenSketch, ScoreBatch};
+use super::protocol::{
+    encode_ingest_batch, encode_merge_sketch, encode_score, fnv64, op, FrozenSketch, Request,
+    ScoreBatch,
+};
+use super::storage::{LocalDirBackend, StorageBackend};
+use super::wal::{Durability, Wal, WalConfig, WalFaultPlan, WalRecord};
 use crate::baselines::{select_weighted, SelectionInputs};
 use crate::config::Method;
 use crate::selection::{scorer_state_bytes, AgreementScorer, Scores, ENTRY_BYTES};
@@ -65,8 +70,8 @@ use crate::util::channel::{bounded, Sender};
 use crate::util::metrics::{global as metrics, Counter};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::thread::JoinHandle;
 
 /// Registry knobs (admission control + backpressure depth + sharding).
@@ -88,6 +93,16 @@ pub struct RegistryConfig {
     /// Where `Checkpoint` ops persist sessions and where score caches are
     /// spilled under scorer-budget pressure (None = both disabled).
     pub checkpoint_dir: Option<PathBuf>,
+    /// Write-ahead-log durability for mutating ops (`--durability`).
+    /// Anything but `None` requires `checkpoint_dir` (the WAL lives under
+    /// it) and is enabled by calling [`SessionRegistry::open_wal`] after
+    /// [`SessionRegistry::recover`].
+    pub durability: Durability,
+    /// Per-WAL-shard live-segment bytes that trigger compaction
+    /// (`--wal-compact-mb`; 0 = never compact).
+    pub wal_compact_bytes: u64,
+    /// Crash-injection plan for the durability test harness.
+    pub wal_fault: WalFaultPlan,
 }
 
 impl Default for RegistryConfig {
@@ -99,6 +114,12 @@ impl Default for RegistryConfig {
             ingest_queue_depth: 8,
             registry_shards: 8,
             checkpoint_dir: None,
+            durability: Durability::None,
+            wal_compact_bytes: 64 << 20,
+            wal_fault: WalFaultPlan {
+                abort_at: None,
+                torn_at: None,
+            },
         }
     }
 }
@@ -357,6 +378,25 @@ pub struct Session {
     /// client explicitly checkpointed — then the `.sagesess` file is the
     /// client's durable state and is left alone.
     explicitly_checkpointed: std::sync::atomic::AtomicBool,
+    /// WAL replay watermark: highest log sequence number whose effect is
+    /// in this session's state (0 without a WAL). Embedded in checkpoints
+    /// so recovery replays only the records a snapshot doesn't cover.
+    wal_seq: AtomicU64,
+    /// Serializes (apply + WAL append) against checkpoint/spill snapshots,
+    /// so a snapshot's state always matches its embedded watermark
+    /// exactly. Never held while spilling *other* sessions (registry
+    /// retry loops drop it between attempts), so gates never nest.
+    wal_gate: Mutex<()>,
+    /// Set by `top_k` when a call actually finalized scores — the one
+    /// TopK that mutates state and therefore must be logged.
+    just_finalized: AtomicBool,
+    /// Registry runs with a WAL (`durability != none`): `.sagesess` files
+    /// under the checkpoint dir are then recovery state managed by the
+    /// registry — never deleted on unspill (a compaction checkpoint may be
+    /// the only copy of compacted records), always deleted on close (a
+    /// closed session must not resurrect after its Close record is
+    /// compacted away).
+    durable: bool,
     /// Fleet-wide aggregates (fixed names — global counters are interned
     /// forever, so they must NOT embed client-chosen session names).
     c_rows: &'static Counter,
@@ -384,6 +424,7 @@ impl Session {
         budgets: Budgets,
         sketch_reserved: usize,
         compute: Arc<dyn ComputeBackend>,
+        durable: bool,
     ) -> Session {
         debug_assert_eq!(shard_sketches.len(), shards);
         let stats = Arc::new(SessionStats::default());
@@ -422,6 +463,10 @@ impl Session {
             sketch_reserved,
             last_active: AtomicU64::new(0),
             explicitly_checkpointed: std::sync::atomic::AtomicBool::new(false),
+            wal_seq: AtomicU64::new(0),
+            wal_gate: Mutex::new(()),
+            just_finalized: AtomicBool::new(false),
+            durable,
             c_rows: metrics().counter("service.ingest.rows_enqueued"),
             c_batches: metrics().counter("service.ingest.batches"),
             c_scored: metrics().counter("service.score.entries"),
@@ -442,6 +487,7 @@ impl Session {
         budgets: Budgets,
         sketch_reserved: usize,
         compute: Arc<dyn ComputeBackend>,
+        durable: bool,
     ) -> Session {
         Session {
             name: name.to_string(),
@@ -462,6 +508,10 @@ impl Session {
             sketch_reserved,
             last_active: AtomicU64::new(0),
             explicitly_checkpointed: std::sync::atomic::AtomicBool::new(false),
+            wal_seq: AtomicU64::new(0),
+            wal_gate: Mutex::new(()),
+            just_finalized: AtomicBool::new(false),
+            durable,
             c_rows: metrics().counter("service.ingest.rows_enqueued"),
             c_batches: metrics().counter("service.ingest.batches"),
             c_scored: metrics().counter("service.score.entries"),
@@ -785,6 +835,9 @@ impl Session {
             p.scores = Some(acc.finalize_with(self.compute.as_ref()));
             let after = phase2_bytes(&p);
             self.budgets.scorer.rebalance(before, after);
+            // Only the finalizing TopK mutates state; the registry's WAL
+            // wrapper reads this flag to decide whether to log the call.
+            self.just_finalized.store(true, Ordering::Relaxed);
         }
         let scores = p.scores.as_ref().unwrap();
         let inputs = SelectionInputs {
@@ -815,6 +868,7 @@ impl Session {
             (format!("{p}.spilled"), u64::from(spilled)),
             (format!("{p}.scores_finalized"), u64::from(finalized)),
             (format!("{p}.frozen"), u64::from(self.is_frozen())),
+            (format!("{p}.wal_seq"), self.wal_seq.load(Ordering::Relaxed)),
             (
                 format!("{p}.rows_enqueued"),
                 s.rows_enqueued.load(Ordering::Relaxed),
@@ -889,18 +943,52 @@ impl Session {
             frozen,
             scorers,
             scores,
+            wal_seq: self.wal_seq.load(Ordering::Relaxed),
         })
+    }
+
+    /// Highest WAL sequence number reflected in this session's state
+    /// (0 when the WAL is disabled or nothing was logged yet).
+    fn wal_watermark(&self) -> u64 {
+        self.wal_seq.load(Ordering::Relaxed)
+    }
+
+    /// Record that this session's state now reflects WAL record `seq`.
+    /// Monotone: replay and live traffic can never move it backwards.
+    fn note_wal_seq(&self, seq: u64) {
+        self.wal_seq.fetch_max(seq, Ordering::Relaxed);
     }
 
     /// Snapshot into a checkpoint (quiesces acked ingest first). Includes
     /// the full Phase-II state, so recovery restores scoring bit-exactly.
+    /// Taken under the WAL gate so the image always matches its embedded
+    /// watermark: no record can land between the watermark read and the
+    /// state snapshot.
     ///
     /// # Errors
     /// Quiesce timeout, or an unreadable spill file.
     pub fn to_checkpoint(&self) -> Result<SessionCheckpoint, String> {
+        let _gate = self.wal_gate.lock().unwrap();
         self.quiesce(std::time::Duration::from_secs(10))?;
         let p = self.phase2.lock().unwrap();
         self.checkpoint_locked(&p)
+    }
+
+    /// Snapshot and save this session's checkpoint into `dir`, all under
+    /// the WAL gate: the saved image matches its embedded watermark
+    /// exactly, and two concurrent savers (explicit Checkpoint vs. WAL
+    /// compaction) can never race on the same temp file. Returns the file
+    /// path and the watermark that was persisted.
+    fn checkpoint_to(&self, dir: &Path) -> Result<(PathBuf, u64), String> {
+        let _gate = self.wal_gate.lock().unwrap();
+        self.quiesce(std::time::Duration::from_secs(10))?;
+        let ck = {
+            let p = self.phase2.lock().unwrap();
+            self.checkpoint_locked(&p)?
+        };
+        let path = dir.join(format!("{}.sagesess", self.name));
+        ck.save(&path)?;
+        Ok((path, ck.wal_seq))
     }
 
     /// Spill this session's Phase-II state to its `.sagesess` file in
@@ -913,6 +1001,12 @@ impl Session {
     /// Quiesce timeout or a failed checkpoint write (state then stays
     /// resident).
     pub fn spill_scores(&self, dir: &Path) -> Result<usize, String> {
+        // Under the WAL gate: a spill image taken mid-(apply, append)
+        // would snapshot state beyond its watermark and double-apply on
+        // replay. Spilled sessions are frozen and every later mutation
+        // unspills first, so the file's watermark stays authoritative for
+        // as long as the file is the in-disk copy.
+        let _gate = self.wal_gate.lock().unwrap();
         self.quiesce(std::time::Duration::from_secs(10))?;
         let mut p = self.phase2.lock().unwrap();
         if p.spilled.is_some() {
@@ -975,7 +1069,10 @@ impl Session {
         p.scorers = scorers;
         p.scores = scores;
         p.spilled = None;
-        if !self.explicitly_checkpointed.load(Ordering::Relaxed) {
+        // Durable mode keeps the file: a WAL compaction may have made this
+        // checkpoint the only copy of its already-deleted records. Replay
+        // stays correct because the in-memory watermark never regresses.
+        if !self.durable && !self.explicitly_checkpointed.load(Ordering::Relaxed) {
             let _ = std::fs::remove_file(&path);
         }
         metrics().counter("service.registry.unspills").inc();
@@ -993,6 +1090,7 @@ impl Session {
         budgets: Budgets,
         sketch_reserved: usize,
         compute: Arc<dyn ComputeBackend>,
+        durable: bool,
     ) -> Result<Session, String> {
         let (ell, d, shards) = (ck.ell as usize, ck.d as usize, ck.shards as usize);
         session_bytes(ell, d, shards)?; // validate recovered shapes too
@@ -1007,6 +1105,7 @@ impl Session {
                 budgets,
                 sketch_reserved,
                 compute,
+                durable,
             )
         } else {
             if ck.shard_states.len() != shards {
@@ -1034,6 +1133,7 @@ impl Session {
                 budgets,
                 sketch_reserved,
                 compute,
+                durable,
             )
         };
         *session.phase2.lock().unwrap() = Phase2 {
@@ -1041,6 +1141,8 @@ impl Session {
             scores,
             spilled: None,
         };
+        // Resume the watermark so replay skips records this image covers.
+        session.wal_seq.store(ck.wal_seq, Ordering::Relaxed);
         // The file this session was recovered from may be a client's
         // explicit checkpoint — never treat it as a transient spill file.
         session
@@ -1103,6 +1205,11 @@ pub struct SessionRegistry {
     /// threads its shared `tensor::ParallelBackend` in. Bit-identical
     /// results across backends keep served ≡ offline selection exact.
     compute: Arc<dyn ComputeBackend>,
+    /// Write-ahead log, set once by [`SessionRegistry::open_wal`] *after*
+    /// checkpoint recovery and replay. While unset (the default, and for
+    /// the whole of replay) mutating ops skip logging entirely, so replay
+    /// can drive the normal code paths without re-appending records.
+    wal: OnceLock<Arc<Wal>>,
 }
 
 impl SessionRegistry {
@@ -1124,7 +1231,21 @@ impl SessionRegistry {
             budgets,
             clock: AtomicU64::new(1),
             compute,
+            wal: OnceLock::new(),
         }
+    }
+
+    /// The WAL handle, if durability is enabled and replay has finished.
+    fn wal_handle(&self) -> Option<&Arc<Wal>> {
+        self.wal.get()
+    }
+
+    /// Whether sessions run under durable-mode file-lifecycle rules. True
+    /// from construction whenever the config asks for a WAL, *not* only
+    /// after `open_wal`: sessions rebuilt during replay must already keep
+    /// their compaction checkpoints alive across unspill.
+    fn durable(&self) -> bool {
+        self.cfg.durability != Durability::None
     }
 
     pub fn config(&self) -> &RegistryConfig {
@@ -1239,7 +1360,27 @@ impl SessionRegistry {
                 self.budgets.clone(),
                 new_bytes,
                 self.compute.clone(),
+                self.durable(),
             );
+            if let Some(wal) = self.wal_handle() {
+                let payload = Request::CreateSession {
+                    name: name.to_string(),
+                    ell: ell as u32,
+                    d: d as u32,
+                    shards: shards as u32,
+                }
+                .encode();
+                match wal.append(idx, op::CREATE_SESSION, &payload) {
+                    Ok(seq) => session.note_wal_seq(seq),
+                    Err(e) => {
+                        // Dropping the unpublished session releases its
+                        // budget reservations (Session::drop).
+                        drop(guard);
+                        drop(session);
+                        return Err(e);
+                    }
+                }
+            }
             guard.insert(name.to_string(), Arc::new(session));
             shard.session_count.fetch_add(1, Ordering::Relaxed);
             shard.sketch_bytes.fetch_add(new_bytes, Ordering::Relaxed);
@@ -1275,7 +1416,23 @@ impl SessionRegistry {
     pub fn close(&self, name: &str) -> Result<(), String> {
         let idx = self.shard_index(name);
         let shard = &self.shards[idx];
-        let removed = shard.sessions.write().unwrap().remove(name);
+        let removed = {
+            let mut guard = shard.sessions.write().unwrap();
+            if guard.contains_key(name) {
+                // The Close record goes in *before* the map removal (still
+                // under the write lock): if the append fails the session
+                // stays live, so the log never claims a close that did not
+                // happen.
+                if let Some(wal) = self.wal_handle() {
+                    let payload = Request::CloseSession {
+                        session: name.to_string(),
+                    }
+                    .encode();
+                    wal.append(idx, op::CLOSE_SESSION, &payload)?;
+                }
+            }
+            guard.remove(name)
+        };
         match removed {
             Some(session) => {
                 shard.session_count.fetch_sub(1, Ordering::Relaxed);
@@ -1284,10 +1441,15 @@ impl SessionRegistry {
                     .fetch_sub(session.resident_bytes(), Ordering::Relaxed);
                 // A transient spill file must not outlive its session — a
                 // later restart would resurrect a session the client
-                // closed. Explicit checkpoints are durable and stay.
-                if session.is_spilled()
-                    && !session.explicitly_checkpointed.load(Ordering::Relaxed)
-                {
+                // closed. Explicit checkpoints are durable and stay...
+                // except in durable mode, where a WAL compaction may since
+                // have deleted this session's records: once the Close
+                // record itself is compacted away, a surviving `.sagesess`
+                // would resurrect the session, so durable close always
+                // removes the file.
+                let transient_spill = session.is_spilled()
+                    && !session.explicitly_checkpointed.load(Ordering::Relaxed);
+                if self.durable() || transient_spill {
                     if let Some(dir) = &self.cfg.checkpoint_dir {
                         let _ = std::fs::remove_file(dir.join(format!("{name}.sagesess")));
                     }
@@ -1301,26 +1463,125 @@ impl SessionRegistry {
         }
     }
 
+    /// Durable ingest: apply through [`Session::ingest`], then append the
+    /// batch to the WAL under the session's gate (apply → append → ack; a
+    /// snapshot taken under the same gate therefore always matches its
+    /// watermark). Without a WAL this is exactly the session call.
+    ///
+    /// # Errors
+    /// Everything [`Session::ingest`] returns, plus WAL append failures
+    /// (the op *was* applied, but durability can no longer be promised —
+    /// the WAL poisons itself and refuses all later mutating ops).
+    pub fn ingest(&self, name: &str, shard: usize, rows: Matrix) -> Result<u64, String> {
+        let session = self.get(name)?;
+        let Some(wal) = self.wal_handle() else {
+            return session.ingest(shard, rows);
+        };
+        let payload = encode_ingest_batch(name, shard as u32, &rows);
+        let gate = session.wal_gate.lock().unwrap();
+        let acked = session.ingest(shard, rows)?;
+        let seq = wal.append(self.shard_index(name), op::INGEST_BATCH, &payload)?;
+        session.note_wal_seq(seq);
+        drop(gate);
+        self.maybe_compact();
+        Ok(acked)
+    }
+
+    /// Durable sketch merge (see [`SessionRegistry::ingest`] for the WAL
+    /// ordering contract).
+    ///
+    /// # Errors
+    /// Everything [`Session::merge_sketch`] returns, plus WAL append
+    /// failures.
+    pub fn merge_sketch(&self, name: &str, shard: usize, state: &SketchState) -> Result<(), String> {
+        let session = self.get(name)?;
+        let Some(wal) = self.wal_handle() else {
+            return session.merge_sketch(shard, state);
+        };
+        let payload = encode_merge_sketch(name, shard as u32, state);
+        let gate = session.wal_gate.lock().unwrap();
+        session.merge_sketch(shard, state)?;
+        let seq = wal.append(self.shard_index(name), op::MERGE_SKETCH, &payload)?;
+        session.note_wal_seq(seq);
+        drop(gate);
+        self.maybe_compact();
+        Ok(())
+    }
+
+    /// Durable freeze. Only the actual active→frozen transition is logged
+    /// — the call is idempotent, and replaying a second Freeze against the
+    /// rebuilt state would be a harmless but noisy no-op.
+    ///
+    /// # Errors
+    /// Everything [`Session::freeze`] returns, plus WAL append failures.
+    pub fn freeze(&self, name: &str) -> Result<FrozenSketch, String> {
+        let session = self.get(name)?;
+        let Some(wal) = self.wal_handle() else {
+            return session.freeze();
+        };
+        let _gate = session.wal_gate.lock().unwrap();
+        let was_frozen = session.is_frozen();
+        let info = session.freeze()?;
+        if !was_frozen {
+            let payload = Request::Freeze {
+                session: name.to_string(),
+            }
+            .encode();
+            let seq = wal.append(self.shard_index(name), op::FREEZE, &payload)?;
+            session.note_wal_seq(seq);
+        }
+        Ok(info)
+    }
+
     /// Score with spill-on-pressure: on a scorer-budget rejection, spill
     /// the least-recently-active *other* session's Phase-II state to the
     /// checkpoint dir and retry. Bounded retries; without a checkpoint dir
-    /// the first rejection is final.
+    /// the first rejection is final. Each attempt holds the session's WAL
+    /// gate only for (apply + append) — never across a spill of another
+    /// session, which takes *that* session's gate (no lock-order cycle).
     ///
     /// # Errors
     /// Everything [`Session::score`] returns; a [`SCORER_ADMISSION`] error
-    /// only after no further session can be spilled.
+    /// only after no further session can be spilled; WAL append failures.
     pub fn score(&self, name: &str, shard: usize, batch: &ScoreBatch) -> Result<(), String> {
         let session = self.get(name)?;
+        let wal = self.wal_handle().cloned();
+        let payload = wal.as_ref().map(|_| {
+            encode_score(
+                name,
+                shard as u32,
+                &batch.indices,
+                &batch.labels,
+                &batch.norms,
+                &batch.losses,
+                &batch.zhat,
+            )
+        });
         let mut last = String::new();
         for _ in 0..64 {
-            match session.score(shard, batch) {
+            let outcome = {
+                let _gate = session.wal_gate.lock().unwrap();
+                match session.score(shard, batch) {
+                    Ok(()) => match (wal.as_ref(), payload.as_deref()) {
+                        (Some(wal), Some(payload)) => wal
+                            .append(self.shard_index(name), op::SCORE, payload)
+                            .map(|seq| session.note_wal_seq(seq)),
+                        _ => Ok(()),
+                    },
+                    other => other,
+                }
+            };
+            match outcome {
                 Err(e) if e.starts_with(SCORER_ADMISSION) => {
                     if !self.spill_one(name) {
                         return Err(e);
                     }
                     last = e;
                 }
-                other => return other,
+                other => {
+                    self.maybe_compact();
+                    return other;
+                }
             }
         }
         Err(last)
@@ -1328,11 +1589,13 @@ impl SessionRegistry {
 
     /// TopK with spill-on-pressure (reloading this session's spilled state
     /// may need budget another session is holding — see
-    /// [`SessionRegistry::score`]).
+    /// [`SessionRegistry::score`]). Only the *finalizing* call mutates
+    /// state, so only that call is logged: the session's `just_finalized`
+    /// flag is cleared before and swapped after the attempt.
     ///
     /// # Errors
     /// Everything [`Session::top_k`] returns; a [`SCORER_ADMISSION`] error
-    /// only after no further session can be spilled.
+    /// only after no further session can be spilled; WAL append failures.
     pub fn top_k(
         &self,
         name: &str,
@@ -1342,16 +1605,48 @@ impl SessionRegistry {
         seed: u64,
     ) -> Result<(Vec<usize>, Option<Vec<f32>>), String> {
         let session = self.get(name)?;
+        let wal = self.wal_handle().cloned();
         let mut last = String::new();
         for _ in 0..64 {
-            match session.top_k(method, k, num_classes, seed) {
+            let outcome = {
+                let _gate = session.wal_gate.lock().unwrap();
+                session.just_finalized.store(false, Ordering::Relaxed);
+                match session.top_k(method, k, num_classes, seed) {
+                    Ok(result) => {
+                        let finalized = session.just_finalized.swap(false, Ordering::Relaxed);
+                        match (finalized, wal.as_ref()) {
+                            (true, Some(wal)) => {
+                                let payload = Request::TopK {
+                                    session: name.to_string(),
+                                    method: method.name().to_string(),
+                                    k: k as u64,
+                                    num_classes: num_classes as u32,
+                                    seed,
+                                }
+                                .encode();
+                                wal.append(self.shard_index(name), op::TOP_K, &payload)
+                                    .map(|seq| {
+                                        session.note_wal_seq(seq);
+                                        result
+                                    })
+                            }
+                            _ => Ok(result),
+                        }
+                    }
+                    Err(e) => Err(e),
+                }
+            };
+            match outcome {
                 Err(e) if e.starts_with(SCORER_ADMISSION) => {
                     if !self.spill_one(name) {
                         return Err(e);
                     }
                     last = e;
                 }
-                other => return other,
+                other => {
+                    self.maybe_compact();
+                    return other;
+                }
             }
         }
         Err(last)
@@ -1397,11 +1692,13 @@ impl SessionRegistry {
     }
 
     /// Persist one session into the configured checkpoint directory.
+    /// Returns the file path and the WAL watermark embedded in the image
+    /// (0 without a WAL) — the `Checkpointed` wire reply carries both.
     ///
     /// # Errors
     /// No checkpoint dir configured, unknown session, quiesce timeout, or
     /// a failed write.
-    pub fn checkpoint(&self, name: &str) -> Result<PathBuf, String> {
+    pub fn checkpoint(&self, name: &str) -> Result<(PathBuf, u64), String> {
         let dir = self
             .cfg
             .checkpoint_dir
@@ -1409,16 +1706,15 @@ impl SessionRegistry {
             .ok_or_else(|| "server has no --checkpoint-dir configured".to_string())?
             .clone();
         let session = self.get(name)?;
-        let ck = session.to_checkpoint()?;
-        let path = dir.join(format!("{name}.sagesess"));
-        ck.save(&path)?;
+        let (path, wal_seq) = session.checkpoint_to(&dir)?;
         // From here on the file is the client's durable state: spill
-        // reloads and CloseSession must leave it in place.
+        // reloads and CloseSession must leave it in place (non-durable
+        // mode; durable close always removes it — see `close`).
         session
             .explicitly_checkpointed
             .store(true, Ordering::Relaxed);
         metrics().counter("service.registry.checkpoints").inc();
-        Ok(path)
+        Ok((path, wal_seq))
     }
 
     /// Recover every `*.sagesess` session from `dir` (server restart).
@@ -1480,6 +1776,7 @@ impl SessionRegistry {
             self.budgets.clone(),
             new_bytes,
             self.compute.clone(),
+            self.durable(),
         ) {
             Ok(session) => session,
             Err(e) => {
@@ -1501,6 +1798,289 @@ impl SessionRegistry {
         }
         self.publish_shard_gauges(idx);
         Ok(())
+    }
+
+    /// Open the write-ahead log in the checkpoint directory, replay every
+    /// surviving record on top of the recovered checkpoints, compact the
+    /// replayed segments into fresh checkpoints, and only then arm live
+    /// logging. Call once at startup, after [`SessionRegistry::recover`];
+    /// while replay runs the WAL handle is still unset, so the normal
+    /// create / ingest / score paths it drives do not re-append records.
+    /// Returns the highest sequence number the log has ever assigned.
+    /// No-op returning 0 with `--durability none`.
+    ///
+    /// # Errors
+    /// Durability without a checkpoint dir, an unusable WAL directory, or
+    /// a double open. Per-record replay failures and a failed startup
+    /// compaction only WARN — one bad record or full disk must not block
+    /// startup.
+    pub fn open_wal(&self) -> Result<u64, String> {
+        if self.cfg.durability == Durability::None {
+            return Ok(0);
+        }
+        let dir = self
+            .cfg
+            .checkpoint_dir
+            .as_ref()
+            .ok_or_else(|| {
+                "durability requires --checkpoint-dir (the WAL lives beside the checkpoints)"
+                    .to_string()
+            })?
+            .clone();
+        let storage: Arc<dyn StorageBackend> = Arc::new(LocalDirBackend::create(&dir)?);
+        let wal_cfg = WalConfig {
+            shards: self.shards.len(),
+            durability: self.cfg.durability,
+            compact_bytes: self.cfg.wal_compact_bytes,
+            fault: self.cfg.wal_fault,
+        };
+        let (wal, records) = Wal::open(storage, &wal_cfg)?;
+        let wal = Arc::new(wal);
+        let start = std::time::Instant::now();
+        let total = records.len();
+        let mut applied = 0usize;
+        for record in &records {
+            match self.replay_record(record) {
+                Ok(true) => applied += 1,
+                Ok(false) => {}
+                Err(e) => crate::log_warn!(
+                    "WAL replay skipped record {} (op {}): {e}",
+                    record.seq,
+                    record.op
+                ),
+            }
+        }
+        metrics()
+            .counter("service.wal.replayed_records")
+            .add(applied as u64);
+        metrics()
+            .histogram("service.wal.replay.ns")
+            .record(start.elapsed().as_nanos() as u64);
+        if total > 0 {
+            crate::log_info!(
+                "WAL replay: applied {applied}/{total} records (last seq {})",
+                wal.last_seq()
+            );
+        }
+        // Fold the replayed segments into checkpoints, then delete them:
+        // every resident session is re-saved with a watermark covering all
+        // replayed records, so the old segments are dead weight. Crashing
+        // in between is safe — replay is idempotent under watermarks — and
+        // a failed fold just retains the segments for the next restart.
+        if wal.has_stale_segments() {
+            match self.checkpoint_all_resident() {
+                Ok(()) => match wal.purge_stale_segments() {
+                    Ok(purged) if purged > 0 => {
+                        metrics().counter("service.wal.compactions").inc();
+                        crate::log_info!(
+                            "WAL startup compaction: purged {purged} replayed segments"
+                        );
+                    }
+                    Ok(_) => {}
+                    Err(e) => crate::log_warn!("WAL startup compaction: purge failed: {e}"),
+                },
+                Err(e) => crate::log_warn!(
+                    "WAL startup compaction skipped: {e} (replayed segments retained)"
+                ),
+            }
+        }
+        let last = wal.last_seq();
+        self.wal
+            .set(wal)
+            .map_err(|_| "WAL already open for this registry".to_string())?;
+        Ok(last)
+    }
+
+    /// Resolve the session a replayed record targets: `None` when the
+    /// session is gone (closed later in the log) or its checkpoint
+    /// watermark already covers the record.
+    fn replay_target(&self, name: &str, seq: u64) -> Option<Arc<Session>> {
+        let idx = self.shard_index(name);
+        let session = self.shards[idx].sessions.read().unwrap().get(name).cloned();
+        session.filter(|s| s.wal_watermark() < seq)
+    }
+
+    /// Apply one replayed WAL record through the normal (non-logging)
+    /// paths — replay in global `seq` order reproduces a valid serial
+    /// history, budgets and spill-on-pressure included. Returns whether
+    /// the record mutated state (`false` = covered by a watermark or the
+    /// session no longer exists).
+    fn replay_record(&self, record: &WalRecord) -> Result<bool, String> {
+        let req = Request::decode(record.op, &record.payload)?;
+        match req {
+            Request::CreateSession {
+                name,
+                ell,
+                d,
+                shards,
+            } => {
+                let idx = self.shard_index(&name);
+                let exists = self.shards[idx]
+                    .sessions
+                    .read()
+                    .unwrap()
+                    .contains_key(&name);
+                if exists {
+                    // Rebuilt from a checkpoint whose watermark may still
+                    // predate this record; bump it so later records for
+                    // this session replay exactly once.
+                    self.get(&name)?.note_wal_seq(record.seq);
+                    return Ok(false);
+                }
+                self.create(&name, ell as usize, d as usize, shards as usize)?;
+                self.get(&name)?.note_wal_seq(record.seq);
+                Ok(true)
+            }
+            Request::IngestBatch {
+                session,
+                shard,
+                rows,
+            } => match self.replay_target(&session, record.seq) {
+                None => Ok(false),
+                Some(s) => {
+                    s.ingest(shard as usize, rows)?;
+                    s.note_wal_seq(record.seq);
+                    Ok(true)
+                }
+            },
+            Request::MergeSketch {
+                session,
+                shard,
+                state,
+            } => match self.replay_target(&session, record.seq) {
+                None => Ok(false),
+                Some(s) => {
+                    s.merge_sketch(shard as usize, &state)?;
+                    s.note_wal_seq(record.seq);
+                    Ok(true)
+                }
+            },
+            Request::Freeze { session } => match self.replay_target(&session, record.seq) {
+                None => Ok(false),
+                Some(s) => {
+                    s.freeze()?;
+                    s.note_wal_seq(record.seq);
+                    Ok(true)
+                }
+            },
+            Request::Score {
+                session,
+                shard,
+                batch,
+            } => match self.replay_target(&session, record.seq) {
+                None => Ok(false),
+                Some(_) => {
+                    self.score(&session, shard as usize, &batch)?;
+                    self.get(&session)?.note_wal_seq(record.seq);
+                    Ok(true)
+                }
+            },
+            Request::TopK {
+                session,
+                method,
+                k,
+                num_classes,
+                seed,
+            } => match self.replay_target(&session, record.seq) {
+                None => Ok(false),
+                Some(_) => {
+                    let method = Method::parse(&method)?;
+                    self.top_k(&session, method, k as usize, num_classes as usize, seed)?;
+                    self.get(&session)?.note_wal_seq(record.seq);
+                    Ok(true)
+                }
+            },
+            Request::CloseSession { session } => {
+                let idx = self.shard_index(&session);
+                let exists = self.shards[idx]
+                    .sessions
+                    .read()
+                    .unwrap()
+                    .contains_key(&session);
+                if !exists {
+                    return Ok(false);
+                }
+                self.close(&session)?;
+                Ok(true)
+            }
+            other => Err(format!("non-mutating op {} in the WAL", other.opcode())),
+        }
+    }
+
+    /// Re-checkpoint every resident (non-spilled) session — the compaction
+    /// write barrier. Spilled sessions are skipped: their on-disk image
+    /// already carries a watermark covering all their records (every
+    /// mutation unspills first), and durable-mode unspill never deletes
+    /// it.
+    fn checkpoint_all_resident(&self) -> Result<(), String> {
+        let dir = self
+            .cfg
+            .checkpoint_dir
+            .as_ref()
+            .ok_or_else(|| "no checkpoint dir".to_string())?
+            .clone();
+        for shard in &self.shards {
+            let sessions: Vec<Arc<Session>> =
+                shard.sessions.read().unwrap().values().cloned().collect();
+            for session in sessions {
+                if session.is_spilled() {
+                    continue;
+                }
+                session.checkpoint_to(&dir)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Inline compaction: when a WAL shard crosses its size threshold,
+    /// rotate it onto a fresh segment, fold the live state into
+    /// checkpoints, and delete the sealed segments. Runs on the mutating
+    /// path that crossed the threshold (after its gate is released); the
+    /// per-shard CAS slot keeps each shard single-flight. Crash-safe at
+    /// every step: segments are deleted only after every resident session
+    /// persisted a covering watermark, and any failure just retains them.
+    fn maybe_compact(&self) {
+        let Some(wal) = self.wal_handle() else { return };
+        let mut claimed: Vec<usize> = Vec::new();
+        for shard in 0..self.shards.len() {
+            if wal.wants_compaction(shard) && wal.begin_compaction(shard) {
+                claimed.push(shard);
+            }
+        }
+        if claimed.is_empty() {
+            return;
+        }
+        let mut sealed: Vec<String> = Vec::new();
+        let mut rotate_failed = false;
+        for &shard in &claimed {
+            match wal.rotate(shard) {
+                Ok(keys) => sealed.extend(keys),
+                Err(e) => {
+                    crate::log_warn!("WAL compaction: rotate of shard {shard} failed: {e}");
+                    rotate_failed = true;
+                }
+            }
+        }
+        if !sealed.is_empty() && !rotate_failed {
+            let folded = self
+                .checkpoint_all_resident()
+                .and_then(|()| wal.delete_segments(&sealed));
+            // (rotate() already counted service.wal.compactions per shard.)
+            match folded {
+                Ok(()) => {
+                    crate::log_info!(
+                        "WAL compaction: folded state and deleted {} sealed segments",
+                        sealed.len()
+                    );
+                }
+                Err(e) => crate::log_warn!(
+                    "WAL compaction deferred: {e} (sealed segments retained; replay still covers them)"
+                ),
+            }
+        }
+        for &shard in &claimed {
+            wal.end_compaction(shard);
+        }
     }
 
     /// Stats for the wire op: one session's counters, or (empty name)
@@ -1554,8 +2134,20 @@ impl SessionRegistry {
                 shard.sketch_bytes.load(Ordering::Relaxed) as u64,
             ));
         }
+        if let Some(wal) = self.wal_handle() {
+            pairs.push(("service.wal.last_seq".to_string(), wal.last_seq()));
+            pairs.push((
+                "service.wal.durability".to_string(),
+                match wal.durability() {
+                    Durability::None => 0,
+                    Durability::Async => 1,
+                    Durability::Sync => 2,
+                },
+            ));
+        }
         pairs.extend(metrics().snapshot_counters("service.server."));
         pairs.extend(metrics().snapshot_counters("service.registry."));
+        pairs.extend(metrics().snapshot_counters("service.wal."));
         for shard in &self.shards {
             let sessions: Vec<Arc<Session>> =
                 shard.sessions.read().unwrap().values().cloned().collect();
@@ -1942,6 +2534,81 @@ mod tests {
         assert_eq!(got, expected);
         // Recovered scorer bytes are accounted.
         assert!(reg2.scorer_bytes() > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wal_replay_after_drop_is_bit_exact() {
+        let dir = std::env::temp_dir().join(format!("sage_reg_wal_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = RegistryConfig {
+            checkpoint_dir: Some(dir.clone()),
+            durability: Durability::Sync,
+            ..Default::default()
+        };
+        let reg = SessionRegistry::new(cfg.clone());
+        assert_eq!(reg.open_wal().unwrap(), 0);
+        reg.create("w", 4, 8, 2).unwrap();
+        let mut rng = Pcg64::seeded(9);
+        reg.ingest("w", 0, random_rows(&mut rng, 12, 8)).unwrap();
+        reg.ingest("w", 1, random_rows(&mut rng, 7, 8)).unwrap();
+        reg.freeze("w").unwrap();
+        reg.score("w", 0, &score_batch(4, 4, 0)).unwrap();
+        reg.score("w", 1, &score_batch(3, 4, 4)).unwrap();
+        let (expected, _) = reg.top_k("w", Method::Sage, 3, 2, 7).unwrap();
+        // A created-then-closed session must not resurrect on replay.
+        reg.create("gone", 2, 4, 1).unwrap();
+        reg.close("gone").unwrap();
+        let live = reg.get("w").unwrap().to_checkpoint().unwrap();
+        assert!(live.wal_seq > 0, "live state should carry a watermark");
+        drop(reg);
+
+        // Simulated crash: no checkpoint was ever written, so recovery
+        // finds nothing and replay rebuilds everything from the log alone.
+        let reg2 = SessionRegistry::new(cfg);
+        assert_eq!(reg2.recover(&dir), 0, "no .sagesess files expected");
+        assert!(reg2.open_wal().unwrap() >= live.wal_seq);
+        assert!(reg2.get("gone").is_err(), "closed session resurrected");
+        let replayed = reg2.get("w").unwrap().to_checkpoint().unwrap();
+        assert_eq!(replayed, live, "replayed state must be bit-exact");
+        let (got, _) = reg2.top_k("w", Method::Sage, 3, 2, 7).unwrap();
+        assert_eq!(got, expected);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wal_replay_skips_records_covered_by_a_checkpoint() {
+        let dir = std::env::temp_dir().join(format!("sage_reg_walck_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = RegistryConfig {
+            checkpoint_dir: Some(dir.clone()),
+            durability: Durability::Sync,
+            ..Default::default()
+        };
+        let reg = SessionRegistry::new(cfg.clone());
+        reg.open_wal().unwrap();
+        reg.create("c", 4, 8, 1).unwrap();
+        let mut rng = Pcg64::seeded(4);
+        reg.ingest("c", 0, random_rows(&mut rng, 10, 8)).unwrap();
+        let (_, ck_seq) = reg.checkpoint("c").unwrap();
+        assert!(ck_seq > 0);
+        // One more batch after the checkpoint: replay must apply exactly
+        // this record on top of the image — not the pre-checkpoint ones
+        // (double-applying an ingest would visibly change rows_seen).
+        reg.ingest("c", 0, random_rows(&mut rng, 5, 8)).unwrap();
+        reg.freeze("c").unwrap();
+        let live = reg.get("c").unwrap().to_checkpoint().unwrap();
+        drop(reg);
+
+        let reg2 = SessionRegistry::new(cfg);
+        assert_eq!(reg2.recover(&dir), 1);
+        reg2.open_wal().unwrap();
+        let replayed = reg2.get("c").unwrap().to_checkpoint().unwrap();
+        assert_eq!(replayed, live);
+        let frozen = reg2.get("c").unwrap().freeze().unwrap();
+        assert_eq!(frozen.rows_seen, 15);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -102,6 +102,15 @@ impl Server {
                 crate::log_info!("recovered {n} session(s) from {}", dir.display());
             }
         }
+        // WAL replay rides on top of the recovered checkpoints; only after
+        // it finishes does the registry start logging live traffic.
+        let last_seq = registry.open_wal()?;
+        if last_seq > 0 {
+            crate::log_info!(
+                "WAL open: durability={}, last seq {last_seq}",
+                cfg.registry.durability.name()
+            );
+        }
         Ok(Server {
             listener,
             metrics_listener,
@@ -388,24 +397,23 @@ pub fn dispatch(registry: &SessionRegistry, request: Request) -> Response {
         } => registry
             .create(&name, ell as usize, d as usize, shards as usize)
             .map(|()| Response::Ok),
+        // Mutating ops go through the registry wrappers, which append to
+        // the WAL under the session's gate when durability is on.
         Request::IngestBatch {
             session,
             shard,
             rows,
-        } => registry.get(&session).and_then(|s| {
-            s.ingest(shard as usize, rows)
-                .map(|rows_seen| Response::Ingested { rows_seen })
-        }),
+        } => registry
+            .ingest(&session, shard as usize, rows)
+            .map(|rows_seen| Response::Ingested { rows_seen }),
         Request::MergeSketch {
             session,
             shard,
             state,
         } => registry
-            .get(&session)
-            .and_then(|s| s.merge_sketch(shard as usize, &state).map(|()| Response::Ok)),
-        Request::Freeze { session } => registry
-            .get(&session)
-            .and_then(|s| s.freeze().map(Response::Frozen)),
+            .merge_sketch(&session, shard as usize, &state)
+            .map(|()| Response::Ok),
+        Request::Freeze { session } => registry.freeze(&session).map(Response::Frozen),
         // Score and TopK go through the registry (not the session) so the
         // scorer-budget spill-on-pressure path can evict idle sessions.
         Request::Score {
@@ -429,11 +437,14 @@ pub fn dispatch(registry: &SessionRegistry, request: Request) -> Response {
                 weights: weights.unwrap_or_default(),
             })
         }),
-        Request::Checkpoint { session } => registry.checkpoint(&session).map(|path| {
-            Response::Checkpointed {
-                path: path.display().to_string(),
-            }
-        }),
+        Request::Checkpoint { session } => {
+            registry
+                .checkpoint(&session)
+                .map(|(path, wal_seq)| Response::Checkpointed {
+                    path: path.display().to_string(),
+                    wal_seq,
+                })
+        }
         Request::Stats { session } => registry
             .stats_pairs(&session)
             .map(|pairs| Response::Stats { pairs }),

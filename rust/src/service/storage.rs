@@ -1,0 +1,445 @@
+//! Pluggable durable storage for the service's WAL segments.
+//!
+//! The [`StorageBackend`] trait is deliberately object-store shaped: flat
+//! string keys with `/` separators (no directory semantics beyond listing
+//! by prefix), whole-object atomic replacement, and an append stream for
+//! log segments. A local filesystem implementation ([`LocalDirBackend`])
+//! backs production today; an S3/GCS-style implementation only needs to
+//! map the same seven operations onto multipart uploads, which is why the
+//! WAL layer (`service::wal`) never touches `std::fs` directly.
+//!
+//! Two implementations ship:
+//!
+//! * [`LocalDirBackend`] — keys are paths under a root directory.
+//!   `put_atomic` is temp-file + fsync + rename (a crash mid-write can
+//!   never damage the previous object), and append handles expose a
+//!   cloned-descriptor [`SyncHandle`] so a group-commit leader can fsync
+//!   outside the appender's lock.
+//! * [`MemStorage`] — an in-memory map for unit tests; `sync` is a no-op.
+//!
+//! Durability vocabulary: `append` + `flush` make bytes visible to a
+//! re-reader of the same backend; only [`SyncHandle::sync`] (fsync) makes
+//! them survive a process or host crash on the local backend.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// One durable object namespace (a directory tree or a bucket).
+///
+/// Keys are relative, `/`-separated, and never start with `/`. All methods
+/// are safe to call from multiple threads; per-key append streams are
+/// single-writer by construction (the WAL holds one handle per shard).
+pub trait StorageBackend: Send + Sync {
+    /// Human-readable backend identity for logs.
+    fn kind(&self) -> &'static str;
+
+    /// Atomically replace the object at `key` with `bytes`: after a crash
+    /// at any point, a reader sees either the old object or the new one,
+    /// never a prefix.
+    fn put_atomic(&self, key: &str, bytes: &[u8]) -> Result<(), String>;
+
+    /// Full object contents, or `None` if the key does not exist.
+    fn read(&self, key: &str) -> Result<Option<Vec<u8>>, String>;
+
+    /// All keys starting with `prefix`, lexicographically sorted.
+    fn list(&self, prefix: &str) -> Result<Vec<String>, String>;
+
+    /// Remove the object. Removing a missing key is not an error.
+    fn delete(&self, key: &str) -> Result<(), String>;
+
+    /// Shrink the object to `len` bytes (torn-tail repair). The key must
+    /// exist.
+    fn truncate(&self, key: &str, len: u64) -> Result<(), String>;
+
+    /// Object size in bytes, or `None` if the key does not exist.
+    fn size(&self, key: &str) -> Result<Option<u64>, String>;
+
+    /// Open `key` for appending, creating it (and any parent namespace)
+    /// if missing. Writes go to the current end of the object.
+    fn open_append(&self, key: &str) -> Result<Box<dyn AppendHandle>, String>;
+}
+
+/// A single-writer append stream over one object.
+pub trait AppendHandle: Send {
+    /// Buffer `bytes` at the end of the object.
+    fn append(&mut self, bytes: &[u8]) -> Result<(), String>;
+
+    /// Make appended bytes visible to readers of the same backend (not
+    /// necessarily crash-durable — that is [`SyncHandle::sync`]).
+    fn flush(&mut self) -> Result<(), String>;
+
+    /// An independent crash-durability handle for this object, usable from
+    /// another thread while appends continue (group commit: the leader
+    /// fsyncs on the syncer while followers keep writing under the lock).
+    fn syncer(&self) -> Result<Arc<dyn SyncHandle>, String>;
+}
+
+/// Crash-durability barrier for one object: on return, every byte flushed
+/// before the call survives a process or OS crash.
+pub trait SyncHandle: Send + Sync {
+    fn sync(&self) -> Result<(), String>;
+}
+
+// ---------------------------------------------------------------------------
+// Local filesystem backend
+// ---------------------------------------------------------------------------
+
+/// [`StorageBackend`] over a root directory; keys map to relative paths.
+pub struct LocalDirBackend {
+    root: PathBuf,
+}
+
+impl LocalDirBackend {
+    /// Root the backend at `root`, creating the directory if missing.
+    pub fn create(root: &Path) -> Result<Self, String> {
+        std::fs::create_dir_all(root).map_err(|e| format!("{}: {e}", root.display()))?;
+        Ok(Self {
+            root: root.to_path_buf(),
+        })
+    }
+
+    fn path_of(&self, key: &str) -> PathBuf {
+        self.root.join(key)
+    }
+
+    fn walk(&self, dir: &Path, out: &mut Vec<String>) -> Result<(), String> {
+        let entries = match std::fs::read_dir(dir) {
+            Ok(entries) => entries,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+            Err(e) => return Err(format!("{}: {e}", dir.display())),
+        };
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                self.walk(&path, out)?;
+            } else if let Ok(rel) = path.strip_prefix(&self.root) {
+                // Keys use `/` regardless of host separator.
+                let key: Vec<String> = rel
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect();
+                out.push(key.join("/"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl StorageBackend for LocalDirBackend {
+    fn kind(&self) -> &'static str {
+        "local-dir"
+    }
+
+    fn put_atomic(&self, key: &str, bytes: &[u8]) -> Result<(), String> {
+        let path = self.path_of(key);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).map_err(|e| format!("{}: {e}", parent.display()))?;
+        }
+        let tmp = path.with_extension("tmp");
+        let mut f = File::create(&tmp).map_err(|e| format!("{}: {e}", tmp.display()))?;
+        f.write_all(bytes).map_err(|e| format!("{}: {e}", tmp.display()))?;
+        f.sync_all().map_err(|e| format!("{}: {e}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, &path).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    fn read(&self, key: &str) -> Result<Option<Vec<u8>>, String> {
+        match std::fs::read(self.path_of(key)) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(format!("{key}: {e}")),
+        }
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, String> {
+        let mut keys = Vec::new();
+        let root = self.root.clone();
+        self.walk(&root, &mut keys)?;
+        keys.retain(|k| k.starts_with(prefix));
+        keys.sort();
+        Ok(keys)
+    }
+
+    fn delete(&self, key: &str) -> Result<(), String> {
+        match std::fs::remove_file(self.path_of(key)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(format!("{key}: {e}")),
+        }
+    }
+
+    fn truncate(&self, key: &str, len: u64) -> Result<(), String> {
+        let f = OpenOptions::new()
+            .write(true)
+            .open(self.path_of(key))
+            .map_err(|e| format!("{key}: {e}"))?;
+        f.set_len(len).map_err(|e| format!("{key}: {e}"))?;
+        f.sync_all().map_err(|e| format!("{key}: {e}"))
+    }
+
+    fn size(&self, key: &str) -> Result<Option<u64>, String> {
+        match std::fs::metadata(self.path_of(key)) {
+            Ok(m) => Ok(Some(m.len())),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(format!("{key}: {e}")),
+        }
+    }
+
+    fn open_append(&self, key: &str) -> Result<Box<dyn AppendHandle>, String> {
+        let path = self.path_of(key);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).map_err(|e| format!("{}: {e}", parent.display()))?;
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(Box::new(LocalAppend {
+            file,
+            key: key.to_string(),
+        }))
+    }
+}
+
+struct LocalAppend {
+    file: File,
+    key: String,
+}
+
+impl AppendHandle for LocalAppend {
+    fn append(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.file
+            .write_all(bytes)
+            .map_err(|e| format!("{}: {e}", self.key))
+    }
+
+    fn flush(&mut self) -> Result<(), String> {
+        // `File` writes are unbuffered; flush is a no-op kept for trait
+        // symmetry with buffered backends.
+        Ok(())
+    }
+
+    fn syncer(&self) -> Result<Arc<dyn SyncHandle>, String> {
+        let clone = self
+            .file
+            .try_clone()
+            .map_err(|e| format!("{}: {e}", self.key))?;
+        Ok(Arc::new(LocalSync {
+            file: clone,
+            key: self.key.clone(),
+        }))
+    }
+}
+
+struct LocalSync {
+    file: File,
+    key: String,
+}
+
+impl SyncHandle for LocalSync {
+    fn sync(&self) -> Result<(), String> {
+        self.file
+            .sync_data()
+            .map_err(|e| format!("{}: {e}", self.key))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-memory backend (tests)
+// ---------------------------------------------------------------------------
+
+type MemMap = Arc<Mutex<BTreeMap<String, Vec<u8>>>>;
+
+/// In-memory [`StorageBackend`] for unit tests. Always "durable": there is
+/// no crash boundary, so `sync` is a no-op and `put_atomic` is a plain map
+/// insert.
+#[derive(Default)]
+pub struct MemStorage {
+    objects: MemMap,
+}
+
+impl MemStorage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl StorageBackend for MemStorage {
+    fn kind(&self) -> &'static str {
+        "mem"
+    }
+
+    fn put_atomic(&self, key: &str, bytes: &[u8]) -> Result<(), String> {
+        self.objects
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn read(&self, key: &str) -> Result<Option<Vec<u8>>, String> {
+        Ok(self.objects.lock().unwrap().get(key).cloned())
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, String> {
+        Ok(self
+            .objects
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect())
+    }
+
+    fn delete(&self, key: &str) -> Result<(), String> {
+        self.objects.lock().unwrap().remove(key);
+        Ok(())
+    }
+
+    fn truncate(&self, key: &str, len: u64) -> Result<(), String> {
+        let mut map = self.objects.lock().unwrap();
+        let obj = map.get_mut(key).ok_or_else(|| format!("{key}: missing"))?;
+        obj.truncate(len as usize);
+        Ok(())
+    }
+
+    fn size(&self, key: &str) -> Result<Option<u64>, String> {
+        Ok(self.objects.lock().unwrap().get(key).map(|v| v.len() as u64))
+    }
+
+    fn open_append(&self, key: &str) -> Result<Box<dyn AppendHandle>, String> {
+        self.objects
+            .lock()
+            .unwrap()
+            .entry(key.to_string())
+            .or_default();
+        Ok(Box::new(MemAppend {
+            objects: Arc::clone(&self.objects),
+            key: key.to_string(),
+        }))
+    }
+}
+
+struct MemAppend {
+    objects: MemMap,
+    key: String,
+}
+
+impl AppendHandle for MemAppend {
+    fn append(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut map = self.objects.lock().unwrap();
+        map.entry(self.key.clone())
+            .or_default()
+            .extend_from_slice(bytes);
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn syncer(&self) -> Result<Arc<dyn SyncHandle>, String> {
+        Ok(Arc::new(MemSync))
+    }
+}
+
+struct MemSync;
+
+impl SyncHandle for MemSync {
+    fn sync(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "sage-storage-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn exercise(storage: &dyn StorageBackend) {
+        // put_atomic / read / size
+        storage.put_atomic("a/one.bin", b"hello").unwrap();
+        storage.put_atomic("a/one.bin", b"hello2").unwrap();
+        assert_eq!(storage.read("a/one.bin").unwrap().unwrap(), b"hello2");
+        assert_eq!(storage.size("a/one.bin").unwrap(), Some(6));
+        assert_eq!(storage.read("a/absent").unwrap(), None);
+        assert_eq!(storage.size("a/absent").unwrap(), None);
+
+        // append streams survive handle reopen and interleave with reads
+        let mut h = storage.open_append("a/log.bin").unwrap();
+        h.append(b"abc").unwrap();
+        h.append(b"def").unwrap();
+        h.flush().unwrap();
+        h.syncer().unwrap().sync().unwrap();
+        drop(h);
+        assert_eq!(storage.read("a/log.bin").unwrap().unwrap(), b"abcdef");
+        let mut h = storage.open_append("a/log.bin").unwrap();
+        h.append(b"ghi").unwrap();
+        h.flush().unwrap();
+        drop(h);
+        assert_eq!(storage.read("a/log.bin").unwrap().unwrap(), b"abcdefghi");
+
+        // truncate repairs a torn tail
+        storage.truncate("a/log.bin", 4).unwrap();
+        assert_eq!(storage.read("a/log.bin").unwrap().unwrap(), b"abcd");
+
+        // list is prefix-filtered and sorted
+        storage.put_atomic("b/two.bin", b"x").unwrap();
+        let all = storage.list("").unwrap();
+        assert_eq!(all, vec!["a/log.bin", "a/one.bin", "b/two.bin"]);
+        assert_eq!(storage.list("a/").unwrap(), vec!["a/log.bin", "a/one.bin"]);
+
+        // delete is idempotent
+        storage.delete("b/two.bin").unwrap();
+        storage.delete("b/two.bin").unwrap();
+        assert_eq!(storage.read("b/two.bin").unwrap(), None);
+    }
+
+    #[test]
+    fn local_dir_backend_contract() {
+        let root = temp_root("local");
+        let storage = LocalDirBackend::create(&root).unwrap();
+        exercise(&storage);
+        // No stray temp files once atomic puts complete.
+        let leftovers = storage.list("").unwrap();
+        assert!(
+            leftovers.iter().all(|k| !k.ends_with(".tmp")),
+            "temp files leaked: {leftovers:?}"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn mem_backend_contract() {
+        exercise(&MemStorage::new());
+    }
+
+    #[test]
+    fn local_put_atomic_leaves_old_object_on_missing_rename() {
+        // Simulate the crash window: a partial temp file next to a good
+        // object must never shadow it, and the next put cleans it up.
+        let root = temp_root("atomic");
+        let storage = LocalDirBackend::create(&root).unwrap();
+        storage.put_atomic("ck/state.bin", b"good").unwrap();
+        std::fs::write(root.join("ck/state.tmp"), b"par").unwrap();
+        assert_eq!(storage.read("ck/state.bin").unwrap().unwrap(), b"good");
+        storage.put_atomic("ck/state.bin", b"better").unwrap();
+        assert_eq!(storage.read("ck/state.bin").unwrap().unwrap(), b"better");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,749 @@
+//! Per-shard write-ahead log for durable ingest.
+//!
+//! Every state-mutating wire op (CreateSession, IngestBatch, MergeSketch,
+//! Freeze, Score, TopK, CloseSession) is appended here *after* it applies
+//! and *before* it is acknowledged: an acked op is in the log, an unacked
+//! op may be lost and retried — the wire protocol's existing at-least-once
+//! contract (docs/PROTOCOL.md §5). Because FD insertion, shard-order
+//! merges, and scorer accumulation are deterministic (the paper's core
+//! guarantee; enforced bit-for-bit by `tests/kernel_determinism.rs`),
+//! replaying the log on top of the newest checkpoint reproduces session
+//! state *exactly* — durability comes for free from determinism.
+//!
+//! ## Record format (docs/PROTOCOL.md §9, golden-tested)
+//!
+//! ```text
+//! len      u32   byte length of seq + op + payload (= 9 + payload len)
+//! seq      u64   global monotone sequence number (1-based)
+//! op       u8    wire opcode of the logged request
+//! payload  …     Request::encode() bytes (the wire payload codec)
+//! fnv64    u64   FNV-1a 64 checksum of len + seq + op + payload
+//! ```
+//!
+//! `seq` is global across all shards, so per-session replay watermarks in
+//! checkpoints stay valid even if the shard count changes between runs;
+//! each shard's segment holds a strictly increasing subsequence and replay
+//! merges all shards by `seq`.
+//!
+//! ## Segments, torn tails, compaction
+//!
+//! Records append to `wal/shard-NNN/segment-<first_seq>.sagewal` objects
+//! behind a [`StorageBackend`]. On open, every existing segment is scanned
+//! record by record: the first invalid record (bad length, checksum
+//! mismatch, sequence regression) marks a torn tail, which is truncated
+//! with a WARN — never a panic — and any later segments in that shard are
+//! dropped. Compaction (`--wal-compact-mb`) rotates a shard to a fresh
+//! segment *first*, then checkpoints the shard's sessions (whose embedded
+//! `wal_seq` watermarks then cover every record in the old segments), then
+//! deletes the old segments — crash-safe in any interleaving because
+//! replay skips records at or below a session's watermark.
+//!
+//! ## Group commit
+//!
+//! With `--durability sync`, an appender must not return before its record
+//! is fsynced, but concurrent appenders share one fsync: the first waiter
+//! becomes the leader, snapshots the shard's last appended seq, fsyncs on
+//! a cloned descriptor *outside* the shard lock (so followers keep
+//! appending), then publishes the synced watermark and wakes everyone at
+//! or below it. `--durability async` flushes without fsync (survives a
+//! process crash, not a host crash); `none` disables the WAL.
+
+use crate::service::protocol::{fnv64, MAX_PAYLOAD};
+use crate::service::storage::{AppendHandle, StorageBackend, SyncHandle};
+use crate::util::metrics::{global as metrics, Counter, Histogram};
+use crate::{log_error, log_warn};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Fixed per-record overhead: `len` prefix + `seq` + `op` + `fnv64`.
+pub const RECORD_OVERHEAD: usize = 4 + 8 + 1 + 8;
+
+/// Durability level for acknowledged mutating ops.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Durability {
+    /// No WAL: a crash loses everything since the last explicit checkpoint.
+    #[default]
+    None,
+    /// Append + flush before ack: survives a process crash, not a host
+    /// crash (the OS page cache holds the tail).
+    Async,
+    /// Append + group-commit fsync before ack: survives host crashes.
+    Sync,
+}
+
+impl Durability {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "none" => Ok(Durability::None),
+            "async" => Ok(Durability::Async),
+            "sync" => Ok(Durability::Sync),
+            other => Err(format!("unknown durability '{other}' (none|async|sync)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Durability::None => "none",
+            Durability::Async => "async",
+            Durability::Sync => "sync",
+        }
+    }
+}
+
+/// Crash-injection hooks for the durability test harness: the process
+/// aborts (SIGABRT, no destructors) at an exact global record boundary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WalFaultPlan {
+    /// Abort immediately after record `seq` is appended and synced.
+    pub abort_at: Option<u64>,
+    /// Write only a prefix of record `seq` (a torn tail), sync, and abort.
+    pub torn_at: Option<u64>,
+}
+
+impl WalFaultPlan {
+    /// Read the plan from `SAGE_WAL_ABORT_AT` / `SAGE_WAL_TORN_AT` (used by
+    /// the `sage serve` subprocess tests in `tests/integration_durability`).
+    pub fn from_env() -> Self {
+        fn get(name: &str) -> Option<u64> {
+            std::env::var(name).ok().and_then(|v| v.parse().ok())
+        }
+        Self {
+            abort_at: get("SAGE_WAL_ABORT_AT"),
+            torn_at: get("SAGE_WAL_TORN_AT"),
+        }
+    }
+}
+
+/// Open-time configuration (carried in `RegistryConfig`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WalConfig {
+    /// Writer shard count — the registry's (normalized) shard count.
+    pub shards: usize,
+    pub durability: Durability,
+    /// Per-shard segment bytes that trigger compaction (0 = never).
+    pub compact_bytes: u64,
+    pub fault: WalFaultPlan,
+}
+
+/// One decoded log record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalRecord {
+    pub seq: u64,
+    pub op: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Serialize one record (see the module docs for the layout).
+pub fn encode_record(seq: u64, op: u8, payload: &[u8]) -> Vec<u8> {
+    let len = 9 + payload.len();
+    let mut out = Vec::with_capacity(4 + len + 8);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.push(op);
+    out.extend_from_slice(payload);
+    let sum = fnv64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Decode the record at the head of `buf`. `Ok(None)` on empty input
+/// (clean segment end); `Ok(Some((record, consumed_bytes)))` on success.
+///
+/// # Errors
+/// Anything torn: a truncated length prefix, an implausible length, a
+/// truncated body or checksum, or a checksum mismatch.
+pub fn decode_record(buf: &[u8]) -> Result<Option<(WalRecord, usize)>, String> {
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    if buf.len() < 4 {
+        return Err("truncated length prefix".into());
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    if !(9..=MAX_PAYLOAD + 9).contains(&len) {
+        return Err(format!("implausible record length {len}"));
+    }
+    let total = 4 + len + 8;
+    if buf.len() < total {
+        return Err(format!(
+            "truncated record ({} of {total} bytes)",
+            buf.len()
+        ));
+    }
+    let stored = u64::from_le_bytes(buf[4 + len..total].try_into().unwrap());
+    if fnv64(&buf[..4 + len]) != stored {
+        return Err("record checksum mismatch".into());
+    }
+    let seq = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    if seq == 0 {
+        return Err("record sequence 0".into());
+    }
+    let op = buf[12];
+    Ok(Some((
+        WalRecord {
+            seq,
+            op,
+            payload: buf[13..4 + len].to_vec(),
+        },
+        total,
+    )))
+}
+
+/// Scan a whole segment: the valid record prefix, the byte offset where
+/// validity ends, and — if the tail is torn — why.
+fn scan_segment(bytes: &[u8]) -> (Vec<WalRecord>, usize, Option<String>) {
+    let mut records: Vec<WalRecord> = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        match decode_record(&bytes[pos..]) {
+            Ok(None) => return (records, pos, None),
+            Ok(Some((rec, consumed))) => {
+                if let Some(last) = records.last() {
+                    if rec.seq <= last.seq {
+                        return (
+                            records,
+                            pos,
+                            Some(format!(
+                                "sequence regression ({} after {})",
+                                rec.seq, last.seq
+                            )),
+                        );
+                    }
+                }
+                records.push(rec);
+                pos += consumed;
+            }
+            Err(reason) => return (records, pos, Some(reason)),
+        }
+    }
+}
+
+fn segment_key(shard: usize, first_seq: u64) -> String {
+    format!("wal/shard-{shard:03}/segment-{first_seq:020}.sagewal")
+}
+
+struct ShardState {
+    writer: Box<dyn AppendHandle>,
+    syncer: Arc<dyn SyncHandle>,
+    /// Segments owned since open / the last rotation (last = current).
+    keys: Vec<String>,
+    /// Bytes appended since the last rotation.
+    bytes: u64,
+    /// Highest seq appended to this shard.
+    last_seq: u64,
+    /// Highest seq known fsynced on this shard.
+    synced_seq: u64,
+    /// A group-commit leader is fsyncing off-lock.
+    sync_in_flight: bool,
+}
+
+struct WalShard {
+    state: Mutex<ShardState>,
+    commit_cv: Condvar,
+    compacting: AtomicBool,
+}
+
+/// The write-ahead log: one appender per registry shard over a shared
+/// [`StorageBackend`], with a global sequence counter.
+pub struct Wal {
+    storage: Arc<dyn StorageBackend>,
+    durability: Durability,
+    compact_bytes: u64,
+    fault: WalFaultPlan,
+    next_seq: AtomicU64,
+    /// Poisoned by an append/fsync failure: the log can no longer promise
+    /// durability, so every later mutating op is refused until restart.
+    failed: AtomicBool,
+    shards: Vec<WalShard>,
+    /// Segment keys that predate this open — replayed, then deleted by the
+    /// registry's startup compaction once covering checkpoints exist.
+    stale: Mutex<Vec<String>>,
+    c_records: &'static Counter,
+    c_bytes: &'static Counter,
+    h_append: &'static Histogram,
+    h_fsync: &'static Histogram,
+}
+
+impl Wal {
+    /// Open (or create) the log under `storage`: scan every existing
+    /// segment, truncate torn tails, and return the surviving records
+    /// sorted by `seq` for replay, alongside the ready-to-append log.
+    ///
+    /// # Errors
+    /// Storage failures. Torn tails are repaired, never errors.
+    pub fn open(
+        storage: Arc<dyn StorageBackend>,
+        cfg: &WalConfig,
+    ) -> Result<(Self, Vec<WalRecord>), String> {
+        let m = metrics();
+        let c_truncated = m.counter("service.wal.truncated_tails");
+        let mut dirs: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        for key in storage.list("wal/")? {
+            let dir = key
+                .rsplit_once('/')
+                .map(|(d, _)| d.to_string())
+                .unwrap_or_default();
+            dirs.entry(dir).or_default().push(key);
+        }
+        let mut records: Vec<WalRecord> = Vec::new();
+        let mut stale: Vec<String> = Vec::new();
+        let mut max_seq = 0u64;
+        for (dir, keys) in &dirs {
+            let mut torn_in_dir = false;
+            for key in keys {
+                if torn_in_dir {
+                    // Segments after a torn one cannot be trusted: the
+                    // shard's suffix is gone from the torn offset onward.
+                    log_warn!("wal: dropping segment {key} after a torn predecessor in {dir}");
+                    storage.delete(key)?;
+                    continue;
+                }
+                let bytes = storage.read(key)?.unwrap_or_default();
+                if bytes.is_empty() {
+                    // Empty segments carry nothing and could collide with
+                    // the fresh segment name chosen below.
+                    storage.delete(key)?;
+                    continue;
+                }
+                let (recs, valid, torn) = scan_segment(&bytes);
+                if let Some(reason) = torn {
+                    log_warn!(
+                        "wal: torn tail in {key} at byte {valid} ({reason}); truncating \
+                         {} invalid bytes",
+                        bytes.len() - valid
+                    );
+                    c_truncated.inc();
+                    torn_in_dir = true;
+                    if valid == 0 {
+                        storage.delete(key)?;
+                        continue;
+                    }
+                    storage.truncate(key, valid as u64)?;
+                }
+                max_seq = recs.iter().map(|r| r.seq).fold(max_seq, u64::max);
+                records.extend(recs);
+                stale.push(key.clone());
+            }
+        }
+        let next = max_seq + 1;
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let key = segment_key(i, next);
+            let writer = storage.open_append(&key)?;
+            let syncer = writer.syncer()?;
+            shards.push(WalShard {
+                state: Mutex::new(ShardState {
+                    writer,
+                    syncer,
+                    keys: vec![key],
+                    bytes: 0,
+                    last_seq: 0,
+                    synced_seq: 0,
+                    sync_in_flight: false,
+                }),
+                commit_cv: Condvar::new(),
+                compacting: AtomicBool::new(false),
+            });
+        }
+        records.sort_by_key(|r| r.seq);
+        Ok((
+            Self {
+                storage,
+                durability: cfg.durability,
+                compact_bytes: cfg.compact_bytes,
+                fault: cfg.fault,
+                next_seq: AtomicU64::new(next),
+                failed: AtomicBool::new(false),
+                shards,
+                stale: Mutex::new(stale),
+                c_records: m.counter("service.wal.records"),
+                c_bytes: m.counter("service.wal.bytes"),
+                h_append: m.histogram("service.wal.append.ns"),
+                h_fsync: m.histogram("service.wal.fsync.ns"),
+            },
+            records,
+        ))
+    }
+
+    pub fn durability(&self) -> Durability {
+        self.durability
+    }
+
+    /// Highest sequence number handed out so far (0 = empty log).
+    pub fn last_seq(&self) -> u64 {
+        self.next_seq.load(Ordering::Relaxed) - 1
+    }
+
+    /// Segment keys that predate this open (already replayed).
+    pub fn has_stale_segments(&self) -> bool {
+        !self.stale.lock().unwrap().is_empty()
+    }
+
+    /// Delete the pre-open segments. Call only after every live session is
+    /// re-checkpointed (watermarks then cover all replayed records).
+    pub fn purge_stale_segments(&self) -> Result<usize, String> {
+        let keys = std::mem::take(&mut *self.stale.lock().unwrap());
+        for key in &keys {
+            self.storage.delete(key)?;
+        }
+        Ok(keys.len())
+    }
+
+    /// Append one record for `op` to `shard` and honor the durability
+    /// level before returning its sequence number.
+    ///
+    /// # Errors
+    /// Storage append/fsync failures — which also poison the log: state
+    /// already applied in memory can no longer be promised durable, so all
+    /// later appends are refused until the process restarts and replays.
+    pub fn append(&self, shard: usize, op: u8, payload: &[u8]) -> Result<u64, String> {
+        if self.failed.load(Ordering::Relaxed) {
+            return Err("wal: poisoned by an earlier append failure; restart to recover".into());
+        }
+        let t0 = Instant::now();
+        let sh = &self.shards[shard % self.shards.len()];
+        let mut st = sh.state.lock().unwrap();
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let frame = encode_record(seq, op, payload);
+
+        if self.fault.torn_at == Some(seq) {
+            // Fault injection: persist a prefix of the record, then die —
+            // recovery must truncate this tail with a WARN.
+            let cut = (frame.len() * 2 / 3).max(1);
+            let _ = st.writer.append(&frame[..cut]);
+            let _ = st.writer.flush();
+            let _ = st.syncer.sync();
+            log_error!("wal: fault injection — torn write at record {seq}; aborting");
+            std::process::abort();
+        }
+
+        if let Err(e) = st
+            .writer
+            .append(&frame)
+            .and_then(|()| st.writer.flush())
+        {
+            self.failed.store(true, Ordering::Relaxed);
+            return Err(format!("wal append (seq {seq}): {e}"));
+        }
+        st.bytes += frame.len() as u64;
+        st.last_seq = seq;
+        self.c_records.inc();
+        self.c_bytes.add(frame.len() as u64);
+
+        if self.fault.abort_at == Some(seq) {
+            let _ = st.syncer.sync();
+            log_error!("wal: fault injection — abort after record {seq}");
+            std::process::abort();
+        }
+
+        if self.durability == Durability::Sync {
+            // Group commit: first un-synced waiter leads, fsyncs off-lock.
+            loop {
+                if st.synced_seq >= seq {
+                    break;
+                }
+                if !st.sync_in_flight {
+                    st.sync_in_flight = true;
+                    let target = st.last_seq;
+                    let syncer = Arc::clone(&st.syncer);
+                    drop(st);
+                    let f0 = Instant::now();
+                    let res = syncer.sync();
+                    self.h_fsync.record(f0.elapsed().as_nanos() as u64);
+                    st = sh.state.lock().unwrap();
+                    st.sync_in_flight = false;
+                    if res.is_ok() && st.synced_seq < target {
+                        st.synced_seq = target;
+                    }
+                    sh.commit_cv.notify_all();
+                    if let Err(e) = res {
+                        self.failed.store(true, Ordering::Relaxed);
+                        return Err(format!("wal fsync (seq {seq}): {e}"));
+                    }
+                } else {
+                    st = sh.commit_cv.wait(st).unwrap();
+                }
+            }
+        }
+        drop(st);
+        self.h_append.record(t0.elapsed().as_nanos() as u64);
+        Ok(seq)
+    }
+
+    /// True when `shard` has outgrown `--wal-compact-mb` and no compaction
+    /// is already running there.
+    pub fn wants_compaction(&self, shard: usize) -> bool {
+        if self.compact_bytes == 0 || self.failed.load(Ordering::Relaxed) {
+            return false;
+        }
+        let sh = &self.shards[shard % self.shards.len()];
+        !sh.compacting.load(Ordering::Relaxed)
+            && sh.state.lock().unwrap().bytes >= self.compact_bytes
+    }
+
+    /// Claim the compaction slot for `shard` (false = already claimed).
+    pub fn begin_compaction(&self, shard: usize) -> bool {
+        self.shards[shard % self.shards.len()]
+            .compacting
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    pub fn end_compaction(&self, shard: usize) {
+        self.shards[shard % self.shards.len()]
+            .compacting
+            .store(false, Ordering::Release);
+    }
+
+    /// Swap `shard` onto a fresh segment and return the old segment keys.
+    /// New appends land in the fresh segment immediately; the caller then
+    /// checkpoints the shard's sessions (covering every old record) before
+    /// deleting the returned keys — crash-safe in either order because
+    /// replay skips records at or below each session's watermark.
+    pub fn rotate(&self, shard: usize) -> Result<Vec<String>, String> {
+        let sh = &self.shards[shard % self.shards.len()];
+        let mut st = sh.state.lock().unwrap();
+        if st.bytes == 0 && st.keys.len() == 1 {
+            return Ok(Vec::new()); // nothing to compact; avoid a key collision
+        }
+        st.writer.flush()?;
+        st.syncer.sync()?;
+        let key = segment_key(shard, self.next_seq.load(Ordering::Relaxed));
+        let writer = self.storage.open_append(&key)?;
+        let syncer = writer.syncer()?;
+        let old = std::mem::take(&mut st.keys);
+        st.writer = writer;
+        st.syncer = syncer;
+        st.keys = vec![key];
+        st.bytes = 0;
+        let last = st.last_seq;
+        if st.synced_seq < last {
+            st.synced_seq = last;
+        }
+        sh.commit_cv.notify_all();
+        metrics().counter("service.wal.compactions").inc();
+        Ok(old)
+    }
+
+    /// Delete retired segment objects (post-checkpoint compaction step).
+    pub fn delete_segments(&self, keys: &[String]) -> Result<(), String> {
+        for key in keys {
+            self.storage.delete(key)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::storage::MemStorage;
+
+    fn cfg(shards: usize, durability: Durability) -> WalConfig {
+        WalConfig {
+            shards,
+            durability,
+            compact_bytes: 0,
+            fault: WalFaultPlan::default(),
+        }
+    }
+
+    #[test]
+    fn record_codec_round_trips_and_matches_the_documented_layout() {
+        let payload = vec![0xAAu8, 0xBB, 0xCC];
+        let frame = encode_record(7, 2, &payload);
+        assert_eq!(frame.len(), RECORD_OVERHEAD + payload.len());
+        // len prefix counts seq + op + payload.
+        assert_eq!(&frame[0..4], &12u32.to_le_bytes());
+        assert_eq!(&frame[4..12], &7u64.to_le_bytes());
+        assert_eq!(frame[12], 2);
+        assert_eq!(&frame[13..16], &payload[..]);
+        let sum = fnv64(&frame[..16]);
+        assert_eq!(&frame[16..24], &sum.to_le_bytes());
+        let (rec, consumed) = decode_record(&frame).unwrap().unwrap();
+        assert_eq!(consumed, frame.len());
+        assert_eq!(rec, WalRecord { seq: 7, op: 2, payload });
+        assert_eq!(decode_record(&[]).unwrap(), None);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_records_are_rejected_loudly() {
+        let frame = encode_record(1, 4, b"abcdef");
+        let mut flipped = frame.clone();
+        flipped[15] ^= 0x10;
+        assert!(decode_record(&flipped).unwrap_err().contains("checksum"));
+        assert!(decode_record(&frame[..frame.len() - 2])
+            .unwrap_err()
+            .contains("truncated"));
+        assert!(decode_record(&frame[..3]).unwrap_err().contains("length"));
+        let mut huge = frame.clone();
+        huge[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_record(&huge).unwrap_err().contains("implausible"));
+    }
+
+    #[test]
+    fn scan_stops_at_the_first_invalid_record() {
+        let mut seg = Vec::new();
+        seg.extend_from_slice(&encode_record(1, 1, b"one"));
+        seg.extend_from_slice(&encode_record(2, 2, b"two"));
+        let good_len = seg.len();
+        let mut torn = encode_record(3, 2, b"three");
+        torn.truncate(torn.len() - 5);
+        seg.extend_from_slice(&torn);
+        let (recs, valid, reason) = scan_segment(&seg);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(valid, good_len);
+        assert!(reason.unwrap().contains("truncated"));
+
+        // A sequence regression is corruption, not a merge point.
+        let mut seg = Vec::new();
+        seg.extend_from_slice(&encode_record(5, 1, b"a"));
+        seg.extend_from_slice(&encode_record(4, 1, b"b"));
+        let (recs, _, reason) = scan_segment(&seg);
+        assert_eq!(recs.len(), 1);
+        assert!(reason.unwrap().contains("regression"));
+    }
+
+    #[test]
+    fn append_reopen_replays_in_global_seq_order_across_shards() {
+        let storage = Arc::new(MemStorage::new());
+        let (wal, replay) = Wal::open(storage.clone(), &cfg(2, Durability::Sync)).unwrap();
+        assert!(replay.is_empty());
+        // Interleave shards; seqs are global and monotone.
+        let s1 = wal.append(0, 1, b"create").unwrap();
+        let s2 = wal.append(1, 2, b"ingest-b").unwrap();
+        let s3 = wal.append(0, 2, b"ingest-a").unwrap();
+        assert!(s1 < s2 && s2 < s3);
+        assert_eq!(wal.last_seq(), s3);
+        drop(wal);
+
+        let (wal2, replay) = Wal::open(storage, &cfg(2, Durability::Sync)).unwrap();
+        let seqs: Vec<u64> = replay.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![s1, s2, s3]);
+        assert_eq!(replay[0].payload, b"create");
+        assert!(wal2.has_stale_segments());
+        // New appends continue the global sequence past everything seen.
+        assert_eq!(wal2.append(0, 4, b"freeze").unwrap(), s3 + 1);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_on_open_and_appends_continue() {
+        let storage = Arc::new(MemStorage::new());
+        let (wal, _) = Wal::open(storage.clone(), &cfg(1, Durability::Async)).unwrap();
+        wal.append(0, 1, b"alpha").unwrap();
+        wal.append(0, 2, b"beta").unwrap();
+        drop(wal);
+        // Tear the tail mid-record, as a crash mid-write would.
+        let key = storage.list("wal/").unwrap().pop().unwrap();
+        let bytes = storage.read(&key).unwrap().unwrap();
+        storage.truncate(&key, bytes.len() as u64 - 3).unwrap();
+
+        let (wal, replay) = Wal::open(storage.clone(), &cfg(1, Durability::Async)).unwrap();
+        assert_eq!(replay.len(), 1, "torn second record must be dropped");
+        assert_eq!(replay[0].payload, b"alpha");
+        // The torn bytes are gone from storage (idempotent re-open).
+        let repaired = storage.read(&key).unwrap().unwrap();
+        let (recs, valid, reason) = scan_segment(&repaired);
+        assert_eq!((recs.len(), valid == repaired.len(), reason), (1, true, None));
+        // The log stays writable and sequences continue after the tear.
+        assert_eq!(wal.append(0, 4, b"gamma").unwrap(), 2);
+    }
+
+    #[test]
+    fn bit_flip_in_the_middle_truncates_from_the_flip_point() {
+        let storage = Arc::new(MemStorage::new());
+        let (wal, _) = Wal::open(storage.clone(), &cfg(1, Durability::Async)).unwrap();
+        wal.append(0, 1, b"first").unwrap();
+        let boundary = {
+            let key = storage.list("wal/").unwrap().pop().unwrap();
+            storage.read(&key).unwrap().unwrap().len()
+        };
+        wal.append(0, 2, b"second").unwrap();
+        wal.append(0, 2, b"third").unwrap();
+        drop(wal);
+        let key = storage.list("wal/").unwrap().pop().unwrap();
+        let mut bytes = storage.read(&key).unwrap().unwrap();
+        bytes[boundary + 6] ^= 0x01; // corrupt the second record
+        storage.put_atomic(&key, &bytes).unwrap();
+
+        let (_, replay) = Wal::open(storage.clone(), &cfg(1, Durability::Async)).unwrap();
+        assert_eq!(replay.len(), 1, "records after a corrupt one are dropped");
+        assert_eq!(replay[0].payload, b"first");
+        assert_eq!(
+            storage.size(&key).unwrap(),
+            Some(boundary as u64),
+            "segment truncated exactly at the corruption boundary"
+        );
+    }
+
+    #[test]
+    fn rotation_retires_old_segments_and_keeps_new_records() {
+        let storage = Arc::new(MemStorage::new());
+        let mut c = cfg(1, Durability::Sync);
+        c.compact_bytes = 1; // any record triggers
+        let (wal, _) = Wal::open(storage.clone(), &cfg(1, Durability::Sync)).unwrap();
+        assert!(!wal.wants_compaction(0), "compaction disabled at 0 bytes");
+        drop(wal);
+        let (wal, _) = Wal::open(storage.clone(), &c).unwrap();
+        wal.append(0, 1, b"old-1").unwrap();
+        wal.append(0, 2, b"old-2").unwrap();
+        assert!(wal.wants_compaction(0));
+        assert!(wal.begin_compaction(0));
+        assert!(!wal.begin_compaction(0), "slot is exclusive");
+        let old = wal.rotate(0).unwrap();
+        assert_eq!(old.len(), 1);
+        wal.append(0, 2, b"new-1").unwrap();
+        wal.delete_segments(&old).unwrap();
+        wal.end_compaction(0);
+        drop(wal);
+
+        let (_, replay) = Wal::open(storage, &c).unwrap();
+        assert_eq!(replay.len(), 1, "only the post-rotation record survives");
+        assert_eq!(replay[0].payload, b"new-1");
+        assert_eq!(replay[0].seq, 3, "global seq is preserved across rotation");
+    }
+
+    #[test]
+    fn group_commit_is_consistent_under_concurrent_appenders() {
+        let storage = Arc::new(MemStorage::new());
+        let (wal, _) = Wal::open(storage.clone(), &cfg(2, Durability::Sync)).unwrap();
+        let wal = Arc::new(wal);
+        let threads: Vec<_> = (0..4usize)
+            .map(|t| {
+                let wal = Arc::clone(&wal);
+                std::thread::spawn(move || {
+                    (0..25)
+                        .map(|i| wal.append(t % 2, 2, format!("t{t}-{i}").as_bytes()).unwrap())
+                        .collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = threads
+            .into_iter()
+            .flat_map(|t| t.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let want: Vec<u64> = (1..=100).collect();
+        assert_eq!(all, want, "seqs are dense and unique");
+        drop(wal);
+        let (_, replay) = Wal::open(storage, &cfg(2, Durability::Sync)).unwrap();
+        assert_eq!(replay.len(), 100);
+        assert!(replay.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn durability_parses_and_defaults_off() {
+        // The aborts themselves are covered by the subprocess tests in
+        // tests/integration_durability.rs.
+        assert_eq!(WalFaultPlan::default().abort_at, None);
+        assert_eq!(WalFaultPlan::default().torn_at, None);
+        assert_eq!(Durability::parse("sync").unwrap(), Durability::Sync);
+        assert_eq!(Durability::parse("async").unwrap(), Durability::Async);
+        assert_eq!(Durability::parse("none").unwrap(), Durability::None);
+        assert_eq!(Durability::default(), Durability::None);
+        assert!(Durability::parse("paranoid").is_err());
+        assert_eq!(Durability::Sync.name(), "sync");
+    }
+}

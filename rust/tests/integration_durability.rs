@@ -1,0 +1,478 @@
+//! Crash-injection durability suite, over real processes:
+//!
+//! * a `FaultPlan` sweep kills a `--durability sync` server at **every**
+//!   WAL record boundary — clean abort after the fsync (`SAGE_WAL_ABORT_AT`)
+//!   and torn mid-record write (`SAGE_WAL_TORN_AT`) — restarts it on the
+//!   same directory, finishes the workload, and asserts the recovered
+//!   TopK *and* the final checkpoint image are byte-identical to an
+//!   uncrashed run (the WAL sequence watermark included);
+//! * a bit-flipped segment byte is truncated with a WARN (counted in
+//!   `service.wal.truncated_tails`), never a panic, and replay recovers
+//!   the valid prefix exactly;
+//! * a stray `.tmp` left by a crash mid-checkpoint-write is ignored by
+//!   recovery and consumed by the next atomic save;
+//! * the committed v1 checkpoint fixture (`tests/data/v1_session.sagesess`)
+//!   keeps loading and selects the same TopK as its v3 re-save.
+//!
+//! The sweep writes a recovered-vs-live diff table to
+//! `$SAGE_DURABILITY_ARTIFACT_DIR/wal_fault_sweep.tsv` when that variable
+//! is set (CI uploads it as a build artifact).
+
+use sage::config::Method;
+use sage::pipeline::ScoreBlock;
+use sage::service::wal::decode_record;
+use sage::service::{
+    RegistryConfig, ScoreBatch, ServiceClient, SessionCheckpoint, SessionRegistry,
+};
+use sage::tensor::Matrix;
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+const SESSION: &str = "s";
+const ELL: usize = 4;
+const D: usize = 8;
+/// Highest WAL sequence number the workload appends (see [`STEPS`]).
+const LAST_RECORD: u64 = 7;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Step {
+    Create,
+    IngestA,
+    IngestB,
+    Freeze,
+    Checkpoint,
+    ScoreA,
+    ScoreB,
+    TopK,
+}
+
+/// The deterministic workload: each step with the WAL sequence number it
+/// appends (`None` = no record — Checkpoint only moves state to disk).
+/// The mid-run Checkpoint puts a watermark under records 5..=7, so every
+/// restart also exercises replay-on-top-of-a-checkpoint.
+const STEPS: [(Step, Option<u64>); 8] = [
+    (Step::Create, Some(1)),
+    (Step::IngestA, Some(2)),
+    (Step::IngestB, Some(3)),
+    (Step::Freeze, Some(4)),
+    (Step::Checkpoint, None),
+    (Step::ScoreA, Some(5)),
+    (Step::ScoreB, Some(6)),
+    (Step::TopK, Some(7)),
+];
+
+fn ingest_matrix(which: usize) -> Matrix {
+    Matrix::from_fn(3, D, |r, c| ((r * D + c) as f32 + which as f32 * 0.5) * 0.25)
+}
+
+/// One deterministic Phase-II block: 3 one-hot ẑ rows starting at dataset
+/// index `start`.
+fn score_parts(start: usize) -> (Vec<usize>, Vec<u32>, Matrix, Vec<f32>, Vec<f32>) {
+    let n = 3;
+    let mut zhat = Matrix::zeros(n, ELL);
+    for i in 0..n {
+        zhat.set(i, (i + start) % ELL, 1.0);
+    }
+    (
+        (start..start + n).collect(),
+        vec![0; n],
+        zhat,
+        vec![1.0; n],
+        vec![1.0; n],
+    )
+}
+
+fn score_step(client: &mut ServiceClient, start: usize) -> Result<(), String> {
+    let (indices, labels, zhat, norms, losses) = score_parts(start);
+    client.score(
+        SESSION,
+        0,
+        &ScoreBlock {
+            indices: &indices,
+            labels: &labels,
+            zhat: &zhat,
+            norms: &norms,
+            losses: &losses,
+        },
+    )
+}
+
+fn run_step(client: &mut ServiceClient, step: Step) -> Result<(), String> {
+    match step {
+        Step::Create => client.create_session(SESSION, ELL, D, 1),
+        Step::IngestA => client.ingest(SESSION, 0, &ingest_matrix(0)).map(|_| ()),
+        Step::IngestB => client.ingest(SESSION, 0, &ingest_matrix(1)).map(|_| ()),
+        Step::Freeze => client.freeze(SESSION).map(|_| ()),
+        Step::Checkpoint => client.checkpoint(SESSION).map(|_| ()),
+        Step::ScoreA => score_step(client, 0),
+        Step::ScoreB => score_step(client, 3),
+        Step::TopK => client.top_k(SESSION, "sage", 2, 2, 0).map(|_| ()),
+    }
+}
+
+/// A `sage serve` child on an ephemeral port with `--durability sync`.
+struct ServeProc {
+    child: Child,
+    addr: String,
+}
+
+impl ServeProc {
+    fn spawn(dir: &Path, fault: Option<(&str, u64)>) -> ServeProc {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_sage"));
+        cmd.args(["serve", "--addr", "127.0.0.1:0", "--durability", "sync"])
+            .arg("--checkpoint-dir")
+            .arg(dir)
+            .args(["--threads", "2", "--compute-workers", "1"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null());
+        if let Some((key, record)) = fault {
+            cmd.env(key, record.to_string());
+        }
+        let mut child = cmd.spawn().expect("spawn sage serve");
+        let stdout = child.stdout.take().expect("child stdout");
+        let mut line = String::new();
+        std::io::BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("read listen banner");
+        assert!(line.contains("listening on"), "unexpected banner: {line}");
+        let addr = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .expect("listen address")
+            .to_string();
+        ServeProc { child, addr }
+    }
+
+    fn connect(&self) -> ServiceClient {
+        ServiceClient::connect(&self.addr).expect("connect to served child")
+    }
+
+    /// Reap a child the fault plan was expected to abort.
+    fn wait_crashed(&mut self) {
+        let status = self.child.wait().expect("wait on aborted child");
+        assert!(!status.success(), "fault-injected server exited cleanly");
+    }
+}
+
+impl Drop for ServeProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn counter(pairs: &[(String, u64)], name: &str) -> u64 {
+    pairs.iter().find(|(n, _)| n == name).map_or(0, |(_, v)| *v)
+}
+
+/// Final observable state: the TopK selection and the bytes of a fresh
+/// explicit checkpoint (whose trailing watermark must cover the whole
+/// workload).
+struct RunState {
+    topk: (Vec<usize>, Option<Vec<f32>>),
+    image: Vec<u8>,
+}
+
+fn final_state(client: &mut ServiceClient) -> RunState {
+    let topk = client.top_k(SESSION, "sage", 2, 2, 0).expect("final topk");
+    let (path, wal_seq) = client.checkpoint(SESSION).expect("final checkpoint");
+    assert_eq!(
+        wal_seq, LAST_RECORD,
+        "watermark must cover the whole workload"
+    );
+    let image = std::fs::read(&path).expect("read checkpoint image");
+    RunState { topk, image }
+}
+
+/// The uncrashed run: the whole workload straight through, one process.
+fn reference_run(dir: &Path) -> RunState {
+    let proc = ServeProc::spawn(dir, None);
+    let mut client = proc.connect();
+    for (step, _) in STEPS {
+        run_step(&mut client, step).unwrap_or_else(|e| panic!("reference {step:?}: {e}"));
+    }
+    final_state(&mut client)
+}
+
+struct CaseResult {
+    mode: &'static str,
+    record: u64,
+    topk_match: bool,
+    image_match: bool,
+}
+
+/// Crash the server at WAL record `record`, restart on the same dir,
+/// finish the workload, and compare the final state against `reference`.
+///
+/// `resume_same` distinguishes the two fault modes: an abort fires *after*
+/// the record is fsynced (replay recovers it — resume at the next step),
+/// while a torn write loses the record (resume by re-issuing the step that
+/// died).
+fn crash_case(
+    base: &Path,
+    env_key: &'static str,
+    record: u64,
+    resume_same: bool,
+    reference: &RunState,
+) -> CaseResult {
+    let mode = if resume_same { "torn" } else { "abort" };
+    let dir = base.join(format!("{mode}_{record}"));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut failed_at = None;
+    {
+        let mut proc = ServeProc::spawn(&dir, Some((env_key, record)));
+        let mut client = proc.connect();
+        for (i, (step, rec)) in STEPS.iter().enumerate() {
+            match run_step(&mut client, *step) {
+                Ok(()) => {
+                    if let Some(r) = rec {
+                        assert!(*r < record, "{mode}@{record}: step {step:?} survived");
+                    }
+                }
+                Err(_) => {
+                    assert_eq!(
+                        *rec,
+                        Some(record),
+                        "{mode}@{record}: wrong step {step:?} died"
+                    );
+                    failed_at = Some(i);
+                    break;
+                }
+            }
+        }
+        proc.wait_crashed();
+    }
+    let failed_at = failed_at.expect("no step hit the fault");
+
+    let proc = ServeProc::spawn(&dir, None);
+    let mut client = proc.connect();
+    let (wal_counters, _, _) = client
+        .metrics_snapshot("service.wal.")
+        .expect("wal metrics after restart");
+    let truncated = counter(&wal_counters, "service.wal.truncated_tails");
+    if resume_same {
+        assert!(
+            truncated >= 1,
+            "{mode}@{record}: torn tail must be truncated with a WARN"
+        );
+    } else {
+        assert_eq!(truncated, 0, "{mode}@{record}: clean tail got truncated");
+    }
+
+    let resume_from = if resume_same { failed_at } else { failed_at + 1 };
+    for (step, _) in &STEPS[resume_from..] {
+        run_step(&mut client, *step)
+            .unwrap_or_else(|e| panic!("{mode}@{record}: resumed {step:?}: {e}"));
+    }
+    let recovered = final_state(&mut client);
+    CaseResult {
+        mode,
+        record,
+        topk_match: recovered.topk == reference.topk,
+        image_match: recovered.image == reference.image,
+    }
+}
+
+#[test]
+fn fault_sweep_recovers_byte_identically_at_every_wal_record_boundary() {
+    let base = std::env::temp_dir().join(format!("sage_wal_sweep_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let ref_dir = base.join("reference");
+    std::fs::create_dir_all(&ref_dir).unwrap();
+    let reference = reference_run(&ref_dir);
+    assert_eq!(reference.topk.0.len(), 2, "reference selection size");
+
+    let mut results = Vec::new();
+    for record in 1..=LAST_RECORD {
+        results.push(crash_case(
+            &base,
+            "SAGE_WAL_ABORT_AT",
+            record,
+            false,
+            &reference,
+        ));
+        results.push(crash_case(
+            &base,
+            "SAGE_WAL_TORN_AT",
+            record,
+            true,
+            &reference,
+        ));
+    }
+
+    // Recovered-vs-live diff table; CI uploads it as a build artifact.
+    let mut report = String::from("mode\trecord\ttopk_match\tcheckpoint_image_match\n");
+    for r in &results {
+        report.push_str(&format!(
+            "{}\t{}\t{}\t{}\n",
+            r.mode, r.record, r.topk_match, r.image_match
+        ));
+    }
+    if let Ok(artifact_dir) = std::env::var("SAGE_DURABILITY_ARTIFACT_DIR") {
+        std::fs::create_dir_all(&artifact_dir).expect("create artifact dir");
+        std::fs::write(Path::new(&artifact_dir).join("wal_fault_sweep.tsv"), &report)
+            .expect("write sweep artifact");
+    }
+    assert!(
+        results.iter().all(|r| r.topk_match && r.image_match),
+        "recovery diverged from the uncrashed run:\n{report}"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// The one non-empty segment under `dir` (the single-session workload
+/// lands every record on one WAL shard).
+fn live_segment(dir: &Path) -> PathBuf {
+    let mut found = Vec::new();
+    let wal_root = dir.join("wal");
+    for shard_dir in std::fs::read_dir(&wal_root).expect("wal dir").flatten() {
+        for seg in std::fs::read_dir(shard_dir.path()).expect("shard dir").flatten() {
+            if seg.metadata().expect("segment metadata").len() > 0 {
+                found.push(seg.path());
+            }
+        }
+    }
+    assert_eq!(found.len(), 1, "expected one live segment, got {found:?}");
+    found.remove(0)
+}
+
+#[test]
+fn bit_flipped_segment_byte_is_truncated_with_warn_never_a_panic() {
+    let dir = std::env::temp_dir().join(format!("sage_wal_bitflip_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Run the workload and capture the selection, then SIGKILL the server
+    // so records 5..=7 survive only in the log (the mid-run checkpoint
+    // holds a watermark of 4).
+    let reference_topk = {
+        let proc = ServeProc::spawn(&dir, None);
+        let mut client = proc.connect();
+        for (step, _) in STEPS {
+            run_step(&mut client, step).unwrap_or_else(|e| panic!("workload {step:?}: {e}"));
+        }
+        client.top_k(SESSION, "sage", 2, 2, 0).expect("topk")
+    };
+
+    // Flip one payload byte inside record 6 (ScoreB). Walk the segment
+    // with the real codec to find its frame.
+    let segment = live_segment(&dir);
+    let mut bytes = std::fs::read(&segment).expect("read segment");
+    let mut pos = 0usize;
+    let mut flipped = false;
+    while let Some((record, consumed)) = decode_record(&bytes[pos..]).expect("intact segment") {
+        if record.seq == 6 {
+            bytes[pos + 15] ^= 0x01; // inside the payload: 4B len + 8B seq + 1B op + 2
+            flipped = true;
+            break;
+        }
+        pos += consumed;
+    }
+    assert!(flipped, "record 6 not found in {}", segment.display());
+    std::fs::write(&segment, &bytes).expect("write corrupted segment");
+
+    // Restart: replay must truncate at record 6 with a WARN — never panic
+    // — leaving the state after record 5. Re-issuing ScoreB and TopK then
+    // converges on the reference selection.
+    let proc = ServeProc::spawn(&dir, None);
+    let mut client = proc.connect();
+    let (wal_counters, _, _) = client.metrics_snapshot("service.wal.").expect("wal metrics");
+    assert!(
+        counter(&wal_counters, "service.wal.truncated_tails") >= 1,
+        "corrupt record must be counted as a truncated tail"
+    );
+    for step in [Step::ScoreB, Step::TopK] {
+        run_step(&mut client, step).unwrap_or_else(|e| panic!("resumed {step:?}: {e}"));
+    }
+    let recovered = final_state(&mut client);
+    assert_eq!(recovered.topk, reference_topk, "recovery diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stray_tmp_from_a_crash_mid_checkpoint_write_is_ignored_then_replaced() {
+    let dir = std::env::temp_dir().join(format!("sage_wal_straytmp_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let reference = reference_run(&dir);
+
+    // Simulate a crash halfway through a checkpoint rewrite: the good
+    // image stays, a torn sibling `.tmp` is left behind.
+    let good = std::fs::read(dir.join(format!("{SESSION}.sagesess"))).expect("good image");
+    let tmp = dir.join(format!("{SESSION}.tmp"));
+    std::fs::write(&tmp, &good[..good.len() / 2]).expect("write torn tmp");
+
+    // Recovery loads the good image, ignores the tmp, and state matches
+    // the uncrashed run; the next atomic save consumes the stray tmp.
+    let proc = ServeProc::spawn(&dir, None);
+    let mut client = proc.connect();
+    let recovered = final_state(&mut client);
+    assert_eq!(recovered.topk, reference.topk, "stray tmp perturbed recovery");
+    assert_eq!(recovered.image, reference.image, "checkpoint image drifted");
+    assert!(!tmp.exists(), "the retried save must replace the torn tmp");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn committed_v1_fixture_loads_and_topk_matches_its_resave() {
+    // Regression: the v1 fixture committed at tests/data/ predates both
+    // the Phase-II section (v2) and the WAL watermark (v3). It must keep
+    // loading forever, and a score → TopK → re-save → recover cycle must
+    // reproduce the same selection from the re-saved (current-version)
+    // image.
+    let fixture = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data/v1_session.sagesess");
+    let ck = SessionCheckpoint::load(&fixture).expect("committed v1 fixture must keep loading");
+    assert_eq!(ck.name, "v1fix");
+    assert_eq!(ck.wal_seq, 0, "v1 predates the watermark");
+    assert!(ck.frozen.is_some(), "fixture is a frozen session");
+    assert!(
+        ck.scorers.is_empty() && ck.scores.is_none(),
+        "v1 carries no Phase-II state"
+    );
+
+    let dir = std::env::temp_dir().join(format!("sage_wal_v1fix_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::copy(&fixture, dir.join("v1fix.sagesess")).unwrap();
+
+    let reg = SessionRegistry::new(RegistryConfig {
+        checkpoint_dir: Some(dir.clone()),
+        ..RegistryConfig::default()
+    });
+    assert_eq!(reg.recover(&dir), 1);
+    // Scoring starts fresh on a v1 session; select, then re-save.
+    for start in [0usize, 3] {
+        let (indices, labels, zhat, norms, losses) = score_parts(start);
+        reg.score(
+            "v1fix",
+            0,
+            &ScoreBatch {
+                indices: indices.iter().map(|&i| i as u64).collect(),
+                labels,
+                norms,
+                losses,
+                zhat,
+            },
+        )
+        .expect("score on recovered v1 session");
+    }
+    let first = reg.top_k("v1fix", Method::Sage, 2, 2, 0).expect("topk");
+    let (resaved, wal_seq) = reg.checkpoint("v1fix").expect("re-save");
+    assert_eq!(wal_seq, 0, "no WAL configured");
+    let resaved_ck = SessionCheckpoint::load(&resaved).expect("re-save loads");
+    assert!(resaved_ck.scores.is_some(), "re-save carries the score cache");
+
+    // A fresh registry recovering the re-save reproduces the selection
+    // without re-scoring.
+    let reg2 = SessionRegistry::new(RegistryConfig {
+        checkpoint_dir: Some(dir.clone()),
+        ..RegistryConfig::default()
+    });
+    assert_eq!(reg2.recover(&dir), 1);
+    let again = reg2.top_k("v1fix", Method::Sage, 2, 2, 0).expect("topk after recover");
+    assert_eq!(again, first, "v1 → v3 re-save drifted the selection");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -11,11 +11,15 @@
 //! * the MetricsSnapshot op returns histogram-grade summaries over the
 //!   wire.
 
+use sage::baselines::{select_weighted, SelectionInputs};
+use sage::config::Method;
 use sage::data::{generate, BenchmarkKind};
 use sage::grad::{MlpSpec, TrainHyper};
-use sage::pipeline::{phase1_gradient_stream, phase2_score_stream, shard_ranges};
+use sage::pipeline::{phase1_gradient_stream, phase2_score_stream, shard_ranges, ScoreBlock};
 use sage::runtime::{ModelBackend, ReferenceModelBackend};
+use sage::selection::AgreementScorer;
 use sage::service::{RegistryConfig, Server, ServerConfig, ServiceClient};
+use sage::tensor::{Matrix, SerialBackend};
 use sage::util::trace;
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -181,4 +185,142 @@ fn served_roundtrip_exposes_metrics_and_one_trace_id_end_to_end() {
     );
 
     handle.shutdown();
+}
+
+/// One deterministic Phase-II scoring batch: `n` one-hot ẑ rows starting
+/// at example index `start` (mirrors the registry unit tests' fixture so
+/// footprint arithmetic below matches the scorer-budget docs).
+fn score_block_data(
+    n: usize,
+    ell: usize,
+    start: usize,
+) -> (Vec<usize>, Vec<u32>, Matrix, Vec<f32>, Vec<f32>) {
+    let mut zhat = Matrix::zeros(n, ell);
+    for i in 0..n {
+        zhat.set(i, (i + start) % ell, 1.0);
+    }
+    (
+        (start..start + n).collect(),
+        vec![0; n],
+        zhat,
+        vec![1.0; n],
+        vec![1.0; n],
+    )
+}
+
+#[test]
+fn concurrent_score_topk_pressure_spills_unspills_and_stays_bit_exact() {
+    // Satellite coverage for registry LRU spill/unspill under concurrent
+    // Score/TopK pressure. ℓ=4 scorer footprints: 32-byte baseline per
+    // 1-shard session, 40 bytes per scored entry. Each session scores 6
+    // entries → 272 bytes resident; a 400-byte cap fits either session
+    // alone (272 + the other's 32-byte baseline = 304) but never both
+    // (544), so concurrent traffic must ping-pong spills through the
+    // checkpoint dir — and every reload must reproduce the exact ranks.
+    let dir = std::env::temp_dir().join(format!("sage_metrics_spill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 4,
+        compute_workers: 1,
+        registry: RegistryConfig {
+            max_scorer_bytes: 400,
+            checkpoint_dir: Some(dir.clone()),
+            ..RegistryConfig::default()
+        },
+        ..ServerConfig::default()
+    })
+    .expect("bind server");
+    let addr = server.local_addr().to_string();
+    let handle = server.spawn();
+
+    // Metrics are process-global across this binary's tests, so assert on
+    // deltas, not absolutes.
+    let counter = |pairs: &[(String, u64)], name: &str| {
+        pairs.iter().find(|(n, _)| n == name).map_or(0, |(_, v)| *v)
+    };
+    let mut setup = ServiceClient::connect(&addr).unwrap();
+    let (before, _, _) = setup.metrics_snapshot("service.registry.").unwrap();
+    let spills0 = counter(&before, "service.registry.spills");
+    let unspills0 = counter(&before, "service.registry.unspills");
+
+    let sessions = [("sp1", 0usize), ("sp2", 10)];
+    for (name, _) in sessions {
+        setup.create_session(name, 4, 8, 1).unwrap();
+        setup
+            .ingest(name, 0, &Matrix::from_fn(2, 8, |r, c| (r + c) as f32))
+            .unwrap();
+        setup.freeze(name).unwrap();
+    }
+
+    // Each thread drives its own session over its own connection: two
+    // Score batches (whichever session scores second must evict the other
+    // under the cap) followed by repeated TopK queries, each of which
+    // transparently reloads spilled state (spilling the peer in turn).
+    let workers: Vec<_> = sessions
+        .into_iter()
+        .map(|(name, start)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = ServiceClient::connect(&addr).unwrap();
+                for batch_start in [start, start + 3] {
+                    let (indices, labels, zhat, norms, losses) =
+                        score_block_data(3, 4, batch_start);
+                    let block = ScoreBlock {
+                        indices: &indices,
+                        labels: &labels,
+                        zhat: &zhat,
+                        norms: &norms,
+                        losses: &losses,
+                    };
+                    client.score(name, 0, &block).unwrap();
+                }
+                let mut results = Vec::new();
+                for _ in 0..6 {
+                    results.push(client.top_k(name, "sage", 2, 2, 0).unwrap());
+                }
+                (name, start, results)
+            })
+        })
+        .collect();
+
+    for worker in workers {
+        let (name, start, results) = worker.join().unwrap();
+        // Never-spilled replica: the identical batches through a local
+        // scorer give the ground-truth ranks.
+        let expected = {
+            let mut local = AgreementScorer::new(4);
+            for batch_start in [start, start + 3] {
+                let (indices, labels, zhat, norms, losses) = score_block_data(3, 4, batch_start);
+                local.add_batch(&indices, &labels, &zhat, &norms, &losses);
+            }
+            let scores = local.finalize();
+            let inputs = SelectionInputs {
+                scores: &scores,
+                val_consensus: None,
+                num_classes: 2,
+                seed: 0,
+                compute: &SerialBackend,
+            };
+            select_weighted(Method::Sage, &inputs, 2).0
+        };
+        for (indices, weights) in results {
+            assert_eq!(indices, expected, "{name}: spill/reload changed ranks");
+            assert!(weights.is_none(), "{name}: sage selection is unweighted");
+        }
+    }
+
+    let (after, _, _) = setup.metrics_snapshot("service.registry.").unwrap();
+    assert!(
+        counter(&after, "service.registry.spills") > spills0,
+        "scorer-budget pressure must have spilled at least one session: {after:?}"
+    );
+    assert!(
+        counter(&after, "service.registry.unspills") > unspills0,
+        "a spilled session must have been reloaded: {after:?}"
+    );
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -548,8 +548,9 @@ fn checkpoint_and_recovery_round_trip() {
     let c = Matrix::from_fn(14, 8, |_, _| rng.normal_f32());
     client.ingest("persist", 0, &a).unwrap();
     client.ingest("persist", 1, &c).unwrap();
-    let path = client.checkpoint("persist").unwrap();
+    let (path, wal_seq) = client.checkpoint("persist").unwrap();
     assert!(path.ends_with("persist.sagesess"), "{path}");
+    assert_eq!(wal_seq, 0, "no WAL configured, watermark must be 0");
     drop(client);
     handle.shutdown();
 
