@@ -327,7 +327,16 @@ fn write_atomic(path: &Path, bytes: &[u8], fail_after: Option<usize>) -> Result<
     f.write_all(bytes).map_err(|e| e.to_string())?;
     f.sync_all().map_err(|e| format!("{}: {e}", tmp.display()))?;
     drop(f);
-    std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+    std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))?;
+    // Make the rename itself crash-durable: without the directory fsync a
+    // host crash can roll the entry back to the old file — or, for a first
+    // checkpoint, to no file at all — even though the bytes were synced.
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            super::storage::fsync_dir(parent)?;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -1416,22 +1416,41 @@ impl SessionRegistry {
     pub fn close(&self, name: &str) -> Result<(), String> {
         let idx = self.shard_index(name);
         let shard = &self.shards[idx];
+        let session = shard
+            .sessions
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| format!("unknown session '{name}'"))?;
+        // The Close record goes in *before* the map removal: if the append
+        // fails the session stays live, so the log never claims a close
+        // that did not happen. It is appended under the session's WAL gate
+        // — not the shard map lock — so a sync-mode group-commit fsync
+        // never blocks unrelated session lookups on this shard.
+        if let Some(wal) = self.wal_handle() {
+            let _gate = session.wal_gate.lock().unwrap();
+            let payload = Request::CloseSession {
+                session: name.to_string(),
+            }
+            .encode();
+            let seq = wal.append(idx, op::CLOSE_SESSION, &payload)?;
+            session.note_wal_seq(seq);
+        }
         let removed = {
             let mut guard = shard.sessions.write().unwrap();
-            if guard.contains_key(name) {
-                // The Close record goes in *before* the map removal (still
-                // under the write lock): if the append fails the session
-                // stays live, so the log never claims a close that did not
-                // happen.
-                if let Some(wal) = self.wal_handle() {
-                    let payload = Request::CloseSession {
-                        session: name.to_string(),
-                    }
-                    .encode();
-                    wal.append(idx, op::CLOSE_SESSION, &payload)?;
-                }
+            // Remove only the session we logged against: a concurrent
+            // close-then-create may have replaced the entry, and the log
+            // says the newcomer (whose Create sorts after our Close) is
+            // alive.
+            let same = guard
+                .get(name)
+                .is_some_and(|live| Arc::ptr_eq(live, &session));
+            if same {
+                guard.remove(name)
+            } else {
+                None
             }
-            guard.remove(name)
         };
         match removed {
             Some(session) => {
@@ -1459,7 +1478,10 @@ impl SessionRegistry {
                 metrics().counter("service.registry.sessions_closed").inc();
                 Ok(())
             }
-            None => Err(format!("unknown session '{name}'")),
+            // Lost a race with a concurrent close of the same session: it
+            // is gone either way (the winner did the bookkeeping), and a
+            // duplicate Close record replays as a no-op.
+            None => Ok(()),
         }
     }
 
@@ -1828,10 +1850,22 @@ impl SessionRegistry {
             })?
             .clone();
         let storage: Arc<dyn StorageBackend> = Arc::new(LocalDirBackend::create(&dir)?);
+        // Seed the sequence counter above every recovered watermark: a
+        // compact-then-restart cycle can leave no surviving segment
+        // records while checkpoints still carry high `wal_seq` marks, and
+        // a fresh acked record assigned a seq at or below a watermark
+        // would be silently skipped by the next replay (a lost write).
+        let mut seq_floor = 0u64;
+        for shard in &self.shards {
+            for session in shard.sessions.read().unwrap().values() {
+                seq_floor = seq_floor.max(session.wal_watermark());
+            }
+        }
         let wal_cfg = WalConfig {
             shards: self.shards.len(),
             durability: self.cfg.durability,
             compact_bytes: self.cfg.wal_compact_bytes,
+            seq_floor,
             fault: self.cfg.wal_fault,
         };
         let (wal, records) = Wal::open(storage, &wal_cfg)?;
@@ -2072,10 +2106,30 @@ impl SessionRegistry {
                         "WAL compaction: folded state and deleted {} sealed segments",
                         sealed.len()
                     );
+                    // The fresh checkpoints also cover anything a previous
+                    // failed compaction left behind — retry those now.
+                    match wal.purge_stale_segments() {
+                        Ok(0) => {}
+                        Ok(n) => crate::log_info!(
+                            "WAL compaction: purged {n} previously retained segments"
+                        ),
+                        Err(e) => crate::log_warn!(
+                            "WAL compaction: retained-segment purge failed: {e}"
+                        ),
+                    }
                 }
-                Err(e) => crate::log_warn!(
-                    "WAL compaction deferred: {e} (sealed segments retained; replay still covers them)"
-                ),
+                Err(e) => {
+                    // Hand the sealed keys back for a later retry: the
+                    // rotation already reset the shard's byte counter, so
+                    // wants_compaction alone would never refire for them
+                    // and they would linger on disk until a restart.
+                    let n = sealed.len();
+                    wal.retain_stale(sealed);
+                    crate::log_warn!(
+                        "WAL compaction deferred: {e} ({n} sealed segments retained; \
+                         replay still covers them)"
+                    );
+                }
             }
         }
         for &shard in &claimed {
@@ -2609,6 +2663,58 @@ mod tests {
         assert_eq!(replayed, live);
         let frozen = reg2.get("c").unwrap().freeze().unwrap();
         assert_eq!(frozen.rows_seen, 15);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn acked_writes_survive_a_compact_then_restart_cycle() {
+        // Compaction deletes every sealed segment, so a restart may find
+        // no surviving records while the checkpoints carry high `wal_seq`
+        // watermarks. The sequence counter must resume above them: a
+        // fresh acked record with a seq at or below a watermark would be
+        // silently skipped by the next replay — a lost durable write.
+        let dir = std::env::temp_dir().join(format!("sage_reg_walcycle_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = RegistryConfig {
+            checkpoint_dir: Some(dir.clone()),
+            durability: Durability::Sync,
+            wal_compact_bytes: 256,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seeded(11);
+        let reg = SessionRegistry::new(cfg.clone());
+        reg.open_wal().unwrap();
+        reg.create("s", 4, 8, 1).unwrap();
+        // Big enough to cross --wal-compact-mb: the inline compaction
+        // checkpoints the session and deletes the sealed segments.
+        reg.ingest("s", 0, random_rows(&mut rng, 20, 8)).unwrap();
+        drop(reg);
+
+        let reg2 = SessionRegistry::new(cfg.clone());
+        assert_eq!(reg2.recover(&dir), 1);
+        let watermark = reg2.get("s").unwrap().wal_watermark();
+        assert!(watermark > 0, "checkpoint should carry a watermark");
+        assert!(
+            reg2.open_wal().unwrap() >= watermark,
+            "seq counter must resume above the recovered watermark"
+        );
+        // A small acked ingest that does NOT trigger another compaction
+        // (so only its WAL record, not a checkpoint, makes it durable).
+        reg2.ingest("s", 0, random_rows(&mut rng, 2, 8)).unwrap();
+        let live = reg2.get("s").unwrap().to_checkpoint().unwrap();
+        assert!(live.wal_seq > watermark);
+        drop(reg2);
+
+        let reg3 = SessionRegistry::new(cfg);
+        assert_eq!(reg3.recover(&dir), 1);
+        reg3.open_wal().unwrap();
+        let replayed = reg3.get("s").unwrap().to_checkpoint().unwrap();
+        assert_eq!(
+            replayed, live,
+            "acked post-compaction ingest was lost on replay"
+        );
+        assert_eq!(reg3.get("s").unwrap().freeze().unwrap().rows_seen, 22);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -87,6 +87,16 @@ pub trait SyncHandle: Send + Sync {
 // Local filesystem backend
 // ---------------------------------------------------------------------------
 
+/// fsync a directory so a just-created, just-renamed, or just-removed
+/// entry survives a host crash: fdatasync on the file covers its bytes,
+/// but the directory block that *names* the file must reach disk too, or
+/// power loss can make a durably-written object vanish from its parent.
+pub(crate) fn fsync_dir(dir: &Path) -> Result<(), String> {
+    File::open(dir)
+        .and_then(|f| f.sync_all())
+        .map_err(|e| format!("fsync {}: {e}", dir.display()))
+}
+
 /// [`StorageBackend`] over a root directory; keys map to relative paths.
 pub struct LocalDirBackend {
     root: PathBuf,
@@ -144,7 +154,12 @@ impl StorageBackend for LocalDirBackend {
         f.write_all(bytes).map_err(|e| format!("{}: {e}", tmp.display()))?;
         f.sync_all().map_err(|e| format!("{}: {e}", tmp.display()))?;
         drop(f);
-        std::fs::rename(&tmp, &path).map_err(|e| format!("{}: {e}", path.display()))
+        std::fs::rename(&tmp, &path).map_err(|e| format!("{}: {e}", path.display()))?;
+        // The rename itself must survive a host crash, not just the bytes.
+        match path.parent() {
+            Some(parent) => fsync_dir(parent),
+            None => Ok(()),
+        }
     }
 
     fn read(&self, key: &str) -> Result<Option<Vec<u8>>, String> {
@@ -165,8 +180,15 @@ impl StorageBackend for LocalDirBackend {
     }
 
     fn delete(&self, key: &str) -> Result<(), String> {
-        match std::fs::remove_file(self.path_of(key)) {
-            Ok(()) => Ok(()),
+        let path = self.path_of(key);
+        match std::fs::remove_file(&path) {
+            Ok(()) => match path.parent() {
+                // Persist the removal: a deleted WAL segment that
+                // reappears after power loss would be replayed again
+                // (harmless under watermarks, but not what we promised).
+                Some(parent) => fsync_dir(parent),
+                None => Ok(()),
+            },
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
             Err(e) => Err(format!("{key}: {e}")),
         }
@@ -199,6 +221,13 @@ impl StorageBackend for LocalDirBackend {
             .append(true)
             .open(&path)
             .map_err(|e| format!("{}: {e}", path.display()))?;
+        // A freshly created segment must be durably *named* before any
+        // record in it is acked: without the directory fsync, a host
+        // crash can drop the whole file even though its bytes were
+        // fdatasync'd.
+        if let Some(parent) = path.parent() {
+            fsync_dir(parent)?;
+        }
         Ok(Box::new(LocalAppend {
             file,
             key: key.to_string(),

@@ -124,6 +124,13 @@ pub struct WalConfig {
     pub durability: Durability,
     /// Per-shard segment bytes that trigger compaction (0 = never).
     pub compact_bytes: u64,
+    /// Sequence floor: `open` never hands out a seq at or below this. The
+    /// registry passes the highest `wal_seq` watermark across recovered
+    /// checkpoints — after a compact-then-restart cycle no segment records
+    /// may survive while checkpoints still carry high watermarks, and a
+    /// fresh acked record assigned a seq at or below a watermark would be
+    /// silently skipped by the next replay (a lost durable write).
+    pub seq_floor: u64,
     pub fault: WalFaultPlan,
 }
 
@@ -327,7 +334,7 @@ impl Wal {
                 stale.push(key.clone());
             }
         }
-        let next = max_seq + 1;
+        let next = max_seq.max(cfg.seq_floor) + 1;
         let mut shards = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
             let key = segment_key(i, next);
@@ -382,13 +389,27 @@ impl Wal {
     }
 
     /// Delete the pre-open segments. Call only after every live session is
-    /// re-checkpointed (watermarks then cover all replayed records).
+    /// re-checkpointed (watermarks then cover all replayed records). On a
+    /// failure, the keys not yet deleted go back on the stale list so a
+    /// later pass can retry.
     pub fn purge_stale_segments(&self) -> Result<usize, String> {
         let keys = std::mem::take(&mut *self.stale.lock().unwrap());
-        for key in &keys {
-            self.storage.delete(key)?;
+        for (i, key) in keys.iter().enumerate() {
+            if let Err(e) = self.storage.delete(key) {
+                self.stale.lock().unwrap().extend_from_slice(&keys[i..]);
+                return Err(e);
+            }
         }
         Ok(keys.len())
+    }
+
+    /// Put sealed segment keys back on the stale list so a later
+    /// compaction (or the next startup purge) retries their deletion.
+    /// Needed when a compaction's checkpoint or delete step fails after
+    /// `rotate` already sealed them: the rotation reset the shard's byte
+    /// counter, so `wants_compaction` alone would never refire for them.
+    pub fn retain_stale(&self, keys: Vec<String>) {
+        self.stale.lock().unwrap().extend(keys);
     }
 
     /// Append one record for `op` to `shard` and honor the durability
@@ -546,6 +567,7 @@ mod tests {
             shards,
             durability,
             compact_bytes: 0,
+            seq_floor: 0,
             fault: WalFaultPlan::default(),
         }
     }
@@ -703,6 +725,42 @@ mod tests {
         assert_eq!(replay.len(), 1, "only the post-rotation record survives");
         assert_eq!(replay[0].payload, b"new-1");
         assert_eq!(replay[0].seq, 3, "global seq is preserved across rotation");
+    }
+
+    #[test]
+    fn seq_floor_keeps_fresh_records_above_recovered_watermarks() {
+        // After compaction deletes every sealed segment, an open finds no
+        // surviving records — the floor (the registry's max checkpoint
+        // watermark) must still carry the counter forward, or fresh acked
+        // records would be skipped by the next replay.
+        let storage = Arc::new(MemStorage::new());
+        let mut c = cfg(1, Durability::Sync);
+        c.seq_floor = 41;
+        let (wal, replay) = Wal::open(storage.clone(), &c).unwrap();
+        assert!(replay.is_empty());
+        assert_eq!(wal.last_seq(), 41);
+        assert_eq!(wal.append(0, 2, b"post-compaction").unwrap(), 42);
+        drop(wal);
+
+        // Surviving records win when they sit above the floor.
+        c.seq_floor = 7;
+        let (wal, replay) = Wal::open(storage, &c).unwrap();
+        assert_eq!(replay.len(), 1);
+        assert_eq!(wal.append(0, 2, b"next").unwrap(), 43);
+    }
+
+    #[test]
+    fn retained_sealed_keys_join_the_stale_set_and_purge_together() {
+        let storage = Arc::new(MemStorage::new());
+        let (wal, _) = Wal::open(storage.clone(), &cfg(1, Durability::Async)).unwrap();
+        wal.append(0, 1, b"r").unwrap();
+        drop(wal);
+        let (wal, _) = Wal::open(storage, &cfg(1, Durability::Async)).unwrap();
+        assert!(wal.has_stale_segments());
+        // A compaction whose fold failed hands its sealed keys back.
+        wal.retain_stale(vec!["wal/shard-000/segment-x.sagewal".into()]);
+        assert_eq!(wal.purge_stale_segments().unwrap(), 2);
+        assert!(!wal.has_stale_segments());
     }
 
     #[test]
