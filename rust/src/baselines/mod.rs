@@ -361,14 +361,17 @@ fn graft(inputs: &SelectionInputs, k: usize, warm: bool) -> Vec<usize> {
         // coefficient scan is one kernel-layer matvec, the rank-1 update a
         // row sweep of axpys.
         let mut q = work.row(best).to_vec();
-        tensor::normalize_in_place(&mut q);
+        // The whole orthogonalization runs on the backend's dispatch tier
+        // (matvec above included), so pinned-tier runs stay coherent.
+        let d = inputs.compute.dispatch();
+        d.normalize_in_place(&mut q);
         let coefs = inputs.compute.matvec(&work, &q);
         for (p, &c) in coefs.iter().enumerate() {
             if chosen_pool[p] {
                 continue;
             }
             if c != 0.0 {
-                tensor::axpy(-c, &q, work.row_mut(p));
+                d.axpy(-c, &q, work.row_mut(p));
             }
         }
     }

@@ -1,6 +1,7 @@
-//! Kernel-layer benchmark: serial vs threadpool-parallel throughput of the
-//! four hot contractions at paper-scale shapes, emitted as the repo-root
-//! `BENCH_kernels.json` perf trajectory (subsequent PRs beat these numbers).
+//! Kernel-layer benchmark: the full backend × dispatch-tier matrix —
+//! {serial, parallel} × {scalar, simd} — over the four hot contractions at
+//! paper-scale shapes, emitted as the repo-root `BENCH_kernels.json` perf
+//! trajectory (subsequent PRs beat these numbers).
 //!
 //! Ops measured (shapes from the paper's large configuration, ℓ = 256,
 //! D = 16384 by default):
@@ -10,18 +11,23 @@
 //! * `shrink`  — one full FD shrink (Gram + eig + rotation) end to end
 //! * `score`   — consensus matvec `α = Ẑ·u` over `N × ℓ`
 //!
-//! Every parallel result is checked bit-identical against serial before it
-//! is timed — a bench that silently measured diverging kernels would be
-//! worthless as a perf trajectory.
+//! Every cell of the matrix is checked bit-identical against the
+//! serial-scalar reference before it is timed — the determinism contract
+//! says the tier and the worker count may never change a bit, so a bench
+//! that silently measured diverging kernels would be worthless as a perf
+//! trajectory.
 //!
 //! Driven by `sage bench kernels [--quick]`; `--quick` additionally gates
-//! (non-zero exit upstream) when a parallel kernel loses to serial.
+//! (non-zero exit upstream) when a parallel kernel loses to serial or the
+//! SIMD tier loses to scalar on `gram`/`project`.
 
 use crate::sketch::FdSketch;
-use crate::tensor::{ComputeBackend, Matrix, ParallelBackend, SerialBackend};
+use crate::tensor::kernels::{self, KernelTier};
+use crate::tensor::{ComputeBackend, Matrix, ParallelBackend, PinnedSerialBackend};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Shapes + measurement knobs for one bench run.
@@ -62,26 +68,53 @@ impl KernelBenchSpec {
     }
 }
 
-/// One op's serial vs parallel measurement.
+/// Serial + parallel nanoseconds for one dispatch tier.
+#[derive(Clone, Copy, Debug)]
+pub struct TierTiming {
+    pub serial_ns: f64,
+    pub parallel_ns: f64,
+}
+
+impl TierTiming {
+    /// Parallel-over-serial speedup within this tier.
+    pub fn parallel_speedup(&self) -> f64 {
+        if self.parallel_ns <= 0.0 {
+            0.0
+        } else {
+            self.serial_ns / self.parallel_ns
+        }
+    }
+}
+
+/// One op's measurement across the backend × tier matrix.
 #[derive(Clone, Debug)]
 pub struct OpResult {
     pub name: &'static str,
     pub shape: String,
     /// Multiply-adds per iteration (×2 = FLOPs).
     pub madds: f64,
-    pub serial_ns: f64,
-    pub parallel_ns: f64,
-    /// Outputs compared bit-for-bit before timing.
+    /// The scalar reference tier (always measured).
+    pub scalar: TierTiming,
+    /// The SIMD tier, when the host has one.
+    pub simd: Option<TierTiming>,
+    /// Every cell's output compared bit-for-bit against serial-scalar
+    /// before timing.
     pub bits_equal: bool,
 }
 
 impl OpResult {
+    /// Parallel-over-serial speedup on the scalar tier (the PR 3 gate).
     pub fn speedup(&self) -> f64 {
-        if self.parallel_ns <= 0.0 {
-            0.0
-        } else {
-            self.serial_ns / self.parallel_ns
+        self.scalar.parallel_speedup()
+    }
+
+    /// Serial SIMD over serial scalar — the tentpole's headline number.
+    pub fn simd_speedup(&self) -> Option<f64> {
+        let simd = self.simd?;
+        if simd.serial_ns <= 0.0 {
+            return Some(0.0);
         }
+        Some(self.scalar.serial_ns / simd.serial_ns)
     }
 
     fn gflops(&self, ns: f64) -> f64 {
@@ -96,14 +129,28 @@ impl OpResult {
         let mut m = BTreeMap::new();
         m.insert("op".into(), Json::Str(self.name.into()));
         m.insert("shape".into(), Json::Str(self.shape.clone()));
-        m.insert("serial_ns".into(), Json::Num(self.serial_ns));
-        m.insert("parallel_ns".into(), Json::Num(self.parallel_ns));
-        m.insert("speedup".into(), Json::Num(self.speedup()));
-        m.insert("serial_gflops".into(), Json::Num(self.gflops(self.serial_ns)));
+        m.insert("serial_scalar_ns".into(), Json::Num(self.scalar.serial_ns));
         m.insert(
-            "parallel_gflops".into(),
-            Json::Num(self.gflops(self.parallel_ns)),
+            "parallel_scalar_ns".into(),
+            Json::Num(self.scalar.parallel_ns),
         );
+        m.insert("parallel_speedup".into(), Json::Num(self.speedup()));
+        m.insert(
+            "serial_scalar_gflops".into(),
+            Json::Num(self.gflops(self.scalar.serial_ns)),
+        );
+        if let Some(simd) = self.simd {
+            m.insert("serial_simd_ns".into(), Json::Num(simd.serial_ns));
+            m.insert("parallel_simd_ns".into(), Json::Num(simd.parallel_ns));
+            m.insert(
+                "simd_speedup".into(),
+                Json::Num(self.simd_speedup().unwrap_or(0.0)),
+            );
+            m.insert(
+                "parallel_simd_gflops".into(),
+                Json::Num(self.gflops(simd.parallel_ns)),
+            );
+        }
         m.insert("bits_equal".into(), Json::Bool(self.bits_equal));
         Json::Obj(m)
     }
@@ -113,6 +160,11 @@ impl OpResult {
 pub struct KernelBenchReport {
     pub spec: KernelBenchSpec,
     pub host_threads: usize,
+    /// The process-wide tier `sage` would select here (auto).
+    pub active_tier: &'static str,
+    /// Whether a SIMD tier exists on this host (the matrix has 4 columns
+    /// when true, 2 when false).
+    pub simd_available: bool,
     pub ops: Vec<OpResult>,
 }
 
@@ -122,16 +174,37 @@ impl KernelBenchReport {
         self.ops.iter().find(|o| o.name == name)
     }
 
+    /// All cells of the matrix bit-identical to the serial-scalar
+    /// reference.
+    pub fn bits_hold(&self) -> bool {
+        !self.ops.is_empty() && self.ops.iter().all(|o| o.bits_equal)
+    }
+
     /// CI quick-gate condition ("parallel must not lose"): the two pure
     /// paper-scale contractions — `gram` and `project` — must be at least
-    /// as fast parallel as serial, bit-equal everywhere. (`shrink` embeds a
-    /// serial eigendecomposition and `score` is a sub-10 ms matvec; both
-    /// are reported but too noise-prone to gate a shared runner on.)
+    /// as fast parallel as serial on the scalar tier, bit-equal
+    /// everywhere. (`shrink` embeds a serial eigendecomposition and
+    /// `score` is a sub-10 ms matvec; both are reported but too
+    /// noise-prone to gate a shared runner on.)
     pub fn parallel_holds(&self) -> bool {
-        self.ops.iter().all(|o| o.bits_equal)
+        self.bits_hold()
             && ["gram", "project"]
                 .iter()
                 .all(|name| self.op(name).is_some_and(|o| o.speedup() >= 1.0))
+    }
+
+    /// The tentpole gate ("SIMD must not lose to scalar"): serial SIMD at
+    /// least as fast as serial scalar on `gram` and `project`. `None`
+    /// when the host has no SIMD tier (nothing to gate).
+    pub fn simd_holds(&self) -> Option<bool> {
+        if !self.simd_available {
+            return None;
+        }
+        Some(["gram", "project"].iter().all(|name| {
+            self.op(name)
+                .and_then(|o| o.simd_speedup())
+                .is_some_and(|s| s >= 1.0)
+        }))
     }
 
     pub fn to_json(&self) -> Json {
@@ -144,6 +217,8 @@ impl KernelBenchReport {
         m.insert("workers".into(), Json::Num(self.spec.workers as f64));
         m.insert("iters".into(), Json::Num(self.spec.iters as f64));
         m.insert("host_threads".into(), Json::Num(self.host_threads as f64));
+        m.insert("active_tier".into(), Json::Str(self.active_tier.into()));
+        m.insert("simd_available".into(), Json::Bool(self.simd_available));
         m.insert(
             "ops".into(),
             Json::Arr(self.ops.iter().map(|o| o.to_json()).collect()),
@@ -176,11 +251,60 @@ fn bits_equal(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
-/// Run the kernel bench: serial reference vs a `workers`-thread
-/// [`ParallelBackend`], verifying bit-identity per op before timing it.
+/// The serial + parallel backend pair pinned to one dispatch tier.
+struct TierPair {
+    dispatch: &'static kernels::KernelDispatch,
+    serial: PinnedSerialBackend,
+    parallel: ParallelBackend,
+}
+
+impl TierPair {
+    fn new(dispatch: &'static kernels::KernelDispatch, workers: usize) -> Self {
+        Self {
+            dispatch,
+            serial: PinnedSerialBackend(dispatch),
+            parallel: ParallelBackend::with_threads(workers).with_dispatch(dispatch),
+        }
+    }
+}
+
+/// Measure one op across every tier: `run(backend)` computes the op on a
+/// backend and returns its output as f32 bits for the identity check.
+fn measure_op(
+    tiers: &[TierPair],
+    iters: usize,
+    run: impl Fn(&dyn ComputeBackend) -> Vec<f32>,
+) -> (TierTiming, Option<TierTiming>, bool) {
+    let reference = run(&tiers[0].serial);
+    let mut eq = true;
+    let mut timings = Vec::with_capacity(tiers.len());
+    for pair in tiers {
+        eq &= bits_equal(&run(&pair.serial), &reference);
+        eq &= bits_equal(&run(&pair.parallel), &reference);
+        let serial_ns = best_ns(iters, || {
+            std::hint::black_box(run(std::hint::black_box(&pair.serial)));
+        });
+        let parallel_ns = best_ns(iters, || {
+            std::hint::black_box(run(std::hint::black_box(&pair.parallel)));
+        });
+        timings.push(TierTiming {
+            serial_ns,
+            parallel_ns,
+        });
+    }
+    (timings[0], timings.get(1).copied(), eq)
+}
+
+/// Run the kernel bench over the full {serial, parallel} × {scalar, simd}
+/// matrix, verifying bit-identity of every cell against the serial-scalar
+/// reference before timing it.
 pub fn run_kernel_bench(spec: &KernelBenchSpec) -> KernelBenchReport {
-    let serial = SerialBackend;
-    let parallel = ParallelBackend::with_threads(spec.workers);
+    // Scalar first: index 0 is the reference tier in every measurement.
+    let mut tiers = vec![TierPair::new(kernels::scalar_dispatch(), spec.workers)];
+    if let Some(simd) = kernels::simd_dispatch() {
+        tiers.push(TierPair::new(simd, spec.workers));
+    }
+
     let mut rng = Pcg64::seeded(0xBE7C);
     let m = 2 * spec.ell;
 
@@ -194,46 +318,30 @@ pub fn run_kernel_bench(spec: &KernelBenchSpec) -> KernelBenchReport {
 
     // --- gram: the FD shrink's m×m Gram over the 2ℓ×D buffer ---
     {
-        let s_out = serial.gram(&buf);
-        let p_out = parallel.gram(&buf);
-        let eq = bits_equal(s_out.as_slice(), p_out.as_slice());
-        let serial_ns = best_ns(spec.iters, || {
-            std::hint::black_box(serial.gram(std::hint::black_box(&buf)));
-        });
-        let parallel_ns = best_ns(spec.iters, || {
-            std::hint::black_box(parallel.gram(std::hint::black_box(&buf)));
+        let (scalar, simd, eq) = measure_op(&tiers, spec.iters, |backend| {
+            backend.gram(&buf).as_slice().to_vec()
         });
         ops.push(OpResult {
             name: "gram",
             shape: format!("{m}x{} -> {m}x{m}", spec.d),
             madds: (m * m) as f64 / 2.0 * spec.d as f64,
-            serial_ns,
-            parallel_ns,
+            scalar,
+            simd,
             bits_equal: eq,
         });
     }
 
     // --- project: Phase-II G·Sᵀ ---
     {
-        let s_out = serial.matmul_transb(&grads, &sketch);
-        let p_out = parallel.matmul_transb(&grads, &sketch);
-        let eq = bits_equal(s_out.as_slice(), p_out.as_slice());
-        let serial_ns = best_ns(spec.iters, || {
-            std::hint::black_box(
-                serial.matmul_transb(std::hint::black_box(&grads), std::hint::black_box(&sketch)),
-            );
-        });
-        let parallel_ns = best_ns(spec.iters, || {
-            std::hint::black_box(
-                parallel.matmul_transb(std::hint::black_box(&grads), std::hint::black_box(&sketch)),
-            );
+        let (scalar, simd, eq) = measure_op(&tiers, spec.iters, |backend| {
+            backend.matmul_transb(&grads, &sketch).as_slice().to_vec()
         });
         ops.push(OpResult {
             name: "project",
             shape: format!("{}x{} @ ({}x{})T", spec.batch, spec.d, spec.ell, spec.d),
             madds: (spec.batch * spec.ell * spec.d) as f64,
-            serial_ns,
-            parallel_ns,
+            scalar,
+            simd,
             bits_equal: eq,
         });
     }
@@ -241,63 +349,70 @@ pub fn run_kernel_bench(spec: &KernelBenchSpec) -> KernelBenchReport {
     // --- shrink: one full FD contraction (gram + eig + apply_rot) ---
     {
         let refill = Matrix::from_fn(spec.ell, spec.d, |_, _| rng.normal_f32());
-        let shrink_once = |backend: std::sync::Arc<dyn ComputeBackend>| {
+        // Bit-identity: sketches fed the same stream on every cell of the
+        // matrix must agree with the serial-scalar reference.
+        let stream_sketch = |backend: Arc<dyn ComputeBackend>| -> Vec<f32> {
             let mut fd = FdSketch::with_backend(spec.ell, spec.d, backend);
-            fd.insert_batch(&buf); // fills 2ℓ rows exactly
-            move |fd_refill: &Matrix| {
-                // Each call: refill ℓ rows (buffer ℓ -> 2ℓ), then one
-                // shrink via sketch().
-                fd.insert_batch(fd_refill);
-                std::hint::black_box(fd.sketch());
-            }
+            fd.insert_batch(&buf);
+            fd.sketch().as_slice().to_vec()
         };
-        // Bit-identity: two sketches fed the same stream on each backend.
-        let eq = {
-            let mut a =
-                FdSketch::with_backend(spec.ell, spec.d, std::sync::Arc::new(SerialBackend));
-            let mut b = FdSketch::with_backend(
-                spec.ell,
-                spec.d,
-                std::sync::Arc::new(ParallelBackend::with_threads(spec.workers)),
+        let reference = stream_sketch(Arc::new(PinnedSerialBackend(tiers[0].dispatch)));
+        let mut eq = true;
+        let mut timings = Vec::with_capacity(tiers.len());
+        for pair in &tiers {
+            eq &= bits_equal(
+                &stream_sketch(Arc::new(PinnedSerialBackend(pair.dispatch))),
+                &reference,
             );
-            a.insert_batch(&buf);
-            b.insert_batch(&buf);
-            bits_equal(a.sketch().as_slice(), b.sketch().as_slice())
-        };
-        let mut s_run = shrink_once(std::sync::Arc::new(SerialBackend));
-        let serial_ns = best_ns(spec.iters, || s_run(&refill));
-        let mut p_run = shrink_once(std::sync::Arc::new(ParallelBackend::with_threads(
-            spec.workers,
-        )));
-        let parallel_ns = best_ns(spec.iters, || p_run(&refill));
+            eq &= bits_equal(
+                &stream_sketch(Arc::new(
+                    ParallelBackend::with_threads(spec.workers).with_dispatch(pair.dispatch),
+                )),
+                &reference,
+            );
+            let shrink_once = |backend: Arc<dyn ComputeBackend>| {
+                let mut fd = FdSketch::with_backend(spec.ell, spec.d, backend);
+                fd.insert_batch(&buf); // fills 2ℓ rows exactly
+                move |fd_refill: &Matrix| {
+                    // Each call: refill ℓ rows (buffer ℓ -> 2ℓ), then one
+                    // shrink via sketch().
+                    fd.insert_batch(fd_refill);
+                    std::hint::black_box(fd.sketch());
+                }
+            };
+            let mut s_run = shrink_once(Arc::new(PinnedSerialBackend(pair.dispatch)));
+            let serial_ns = best_ns(spec.iters, || s_run(&refill));
+            let mut p_run = shrink_once(Arc::new(
+                ParallelBackend::with_threads(spec.workers).with_dispatch(pair.dispatch),
+            ));
+            let parallel_ns = best_ns(spec.iters, || p_run(&refill));
+            timings.push(TierTiming {
+                serial_ns,
+                parallel_ns,
+            });
+        }
         ops.push(OpResult {
             name: "shrink",
             shape: format!("ell={} D={}", spec.ell, spec.d),
             // Dominated by gram (m²D/2) + apply_rot (ℓ·m·D).
             madds: (m * m) as f64 / 2.0 * spec.d as f64 + (spec.ell * m * spec.d) as f64,
-            serial_ns,
-            parallel_ns,
+            scalar: timings[0],
+            simd: timings.get(1).copied(),
             bits_equal: eq,
         });
     }
 
     // --- score: consensus matvec over all scored examples ---
     {
-        let s_out = serial.matvec(&zhat, &u);
-        let p_out = parallel.matvec(&zhat, &u);
-        let eq = bits_equal(&s_out, &p_out);
-        let serial_ns = best_ns(spec.iters, || {
-            std::hint::black_box(serial.matvec(std::hint::black_box(&zhat), &u));
-        });
-        let parallel_ns = best_ns(spec.iters, || {
-            std::hint::black_box(parallel.matvec(std::hint::black_box(&zhat), &u));
+        let (scalar, simd, eq) = measure_op(&tiers, spec.iters, |backend| {
+            backend.matvec(&zhat, &u)
         });
         ops.push(OpResult {
             name: "score",
             shape: format!("{}x{} matvec", spec.n_examples, spec.ell),
             madds: (spec.n_examples * spec.ell) as f64,
-            serial_ns,
-            parallel_ns,
+            scalar,
+            simd,
             bits_equal: eq,
         });
     }
@@ -305,6 +420,8 @@ pub fn run_kernel_bench(spec: &KernelBenchSpec) -> KernelBenchReport {
     KernelBenchReport {
         spec: spec.clone(),
         host_threads: crate::util::threadpool::default_threads(),
+        active_tier: kernels::active().tier().name(),
+        simd_available: kernels::simd_dispatch().is_some(),
         ops,
     }
 }
@@ -326,9 +443,19 @@ mod tests {
         };
         let report = run_kernel_bench(&spec);
         assert_eq!(report.ops.len(), 4);
+        assert!(report.bits_hold());
         for op in &report.ops {
             assert!(op.bits_equal, "{} diverged", op.name);
-            assert!(op.serial_ns > 0.0 && op.parallel_ns > 0.0, "{}", op.name);
+            assert!(
+                op.scalar.serial_ns > 0.0 && op.scalar.parallel_ns > 0.0,
+                "{}",
+                op.name
+            );
+            // SIMD rows exist exactly when the host has the tier.
+            assert_eq!(op.simd.is_some(), report.simd_available, "{}", op.name);
+            if let Some(simd) = op.simd {
+                assert!(simd.serial_ns > 0.0 && simd.parallel_ns > 0.0, "{}", op.name);
+            }
         }
         for name in ["gram", "project", "shrink", "score"] {
             assert!(report.op(name).is_some(), "missing {name}");
@@ -337,5 +464,21 @@ mod tests {
         let parsed = crate::util::json::parse(&text).expect("valid json");
         assert_eq!(parsed.get("bench").and_then(|j| j.as_str()), Some("kernels"));
         assert_eq!(parsed.get("ops").and_then(|j| j.as_arr()).map(|a| a.len()), Some(4));
+        assert!(parsed.get("active_tier").and_then(|j| j.as_str()).is_some());
+    }
+
+    #[test]
+    fn empty_ops_fails_the_bits_gate() {
+        // Satellite: an empty `ops` array must never read as a passing
+        // report (the placeholder-bootstrap bug this PR closes).
+        let report = KernelBenchReport {
+            spec: KernelBenchSpec::default(),
+            host_threads: 1,
+            active_tier: "scalar",
+            simd_available: false,
+            ops: Vec::new(),
+        };
+        assert!(!report.bits_hold());
+        assert!(!report.parallel_holds());
     }
 }

@@ -174,6 +174,7 @@ pub fn common_run_opts() -> Vec<Opt> {
         Opt { name: "epochs", takes_value: true, help: "training epochs", default: Some("10") },
         Opt { name: "lr", takes_value: true, help: "base learning rate", default: Some("0.05") },
         Opt { name: "threads", takes_value: true, help: "worker threads", default: None },
+        Opt { name: "kernel-tier", takes_value: true, help: "kernel dispatch tier: auto | scalar | simd (tiers are bit-identical)", default: Some("auto") },
         Opt { name: "artifacts", takes_value: true, help: "artifacts directory", default: Some("artifacts") },
         Opt { name: "config", takes_value: true, help: "INI config file (CLI overrides)", default: None },
     ]

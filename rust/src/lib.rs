@@ -1,3 +1,7 @@
+// Nightly-only portable `std::simd` kernel tier (see tensor/kernels.rs);
+// the default stable build never enables this feature.
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
+
 //! # SAGE — Streaming Agreement-Driven Gradient Sketches
 //!
 //! Production-shaped reproduction of *SAGE: Streaming Agreement-Driven

@@ -9,7 +9,7 @@
 //!   ingest     stream Phase-I gradients / Phase-II scores into a session
 //!   query      freeze / top-k / stats / metrics / checkpoint against a session
 //!   trace      export recorded spans as Chrome trace_event JSON
-//!   bench      kernel-layer serial-vs-parallel bench -> BENCH_kernels.json
+//!   bench      kernel bench, {serial,parallel} x {scalar,simd} -> BENCH_kernels.json
 //!
 //! The runtime path requires `make artifacts` (AOT-lowered HLO). Pass
 //! `--backend reference` to run the pure-Rust model instead.
@@ -131,6 +131,7 @@ fn app() -> App {
                     Opt { name: "wal-compact-mb", takes_value: true, help: "compact a WAL shard into checkpoints past this many MiB (0 = never)", default: Some("64") },
                     Opt { name: "metrics-addr", takes_value: true, help: "serve Prometheus /metrics + /healthz on this HOST:PORT", default: None },
                     Opt { name: "slow-op-ms", takes_value: true, help: "warn (with trace id) when an op handler exceeds this many ms (0 = off)", default: Some("0") },
+                    Opt { name: "kernel-tier", takes_value: true, help: "kernel dispatch tier: auto | scalar | simd (tiers are bit-identical)", default: Some("auto") },
                 ],
             },
             Command {
@@ -161,7 +162,8 @@ fn app() -> App {
                     Opt { name: "workers", takes_value: true, help: "parallel worker threads", default: None },
                     Opt { name: "iters", takes_value: true, help: "timed iterations per op", default: None },
                     Opt { name: "out", takes_value: true, help: "output JSON path", default: Some("BENCH_kernels.json") },
-                    Opt { name: "quick", takes_value: false, help: "CI smoke: fewer iters; exit non-zero if a parallel kernel loses to serial", default: None },
+                    Opt { name: "kernel-tier", takes_value: true, help: "force the active dispatch tier (the bench still measures every tier it can)", default: Some("auto") },
+                    Opt { name: "quick", takes_value: false, help: "CI smoke: fewer iters; exit non-zero if a parallel kernel loses to serial or SIMD loses to scalar", default: None },
                 ],
             },
             Command {
@@ -188,6 +190,14 @@ fn app() -> App {
             },
         ],
     }
+}
+
+/// Apply `--kernel-tier` before any compute runs: forces the process-wide
+/// dispatch table ([`sage::tensor::kernels::set_tier`]). Tiers are
+/// bit-identical, so this only affects throughput — never results.
+fn apply_kernel_tier(p: &Parsed) -> Result<(), String> {
+    let choice = sage::tensor::TierChoice::parse(&p.get_or("kernel-tier", "auto"))?;
+    sage::tensor::kernels::set_tier(choice)
 }
 
 struct BackendChoice {
@@ -274,6 +284,7 @@ fn parse_cell(p: &Parsed) -> Result<CellSpec, String> {
 }
 
 fn cmd_select(p: &Parsed) -> Result<(), String> {
+    apply_kernel_tier(p)?;
     let spec = parse_cell(p)?;
     // One shared kernel backend for the whole run, threaded down into the
     // model backend, the FD shrink, and the selection rules.
@@ -342,6 +353,7 @@ fn cmd_select(p: &Parsed) -> Result<(), String> {
 }
 
 fn cmd_train(p: &Parsed) -> Result<(), String> {
+    apply_kernel_tier(p)?;
     let spec = parse_cell(p)?;
     let compute = sage::tensor::compute_backend(spec.workers);
     let choice = make_backend(p, spec.dataset, compute)?;
@@ -429,6 +441,7 @@ fn cmd_gen_data(p: &Parsed) -> Result<(), String> {
 }
 
 fn cmd_serve(p: &Parsed) -> Result<(), String> {
+    apply_kernel_tier(p)?;
     let cfg = sage::service::ServerConfig {
         addr: p.get_or("addr", "127.0.0.1:7009"),
         threads: p.get_usize("threads")?.unwrap_or(16).max(1),
@@ -463,6 +476,7 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
 }
 
 fn cmd_ingest(p: &Parsed) -> Result<(), String> {
+    apply_kernel_tier(p)?;
     let spec = parse_cell(p)?;
     let backend = reference_backend(spec.dataset, sage::tensor::compute_backend(spec.workers));
     let (train_ds, _) = sage::bench::runner::cell_datasets(&spec, backend.spec().f);
@@ -537,6 +551,7 @@ fn cmd_bench(p: &Parsed) -> Result<(), String> {
         Some("kernels") | None => {}
         Some(other) => return Err(format!("unknown bench suite '{other}' (suites: kernels)")),
     }
+    apply_kernel_tier(p)?;
     let quick = p.has_flag("quick");
     let mut spec = sage::bench::KernelBenchSpec {
         ell: p.get_usize("ell")?.unwrap_or(256).max(1),
@@ -564,44 +579,85 @@ fn cmd_bench(p: &Parsed) -> Result<(), String> {
         spec.iters
     );
     let report = sage::bench::run_kernel_bench(&spec);
+    // Empty ops would otherwise serialize as a structurally valid (but
+    // useless) report — refuse to bootstrap the trajectory from it.
+    if report.ops.is_empty() {
+        return Err("bench kernels produced an empty ops array".into());
+    }
     println!(
-        "{:<10} {:>14} {:>14} {:>9} {:>9}",
-        "op", "serial", "parallel", "speedup", "bits"
+        "{:<10} {:>13} {:>13} {:>11} {:>11} {:>7} {:>7} {:>9}",
+        "op", "ser-scalar", "par-scalar", "ser-simd", "par-simd", "par-x", "simd-x", "bits"
     );
     for op in &report.ops {
+        let (ser_simd, par_simd, simd_x) = match op.simd {
+            Some(t) => (
+                format!("{:.2}ms", t.serial_ns / 1e6),
+                format!("{:.2}ms", t.parallel_ns / 1e6),
+                format!("{:.2}x", op.simd_speedup().unwrap_or(0.0)),
+            ),
+            None => ("-".into(), "-".into(), "-".into()),
+        };
         println!(
-            "{:<10} {:>12.2}ms {:>12.2}ms {:>8.2}x {:>9}",
+            "{:<10} {:>11.2}ms {:>11.2}ms {:>11} {:>11} {:>6.2}x {:>7} {:>9}",
             op.name,
-            op.serial_ns / 1e6,
-            op.parallel_ns / 1e6,
+            op.scalar.serial_ns / 1e6,
+            op.scalar.parallel_ns / 1e6,
+            ser_simd,
+            par_simd,
             op.speedup(),
+            simd_x,
             if op.bits_equal { "equal" } else { "DIVERGED" },
         );
     }
+    println!(
+        "active tier: {} (simd {})",
+        report.active_tier,
+        if report.simd_available {
+            "available"
+        } else {
+            "unavailable"
+        }
+    );
     let out = p.get_or("out", "BENCH_kernels.json");
     std::fs::write(&out, report.to_json_string() + "\n").map_err(|e| format!("{out}: {e}"))?;
     println!("wrote {out}");
-    if report.ops.iter().any(|o| !o.bits_equal) {
-        return Err("parallel kernels diverged from the serial reference".into());
+    if !report.bits_hold() {
+        return Err("kernel matrix diverged from the serial-scalar reference".into());
     }
-    if quick && spec.workers <= 1 {
-        // A 1-worker ParallelBackend runs chunks inline: "parallel" is
-        // serial plus noise, so a >= 1.0x gate would be a coin flip.
-        println!("quick gate skipped: single-worker host (speedup is noise)");
-        return Ok(());
-    }
-    if quick && !report.parallel_holds() {
-        return Err(format!(
-            "quick gate: parallel kernels lost to serial (host has {} threads): {}",
-            report.host_threads,
-            report
-                .ops
-                .iter()
-                .filter(|o| o.speedup() < 1.0)
-                .map(|o| format!("{} {:.2}x", o.name, o.speedup()))
-                .collect::<Vec<_>>()
-                .join(", ")
-        ));
+    if quick {
+        // The SIMD gate compares serial-vs-serial timings, so it applies
+        // on any host that has the tier — worker count is irrelevant.
+        if report.simd_holds() == Some(false) {
+            return Err(format!(
+                "quick gate: SIMD tier lost to scalar: {}",
+                report
+                    .ops
+                    .iter()
+                    .filter(|o| o.simd_speedup().is_some_and(|s| s < 1.0))
+                    .map(|o| format!("{} {:.2}x", o.name, o.simd_speedup().unwrap_or(0.0)))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+        }
+        if spec.workers <= 1 {
+            // A 1-worker ParallelBackend runs chunks inline: "parallel" is
+            // serial plus noise, so a >= 1.0x gate would be a coin flip.
+            println!("quick parallel gate skipped: single-worker host (speedup is noise)");
+            return Ok(());
+        }
+        if !report.parallel_holds() {
+            return Err(format!(
+                "quick gate: parallel kernels lost to serial (host has {} threads): {}",
+                report.host_threads,
+                report
+                    .ops
+                    .iter()
+                    .filter(|o| o.speedup() < 1.0)
+                    .map(|o| format!("{} {:.2}x", o.name, o.speedup()))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+        }
     }
     Ok(())
 }

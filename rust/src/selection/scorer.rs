@@ -327,7 +327,9 @@ impl AgreementScorer {
     pub fn finalize_with(mut self, compute: &dyn ComputeBackend) -> Scores {
         let n = self.count.max(1) as f64;
         let mut u: Vec<f32> = self.consensus_acc.iter().map(|&v| (v / n) as f32).collect();
-        let norm = tensor::normalize_in_place(&mut u);
+        // Normalize on the backend's own dispatch tier so a pinned backend
+        // (bench / parity tests) keeps the whole finalize tier-coherent.
+        let norm = compute.dispatch().normalize_in_place(&mut u);
         let consensus = if norm > 0.0 { u } else { vec![0.0; self.ell] };
 
         let zhat = Matrix::from_vec(self.entries.len(), self.ell, std::mem::take(&mut self.rows));

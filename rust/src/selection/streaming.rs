@@ -85,14 +85,14 @@ impl StreamingSelector {
     }
 
     /// Score one batch of normalized projections with global indices.
-    /// Alphas come from the same `dot8` microkernel as
+    /// Alphas come from the same active-tier `dot` microkernel as
     /// `AgreementScorer::finalize_with`'s consensus matvec, keeping the
     /// streaming and cached scoring paths bit-identical.
     pub fn add(&mut self, indices: &[usize], zhat: &Matrix) {
         assert_eq!(indices.len(), zhat.rows());
         assert_eq!(zhat.cols(), self.consensus.len());
         for (r, &idx) in indices.iter().enumerate() {
-            let alpha = kernels::dot8(zhat.row(r), &self.consensus);
+            let alpha = kernels::dot(zhat.row(r), &self.consensus);
             self.heap.push(alpha, idx);
             self.scored += 1;
         }

@@ -2177,6 +2177,23 @@ impl SessionRegistry {
                 "service.registry.shards".to_string(),
                 self.shards.len() as u64,
             ),
+            // Which kernel dispatch tier serves this registry's sessions
+            // (0 = scalar, 1 = simd), so deployments can audit that a host
+            // actually runs the tier they expect. Host capability flags ride
+            // along: `simd_available` says the binary *could* run the SIMD
+            // tier here even if the active tier was forced to scalar.
+            (
+                "service.registry.kernel_tier".to_string(),
+                self.compute.dispatch().tier().index(),
+            ),
+            (
+                "service.registry.kernel_avx2".to_string(),
+                u64::from(crate::tensor::kernels::avx2_detected()),
+            ),
+            (
+                "service.registry.kernel_simd_available".to_string(),
+                u64::from(crate::tensor::kernels::simd_dispatch().is_some()),
+            ),
         ];
         for (i, shard) in self.shards.iter().enumerate() {
             pairs.push((
@@ -2433,6 +2450,18 @@ mod tests {
             .iter()
             .any(|(n, _)| n == "service.registry.max_scorer_bytes"));
         assert!(all.iter().any(|(n, _)| n == "service.registry.shards"));
+        // Kernel-tier audit rows: tier index matches the registry's own
+        // backend, and the capability flags are 0/1.
+        let tier = all
+            .iter()
+            .find(|(n, _)| n == "service.registry.kernel_tier")
+            .map(|(_, v)| *v)
+            .unwrap();
+        assert_eq!(tier, reg.compute.dispatch().tier().index());
+        for flag in ["service.registry.kernel_avx2", "service.registry.kernel_simd_available"] {
+            let v = all.iter().find(|(n, _)| n == flag).map(|(_, v)| *v).unwrap();
+            assert!(v <= 1, "{flag} must be a 0/1 flag, got {v}");
+        }
     }
 
     #[test]

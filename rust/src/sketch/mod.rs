@@ -147,10 +147,12 @@ impl FdSketch {
         self.energy_seen += energy;
     }
 
-    /// Stream one gradient row into the sketch (Algorithm 1 line 5).
+    /// Stream one gradient row into the sketch (Algorithm 1 line 5). The
+    /// energy uses the backend's dispatch tier — the same f64 dot kernel
+    /// as the batched path, so single-row and batch ingest agree per tier.
     pub fn insert(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.d, "row dim mismatch");
-        self.insert_row_with_energy(row, crate::tensor::dot_f64(row, row));
+        self.insert_row_with_energy(row, self.backend.dispatch().dot_f64(row, row));
     }
 
     /// Stream a batch `[b × d]` of rows: batched row-energy accumulation

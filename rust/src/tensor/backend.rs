@@ -42,16 +42,26 @@ pub trait ComputeBackend: Send + Sync {
         "serial"
     }
 
+    /// The kernel dispatch tier this backend computes with. Defaults to
+    /// the process-wide table ([`kernels::active`]); pinned backends
+    /// ([`PinnedSerialBackend`], [`ParallelBackend::with_dispatch`])
+    /// override it so benches and parity tests can hold both tiers side
+    /// by side without mutating global state.
+    fn dispatch(&self) -> &'static kernels::KernelDispatch {
+        kernels::active()
+    }
+
     /// `buf·bufᵀ` for the FD shrink's `m × d` buffer (m = 2ℓ).
     fn gram(&self, buf: &Matrix) -> Matrix {
-        kernels::gram(buf)
+        self.dispatch().gram(buf)
     }
 
     /// `rot·buf` for the FD shrink's `ℓ × m` rotation against the buffer.
     fn apply_rot(&self, rot: &Matrix, buf: &Matrix) -> Matrix {
         assert_eq!(rot.cols(), buf.rows(), "apply_rot inner dim");
         let mut out = Matrix::zeros(rot.rows(), buf.cols());
-        kernels::matmul_rows(rot, buf, 0, rot.rows(), out.as_mut_slice());
+        self.dispatch()
+            .matmul_rows(rot, buf, 0, rot.rows(), out.as_mut_slice());
         out
     }
 
@@ -61,7 +71,8 @@ pub trait ComputeBackend: Send + Sync {
     fn matmul_transb_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
         assert_eq!(a.cols(), b.cols(), "matmul_transb inner dim");
         assert_eq!((out.rows(), out.cols()), (a.rows(), b.rows()));
-        kernels::matmul_transb_rows(a, b, 0, a.rows(), out.as_mut_slice());
+        self.dispatch()
+            .matmul_transb_rows(a, b, 0, a.rows(), out.as_mut_slice());
     }
 
     /// Allocating form of [`matmul_transb_into`].
@@ -77,7 +88,7 @@ pub trait ComputeBackend: Send + Sync {
     /// gain scans over all scored rows.
     fn matvec(&self, m: &Matrix, x: &[f32]) -> Vec<f32> {
         let mut out = vec![0.0f32; m.rows()];
-        kernels::matvec_rows(m, x, 0, m.rows(), &mut out);
+        self.dispatch().matvec_rows(m, x, 0, m.rows(), &mut out);
         out
     }
 
@@ -85,7 +96,7 @@ pub trait ComputeBackend: Send + Sync {
     /// for the FD certificate and GRAFT's residual scan).
     fn row_energies(&self, m: &Matrix) -> Vec<f64> {
         let mut out = vec![0.0f64; m.rows()];
-        kernels::row_energies_rows(m, 0, m.rows(), &mut out);
+        self.dispatch().row_energies_rows(m, 0, m.rows(), &mut out);
         out
     }
 
@@ -93,7 +104,8 @@ pub trait ComputeBackend: Send + Sync {
     /// norms (the Phase-II `‖S gᵢ‖` output; zero rows stay zero).
     fn normalize_rows(&self, m: &mut Matrix) -> Vec<f32> {
         let mut norms = vec![0.0f32; m.rows()];
-        kernels::normalize_rows_rows(m, 0, m.rows(), &mut norms);
+        self.dispatch()
+            .normalize_rows_rows(m, 0, m.rows(), &mut norms);
         norms
     }
 
@@ -101,7 +113,7 @@ pub trait ComputeBackend: Send + Sync {
     /// consensus accumulator. Serial on every backend by contract: the
     /// row-sequential f64 order is part of the exactness guarantee.
     fn accumulate_col_sums(&self, m: &Matrix, acc: &mut [f64]) {
-        kernels::accumulate_col_sums(m, acc);
+        self.dispatch().accumulate_col_sums(m, acc);
     }
 }
 
@@ -111,11 +123,28 @@ impl std::fmt::Debug for dyn ComputeBackend {
     }
 }
 
-/// Pure-serial reference backend: the trait's default kernels, verbatim.
+/// Pure-serial reference backend: the trait's default kernels on the
+/// process-wide dispatch tier, verbatim.
 #[derive(Default, Debug, Clone, Copy)]
 pub struct SerialBackend;
 
 impl ComputeBackend for SerialBackend {}
+
+/// Serial backend pinned to an explicit dispatch tier, regardless of the
+/// process-wide selection — the handle `sage bench kernels` and the
+/// scalar↔SIMD parity tests use to compare tiers within one process.
+#[derive(Clone, Copy)]
+pub struct PinnedSerialBackend(pub &'static kernels::KernelDispatch);
+
+impl ComputeBackend for PinnedSerialBackend {
+    fn name(&self) -> &'static str {
+        self.0.isa()
+    }
+
+    fn dispatch(&self) -> &'static kernels::KernelDispatch {
+        self.0
+    }
+}
 
 /// The shared serial backend (cheap to clone; used as the default wherever
 /// no explicit backend is threaded through).
@@ -183,6 +212,10 @@ impl ComputeBackend for TimedBackend {
         self.inner.name()
     }
 
+    fn dispatch(&self) -> &'static kernels::KernelDispatch {
+        self.inner.dispatch()
+    }
+
     fn gram(&self, buf: &Matrix) -> Matrix {
         let _s = trace::span("kernel.gram");
         let _t = metrics::ScopedTimer::new(self.gram_ns);
@@ -248,6 +281,10 @@ pub struct ParallelBackend {
     /// Minimum multiply-adds before forking (0 = always fork; tests use
     /// this to force the parallel path on tiny shapes).
     min_flops: usize,
+    /// Pinned dispatch tier, or `None` to resolve the process-wide table
+    /// lazily (so constructing a backend never forces tier resolution
+    /// before the CLI applies `--kernel-tier`).
+    dispatch: Option<&'static kernels::KernelDispatch>,
 }
 
 impl ParallelBackend {
@@ -257,6 +294,7 @@ impl ParallelBackend {
         Self {
             pool,
             min_flops: PAR_MIN_FLOPS,
+            dispatch: None,
         }
     }
 
@@ -268,6 +306,13 @@ impl ParallelBackend {
     /// Override the serial-inline threshold (0 forces every op parallel).
     pub fn with_min_flops(mut self, min_flops: usize) -> Self {
         self.min_flops = min_flops;
+        self
+    }
+
+    /// Pin an explicit dispatch tier (benches / cross-tier parity tests;
+    /// the default follows the process-wide [`kernels::active`] table).
+    pub fn with_dispatch(mut self, dispatch: &'static kernels::KernelDispatch) -> Self {
+        self.dispatch = Some(dispatch);
         self
     }
 
@@ -294,11 +339,16 @@ impl ComputeBackend for ParallelBackend {
         "parallel"
     }
 
+    fn dispatch(&self) -> &'static kernels::KernelDispatch {
+        self.dispatch.unwrap_or_else(kernels::active)
+    }
+
     fn gram(&self, buf: &Matrix) -> Matrix {
+        let d = self.dispatch();
         let m = buf.rows();
         // Lower-triangle work ≈ m²d/2.
         if m * m * buf.cols() / 2 < self.min_flops || m == 0 {
-            return kernels::gram(buf);
+            return d.gram(buf);
         }
         let mut out = Matrix::zeros(m, m);
         let optr = OutPtr(out.as_mut_slice().as_mut_ptr());
@@ -307,7 +357,7 @@ impl ComputeBackend for ParallelBackend {
             // buffer outlives the fork/join (see OutPtr).
             let slice =
                 unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * m), (r1 - r0) * m) };
-            kernels::gram_rows(buf, r0, r1, slice);
+            d.gram_rows(buf, r0, r1, slice);
         });
         kernels::mirror_lower(&mut out);
         out
@@ -315,10 +365,11 @@ impl ComputeBackend for ParallelBackend {
 
     fn apply_rot(&self, rot: &Matrix, buf: &Matrix) -> Matrix {
         assert_eq!(rot.cols(), buf.rows(), "apply_rot inner dim");
+        let d = self.dispatch();
         let (m, n) = (rot.rows(), buf.cols());
         let mut out = Matrix::zeros(m, n);
         if m * rot.cols() * n < self.min_flops || m == 0 {
-            kernels::matmul_rows(rot, buf, 0, m, out.as_mut_slice());
+            d.matmul_rows(rot, buf, 0, m, out.as_mut_slice());
             return out;
         }
         let optr = OutPtr(out.as_mut_slice().as_mut_ptr());
@@ -326,7 +377,7 @@ impl ComputeBackend for ParallelBackend {
             // SAFETY: disjoint row ranges of `out` (see OutPtr).
             let slice =
                 unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * n), (r1 - r0) * n) };
-            kernels::matmul_rows(rot, buf, r0, r1, slice);
+            d.matmul_rows(rot, buf, r0, r1, slice);
         });
         out
     }
@@ -334,9 +385,10 @@ impl ComputeBackend for ParallelBackend {
     fn matmul_transb_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
         assert_eq!(a.cols(), b.cols(), "matmul_transb inner dim");
         assert_eq!((out.rows(), out.cols()), (a.rows(), b.rows()));
+        let d = self.dispatch();
         let (m, n) = (a.rows(), b.rows());
         if m * n * a.cols() < self.min_flops || m == 0 {
-            kernels::matmul_transb_rows(a, b, 0, m, out.as_mut_slice());
+            d.matmul_transb_rows(a, b, 0, m, out.as_mut_slice());
             return;
         }
         let optr = OutPtr(out.as_mut_slice().as_mut_ptr());
@@ -344,61 +396,64 @@ impl ComputeBackend for ParallelBackend {
             // SAFETY: disjoint row ranges of `out` (see OutPtr).
             let slice =
                 unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * n), (r1 - r0) * n) };
-            kernels::matmul_transb_rows(a, b, r0, r1, slice);
+            d.matmul_transb_rows(a, b, r0, r1, slice);
         });
     }
 
     fn matvec(&self, m: &Matrix, x: &[f32]) -> Vec<f32> {
+        let d = self.dispatch();
         let rows = m.rows();
         let mut out = vec![0.0f32; rows];
         if rows * m.cols() < self.min_flops || rows == 0 {
-            kernels::matvec_rows(m, x, 0, rows, &mut out);
+            d.matvec_rows(m, x, 0, rows, &mut out);
             return out;
         }
         let optr = OutPtr(out.as_mut_ptr());
         self.for_row_chunks(rows, &|r0, r1| {
             // SAFETY: disjoint element ranges of `out` (see OutPtr).
             let slice = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0), r1 - r0) };
-            kernels::matvec_rows(m, x, r0, r1, slice);
+            d.matvec_rows(m, x, r0, r1, slice);
         });
         out
     }
 
     fn row_energies(&self, m: &Matrix) -> Vec<f64> {
+        let d = self.dispatch();
         let rows = m.rows();
         let mut out = vec![0.0f64; rows];
         if rows * m.cols() < self.min_flops || rows == 0 {
-            kernels::row_energies_rows(m, 0, rows, &mut out);
+            d.row_energies_rows(m, 0, rows, &mut out);
             return out;
         }
         let optr = OutPtr(out.as_mut_ptr());
         self.for_row_chunks(rows, &|r0, r1| {
             // SAFETY: disjoint element ranges of `out` (see OutPtr).
             let slice = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0), r1 - r0) };
-            kernels::row_energies_rows(m, r0, r1, slice);
+            d.row_energies_rows(m, r0, r1, slice);
         });
         out
     }
 
     fn normalize_rows(&self, m: &mut Matrix) -> Vec<f32> {
+        let d = self.dispatch();
         let rows = m.rows();
         let cols = m.cols();
         let mut norms = vec![0.0f32; rows];
         if rows * cols < self.min_flops || rows == 0 {
-            kernels::normalize_rows_rows(m, 0, rows, &mut norms);
+            d.normalize_rows_rows(m, 0, rows, &mut norms);
             return norms;
         }
         let mptr = OutPtr(m.as_mut_slice().as_mut_ptr());
         let nptr = OutPtr(norms.as_mut_ptr());
         self.for_row_chunks(rows, &|r0, r1| {
             // SAFETY: disjoint row ranges of `m` and element ranges of
-            // `norms` (see OutPtr). The chunk view is rebuilt as a Matrix
-            // so the kernel sees proper row geometry.
+            // `norms` (see OutPtr). Each chunk row is normalized with the
+            // same pinned dispatch the serial path uses.
             let rows_slice =
                 unsafe { std::slice::from_raw_parts_mut(mptr.0.add(r0 * cols), (r1 - r0) * cols) };
             let nslice = unsafe { std::slice::from_raw_parts_mut(nptr.0.add(r0), r1 - r0) };
             for (k, chunk_row) in rows_slice.chunks_mut(cols).enumerate() {
-                nslice[k] = super::ops::normalize_in_place(chunk_row) as f32;
+                nslice[k] = d.normalize_in_place(chunk_row) as f32;
             }
         });
         norms
@@ -459,6 +514,34 @@ mod tests {
                 assert_bits_eq(ma.as_slice(), mb.as_slice(), "normalized rows");
             });
         }
+    }
+
+    #[test]
+    fn pinned_simd_backend_bit_identical_to_pinned_scalar() {
+        let Some(simd) = kernels::simd_dispatch() else {
+            eprintln!("skip: no SIMD tier on this host");
+            return;
+        };
+        let sc = PinnedSerialBackend(kernels::scalar_dispatch());
+        let sv = PinnedSerialBackend(simd);
+        let pv = ParallelBackend::with_threads(3)
+            .with_min_flops(0)
+            .with_dispatch(simd);
+        forall("tier_backend_parity", 6, |rng| {
+            let m = 1 + rng.below(40) as usize;
+            let d = 1 + rng.below(70) as usize;
+            let a = random_matrix(rng, m, d);
+            let b = random_matrix(rng, 1 + rng.below(9) as usize, d);
+            let want = sc.matmul_transb(&a, &b);
+            assert_bits_eq(sv.matmul_transb(&a, &b).as_slice(), want.as_slice(), "serial simd");
+            assert_bits_eq(pv.matmul_transb(&a, &b).as_slice(), want.as_slice(), "parallel simd");
+            assert_bits_eq(sv.gram(&a).as_slice(), sc.gram(&a).as_slice(), "gram");
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            assert_bits_eq(&sv.matvec(&a, &x), &sc.matvec(&a, &x), "matvec");
+            for (x, y) in sv.row_energies(&a).iter().zip(sc.row_energies(&a).iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "row_energies");
+            }
+        });
     }
 
     #[test]

@@ -1,48 +1,950 @@
-//! Serial compute microkernels — the single source of truth for every hot
+//! Compute microkernels — the single source of truth for every hot
 //! contraction in the system (FD shrink, Phase-II projection, consensus
-//! matvec, batched row norms/energies).
+//! matvec, batched row norms/energies) — now organised as **dispatch
+//! tiers** behind [`KernelDispatch`]:
 //!
-//! Each kernel is written in *row-grid* form: it computes a contiguous row
-//! range `[r0, r1)` of its output. The serial [`ComputeBackend`] calls it
-//! once with the full range; the parallel backend calls it once per chunk
-//! of a **fixed, worker-count-independent row grid** (see [`row_chunk`]).
-//! Because every output element is produced by exactly one kernel call with
-//! a fixed intra-kernel accumulation order, the split never changes results:
-//! parallel output is bit-identical to serial for any worker count.
+//! * **scalar** — plain Rust with a fixed multi-accumulator layout the
+//!   compiler auto-vectorizes on whatever the baseline ISA offers.
+//! * **simd** — the same kernels written as explicit 8-lane f32 / 4-lane
+//!   f64 vectors: AVX2 intrinsics on `x86_64` (runtime-detected), or
+//!   `std::simd` when built with the nightly-only `portable-simd` feature.
 //!
-//! The dot microkernel is [`dot8`]: 8-wide unrolled with 8 independent
-//! accumulators, which the compiler auto-vectorizes (two 4-lane or one
-//! 8-lane FMA stream); matrix kernels tile their loops so the smaller
-//! operand stays cache-resident while the larger one streams.
+//! One table is selected at startup ([`active`]; forced with
+//! `--kernel-tier` / `SAGE_KERNEL_TIER`) and both [`SerialBackend`] and
+//! [`ParallelBackend`] route through it, so the whole method matrix — SAGE
+//! shrink/projection and every baseline scan — inherits the tier.
+//!
+//! # The cross-tier bit-identity contract
+//!
+//! Results are bit-identical **across tiers**, not just across worker
+//! counts. Both tiers implement the *same* fixed accumulation semantics:
+//!
+//! * f32 dots run [`DOT_STREAMS`] independent streams of [`F32_LANES`]
+//!   accumulator lanes (4 × 8 = 32 accumulators — enough independent
+//!   add-chains to hide FP-add latency on every ISA), reduced by one fixed
+//!   tree; f64 dots use 4 × 4 lanes.
+//! * Every multiply-add is an explicit **mul then add** (two IEEE
+//!   roundings). The SIMD tier never uses hardware FMA, and Rust never
+//!   enables floating-point contraction, so `a*b` then `+` is the same two
+//!   rounded ops in both tiers.
+//! * `axpy` / `scale` / f64 column accumulation are elementwise — the lane
+//!   split cannot reassociate anything.
+//! * Tails (`len % block`) fall back to one shared sequential loop.
+//!
+//! Hence `scalar.op(x) ≡ simd.op(x)` bitwise for every op, which keeps the
+//! service's "served selection ≡ offline `run_selection`" guarantee
+//! ISA-independent: a server on an AVX2 host serves the exact TopK of a
+//! scalar offline run. Enforced per-op by `tests/kernel_determinism.rs`.
+//!
+//! # Row-grid form
+//!
+//! Each matrix kernel computes a contiguous row range `[r0, r1)` of its
+//! output. The serial [`ComputeBackend`] calls it once with the full
+//! range; the parallel backend calls it once per chunk of a **fixed,
+//! worker-count-independent row grid** (see [`row_chunk`]). Because every
+//! output element is produced by exactly one kernel call with a fixed
+//! intra-kernel accumulation order, the split never changes results.
 //!
 //! [`ComputeBackend`]: super::ComputeBackend
+//! [`SerialBackend`]: super::SerialBackend
+//! [`ParallelBackend`]: super::ParallelBackend
 
-use super::ops;
 use super::Matrix;
+use crate::util::metrics;
+use std::sync::OnceLock;
 
-/// f32 dot product, 8-wide unrolled with 8 independent accumulators.
-/// The multi-accumulator shape both enables SIMD and fixes the reduction
-/// tree, so results are reproducible anywhere this kernel runs.
-#[inline]
-pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let mut acc = [0.0f32; 8];
-    for c in 0..chunks {
-        let j = c * 8;
-        let aw = &a[j..j + 8];
-        let bw = &b[j..j + 8];
-        for ((s, &x), &y) in acc.iter_mut().zip(aw.iter()).zip(bw.iter()) {
-            *s += x * y;
+/// f32 accumulator lanes per stream (one AVX2 `ymm` / `std::simd` `f32x8`).
+pub const F32_LANES: usize = 8;
+/// f64 accumulator lanes per stream (one AVX2 `ymm` of doubles).
+pub const F64_LANES: usize = 4;
+/// Independent accumulator streams per dot — four parallel add-chains.
+pub const DOT_STREAMS: usize = 4;
+/// f32 dot block: elements consumed per unrolled iteration.
+const F32_BLOCK: usize = F32_LANES * DOT_STREAMS; // 32
+/// f64 dot block.
+const F64_BLOCK: usize = F64_LANES * DOT_STREAMS; // 16
+
+// ---------------------------------------------------------------------------
+// Tier selection
+// ---------------------------------------------------------------------------
+
+/// A dispatch tier: which implementation of the primitive kernels the
+/// process runs. Within a build, tiers are bit-identical (module docs).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelTier {
+    /// Auto-vectorized plain Rust (the reference).
+    Scalar,
+    /// Explicit vector kernels (AVX2 intrinsics or portable `std::simd`).
+    Simd,
+}
+
+impl KernelTier {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Simd => "simd",
         }
     }
-    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
-    for j in chunks * 8..n {
-        s += a[j] * b[j];
+
+    /// Stable numeric encoding for metrics/stats (0 = scalar, 1 = simd).
+    pub fn index(self) -> u64 {
+        match self {
+            KernelTier::Scalar => 0,
+            KernelTier::Simd => 1,
+        }
     }
-    s
 }
+
+/// What the user asked for (`--kernel-tier` / `SAGE_KERNEL_TIER`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum TierChoice {
+    /// Pick the fastest tier the host supports (the default).
+    #[default]
+    Auto,
+    /// Force the scalar reference tier.
+    Scalar,
+    /// Force the SIMD tier (error if the host has no SIMD path).
+    Simd,
+}
+
+impl TierChoice {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(TierChoice::Auto),
+            "scalar" => Ok(TierChoice::Scalar),
+            "simd" => Ok(TierChoice::Simd),
+            other => Err(format!("unknown kernel tier '{other}' (auto|scalar|simd)")),
+        }
+    }
+}
+
+/// Table of primitive kernels for one tier. Constructed only for
+/// implementations valid on the running CPU; all higher-level row-grid
+/// kernels are methods so every caller inherits the tier.
+pub struct KernelDispatch {
+    tier: KernelTier,
+    /// Human-readable implementation name ("scalar", "avx2", "portable").
+    isa: &'static str,
+    dot_fn: fn(&[f32], &[f32]) -> f32,
+    dot_f64_fn: fn(&[f32], &[f32]) -> f64,
+    axpy_fn: fn(f32, &[f32], &mut [f32]),
+    scale_fn: fn(&mut [f32], f32),
+    col_accum_fn: fn(&[f32], &mut [f64]),
+}
+
+static SCALAR: KernelDispatch = KernelDispatch {
+    tier: KernelTier::Scalar,
+    isa: "scalar",
+    dot_fn: scalar::dot,
+    dot_f64_fn: scalar::dot_f64,
+    axpy_fn: scalar::axpy,
+    scale_fn: scalar::scale,
+    col_accum_fn: scalar::col_accum,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: KernelDispatch = KernelDispatch {
+    tier: KernelTier::Simd,
+    isa: "avx2",
+    dot_fn: avx2::dot,
+    dot_f64_fn: avx2::dot_f64,
+    axpy_fn: avx2::axpy,
+    scale_fn: avx2::scale,
+    col_accum_fn: avx2::col_accum,
+};
+
+#[cfg(feature = "portable-simd")]
+static PORTABLE: KernelDispatch = KernelDispatch {
+    tier: KernelTier::Simd,
+    isa: "portable",
+    dot_fn: portable::dot,
+    dot_f64_fn: portable::dot_f64,
+    axpy_fn: portable::axpy,
+    scale_fn: portable::scale,
+    col_accum_fn: portable::col_accum,
+};
+
+/// The scalar reference tier (always available).
+pub fn scalar_dispatch() -> &'static KernelDispatch {
+    &SCALAR
+}
+
+/// True when the running CPU reports AVX2.
+pub fn avx2_detected() -> bool {
+    native_simd().is_some()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn native_simd() -> Option<&'static KernelDispatch> {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Some(&AVX2)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn native_simd() -> Option<&'static KernelDispatch> {
+    None
+}
+
+#[cfg(feature = "portable-simd")]
+fn portable_simd() -> Option<&'static KernelDispatch> {
+    Some(&PORTABLE)
+}
+
+#[cfg(not(feature = "portable-simd"))]
+fn portable_simd() -> Option<&'static KernelDispatch> {
+    None
+}
+
+/// The SIMD tier for this host, if one exists: AVX2 intrinsics when the
+/// CPU reports the feature, else the portable `std::simd` build when the
+/// nightly-only `portable-simd` feature is compiled in.
+pub fn simd_dispatch() -> Option<&'static KernelDispatch> {
+    native_simd().or_else(portable_simd)
+}
+
+/// Dispatch table for an explicit tier (`None` when the host lacks it) —
+/// how benches and parity tests pin both tiers side by side without
+/// touching process-global state.
+pub fn for_tier(tier: KernelTier) -> Option<&'static KernelDispatch> {
+    match tier {
+        KernelTier::Scalar => Some(&SCALAR),
+        KernelTier::Simd => simd_dispatch(),
+    }
+}
+
+static FORCED: OnceLock<TierChoice> = OnceLock::new();
+static ACTIVE: OnceLock<&'static KernelDispatch> = OnceLock::new();
+
+/// Force the process-wide tier. Must run before the first [`active`] use
+/// (the CLI applies `--kernel-tier` before building any backend); errors
+/// if the dispatch was already resolved to something else, or if `simd`
+/// is requested on a host with no SIMD path.
+pub fn set_tier(choice: TierChoice) -> Result<(), String> {
+    if choice == TierChoice::Simd && simd_dispatch().is_none() {
+        return Err(
+            "kernel tier 'simd' unavailable: host CPU has no AVX2 and the binary was built \
+             without the portable-simd feature"
+                .into(),
+        );
+    }
+    if FORCED.set(choice).is_err() && *FORCED.get().unwrap() != choice {
+        return Err("kernel tier already forced to a different value".into());
+    }
+    if let Some(active) = ACTIVE.get() {
+        let want = resolve(choice);
+        if !std::ptr::eq(*active, want) {
+            return Err(format!(
+                "kernel dispatch already initialized to tier '{}' — set --kernel-tier before \
+                 any compute runs",
+                active.tier.name()
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn resolve(choice: TierChoice) -> &'static KernelDispatch {
+    match choice {
+        TierChoice::Scalar => &SCALAR,
+        // `Simd` falls back to scalar (with a warning) instead of panicking
+        // so `SAGE_KERNEL_TIER=simd cargo test` degrades gracefully on a
+        // host without AVX2; the CLI path errors earlier in `set_tier`.
+        TierChoice::Simd => simd_dispatch().unwrap_or_else(|| {
+            crate::log_warn!("kernel tier 'simd' unavailable on this host; using scalar");
+            &SCALAR
+        }),
+        TierChoice::Auto => simd_dispatch().unwrap_or(&SCALAR),
+    }
+}
+
+/// The process-wide dispatch table, resolved once: an explicit
+/// [`set_tier`] wins, then the `SAGE_KERNEL_TIER` env var, then auto
+/// (SIMD when available). Registers the `sage.kernel.*` observability
+/// gauges on first use so every deployment can audit which tier served.
+pub fn active() -> &'static KernelDispatch {
+    ACTIVE.get_or_init(|| {
+        let choice = FORCED
+            .get()
+            .copied()
+            .or_else(|| {
+                let v = std::env::var("SAGE_KERNEL_TIER").ok()?;
+                match TierChoice::parse(&v) {
+                    Ok(c) => Some(c),
+                    Err(e) => {
+                        crate::log_warn!("SAGE_KERNEL_TIER ignored: {e}");
+                        None
+                    }
+                }
+            })
+            .unwrap_or(TierChoice::Auto);
+        let d = resolve(choice);
+        let reg = metrics::global();
+        reg.gauge("sage.kernel.tier").set(d.tier.index());
+        reg.gauge("sage.kernel.feature.avx2").set(u64::from(avx2_detected()));
+        reg.gauge("sage.kernel.feature.simd_available")
+            .set(u64::from(simd_dispatch().is_some()));
+        d
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch methods: primitives + row-grid kernels
+// ---------------------------------------------------------------------------
+
+/// B-row tile width for [`KernelDispatch::matmul_transb_rows`]: the tile
+/// of B rows stays cache-hot while the A rows of the chunk stream past it.
+const B_TILE: usize = 8;
+
+impl KernelDispatch {
+    pub fn tier(&self) -> KernelTier {
+        self.tier
+    }
+
+    /// Implementation name ("scalar" | "avx2" | "portable").
+    pub fn isa(&self) -> &'static str {
+        self.isa
+    }
+
+    /// f32 dot product over the fixed 4-stream × 8-lane accumulator grid.
+    #[inline]
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        (self.dot_fn)(a, b)
+    }
+
+    /// f32 inputs, f64 accumulation (4 × 4 lanes) — norms/energies where
+    /// drift across D ~ 1e5 terms would perturb rankings.
+    #[inline]
+    pub fn dot_f64(&self, a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        (self.dot_f64_fn)(a, b)
+    }
+
+    /// `y += alpha * x` (elementwise — identical in every tier).
+    #[inline]
+    pub fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        (self.axpy_fn)(alpha, x, y);
+    }
+
+    /// `x *= s` (elementwise).
+    #[inline]
+    pub fn scale(&self, x: &mut [f32], s: f32) {
+        (self.scale_fn)(x, s);
+    }
+
+    /// Euclidean norm in f64.
+    #[inline]
+    pub fn norm2(&self, x: &[f32]) -> f64 {
+        self.dot_f64(x, x).sqrt()
+    }
+
+    /// `x /= ‖x‖`; returns the norm. Zero vectors stay zero (the paper's
+    /// `ẑᵢ = 0` convention, Algorithm 1 line 13).
+    pub fn normalize_in_place(&self, x: &mut [f32]) -> f64 {
+        let n = self.norm2(x);
+        if n > 0.0 {
+            self.scale(x, (1.0 / n) as f32);
+        }
+        n
+    }
+
+    /// Rows `[r0, r1)` of `C = A·Bᵀ` (the Phase-II projection shape: A =
+    /// the `b × D` gradient block, B = the `ℓ × D` sketch) into `out`,
+    /// which holds exactly those rows (`(r1-r0) × b.rows()`, row-major).
+    /// Each element is one [`KernelDispatch::dot`].
+    pub fn matmul_transb_rows(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
+        let n = b.rows();
+        debug_assert_eq!(a.cols(), b.cols(), "matmul_transb inner dim");
+        debug_assert_eq!(out.len(), (r1 - r0) * n);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + B_TILE).min(n);
+            for i in r0..r1 {
+                let arow = a.row(i);
+                let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
+                for j in j0..j1 {
+                    orow[j] = self.dot(arow, b.row(j));
+                }
+            }
+            j0 = j1;
+        }
+    }
+
+    /// Rows `[r0, r1)` of the symmetric Gram `G = A·Aᵀ`, lower triangle
+    /// only (`j ≤ i`); `out` holds full rows. Callers mirror the strict
+    /// upper triangle afterwards with [`mirror_lower`] — a cheap serial
+    /// pass that keeps the two triangles bit-identical by construction.
+    pub fn gram_rows(&self, a: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
+        let n = a.rows();
+        debug_assert_eq!(out.len(), (r1 - r0) * n);
+        for i in r0..r1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
+            let mut j0 = 0;
+            while j0 <= i {
+                let j1 = (j0 + B_TILE).min(i + 1);
+                for j in j0..j1 {
+                    orow[j] = self.dot(arow, a.row(j));
+                }
+                j0 = j1;
+            }
+        }
+    }
+
+    /// Full serial Gram via the row-grid kernel + mirror (the serial
+    /// backend's `gram`, and the reference the parallel path must match
+    /// bit-for-bit).
+    pub fn gram(&self, a: &Matrix) -> Matrix {
+        let n = a.rows();
+        let mut out = Matrix::zeros(n, n);
+        self.gram_rows(a, 0, n, out.as_mut_slice());
+        mirror_lower(&mut out);
+        out
+    }
+
+    /// Rows `[r0, r1)` of `C = A·B` (the FD shrink's `R·S` contraction
+    /// shape) into `out` (`(r1-r0) × b.cols()`). Row-major ikj loop: each
+    /// output row accumulates `a[i][k] · b_k` with a fixed k order via
+    /// [`KernelDispatch::axpy`], so the row split never changes results.
+    /// Zero `a[i][k]` terms are skipped (adding `0 · x` is exact for
+    /// finite `x`; rotation rows are built finite).
+    pub fn matmul_rows(&self, a: &Matrix, b: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
+        let n = b.cols();
+        debug_assert_eq!(a.cols(), b.rows(), "matmul inner dim");
+        debug_assert_eq!(out.len(), (r1 - r0) * n);
+        for i in r0..r1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
+            orow.fill(0.0);
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik != 0.0 {
+                    self.axpy(aik, b.row(k), orow);
+                }
+            }
+        }
+    }
+
+    /// `out[i - r0] = ⟨m_i, x⟩` for rows `[r0, r1)` — the consensus matvec
+    /// (`α = Ẑ·u`) and the selection rules' gain scans.
+    pub fn matvec_rows(&self, m: &Matrix, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        debug_assert_eq!(m.cols(), x.len(), "matvec dim");
+        debug_assert_eq!(out.len(), r1 - r0);
+        for i in r0..r1 {
+            out[i - r0] = self.dot(m.row(i), x);
+        }
+    }
+
+    /// `out[i - r0] = ‖m_i‖²` in f64 for rows `[r0, r1)` — the batched
+    /// row-energy accumulation under `FdSketch::insert_batch` and GRAFT's
+    /// residual scan. Same f64 kernel as the single-row insert path, so
+    /// the streamed energy certificate is path-independent.
+    pub fn row_energies_rows(&self, m: &Matrix, r0: usize, r1: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), r1 - r0);
+        for i in r0..r1 {
+            let row = m.row(i);
+            out[i - r0] = self.dot_f64(row, row);
+        }
+    }
+
+    /// Normalize rows `[r0, r1)` of `m` in place, recording each row's
+    /// pre-normalization Euclidean norm (the Phase-II `‖S gᵢ‖` output).
+    pub fn normalize_rows_rows(&self, m: &mut Matrix, r0: usize, r1: usize, norms: &mut [f32]) {
+        debug_assert_eq!(norms.len(), r1 - r0);
+        for i in r0..r1 {
+            norms[i - r0] = self.normalize_in_place(m.row_mut(i)) as f32;
+        }
+    }
+
+    /// `acc[j] += Σ_rows m[r][j]` in f64, accumulating row-by-row in row
+    /// order — the consensus accumulator of `AgreementScorer::add_batch`.
+    /// Row-sequential by contract (the row order IS the accumulation order
+    /// the exactness guarantee pins down); the per-row column update is
+    /// elementwise, so the SIMD tier changes nothing.
+    pub fn accumulate_col_sums(&self, m: &Matrix, acc: &mut [f64]) {
+        debug_assert_eq!(m.cols(), acc.len());
+        for r in 0..m.rows() {
+            (self.col_accum_fn)(m.row(r), acc);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar tier
+// ---------------------------------------------------------------------------
+
+/// Plain-Rust reference kernels over the shared accumulator layout. These
+/// define the semantics every other tier must reproduce bit-for-bit.
+mod scalar {
+    use super::{DOT_STREAMS, F32_BLOCK, F32_LANES, F64_BLOCK, F64_LANES};
+
+    /// The fixed f32 reduction tree both tiers share: streams combine
+    /// pairwise per lane, then lanes fold with the `(l, l+4)` pattern.
+    #[inline]
+    pub(super) fn reduce_f32(acc: &[[f32; F32_LANES]; DOT_STREAMS]) -> f32 {
+        let mut lane = [0.0f32; F32_LANES];
+        for (l, v) in lane.iter_mut().enumerate() {
+            *v = (acc[0][l] + acc[1][l]) + (acc[2][l] + acc[3][l]);
+        }
+        ((lane[0] + lane[4]) + (lane[1] + lane[5])) + ((lane[2] + lane[6]) + (lane[3] + lane[7]))
+    }
+
+    /// The fixed f64 reduction tree (4 lanes: fold `(l, l+2)` pairs).
+    #[inline]
+    pub(super) fn reduce_f64(acc: &[[f64; F64_LANES]; DOT_STREAMS]) -> f64 {
+        let mut lane = [0.0f64; F64_LANES];
+        for (l, v) in lane.iter_mut().enumerate() {
+            *v = (acc[0][l] + acc[1][l]) + (acc[2][l] + acc[3][l]);
+        }
+        (lane[0] + lane[2]) + (lane[1] + lane[3])
+    }
+
+    pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let blocks = n / F32_BLOCK;
+        let mut acc = [[0.0f32; F32_LANES]; DOT_STREAMS];
+        for blk in 0..blocks {
+            let base = blk * F32_BLOCK;
+            for (s, stream) in acc.iter_mut().enumerate() {
+                let j = base + s * F32_LANES;
+                let aw = &a[j..j + F32_LANES];
+                let bw = &b[j..j + F32_LANES];
+                for ((t, &x), &y) in stream.iter_mut().zip(aw).zip(bw) {
+                    *t += x * y;
+                }
+            }
+        }
+        let mut s = reduce_f32(&acc);
+        for j in blocks * F32_BLOCK..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    pub(super) fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let blocks = n / F64_BLOCK;
+        let mut acc = [[0.0f64; F64_LANES]; DOT_STREAMS];
+        for blk in 0..blocks {
+            let base = blk * F64_BLOCK;
+            for (s, stream) in acc.iter_mut().enumerate() {
+                let j = base + s * F64_LANES;
+                let aw = &a[j..j + F64_LANES];
+                let bw = &b[j..j + F64_LANES];
+                for ((t, &x), &y) in stream.iter_mut().zip(aw).zip(bw) {
+                    *t += x as f64 * y as f64;
+                }
+            }
+        }
+        let mut s = reduce_f64(&acc);
+        for j in blocks * F64_BLOCK..n {
+            s += a[j] as f64 * b[j] as f64;
+        }
+        s
+    }
+
+    pub(super) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+            *yi += alpha * xi;
+        }
+    }
+
+    pub(super) fn scale(x: &mut [f32], s: f32) {
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub(super) fn col_accum(row: &[f32], acc: &mut [f64]) {
+        for (a, &v) in acc.iter_mut().zip(row.iter()) {
+            *a += v as f64;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 tier (x86_64, runtime-detected)
+// ---------------------------------------------------------------------------
+
+/// AVX2 intrinsics kernels. Every function mirrors its scalar twin
+/// operation-for-operation: same accumulator layout, same mul-then-add
+/// (no FMA — `_mm256_fmadd_*` is never used and Rust keeps LLVM's FP
+/// contraction off), same reduction tree, same sequential tails — so the
+/// outputs are bit-identical to the scalar tier.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{F32_BLOCK, F64_BLOCK};
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_impl(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let blocks = n / F32_BLOCK;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        for blk in 0..blocks {
+            let j = blk * F32_BLOCK;
+            acc0 = _mm256_add_ps(
+                acc0,
+                _mm256_mul_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j))),
+            );
+            acc1 = _mm256_add_ps(
+                acc1,
+                _mm256_mul_ps(_mm256_loadu_ps(ap.add(j + 8)), _mm256_loadu_ps(bp.add(j + 8))),
+            );
+            acc2 = _mm256_add_ps(
+                acc2,
+                _mm256_mul_ps(_mm256_loadu_ps(ap.add(j + 16)), _mm256_loadu_ps(bp.add(j + 16))),
+            );
+            acc3 = _mm256_add_ps(
+                acc3,
+                _mm256_mul_ps(_mm256_loadu_ps(ap.add(j + 24)), _mm256_loadu_ps(bp.add(j + 24))),
+            );
+        }
+        // Stream combine, then the fixed (l, l+4) lane tree — the exact
+        // shape of scalar::reduce_f32.
+        let lane = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+        let q = _mm_add_ps(_mm256_castps256_ps128(lane), _mm256_extractf128_ps::<1>(lane));
+        let mut qa = [0.0f32; 4];
+        _mm_storeu_ps(qa.as_mut_ptr(), q);
+        let mut s = (qa[0] + qa[1]) + (qa[2] + qa[3]);
+        for j in blocks * F32_BLOCK..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_f64_impl(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let blocks = n / F64_BLOCK;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut acc2 = _mm256_setzero_pd();
+        let mut acc3 = _mm256_setzero_pd();
+        for blk in 0..blocks {
+            let j = blk * F64_BLOCK;
+            acc0 = _mm256_add_pd(
+                acc0,
+                _mm256_mul_pd(
+                    _mm256_cvtps_pd(_mm_loadu_ps(ap.add(j))),
+                    _mm256_cvtps_pd(_mm_loadu_ps(bp.add(j))),
+                ),
+            );
+            acc1 = _mm256_add_pd(
+                acc1,
+                _mm256_mul_pd(
+                    _mm256_cvtps_pd(_mm_loadu_ps(ap.add(j + 4))),
+                    _mm256_cvtps_pd(_mm_loadu_ps(bp.add(j + 4))),
+                ),
+            );
+            acc2 = _mm256_add_pd(
+                acc2,
+                _mm256_mul_pd(
+                    _mm256_cvtps_pd(_mm_loadu_ps(ap.add(j + 8))),
+                    _mm256_cvtps_pd(_mm_loadu_ps(bp.add(j + 8))),
+                ),
+            );
+            acc3 = _mm256_add_pd(
+                acc3,
+                _mm256_mul_pd(
+                    _mm256_cvtps_pd(_mm_loadu_ps(ap.add(j + 12))),
+                    _mm256_cvtps_pd(_mm_loadu_ps(bp.add(j + 12))),
+                ),
+            );
+        }
+        let lane = _mm256_add_pd(_mm256_add_pd(acc0, acc1), _mm256_add_pd(acc2, acc3));
+        let q = _mm_add_pd(_mm256_castpd256_pd128(lane), _mm256_extractf128_pd::<1>(lane));
+        let mut qa = [0.0f64; 2];
+        _mm_storeu_pd(qa.as_mut_ptr(), q);
+        let mut s = qa[0] + qa[1];
+        for j in blocks * F64_BLOCK..n {
+            s += a[j] as f64 * b[j] as f64;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_impl(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let blocks = n / 8;
+        let va = _mm256_set1_ps(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        for blk in 0..blocks {
+            let j = blk * 8;
+            let v = _mm256_add_ps(
+                _mm256_loadu_ps(yp.add(j)),
+                _mm256_mul_ps(va, _mm256_loadu_ps(xp.add(j))),
+            );
+            _mm256_storeu_ps(yp.add(j), v);
+        }
+        for j in blocks * 8..n {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn scale_impl(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let blocks = n / 8;
+        let vs = _mm256_set1_ps(s);
+        let xp = x.as_mut_ptr();
+        for blk in 0..blocks {
+            let j = blk * 8;
+            // Operand order matches the scalar `x * s`.
+            _mm256_storeu_ps(xp.add(j), _mm256_mul_ps(_mm256_loadu_ps(xp.add(j)), vs));
+        }
+        for j in blocks * 8..n {
+            x[j] *= s;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn col_accum_impl(row: &[f32], acc: &mut [f64]) {
+        let n = row.len();
+        let blocks = n / 4;
+        let rp = row.as_ptr();
+        let ap = acc.as_mut_ptr();
+        for blk in 0..blocks {
+            let j = blk * 4;
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(rp.add(j)));
+            _mm256_storeu_pd(ap.add(j), _mm256_add_pd(_mm256_loadu_pd(ap.add(j)), v));
+        }
+        for j in blocks * 4..n {
+            acc[j] += row[j] as f64;
+        }
+    }
+
+    // Safe wrappers: reachable only through the AVX2 dispatch table, which
+    // `simd_dispatch` hands out only after `is_x86_feature_detected!`
+    // confirmed the CPU supports it.
+
+    pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: AVX2 presence verified at dispatch construction.
+        unsafe { dot_impl(a, b) }
+    }
+
+    pub(super) fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        // SAFETY: as above.
+        unsafe { dot_f64_impl(a, b) }
+    }
+
+    pub(super) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        // SAFETY: as above.
+        unsafe { axpy_impl(alpha, x, y) }
+    }
+
+    pub(super) fn scale(x: &mut [f32], s: f32) {
+        // SAFETY: as above.
+        unsafe { scale_impl(x, s) }
+    }
+
+    pub(super) fn col_accum(row: &[f32], acc: &mut [f64]) {
+        debug_assert!(acc.len() >= row.len());
+        // SAFETY: as above.
+        unsafe { col_accum_impl(row, acc) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable std::simd tier (nightly-only `portable-simd` feature)
+// ---------------------------------------------------------------------------
+
+/// `std::simd` kernels for non-x86 hosts (NEON et al. via the portable
+/// API). Same layout/reduction/tail discipline as the other tiers;
+/// `std::simd` element ops are strict IEEE with no contraction, so the
+/// bit-identity argument is unchanged. Requires a nightly toolchain:
+/// `cargo +nightly build --features portable-simd`.
+#[cfg(feature = "portable-simd")]
+mod portable {
+    use super::{DOT_STREAMS, F32_BLOCK, F32_LANES, F64_BLOCK, F64_LANES};
+    use std::simd::{f32x8, f64x4};
+
+    pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let blocks = n / F32_BLOCK;
+        let mut acc = [f32x8::splat(0.0); DOT_STREAMS];
+        for blk in 0..blocks {
+            let base = blk * F32_BLOCK;
+            for (s, stream) in acc.iter_mut().enumerate() {
+                let j = base + s * F32_LANES;
+                let va = f32x8::from_slice(&a[j..j + F32_LANES]);
+                let vb = f32x8::from_slice(&b[j..j + F32_LANES]);
+                *stream += va * vb;
+            }
+        }
+        let lane = ((acc[0] + acc[1]) + (acc[2] + acc[3])).to_array();
+        let mut s = ((lane[0] + lane[4]) + (lane[1] + lane[5]))
+            + ((lane[2] + lane[6]) + (lane[3] + lane[7]));
+        for j in blocks * F32_BLOCK..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    pub(super) fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let blocks = n / F64_BLOCK;
+        let mut acc = [f64x4::splat(0.0); DOT_STREAMS];
+        for blk in 0..blocks {
+            let base = blk * F64_BLOCK;
+            for (s, stream) in acc.iter_mut().enumerate() {
+                let j = base + s * F64_LANES;
+                let va = f64x4::from_array([
+                    a[j] as f64,
+                    a[j + 1] as f64,
+                    a[j + 2] as f64,
+                    a[j + 3] as f64,
+                ]);
+                let vb = f64x4::from_array([
+                    b[j] as f64,
+                    b[j + 1] as f64,
+                    b[j + 2] as f64,
+                    b[j + 3] as f64,
+                ]);
+                *stream += va * vb;
+            }
+        }
+        let lane = ((acc[0] + acc[1]) + (acc[2] + acc[3])).to_array();
+        let mut s = (lane[0] + lane[2]) + (lane[1] + lane[3]);
+        for j in blocks * F64_BLOCK..n {
+            s += a[j] as f64 * b[j] as f64;
+        }
+        s
+    }
+
+    pub(super) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let blocks = n / F32_LANES;
+        let va = f32x8::splat(alpha);
+        for blk in 0..blocks {
+            let j = blk * F32_LANES;
+            let v = f32x8::from_slice(&y[j..j + F32_LANES])
+                + va * f32x8::from_slice(&x[j..j + F32_LANES]);
+            y[j..j + F32_LANES].copy_from_slice(&v.to_array());
+        }
+        for j in blocks * F32_LANES..n {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    pub(super) fn scale(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let blocks = n / F32_LANES;
+        let vs = f32x8::splat(s);
+        for blk in 0..blocks {
+            let j = blk * F32_LANES;
+            let v = f32x8::from_slice(&x[j..j + F32_LANES]) * vs;
+            x[j..j + F32_LANES].copy_from_slice(&v.to_array());
+        }
+        for j in blocks * F32_LANES..n {
+            x[j] *= s;
+        }
+    }
+
+    pub(super) fn col_accum(row: &[f32], acc: &mut [f64]) {
+        let n = row.len();
+        let blocks = n / F64_LANES;
+        for blk in 0..blocks {
+            let j = blk * F64_LANES;
+            let v = f64x4::from_array([
+                row[j] as f64,
+                row[j + 1] as f64,
+                row[j + 2] as f64,
+                row[j + 3] as f64,
+            ]);
+            let a = f64x4::from_slice(&acc[j..j + F64_LANES]) + v;
+            acc[j..j + F64_LANES].copy_from_slice(&a.to_array());
+        }
+        for j in blocks * F64_LANES..n {
+            acc[j] += row[j] as f64;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Free-function façade over the active dispatch (Matrix methods, ops, and
+// existing call sites route here and inherit the process tier).
+// ---------------------------------------------------------------------------
+
+/// f32 dot on the active tier (the microkernel under every contraction).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    active().dot(a, b)
+}
+
+/// f64-accumulated dot on the active tier.
+#[inline]
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    active().dot_f64(a, b)
+}
+
+/// `y += alpha·x` on the active tier.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    active().axpy(alpha, x, y)
+}
+
+/// See [`KernelDispatch::matmul_transb_rows`].
+pub fn matmul_transb_rows(a: &Matrix, b: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
+    active().matmul_transb_rows(a, b, r0, r1, out)
+}
+
+/// See [`KernelDispatch::gram_rows`].
+pub fn gram_rows(a: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
+    active().gram_rows(a, r0, r1, out)
+}
+
+/// See [`KernelDispatch::gram`].
+pub fn gram(a: &Matrix) -> Matrix {
+    active().gram(a)
+}
+
+/// See [`KernelDispatch::matmul_rows`].
+pub fn matmul_rows(a: &Matrix, b: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
+    active().matmul_rows(a, b, r0, r1, out)
+}
+
+/// See [`KernelDispatch::matvec_rows`].
+pub fn matvec_rows(m: &Matrix, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+    active().matvec_rows(m, x, r0, r1, out)
+}
+
+/// See [`KernelDispatch::row_energies_rows`].
+pub fn row_energies_rows(m: &Matrix, r0: usize, r1: usize, out: &mut [f64]) {
+    active().row_energies_rows(m, r0, r1, out)
+}
+
+/// See [`KernelDispatch::normalize_rows_rows`].
+pub fn normalize_rows_rows(m: &mut Matrix, r0: usize, r1: usize, norms: &mut [f32]) {
+    active().normalize_rows_rows(m, r0, r1, norms)
+}
+
+/// See [`KernelDispatch::accumulate_col_sums`].
+pub fn accumulate_col_sums(m: &Matrix, acc: &mut [f64]) {
+    active().accumulate_col_sums(m, acc)
+}
+
+// ---------------------------------------------------------------------------
+// Row grid + transpose (tier-independent)
+// ---------------------------------------------------------------------------
 
 /// Fixed row-chunk size for a `rows`-row output grid. Depends ONLY on the
 /// shape — never on the worker count — so the chunk boundaries (and with
@@ -54,53 +956,6 @@ pub fn row_chunk(rows: usize) -> usize {
 /// Number of chunks in the fixed row grid over `rows` rows.
 pub fn row_chunks(rows: usize) -> usize {
     rows.div_ceil(row_chunk(rows))
-}
-
-/// B-row tile width for [`matmul_transb_rows`]: the tile of B rows stays
-/// cache-hot while the A rows of the chunk stream past it.
-const B_TILE: usize = 8;
-
-/// Rows `[r0, r1)` of `C = A·Bᵀ` (the Phase-II projection shape: A = the
-/// `b × D` gradient block, B = the `ℓ × D` sketch) into `out`, which holds
-/// exactly those rows (`(r1-r0) × b.rows()`, row-major). Each element is
-/// one [`dot8`].
-pub fn matmul_transb_rows(a: &Matrix, b: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
-    let n = b.rows();
-    debug_assert_eq!(a.cols(), b.cols(), "matmul_transb inner dim");
-    debug_assert_eq!(out.len(), (r1 - r0) * n);
-    let mut j0 = 0;
-    while j0 < n {
-        let j1 = (j0 + B_TILE).min(n);
-        for i in r0..r1 {
-            let arow = a.row(i);
-            let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
-            for j in j0..j1 {
-                orow[j] = dot8(arow, b.row(j));
-            }
-        }
-        j0 = j1;
-    }
-}
-
-/// Rows `[r0, r1)` of the symmetric Gram `G = A·Aᵀ`, lower triangle only
-/// (`j ≤ i`); `out` holds full rows. Callers mirror the strict upper
-/// triangle afterwards with [`mirror_lower`] — a cheap serial pass that
-/// keeps the two triangles bit-identical by construction.
-pub fn gram_rows(a: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
-    let n = a.rows();
-    debug_assert_eq!(out.len(), (r1 - r0) * n);
-    for i in r0..r1 {
-        let arow = a.row(i);
-        let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
-        let mut j0 = 0;
-        while j0 <= i {
-            let j1 = (j0 + B_TILE).min(i + 1);
-            for j in j0..j1 {
-                orow[j] = dot8(arow, a.row(j));
-            }
-            j0 = j1;
-        }
-    }
 }
 
 /// Copy the lower triangle of a square matrix onto its strict upper
@@ -116,88 +971,13 @@ pub fn mirror_lower(g: &mut Matrix) {
     }
 }
 
-/// Full serial Gram via the row-grid kernel + mirror (the serial backend's
-/// `gram`, and the reference the parallel path must match bit-for-bit).
-pub fn gram(a: &Matrix) -> Matrix {
-    let n = a.rows();
-    let mut out = Matrix::zeros(n, n);
-    gram_rows(a, 0, n, out.as_mut_slice());
-    mirror_lower(&mut out);
-    out
-}
-
-/// Rows `[r0, r1)` of `C = A·B` (the FD shrink's `R·S` contraction shape)
-/// into `out` (`(r1-r0) × b.cols()`). Row-major ikj loop: each output row
-/// accumulates `a[i][k] · b_k` with a fixed k order via `axpy`, so the row
-/// split never changes results. Zero `a[i][k]` terms are skipped (adding
-/// `0 · x` is exact for finite `x`; rotation rows are built finite).
-pub fn matmul_rows(a: &Matrix, b: &Matrix, r0: usize, r1: usize, out: &mut [f32]) {
-    let n = b.cols();
-    debug_assert_eq!(a.cols(), b.rows(), "matmul inner dim");
-    debug_assert_eq!(out.len(), (r1 - r0) * n);
-    for i in r0..r1 {
-        let arow = a.row(i);
-        let orow = &mut out[(i - r0) * n..(i - r0) * n + n];
-        orow.fill(0.0);
-        for (k, &aik) in arow.iter().enumerate() {
-            if aik != 0.0 {
-                ops::axpy(aik, b.row(k), orow);
-            }
-        }
-    }
-}
-
-/// `out[i - r0] = ⟨m_i, x⟩` for rows `[r0, r1)` — the consensus matvec
-/// (`α = Ẑ·u`) and the selection rules' gain scans. One [`dot8`] per row.
-pub fn matvec_rows(m: &Matrix, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
-    debug_assert_eq!(m.cols(), x.len(), "matvec dim");
-    debug_assert_eq!(out.len(), r1 - r0);
-    for i in r0..r1 {
-        out[i - r0] = dot8(m.row(i), x);
-    }
-}
-
-/// `out[i - r0] = ‖m_i‖²` in f64 for rows `[r0, r1)` — the batched
-/// row-energy accumulation under `FdSketch::insert_batch` and GRAFT's
-/// residual scan. Same sequential-f64 semantics as `ops::dot_f64(row, row)`
-/// so the streamed energy certificate is unchanged by the kernel routing.
-pub fn row_energies_rows(m: &Matrix, r0: usize, r1: usize, out: &mut [f64]) {
-    debug_assert_eq!(out.len(), r1 - r0);
-    for i in r0..r1 {
-        let row = m.row(i);
-        out[i - r0] = ops::dot_f64(row, row);
-    }
-}
-
-/// Normalize rows `[r0, r1)` of `m` in place, recording each row's
-/// pre-normalization Euclidean norm (the Phase-II `‖S gᵢ‖` output). Zero
-/// rows stay zero, matching Algorithm 1's `ẑᵢ = 0` convention.
-pub fn normalize_rows_rows(m: &mut Matrix, r0: usize, r1: usize, norms: &mut [f32]) {
-    debug_assert_eq!(norms.len(), r1 - r0);
-    for i in r0..r1 {
-        norms[i - r0] = ops::normalize_in_place(m.row_mut(i)) as f32;
-    }
-}
-
-/// `acc[j] += Σ_rows m[r][j]` in f64, accumulating row-by-row in row order —
-/// the consensus accumulator of `AgreementScorer::add_batch`. Serial by
-/// contract: batches are small (≤ the score batch) and the row order IS the
-/// accumulation order the exactness guarantee pins down.
-pub fn accumulate_col_sums(m: &Matrix, acc: &mut [f64]) {
-    debug_assert_eq!(m.cols(), acc.len());
-    for r in 0..m.rows() {
-        for (j, &v) in m.row(r).iter().enumerate() {
-            acc[j] += v as f64;
-        }
-    }
-}
-
 /// Cache-blocked transpose tile edge (32×32 f32 tiles = two 4 KiB faces).
 const T_TILE: usize = 32;
 
 /// `dst = srcᵀ` via square tiling so both the source rows and destination
 /// rows stay within cache lines per tile (the naive row-major transpose
-/// strides `dst` by `src.rows()` floats per element).
+/// strides `dst` by `src.rows()` floats per element). Pure data movement —
+/// no tier dependence.
 pub fn transpose_into(src: &Matrix, dst: &mut Matrix) {
     let (r, c) = (src.rows(), src.cols());
     debug_assert_eq!((dst.rows(), dst.cols()), (c, r));
@@ -230,17 +1010,110 @@ mod tests {
     }
 
     #[test]
-    fn dot8_matches_f64_reference() {
-        forall("dot8", 30, |rng| {
+    fn dot_matches_f64_reference() {
+        forall("dot", 30, |rng| {
             let n = rng.below(300) as usize;
             let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
             let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
-            let fast = dot8(&a, &b) as f64;
-            let slow = ops::dot_f64(&a, &b);
+            let fast = dot(&a, &b) as f64;
+            let slow: f64 = a.iter().zip(b.iter()).map(|(&x, &y)| x as f64 * y as f64).sum();
             assert!(
                 (fast - slow).abs() < 1e-3 * (1.0 + slow.abs()),
                 "{fast} vs {slow}"
             );
+        });
+    }
+
+    #[test]
+    fn tier_selection_is_coherent() {
+        // The scalar tier always exists; for_tier round-trips; the active
+        // table is one of the two.
+        assert_eq!(scalar_dispatch().tier(), KernelTier::Scalar);
+        assert!(std::ptr::eq(
+            for_tier(KernelTier::Scalar).unwrap(),
+            scalar_dispatch()
+        ));
+        if let Some(simd) = simd_dispatch() {
+            assert_eq!(simd.tier(), KernelTier::Simd);
+            assert!(std::ptr::eq(for_tier(KernelTier::Simd).unwrap(), simd));
+        } else {
+            assert!(for_tier(KernelTier::Simd).is_none());
+        }
+        let act = active();
+        assert!(
+            std::ptr::eq(act, scalar_dispatch())
+                || simd_dispatch().is_some_and(|d| std::ptr::eq(act, d))
+        );
+        // And first use registered the audit gauges.
+        let gauges = crate::util::metrics::global().snapshot_gauges("sage.kernel.");
+        assert!(
+            gauges.iter().any(|(n, _)| n == "sage.kernel.tier"),
+            "tier gauge missing: {gauges:?}"
+        );
+    }
+
+    #[test]
+    fn tier_choice_parses() {
+        assert_eq!(TierChoice::parse("auto").unwrap(), TierChoice::Auto);
+        assert_eq!(TierChoice::parse("scalar").unwrap(), TierChoice::Scalar);
+        assert_eq!(TierChoice::parse("simd").unwrap(), TierChoice::Simd);
+        assert!(TierChoice::parse("gpu").is_err());
+    }
+
+    /// The heart of the tentpole: every primitive is bit-identical between
+    /// the scalar tier and the SIMD tier, for lengths that exercise whole
+    /// blocks, ragged tails, and degenerate sizes.
+    #[test]
+    fn simd_primitives_bit_identical_to_scalar() {
+        let Some(simd) = simd_dispatch() else {
+            eprintln!("skip: no SIMD tier on this host");
+            return;
+        };
+        let sc = scalar_dispatch();
+        forall("tier_parity", 20, |rng| {
+            let n = rng.below(200) as usize;
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            assert_eq!(
+                sc.dot(&a, &b).to_bits(),
+                simd.dot(&a, &b).to_bits(),
+                "dot n={n}"
+            );
+            assert_eq!(
+                sc.dot_f64(&a, &b).to_bits(),
+                simd.dot_f64(&a, &b).to_bits(),
+                "dot_f64 n={n}"
+            );
+            let alpha = rng.normal_f32();
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            sc.axpy(alpha, &a, &mut y1);
+            simd.axpy(alpha, &a, &mut y2);
+            for (i, (x, y)) in y1.iter().zip(y2.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "axpy[{i}] n={n}");
+            }
+            let mut x1 = a.clone();
+            let mut x2 = a.clone();
+            sc.scale(&mut x1, alpha);
+            simd.scale(&mut x2, alpha);
+            for (i, (x, y)) in x1.iter().zip(x2.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "scale[{i}] n={n}");
+            }
+            let mut n1 = a.clone();
+            let mut n2 = a.clone();
+            let r1 = sc.normalize_in_place(&mut n1);
+            let r2 = simd.normalize_in_place(&mut n2);
+            assert_eq!(r1.to_bits(), r2.to_bits(), "norm n={n}");
+            for (i, (x, y)) in n1.iter().zip(n2.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "normalize[{i}] n={n}");
+            }
+            let mut c1 = vec![0.5f64; n];
+            let mut c2 = vec![0.5f64; n];
+            (sc.col_accum_fn)(&a, &mut c1);
+            (simd.col_accum_fn)(&a, &mut c2);
+            for (i, (x, y)) in c1.iter().zip(c2.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "col_accum[{i}] n={n}");
+            }
         });
     }
 
@@ -288,7 +1161,7 @@ mod tests {
             let g = gram(&a);
             let mut full = vec![0.0f32; m * m];
             matmul_transb_rows(&a, &a, 0, m, &mut full);
-            // Lower triangle (incl. diagonal) is computed by the same dot8
+            // Lower triangle (incl. diagonal) is computed by the same dot
             // calls; the upper triangle is the mirror.
             for i in 0..m {
                 for j in 0..m {
@@ -341,7 +1214,7 @@ mod tests {
             let mut en = vec![0.0f64; m];
             row_energies_rows(&a, 0, m, &mut en);
             for (i, &e) in en.iter().enumerate() {
-                assert_eq!(e.to_bits(), ops::dot_f64(a.row(i), a.row(i)).to_bits());
+                assert_eq!(e.to_bits(), dot_f64(a.row(i), a.row(i)).to_bits());
             }
         });
     }

@@ -131,7 +131,7 @@ impl Matrix {
         super::kernels::gram(self)
     }
 
-    /// y = A @ x for a vector x (same `dot8` microkernel as the
+    /// y = A @ x for a vector x (same active-tier `dot` microkernel as the
     /// `ComputeBackend` matvec, so the two stay bit-identical).
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, x.len(), "matvec dim");

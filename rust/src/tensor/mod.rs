@@ -6,12 +6,14 @@
 //! feed decisions (norms, dot products) run in f64 to keep the Rust
 //! reference numerically comparable to the XLA artifacts.
 //!
-//! The hot contractions live in [`kernels`] (tiled, 8-wide-unrolled serial
-//! microkernels) behind the [`ComputeBackend`] layer: [`SerialBackend`] is
-//! the reference, [`ParallelBackend`] splits the same kernels over a shared
-//! threadpool along fixed, worker-count-independent chunk boundaries —
-//! bit-identical results for every worker count (the service's exactness
-//! guarantee depends on this; see docs/ARCHITECTURE.md).
+//! The hot contractions live in [`kernels`] (tiled microkernels organised
+//! as runtime-selected **dispatch tiers** — a scalar reference plus an
+//! 8-lane SIMD tier, bit-identical to each other) behind the
+//! [`ComputeBackend`] layer: [`SerialBackend`] is the reference,
+//! [`ParallelBackend`] splits the same kernels over a shared threadpool
+//! along fixed, worker-count-independent chunk boundaries — bit-identical
+//! results for every worker count AND every tier (the service's exactness
+//! guarantee depends on this; see docs/ARCHITECTURE.md §5.1).
 
 mod backend;
 pub mod kernels;
@@ -19,7 +21,9 @@ mod matrix;
 mod ops;
 
 pub use backend::{
-    compute_backend, serial, ComputeBackend, ParallelBackend, SerialBackend, TimedBackend,
+    compute_backend, serial, ComputeBackend, ParallelBackend, PinnedSerialBackend, SerialBackend,
+    TimedBackend,
 };
+pub use kernels::{KernelTier, TierChoice};
 pub use matrix::Matrix;
 pub use ops::{axpy, dot, dot_f64, norm2, normalize_in_place, scale_in_place};

@@ -1,75 +1,48 @@
-//! BLAS-1 style slice kernels. `dot`/`axpy` are the two hot primitives of
-//! the coordinator-side math; both are written as 4-way unrolled loops the
-//! compiler auto-vectorizes (checked via the micro bench in benches/micro).
+//! BLAS-1 style slice helpers — thin forwarders into the active
+//! [`kernels::KernelDispatch`] tier, kept as a module so existing call
+//! sites (`tensor::dot` et al.) read naturally. The actual loop bodies
+//! live in `kernels.rs` (scalar reference + SIMD tiers, bit-identical);
+//! nothing in the crate carries a private scalar duplicate anymore, so
+//! every dot/axpy user inherits the dispatch tier.
 
-/// f32 dot product with f32 accumulation in 4 independent lanes (enables
-/// SIMD + keeps error acceptable for scoring math; decision-critical norms
-/// use `dot_f64`).
+use super::kernels;
+
+/// f32 dot product (active-tier microkernel; fixed multi-accumulator
+/// layout, see `kernels.rs` module docs).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
-    }
-    s
+    kernels::active().dot(a, b)
 }
 
 /// Dot product with f64 accumulation — for norms/consensus where drift
 /// across D ~ 1e5 terms would perturb rankings.
 #[inline]
 pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter()
-        .zip(b.iter())
-        .map(|(&x, &y)| x as f64 * y as f64)
-        .sum()
+    kernels::active().dot_f64(a, b)
 }
 
 /// y += alpha * x.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * xi;
-    }
+    kernels::active().axpy(alpha, x, y)
 }
 
 /// Euclidean norm (f64 accumulation).
 #[inline]
 pub fn norm2(x: &[f32]) -> f64 {
-    x.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt()
+    kernels::active().norm2(x)
 }
 
 /// x /= ||x||; returns the norm. Zero vectors stay zero (the paper's
 /// z_i = 0 convention in Algorithm 1 line 13).
 pub fn normalize_in_place(x: &mut [f32]) -> f64 {
-    let n = norm2(x);
-    if n > 0.0 {
-        let inv = (1.0 / n) as f32;
-        for v in x.iter_mut() {
-            *v *= inv;
-        }
-    }
-    n
+    kernels::active().normalize_in_place(x)
 }
 
 /// x *= s.
 #[inline]
 pub fn scale_in_place(x: &mut [f32], s: f32) {
-    for v in x.iter_mut() {
-        *v *= s;
-    }
+    kernels::active().scale(x, s)
 }
 
 #[cfg(test)]
@@ -122,5 +95,12 @@ mod tests {
     #[test]
     fn norm2_pythagoras() {
         assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_in_place_matches_mul() {
+        let mut x = [1.0f32, -2.0, 3.5];
+        scale_in_place(&mut x, 2.0);
+        assert_eq!(x, [2.0, -4.0, 7.0]);
     }
 }

@@ -3,11 +3,15 @@
 //! 1. Every `ComputeBackend` op is **bit-identical** between the serial
 //!    reference and the threadpool-parallel backend for worker counts
 //!    {1, 2, 3, 8} and ragged shapes (odd row counts → ragged final chunks).
-//! 2. An `FdSketch` fed the same stream produces bit-identical state on
-//!    either backend (shrinks route through gram/apply_rot).
-//! 3. `run_selection` picks identical indices whichever kernel backend the
+//! 2. Every op is **bit-identical** between the scalar and SIMD dispatch
+//!    tiers — per op, over ragged shapes, and for the full forced-tier
+//!    matrix {scalar, simd} × workers {1, 2, 3, 8} (skipped with a notice
+//!    on hosts where no SIMD tier is available).
+//! 3. An `FdSketch` fed the same stream produces bit-identical state on
+//!    any backend × tier cell (shrinks route through gram/apply_rot).
+//! 4. `run_selection` picks identical indices whichever kernel backend the
 //!    pipeline runs — for every selection method.
-//! 4. Service-level: a registry on a *parallel* kernel backend serves the
+//! 5. Service-level: a registry on a *parallel* kernel backend serves the
 //!    exact TopK of the offline serial run — the served ≡ offline
 //!    exactness guarantee is worker-count-independent.
 //!
@@ -26,7 +30,10 @@ use sage::runtime::{ModelBackend, ReferenceModelBackend};
 use sage::service::registry::SessionRegistry;
 use sage::service::{RegistryConfig, ScoreBatch};
 use sage::sketch::FdSketch;
-use sage::tensor::{ComputeBackend, Matrix, ParallelBackend, SerialBackend, TimedBackend};
+use sage::tensor::kernels::{scalar_dispatch, simd_dispatch};
+use sage::tensor::{
+    ComputeBackend, Matrix, ParallelBackend, PinnedSerialBackend, SerialBackend, TimedBackend,
+};
 use sage::util::rng::Pcg64;
 use std::sync::Arc;
 
@@ -45,56 +52,198 @@ fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
 
 #[test]
 fn every_op_bit_identical_across_worker_counts_and_ragged_shapes() {
-    let serial = SerialBackend;
-    // Odd sizes on purpose: final row chunks are ragged, tails of dot8's
-    // 8-wide unroll are exercised, and 1-row/1-col degenerate shapes too.
-    let shapes: [(usize, usize, usize); 5] =
-        [(1, 1, 1), (3, 7, 2), (17, 33, 5), (64, 129, 9), (131, 40, 31)];
     for &workers in &WORKER_GRID {
         let par = ParallelBackend::with_threads(workers).with_min_flops(0);
-        let mut rng = Pcg64::seeded(42);
-        for &(m, d, l) in &shapes {
-            let a = random_matrix(&mut rng, m, d);
-            let b = random_matrix(&mut rng, l, d);
-            let rot = random_matrix(&mut rng, l, m);
-            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        assert_backend_ops_bit_identical(&SerialBackend, &par, &format!("w={workers}"));
+    }
+}
 
-            assert_bits_eq(
-                par.matmul_transb(&a, &b).as_slice(),
-                serial.matmul_transb(&a, &b).as_slice(),
-                &format!("matmul_transb {m}x{d}@{l} w={workers}"),
-            );
-            assert_bits_eq(
-                par.gram(&a).as_slice(),
-                serial.gram(&a).as_slice(),
-                &format!("gram {m}x{d} w={workers}"),
-            );
-            assert_bits_eq(
-                par.apply_rot(&rot, &a).as_slice(),
-                serial.apply_rot(&rot, &a).as_slice(),
-                &format!("apply_rot {l}x{m}@{d} w={workers}"),
-            );
-            assert_bits_eq(
-                &par.matvec(&a, &x),
-                &serial.matvec(&a, &x),
-                &format!("matvec {m}x{d} w={workers}"),
-            );
-            let ep = par.row_energies(&a);
-            let es = serial.row_energies(&a);
-            for (i, (p, s)) in ep.iter().zip(es.iter()).enumerate() {
-                assert_eq!(p.to_bits(), s.to_bits(), "row_energies[{i}] w={workers}");
-            }
-            let mut ap = a.clone();
-            let mut as_ = a.clone();
-            let np = par.normalize_rows(&mut ap);
-            let ns = serial.normalize_rows(&mut as_);
-            assert_bits_eq(&np, &ns, &format!("norms w={workers}"));
-            assert_bits_eq(
-                ap.as_slice(),
-                as_.as_slice(),
-                &format!("normalized rows w={workers}"),
+/// Exercise every `ComputeBackend` op over the ragged-shape grid on `got`
+/// and assert bitwise equality with `want`. Shared by the worker-count,
+/// tier-parity, and forced-tier-matrix tests so all sweep the identical
+/// op set. Odd sizes on purpose: final row chunks are ragged, the
+/// sequential tails of the 32-wide dot blocking are exercised, and
+/// 1-row/1-col degenerate shapes too.
+fn assert_backend_ops_bit_identical(
+    want: &dyn ComputeBackend,
+    got: &dyn ComputeBackend,
+    label: &str,
+) {
+    let shapes: [(usize, usize, usize); 5] =
+        [(1, 1, 1), (3, 7, 2), (17, 33, 5), (64, 129, 9), (131, 40, 31)];
+    let mut rng = Pcg64::seeded(42);
+    for &(m, d, l) in &shapes {
+        let a = random_matrix(&mut rng, m, d);
+        let b = random_matrix(&mut rng, l, d);
+        let rot = random_matrix(&mut rng, l, m);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+
+        assert_bits_eq(
+            got.matmul_transb(&a, &b).as_slice(),
+            want.matmul_transb(&a, &b).as_slice(),
+            &format!("{label}: matmul_transb {m}x{d}@{l}"),
+        );
+        assert_bits_eq(
+            got.gram(&a).as_slice(),
+            want.gram(&a).as_slice(),
+            &format!("{label}: gram {m}x{d}"),
+        );
+        assert_bits_eq(
+            got.apply_rot(&rot, &a).as_slice(),
+            want.apply_rot(&rot, &a).as_slice(),
+            &format!("{label}: apply_rot {l}x{m}@{d}"),
+        );
+        assert_bits_eq(
+            &got.matvec(&a, &x),
+            &want.matvec(&a, &x),
+            &format!("{label}: matvec {m}x{d}"),
+        );
+        let eg = got.row_energies(&a);
+        let ew = want.row_energies(&a);
+        for (i, (g, w)) in eg.iter().zip(ew.iter()).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{label}: row_energies[{i}]");
+        }
+        let mut ag = a.clone();
+        let mut aw = a.clone();
+        let ng = got.normalize_rows(&mut ag);
+        let nw = want.normalize_rows(&mut aw);
+        assert_bits_eq(&ng, &nw, &format!("{label}: norms"));
+        assert_bits_eq(
+            ag.as_slice(),
+            aw.as_slice(),
+            &format!("{label}: normalized rows"),
+        );
+        let mut acc_g = vec![0.0f64; d];
+        let mut acc_w = vec![0.0f64; d];
+        got.accumulate_col_sums(&a, &mut acc_g);
+        want.accumulate_col_sums(&a, &mut acc_w);
+        for (i, (g, w)) in acc_g.iter().zip(acc_w.iter()).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{label}: col_sums[{i}]");
+        }
+    }
+}
+
+/// Tier parity, op by op: the SIMD tier must be bit-identical to the scalar
+/// tier on every `ComputeBackend` op (ragged shapes included) and on the
+/// raw dispatch primitives at every length straddling the block boundaries.
+/// Skips with a notice when the host offers no SIMD tier.
+#[test]
+fn every_op_bit_identical_between_scalar_and_simd_tiers() {
+    let Some(simd) = simd_dispatch() else {
+        eprintln!("skip: no SIMD kernel tier available on this host");
+        return;
+    };
+    let scalar = scalar_dispatch();
+    assert_backend_ops_bit_identical(
+        &PinnedSerialBackend(scalar),
+        &PinnedSerialBackend(simd),
+        &format!("simd tier ({})", simd.isa()),
+    );
+
+    // Primitives at every length through both 32-wide (f32) and 16-wide
+    // (f64-accumulate) block boundaries, plus a long ragged tail.
+    let mut rng = Pcg64::seeded(9);
+    for n in (0..=67).chain([128, 1023]) {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        assert_eq!(
+            simd.dot(&a, &b).to_bits(),
+            scalar.dot(&a, &b).to_bits(),
+            "dot n={n}"
+        );
+        assert_eq!(
+            simd.dot_f64(&a, &b).to_bits(),
+            scalar.dot_f64(&a, &b).to_bits(),
+            "dot_f64 n={n}"
+        );
+        let (mut ys, mut yv) = (b.clone(), b.clone());
+        scalar.axpy(0.37, &a, &mut ys);
+        simd.axpy(0.37, &a, &mut yv);
+        assert_bits_eq(&yv, &ys, &format!("axpy n={n}"));
+        let (mut xs, mut xv) = (a.clone(), a.clone());
+        scalar.scale(&mut xs, -1.25);
+        simd.scale(&mut xv, -1.25);
+        assert_bits_eq(&xv, &xs, &format!("scale n={n}"));
+        let (mut us, mut uv) = (a.clone(), a.clone());
+        let ns = scalar.normalize_in_place(&mut us);
+        let nv = simd.normalize_in_place(&mut uv);
+        assert_eq!(nv.to_bits(), ns.to_bits(), "normalize norm n={n}");
+        assert_bits_eq(&uv, &us, &format!("normalize n={n}"));
+    }
+}
+
+/// The full forced-tier matrix: {scalar, simd} × workers {1, 2, 3, 8} must
+/// all be bit-identical to the serial-scalar reference — tier choice and
+/// worker count are both free parameters of the determinism contract.
+#[test]
+fn forced_tier_matrix_bit_identical_across_worker_counts() {
+    let reference = PinnedSerialBackend(scalar_dispatch());
+    let tiers: Vec<_> = [Some(scalar_dispatch()), simd_dispatch()]
+        .into_iter()
+        .flatten()
+        .collect();
+    if tiers.len() == 1 {
+        eprintln!("notice: no SIMD tier on this host; matrix covers scalar only");
+    }
+    for dispatch in tiers {
+        for &workers in &WORKER_GRID {
+            let par = ParallelBackend::with_threads(workers)
+                .with_min_flops(0)
+                .with_dispatch(dispatch);
+            assert_backend_ops_bit_identical(
+                &reference,
+                &par,
+                &format!("{} w={workers}", dispatch.isa()),
             );
         }
+    }
+}
+
+/// The FdSketch stream contract extended over tiers: the same stream must
+/// produce bit-identical sketch state on every backend × tier cell.
+#[test]
+fn fd_sketch_stream_bit_identical_across_tiers() {
+    let Some(simd) = simd_dispatch() else {
+        eprintln!("skip: no SIMD kernel tier available on this host");
+        return;
+    };
+    let (ell, d, n) = (6, 37, 100);
+    let mut rng = Pcg64::seeded(7);
+    let stream = random_matrix(&mut rng, n, d);
+    let mut reference =
+        FdSketch::with_backend(ell, d, Arc::new(PinnedSerialBackend(scalar_dispatch())));
+    reference.insert_batch(&stream);
+    let ref_state = reference.export_state();
+    assert!(reference.shrink_count() > 2, "want several shrinks");
+
+    let mut cells: Vec<(String, Arc<dyn ComputeBackend>)> =
+        vec![("serial simd".into(), Arc::new(PinnedSerialBackend(simd)))];
+    for &workers in &WORKER_GRID {
+        cells.push((
+            format!("parallel simd w={workers}"),
+            Arc::new(
+                ParallelBackend::with_threads(workers)
+                    .with_min_flops(0)
+                    .with_dispatch(simd),
+            ),
+        ));
+    }
+    for (label, backend) in cells {
+        let mut fd = FdSketch::with_backend(ell, d, backend);
+        fd.insert_batch(&stream);
+        let state = fd.export_state();
+        assert_eq!(state.shrink_count, ref_state.shrink_count, "{label}");
+        assert_eq!(
+            state.delta_sum.to_bits(),
+            ref_state.delta_sum.to_bits(),
+            "{label} delta_sum"
+        );
+        assert_eq!(
+            state.energy_seen.to_bits(),
+            ref_state.energy_seen.to_bits(),
+            "{label} energy"
+        );
+        assert_bits_eq(&state.buf, &ref_state.buf, &format!("sketch buf {label}"));
     }
 }
 
