@@ -2,18 +2,21 @@
 //! fraction, seed) cell of the paper's evaluation), the generalized
 //! exponential fit + R² used by Figure 1, small-sample statistics, the
 //! kernel-layer serial-vs-parallel bench behind `sage bench kernels`
-//! (emits `BENCH_kernels.json`), and markdown/CSV report writers. The
-//! `cargo bench` targets in `rust/benches/` are thin drivers over this
-//! module.
+//! (emits `BENCH_kernels.json`), the service I/O-engine bench behind
+//! `sage bench serve` (emits `BENCH_serve.json`), and markdown/CSV
+//! report writers. The `cargo bench` targets in `rust/benches/` are thin
+//! drivers over this module.
 
 pub mod fit;
 pub mod kernels;
 pub mod report;
 pub mod runner;
+pub mod serve;
 pub mod timing;
 
 pub use fit::{exp_fit, r_squared, ExpFit};
 pub use kernels::{run_kernel_bench, KernelBenchReport, KernelBenchSpec};
+pub use serve::{run_serve_bench, ServeBenchReport, ServeBenchSpec};
 pub use report::{write_csv, write_markdown_table};
 pub use runner::{run_cell, CellResult, CellSpec};
 pub use timing::{time_fn, Timing};

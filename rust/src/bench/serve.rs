@@ -1,0 +1,359 @@
+//! `sage bench serve` — the service-layer I/O engine benchmark behind
+//! `BENCH_serve.json`.
+//!
+//! Two measurements per engine (`--io threads` vs `--io epoll`), run
+//! against a real in-process server at an equal `--threads` budget:
+//!
+//! 1. **Concurrency**: open `sessions` TCP connections at once, each
+//!    issuing one Stats request and then *holding its connection open*
+//!    behind a barrier until every peer has had its chance. An engine's
+//!    score is how many of those connections got a response while all of
+//!    them were open. Thread-per-connection caps near the pool size (the
+//!    rest queue until they time out or are shed with the documented
+//!    `connection rejected` frame); the reactor serves them all.
+//! 2. **Churn**: sequential connect → CreateSession → CloseSession
+//!    cycles on a few workers, yielding sessions/sec and p50/p99 cycle
+//!    latency.
+//!
+//! The report records both engines side by side plus the concurrency
+//! ratio (epoll / threads); `sage bench serve --quick` gates the ratio in
+//! CI (the reactor must sustain at least [`MIN_CONCURRENCY_RATIO`]× the
+//! threaded engine's concurrent sessions).
+
+use crate::service::protocol::{op, read_frame, write_frame, Request, Response};
+use crate::service::{IoMode, Server, ServerConfig, ServiceClient};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// The CI gate: reactor concurrent sessions ≥ this × threaded engine's.
+pub const MIN_CONCURRENCY_RATIO: f64 = 4.0;
+
+/// Knobs for one `run_serve_bench` invocation.
+#[derive(Clone, Debug)]
+pub struct ServeBenchSpec {
+    /// Thread budget handed to BOTH engines (threaded: pool size;
+    /// reactor: 1 loop + threads-1 workers).
+    pub threads: usize,
+    /// Concurrent connections attempted in the concurrency phase.
+    pub sessions: usize,
+    /// Total connect→create→close cycles in the churn phase.
+    pub churn: usize,
+    /// Per-request client timeout; also bounds how long a queued-but-
+    /// never-served connection counts against the threaded engine.
+    pub timeout: Duration,
+}
+
+impl Default for ServeBenchSpec {
+    fn default() -> Self {
+        ServeBenchSpec {
+            threads: 4,
+            sessions: 64,
+            churn: 200,
+            timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+impl ServeBenchSpec {
+    /// CI smoke sizing: fewer connections and cycles, shorter timeout.
+    pub fn quick(mut self) -> Self {
+        self.sessions = 32;
+        self.churn = 80;
+        self.timeout = Duration::from_millis(1500);
+        self
+    }
+}
+
+/// One engine's results.
+#[derive(Clone, Debug)]
+pub struct EngineResult {
+    /// `"threads"` or `"epoll"`.
+    pub io: String,
+    /// Connections attempted in the concurrency phase.
+    pub attempted: usize,
+    /// Connections that got a Stats response while all were held open.
+    pub concurrent_ok: usize,
+    /// Churn throughput (completed cycles / wall clock).
+    pub sessions_per_sec: f64,
+    /// Churn cycle latency percentiles, milliseconds.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Churn cycles that errored (shed connections under pressure).
+    pub churn_failed: usize,
+}
+
+impl EngineResult {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("io".into(), Json::Str(self.io.clone()));
+        m.insert("attempted".into(), Json::Num(self.attempted as f64));
+        m.insert("concurrent_ok".into(), Json::Num(self.concurrent_ok as f64));
+        m.insert(
+            "sessions_per_sec".into(),
+            Json::Num(self.sessions_per_sec),
+        );
+        m.insert("p50_ms".into(), Json::Num(self.p50_ms));
+        m.insert("p99_ms".into(), Json::Num(self.p99_ms));
+        m.insert("churn_failed".into(), Json::Num(self.churn_failed as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Full report (serialize with [`ServeBenchReport::to_json_string`]).
+#[derive(Clone, Debug)]
+pub struct ServeBenchReport {
+    pub threads: usize,
+    pub sessions: usize,
+    pub engines: Vec<EngineResult>,
+}
+
+impl ServeBenchReport {
+    fn engine(&self, io: &str) -> Option<&EngineResult> {
+        self.engines.iter().find(|e| e.io == io)
+    }
+
+    /// Concurrency ratio epoll / threads, when both engines ran.
+    pub fn concurrency_ratio(&self) -> Option<f64> {
+        let threads = self.engine("threads")?.concurrent_ok.max(1);
+        let epoll = self.engine("epoll")?.concurrent_ok;
+        Some(epoll as f64 / threads as f64)
+    }
+
+    /// Whether the reactor met the [`MIN_CONCURRENCY_RATIO`] gate (`None`
+    /// when the host cannot run both engines).
+    pub fn ratio_holds(&self) -> Option<bool> {
+        self.concurrency_ratio().map(|r| r >= MIN_CONCURRENCY_RATIO)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("suite".into(), Json::Str("serve".into()));
+        m.insert("threads".into(), Json::Num(self.threads as f64));
+        m.insert("sessions".into(), Json::Num(self.sessions as f64));
+        m.insert(
+            "engines".into(),
+            Json::Arr(self.engines.iter().map(|e| e.to_json()).collect()),
+        );
+        match self.concurrency_ratio() {
+            Some(r) => m.insert("concurrency_ratio".into(), Json::Num(r)),
+            None => m.insert("concurrency_ratio".into(), Json::Null),
+        };
+        Json::Obj(m)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        crate::util::json::write(&self.to_json())
+    }
+}
+
+/// Run the suite: the threaded engine always, the reactor where the host
+/// supports epoll. An engine that fails to start is skipped with a WARN
+/// (the report then simply lacks its row).
+pub fn run_serve_bench(spec: &ServeBenchSpec) -> ServeBenchReport {
+    let mut engines = Vec::new();
+    let mut modes = vec![IoMode::Threads];
+    if crate::util::sys::epoll_supported() {
+        modes.push(IoMode::Epoll);
+    }
+    for mode in modes {
+        match bench_engine(spec, mode) {
+            Ok(result) => engines.push(result),
+            Err(e) => crate::log_warn!("serve bench ({}) failed: {e}", mode.name()),
+        }
+    }
+    ServeBenchReport {
+        threads: spec.threads,
+        sessions: spec.sessions,
+        engines,
+    }
+}
+
+fn bench_engine(spec: &ServeBenchSpec, mode: IoMode) -> Result<EngineResult, String> {
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: spec.threads.max(1),
+        io: mode,
+        compute_workers: 1,
+        metrics_addr: None,
+        slow_op_ms: 0,
+        registry: Default::default(),
+    })?;
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let concurrent_ok = concurrency_phase(addr, spec);
+    let (sessions_per_sec, p50_ms, p99_ms, churn_failed) = churn_phase(addr, spec);
+
+    handle.shutdown();
+    Ok(EngineResult {
+        io: mode.name().to_string(),
+        attempted: spec.sessions,
+        concurrent_ok,
+        sessions_per_sec,
+        p50_ms,
+        p99_ms,
+        churn_failed,
+    })
+}
+
+/// Open every connection, one Stats round trip each, all held open behind
+/// a barrier so the engine really serves them *simultaneously*.
+fn concurrency_phase(addr: SocketAddr, spec: &ServeBenchSpec) -> usize {
+    let barrier = Arc::new(Barrier::new(spec.sessions));
+    let joins: Vec<_> = (0..spec.sessions)
+        .map(|_| {
+            let barrier = barrier.clone();
+            let timeout = spec.timeout;
+            std::thread::spawn(move || {
+                let ok = stats_roundtrip(addr, timeout).is_ok();
+                // Hold the connection open until every peer has tried.
+                barrier.wait();
+                ok
+            })
+        })
+        .collect();
+    joins
+        .into_iter()
+        .map(|j| j.join().unwrap_or(false))
+        .filter(|&ok| ok)
+        .count()
+}
+
+/// One raw Stats round trip with a read deadline (a queued-but-unserved
+/// connection must count as *not* concurrent, not hang the bench).
+fn stats_roundtrip(addr: SocketAddr, timeout: Duration) -> Result<(), String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| e.to_string())?;
+    let request = Request::Stats {
+        session: String::new(),
+    };
+    write_frame(&mut stream, op::STATS, 0, &request.encode())?;
+    let frame = read_frame(&mut stream)?.ok_or_else(|| "connection closed".to_string())?;
+    match Response::decode(&frame.payload)? {
+        Response::Stats { .. } => Ok(()),
+        Response::Error { message } => Err(message),
+        other => Err(format!("unexpected response {other:?}")),
+    }
+}
+
+/// Session-lifecycle churn: connect → CreateSession → CloseSession, a few
+/// workers deep. Returns (sessions/sec, p50 ms, p99 ms, failures).
+fn churn_phase(addr: SocketAddr, spec: &ServeBenchSpec) -> (f64, f64, f64, usize) {
+    let workers = spec.threads.clamp(1, 4);
+    let per_worker = (spec.churn / workers).max(1);
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..workers)
+        .map(|w| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut latencies = Vec::with_capacity(per_worker);
+                let mut failed = 0usize;
+                for i in 0..per_worker {
+                    let name = format!("bench-serve-{w}-{i}");
+                    let t = Instant::now();
+                    let ok = (|| -> Result<(), String> {
+                        let mut client = ServiceClient::connect(&addr)?;
+                        client.create_session(&name, 4, 8, 1)?;
+                        client.close_session(&name)
+                    })();
+                    match ok {
+                        Ok(()) => latencies.push(t.elapsed().as_secs_f64() * 1e3),
+                        Err(_) => failed += 1,
+                    }
+                }
+                (latencies, failed)
+            })
+        })
+        .collect();
+    let mut latencies = Vec::new();
+    let mut failed = 0usize;
+    for j in joins {
+        if let Ok((l, f)) = j.join() {
+            latencies.extend(l);
+            failed += f;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let per_sec = latencies.len() as f64 / elapsed;
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    (per_sec, percentile(&latencies, 50), percentile(&latencies, 99), failed)
+}
+
+fn percentile(sorted_ms: &[f64], p: usize) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = (sorted_ms.len() * p / 100).min(sorted_ms.len() - 1);
+    sorted_ms[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_bench_smoke_and_json_shape() {
+        let spec = ServeBenchSpec {
+            threads: 2,
+            sessions: 4,
+            churn: 8,
+            timeout: Duration::from_millis(800),
+        };
+        let report = run_serve_bench(&spec);
+        assert!(!report.engines.is_empty(), "at least the threaded engine runs");
+        for engine in &report.engines {
+            assert_eq!(engine.attempted, 4);
+            assert!(engine.concurrent_ok >= 1, "{engine:?}");
+            assert!(engine.sessions_per_sec > 0.0, "{engine:?}");
+            assert!(engine.p99_ms >= engine.p50_ms, "{engine:?}");
+        }
+        // The reactor serves every connection when the host has epoll.
+        if crate::util::sys::epoll_supported() {
+            let epoll = report.engine("epoll").expect("epoll engine ran");
+            assert_eq!(epoll.concurrent_ok, 4);
+        }
+        let parsed = crate::util::json::parse(&report.to_json_string()).expect("valid json");
+        assert_eq!(parsed.get("suite").and_then(|j| j.as_str()), Some("serve"));
+        let engines = parsed.get("engines").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(engines.len(), report.engines.len());
+    }
+
+    #[test]
+    fn percentile_and_ratio_edges() {
+        assert_eq!(percentile(&[], 99), 0.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50), 3.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 99), 4.0);
+        let report = ServeBenchReport {
+            threads: 2,
+            sessions: 8,
+            engines: vec![
+                EngineResult {
+                    io: "threads".into(),
+                    attempted: 8,
+                    concurrent_ok: 2,
+                    sessions_per_sec: 10.0,
+                    p50_ms: 1.0,
+                    p99_ms: 2.0,
+                    churn_failed: 0,
+                },
+                EngineResult {
+                    io: "epoll".into(),
+                    attempted: 8,
+                    concurrent_ok: 8,
+                    sessions_per_sec: 10.0,
+                    p50_ms: 1.0,
+                    p99_ms: 2.0,
+                    churn_failed: 0,
+                },
+            ],
+        };
+        assert_eq!(report.concurrency_ratio(), Some(4.0));
+        assert_eq!(report.ratio_holds(), Some(true));
+    }
+}

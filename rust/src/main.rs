@@ -120,6 +120,7 @@ fn app() -> App {
                 opts: vec![
                     Opt { name: "addr", takes_value: true, help: "bind address", default: Some("127.0.0.1:7009") },
                     Opt { name: "threads", takes_value: true, help: "connection threads", default: Some("16") },
+                    Opt { name: "io", takes_value: true, help: "I/O engine: auto | threads | epoll (auto picks epoll on Linux; env SAGE_SERVE_IO sets the default)", default: None },
                     Opt { name: "compute-workers", takes_value: true, help: "kernel-backend worker threads (1 = serial; results identical)", default: None },
                     Opt { name: "max-sessions", takes_value: true, help: "admission: max sessions", default: Some("64") },
                     Opt { name: "max-bytes-mb", takes_value: true, help: "admission: max resident sketch MiB", default: Some("1024") },
@@ -153,17 +154,20 @@ fn app() -> App {
             },
             Command {
                 name: "bench",
-                about: "run a built-in benchmark suite (currently: kernels)",
+                about: "run a built-in benchmark suite: kernels (default) | serve",
                 opts: vec![
-                    Opt { name: "ell", takes_value: true, help: "sketch size ℓ (buffer = 2ℓ rows)", default: Some("256") },
-                    Opt { name: "d", takes_value: true, help: "gradient dimension D", default: Some("16384") },
-                    Opt { name: "batch", takes_value: true, help: "Phase-II scoring batch B", default: Some("256") },
-                    Opt { name: "n-examples", takes_value: true, help: "scored examples N (score matvec)", default: Some("100000") },
-                    Opt { name: "workers", takes_value: true, help: "parallel worker threads", default: None },
-                    Opt { name: "iters", takes_value: true, help: "timed iterations per op", default: None },
+                    Opt { name: "ell", takes_value: true, help: "kernels: sketch size ℓ (buffer = 2ℓ rows)", default: Some("256") },
+                    Opt { name: "d", takes_value: true, help: "kernels: gradient dimension D", default: Some("16384") },
+                    Opt { name: "batch", takes_value: true, help: "kernels: Phase-II scoring batch B", default: Some("256") },
+                    Opt { name: "n-examples", takes_value: true, help: "kernels: scored examples N (score matvec)", default: Some("100000") },
+                    Opt { name: "workers", takes_value: true, help: "kernels: parallel worker threads", default: None },
+                    Opt { name: "iters", takes_value: true, help: "kernels: timed iterations per op", default: None },
                     Opt { name: "out", takes_value: true, help: "output JSON path", default: Some("BENCH_kernels.json") },
                     Opt { name: "kernel-tier", takes_value: true, help: "force the active dispatch tier (the bench still measures every tier it can)", default: Some("auto") },
-                    Opt { name: "quick", takes_value: false, help: "CI smoke: fewer iters; exit non-zero if a parallel kernel loses to serial or SIMD loses to scalar", default: None },
+                    Opt { name: "serve-threads", takes_value: true, help: "serve: thread budget for BOTH I/O engines", default: Some("4") },
+                    Opt { name: "sessions", takes_value: true, help: "serve: concurrent connections attempted per engine (default 64; 32 with --quick)", default: None },
+                    Opt { name: "churn", takes_value: true, help: "serve: connect/create/close cycles per engine (default 200; 80 with --quick)", default: None },
+                    Opt { name: "quick", takes_value: false, help: "CI smoke: fewer iters; kernels gates parallel/SIMD wins, serve gates the reactor's >=4x concurrency ratio", default: None },
                 ],
             },
             Command {
@@ -445,6 +449,10 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
     let cfg = sage::service::ServerConfig {
         addr: p.get_or("addr", "127.0.0.1:7009"),
         threads: p.get_usize("threads")?.unwrap_or(16).max(1),
+        io: match p.get("io") {
+            Some(s) => sage::service::IoMode::parse(s)?,
+            None => sage::service::IoMode::from_env(),
+        },
         compute_workers: p
             .get_usize("compute-workers")?
             .unwrap_or_else(sage::util::threadpool::default_threads)
@@ -466,7 +474,11 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
         slow_op_ms: p.get_usize("slow-op-ms")?.unwrap_or(0) as u64,
     };
     let server = sage::service::Server::bind(&cfg)?;
-    println!("sage-serve listening on {}", server.local_addr());
+    println!(
+        "sage-serve listening on {} (io engine: {})",
+        server.local_addr(),
+        server.io_mode().name()
+    );
     if let Some(addr) = server.metrics_addr() {
         println!("metrics on http://{addr}/metrics");
     }
@@ -549,7 +561,12 @@ fn cmd_ingest(p: &Parsed) -> Result<(), String> {
 fn cmd_bench(p: &Parsed) -> Result<(), String> {
     match p.positional.first().map(|s| s.as_str()) {
         Some("kernels") | None => {}
-        Some(other) => return Err(format!("unknown bench suite '{other}' (suites: kernels)")),
+        Some("serve") => return cmd_bench_serve(p),
+        Some(other) => {
+            return Err(format!(
+                "unknown bench suite '{other}' (suites: kernels, serve)"
+            ))
+        }
     }
     apply_kernel_tier(p)?;
     let quick = p.has_flag("quick");
@@ -658,6 +675,69 @@ fn cmd_bench(p: &Parsed) -> Result<(), String> {
                     .join(", ")
             ));
         }
+    }
+    Ok(())
+}
+
+fn cmd_bench_serve(p: &Parsed) -> Result<(), String> {
+    let quick = p.has_flag("quick");
+    let mut spec = sage::bench::ServeBenchSpec {
+        threads: p.get_usize("serve-threads")?.unwrap_or(4).max(2),
+        ..Default::default()
+    };
+    if quick {
+        spec = spec.quick();
+    }
+    if let Some(sessions) = p.get_usize("sessions")? {
+        spec.sessions = sessions.max(2);
+    }
+    if let Some(churn) = p.get_usize("churn")? {
+        spec.churn = churn.max(1);
+    }
+    log_info!(
+        "bench serve: threads={} sessions={} churn={}",
+        spec.threads,
+        spec.sessions,
+        spec.churn
+    );
+    let report = sage::bench::run_serve_bench(&spec);
+    if report.engines.is_empty() {
+        return Err("bench serve: no I/O engine completed".into());
+    }
+    println!(
+        "{:<8} {:>10} {:>12} {:>12} {:>9} {:>9} {:>7}",
+        "engine", "attempted", "concurrent", "sess/sec", "p50", "p99", "failed"
+    );
+    for engine in &report.engines {
+        println!(
+            "{:<8} {:>10} {:>12} {:>12.1} {:>7.2}ms {:>7.2}ms {:>7}",
+            engine.io,
+            engine.attempted,
+            engine.concurrent_ok,
+            engine.sessions_per_sec,
+            engine.p50_ms,
+            engine.p99_ms,
+            engine.churn_failed,
+        );
+    }
+    match report.concurrency_ratio() {
+        Some(ratio) => println!("concurrency ratio (epoll / threads): {ratio:.1}x"),
+        None => println!("concurrency ratio: n/a (host lacks epoll; only the threaded engine ran)"),
+    }
+    // `--out` defaults to the kernels artifact name; the serve suite owns
+    // its own file unless the user overrode the path explicitly.
+    let mut out = p.get_or("out", "BENCH_kernels.json");
+    if out == "BENCH_kernels.json" {
+        out = "BENCH_serve.json".to_string();
+    }
+    std::fs::write(&out, report.to_json_string() + "\n").map_err(|e| format!("{out}: {e}"))?;
+    println!("wrote {out}");
+    if quick && report.ratio_holds() == Some(false) {
+        return Err(format!(
+            "quick gate: reactor concurrency ratio {:.1}x below the required {:.0}x",
+            report.concurrency_ratio().unwrap_or(0.0),
+            sage::bench::serve::MIN_CONCURRENCY_RATIO
+        ));
     }
     Ok(())
 }

@@ -25,20 +25,47 @@
 //! echoed request opcode) are never retryable.
 
 use super::protocol::{
-    encode_ingest_batch, encode_score, op, read_frame, write_frame_traced, FrozenSketch,
-    Request, Response,
+    encode_ingest_batch, encode_score, op, read_frame, read_frame_event, write_frame_traced,
+    Frame, FrozenSketch, ReadEvent, Request, Response,
 };
+use super::subs::GOING_AWAY;
 use crate::pipeline::ScoreBlock;
 use crate::sketch::FdSketch;
 use crate::tensor::Matrix;
 use crate::util::metrics::HistogramStats;
 use crate::util::trace::{self, SpanRecord};
+use std::collections::VecDeque;
 use std::net::TcpStream;
+use std::time::Duration;
 
 /// Whether an error message is the server's retryable connection-shed
 /// signal (see the module docs' backoff contract).
 pub fn is_rejection(message: &str) -> bool {
     message.starts_with("connection rejected")
+}
+
+/// Whether an error message is the server's shutdown notice (the final
+/// unsolicited frame a subscriber receives before its connection closes —
+/// docs/PROTOCOL.md §5). Not retryable against the same server instance;
+/// reconnect-and-resubscribe clients should back off first.
+pub fn is_going_away(message: &str) -> bool {
+    message.starts_with(GOING_AWAY)
+}
+
+/// One decoded push notification (see [`ServiceClient::poll_delta`]):
+/// apply `added`/`evicted` to the reconstructed selection with
+/// `protocol::apply_topk_delta`. Epochs count from 1 per subscription and
+/// arrive consecutively; a gap means frames were lost (impossible on one
+/// healthy TCP connection).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopKDeltaEvent {
+    pub session: String,
+    pub epoch: u64,
+    pub added: Vec<u64>,
+    pub evicted: Vec<u64>,
+    /// Smallest consensus score among the currently selected entries
+    /// (NaN when the selection is empty or scores are non-finite).
+    pub watermark: f64,
 }
 
 /// Ceiling on the exponential backoff between retry attempts.
@@ -90,8 +117,16 @@ pub fn request_with_retry(
 }
 
 /// Blocking `sage-serve` client (not thread-safe; one per connection).
+///
+/// After a [`ServiceClient::subscribe`], the connection also carries
+/// *unsolicited* TopKDelta push frames. They may interleave ahead of any
+/// response the client is waiting on; the request path stashes them (in
+/// arrival order) and [`ServiceClient::poll_delta`] drains the stash
+/// before reading the socket, so pushes are never lost or reordered.
 pub struct ServiceClient {
     stream: TcpStream,
+    /// Push frames that arrived while waiting for a response.
+    deltas: VecDeque<TopKDeltaEvent>,
 }
 
 impl ServiceClient {
@@ -102,7 +137,10 @@ impl ServiceClient {
     pub fn connect(addr: &str) -> Result<ServiceClient, String> {
         let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
         let _ = stream.set_nodelay(true);
-        Ok(ServiceClient { stream })
+        Ok(ServiceClient {
+            stream,
+            deltas: VecDeque::new(),
+        })
     }
 
     /// Send one request and wait for its response frame.
@@ -111,15 +149,54 @@ impl ServiceClient {
         self.roundtrip(request.opcode(), &payload)
     }
 
+    /// Whether a received frame is an unsolicited TopKDelta push (carried
+    /// on the Subscribe opcode with status 0 and the delta kind tag).
+    fn is_push_frame(frame: &Frame) -> bool {
+        frame.opcode == op::SUBSCRIBE
+            && frame.status == 0
+            && Response::is_topk_delta(&frame.payload)
+    }
+
+    fn stash_push(&mut self, frame: &Frame) -> Result<(), String> {
+        match Response::decode(&frame.payload)? {
+            Response::TopKDelta {
+                session,
+                epoch,
+                added,
+                evicted,
+                watermark,
+            } => {
+                self.deltas.push_back(TopKDeltaEvent {
+                    session,
+                    epoch,
+                    added,
+                    evicted,
+                    watermark,
+                });
+                Ok(())
+            }
+            other => Err(format!("push frame decoded as {other:?}")),
+        }
+    }
+
     /// Write one pre-encoded request payload and read its response. When a
     /// trace is active on this thread (see `util::trace`), a `client.<op>`
     /// span wraps the round trip and its context rides the frame's trace
     /// extension, so the server's `serve.<op>` span becomes its child.
+    /// Push frames that arrive first are stashed for
+    /// [`ServiceClient::poll_delta`].
     fn roundtrip(&mut self, opcode: u8, payload: &[u8]) -> Result<Response, String> {
         let _span = trace::span(&format!("client.{}", op::name(opcode)));
         write_frame_traced(&mut self.stream, opcode, 0, payload, trace::current())?;
-        let frame = read_frame(&mut self.stream)?
-            .ok_or_else(|| "server closed the connection".to_string())?;
+        let frame = loop {
+            let frame = read_frame(&mut self.stream)?
+                .ok_or_else(|| "server closed the connection".to_string())?;
+            if Self::is_push_frame(&frame) {
+                self.stash_push(&frame)?;
+                continue;
+            }
+            break frame;
+        };
         let response = Response::decode(&frame.payload)?;
         // Error frames may carry opcode 0 (e.g. pool rejection before the
         // request was read) — surface the message rather than the mismatch.
@@ -247,6 +324,70 @@ impl ServiceClient {
                 },
             )),
             other => Err(format!("unexpected topk response {other:?}")),
+        }
+    }
+
+    /// Register this connection for push TopKDelta frames whenever
+    /// `session`'s selection under `(method, k, num_classes, seed)`
+    /// changes (Freeze/Score/TopK mutations). Deltas arrive unsolicited;
+    /// read them with [`ServiceClient::poll_delta`] and fold them into a
+    /// local selection with `protocol::apply_topk_delta`. Re-subscribing
+    /// the same session replaces the parameters and restarts epochs.
+    pub fn subscribe(
+        &mut self,
+        session: &str,
+        method: &str,
+        k: usize,
+        num_classes: usize,
+        seed: u64,
+    ) -> Result<(), String> {
+        self.expect(&Request::Subscribe {
+            session: session.to_string(),
+            method: method.to_string(),
+            k: k as u64,
+            num_classes: num_classes as u32,
+            seed,
+        })
+        .map(|_| ())
+    }
+
+    /// Stop push deltas for `session` on this connection. Succeeds even
+    /// if no such subscription exists (unsubscribe races session close).
+    pub fn unsubscribe(&mut self, session: &str) -> Result<(), String> {
+        self.expect(&Request::Unsubscribe {
+            session: session.to_string(),
+        })
+        .map(|_| ())
+    }
+
+    /// Next push delta, waiting up to `timeout`: drains the stash filled
+    /// during request/response exchanges first, then reads the socket.
+    /// `Ok(None)` = nothing arrived within the timeout. A GoingAway frame
+    /// (server shutdown — see [`is_going_away`]) or an unexpected frame
+    /// surfaces as `Err`.
+    pub fn poll_delta(&mut self, timeout: Duration) -> Result<Option<TopKDeltaEvent>, String> {
+        if let Some(event) = self.deltas.pop_front() {
+            return Ok(Some(event));
+        }
+        // read_frame_event treats a timeout with no frame in progress as
+        // Idle; a timeout mid-frame is a framing error (the server never
+        // stalls inside one push frame).
+        self.stream
+            .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
+            .map_err(|e| format!("set read timeout: {e}"))?;
+        let event = read_frame_event(&mut self.stream);
+        let _ = self.stream.set_read_timeout(None);
+        match event? {
+            ReadEvent::Idle => Ok(None),
+            ReadEvent::Eof => Err("server closed the connection".to_string()),
+            ReadEvent::Frame(frame) if Self::is_push_frame(&frame) => {
+                self.stash_push(&frame)?;
+                Ok(self.deltas.pop_front())
+            }
+            ReadEvent::Frame(frame) => match Response::decode(&frame.payload)? {
+                Response::Error { message } => Err(message),
+                other => Err(format!("unexpected frame while polling deltas: {other:?}")),
+            },
         }
     }
 

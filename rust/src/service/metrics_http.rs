@@ -40,6 +40,23 @@ pub fn spawn(listener: TcpListener, stop: Arc<AtomicBool>) -> JoinHandle<()> {
     })
 }
 
+/// Render the full HTTP/1.0 response for one request head (request line +
+/// headers as read off the socket). Shared by the threaded handler below
+/// and the reactor's nonblocking HTTP connection state machine, so both
+/// I/O engines serve byte-identical scrapes.
+pub(crate) fn respond(head: &str) -> Vec<u8> {
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, content_type, body) = route(method, path);
+    format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
 fn handle(mut stream: TcpStream) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
@@ -51,16 +68,8 @@ fn handle(mut stream: TcpStream) {
         _ => return,
     };
     let head = String::from_utf8_lossy(&buf[..n]);
-    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
-    let method = parts.next().unwrap_or("");
-    let path = parts.next().unwrap_or("");
-    let (status, content_type, body) = route(method, path);
-    let response = format!(
-        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    );
-    let _ = stream.write_all(response.as_bytes());
+    let response = respond(&head);
+    let _ = stream.write_all(&response);
     let _ = stream.flush();
 }
 

@@ -32,9 +32,20 @@
 //!   WARN; segments compact into checkpoints past `--wal-compact-mb`.
 //!   Design notes in docs/ARCHITECTURE.md §Durability, record format in
 //!   docs/PROTOCOL.md §9.
-//! * [`server`] — TCP accept loop, thread-per-connection on
-//!   `util::threadpool`, graceful load-shedding when the pool is
-//!   saturated (one `connection rejected` error frame, then close).
+//! * [`server`] — TCP serving with two interchangeable I/O engines
+//!   (`sage serve --io {auto,threads,epoll}`): thread-per-connection on
+//!   `util::threadpool` with graceful load-shedding when the pool is
+//!   saturated (one `connection rejected` error frame, then close), or
+//!   the [`reactor`] below.
+//! * [`reactor`] — readiness-driven event loop over `util::sys`'s raw
+//!   epoll bindings: one thread multiplexes every connection
+//!   (incremental frame decode, bounded watermarked write queues),
+//!   registry dispatch runs on a compute pool, and concurrency is
+//!   bounded by memory instead of threads.
+//! * [`subs`] — push TopK subscriptions (Subscribe/Unsubscribe ops,
+//!   RESP_TOPK_DELTA frames): a notifier thread watches the registry for
+//!   selection changes and streams coalescing-under-backpressure deltas
+//!   to subscribers; on shutdown they receive a final GoingAway frame.
 //! * [`metrics_http`] — minimal HTTP/1.0 Prometheus exposition endpoint
 //!   (`sage serve --metrics-addr`): `GET /metrics` + `GET /healthz`. The
 //!   metric catalog lives in docs/OBSERVABILITY.md.
@@ -89,17 +100,20 @@ pub mod checkpoint;
 pub mod client;
 pub mod metrics_http;
 pub mod protocol;
+pub mod reactor;
 pub mod registry;
 pub mod server;
 pub mod storage;
+pub mod subs;
 pub mod wal;
 
 pub use checkpoint::SessionCheckpoint;
-pub use client::{is_rejection, request_with_retry, ServiceClient};
-pub use protocol::{FrozenSketch, Request, Response, ScoreBatch};
+pub use client::{is_going_away, is_rejection, request_with_retry, ServiceClient};
+pub use protocol::{apply_topk_delta, FrozenSketch, Request, Response, ScoreBatch};
 pub use registry::{
-    ByteBudget, RegistryConfig, Session, SessionRegistry, SCORER_ADMISSION,
+    ByteBudget, RegistryConfig, RegistryWatcher, Session, SessionRegistry, SCORER_ADMISSION,
 };
-pub use server::{Server, ServerConfig, ServerHandle};
+pub use server::{IoMode, Server, ServerConfig, ServerHandle};
+pub use subs::{PushOutcome, PushSink, SubscriptionHub, GOING_AWAY};
 pub use storage::{LocalDirBackend, MemStorage, StorageBackend};
 pub use wal::{Durability, Wal, WalConfig, WalFaultPlan};

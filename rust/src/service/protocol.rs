@@ -30,7 +30,16 @@
 //! `u32`/`u64` element count + raw little-endian values. [`Request`] and
 //! [`Response`] give the typed op surface: CreateSession / IngestBatch /
 //! MergeSketch / Freeze / Score / TopK / Checkpoint / Stats / CloseSession
-//! / MetricsSnapshot / TraceExport.
+//! / MetricsSnapshot / TraceExport / Subscribe / Unsubscribe.
+//!
+//! Subscribe(12) opens the protocol's first *unsolicited* channel: after a
+//! successful Subscribe the server may emit `TopKDelta` push frames
+//! (response kind tag 9, carried on opcode 12 with status 0) at any point
+//! between a client's request/response pairs. Clients therefore demux by
+//! payload kind tag — see [`Response::is_topk_delta`] — rather than
+//! assuming strict alternation. [`FrameDecoder`] is the incremental
+//! (nonblocking-socket) counterpart of [`read_frame_event`], used by the
+//! readiness-driven reactor.
 
 use crate::sketch::SketchState;
 use crate::tensor::Matrix;
@@ -286,6 +295,132 @@ fn fill(r: &mut impl Read, buf: &mut [u8], at_frame_start: bool) -> Result<Fill,
     Ok(Fill::Full)
 }
 
+/// Incremental frame decoder for nonblocking sockets: feed whatever bytes
+/// `read(2)` produced via [`FrameDecoder::extend`], then drain complete
+/// frames with [`FrameDecoder::next_frame`]. Validation (magic, version,
+/// flags, length cap, checksum) matches [`read_frame_event`] exactly — a
+/// stream is either accepted identically by both or torn by both.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append freshly read bytes to the decode buffer.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        // Compact before growing: drop the consumed prefix once it
+        // dominates the buffer so a long-lived connection stays O(frame).
+        if self.pos > 4096 && self.pos * 2 >= self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a decoded frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Decode the next complete frame, if the buffer holds one.
+    /// `Ok(None)` means "need more bytes"; errors are torn streams and
+    /// must close the connection (resynchronization is impossible).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, String> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        if &avail[0..4] != MAGIC {
+            return Err("frame: bad magic".into());
+        }
+        let version = u16::from_le_bytes([avail[4], avail[5]]);
+        if version != VERSION {
+            return Err(format!("frame: version {version} != {VERSION}"));
+        }
+        let opcode = avail[6];
+        let flags = avail[7];
+        if flags & !FLAG_TRACE != 0 {
+            return Err(format!("frame: unknown flags {flags:#04x}"));
+        }
+        let status = u16::from_le_bytes([avail[8], avail[9]]);
+        let len = u32::from_le_bytes([avail[10], avail[11], avail[12], avail[13]]) as usize;
+        if len > MAX_PAYLOAD {
+            return Err(format!("frame: payload {len} exceeds cap {MAX_PAYLOAD}"));
+        }
+        let ext = if flags & FLAG_TRACE != 0 {
+            TRACE_EXT_LEN
+        } else {
+            0
+        };
+        let total = HEADER_LEN + ext + len + 8;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let body = &avail[..HEADER_LEN + ext + len];
+        let stored = u64::from_le_bytes(avail[total - 8..total].try_into().unwrap());
+        if fnv64(body) != stored {
+            return Err("frame: checksum mismatch (corrupt frame)".into());
+        }
+        let trace = if ext != 0 {
+            Some(TraceCtx {
+                trace_id: u64::from_le_bytes(
+                    avail[HEADER_LEN..HEADER_LEN + 8].try_into().unwrap(),
+                ),
+                span_id: u64::from_le_bytes(
+                    avail[HEADER_LEN + 8..HEADER_LEN + 16].try_into().unwrap(),
+                ),
+            })
+        } else {
+            None
+        };
+        let payload = avail[HEADER_LEN + ext..HEADER_LEN + ext + len].to_vec();
+        self.pos += total;
+        Ok(Some(Frame {
+            opcode,
+            status,
+            payload,
+            trace,
+        }))
+    }
+}
+
+/// Apply one TopKDelta to a reconstructed selection: remove `evicted`
+/// preserving order, then append `added` in order. This is the one
+/// definition of the client-side reconstruction contract — the server's
+/// diffing inverts exactly this.
+///
+/// # Errors
+/// Malformed deltas: an evicted index absent from `base`, or an added
+/// index already present after eviction. `base` is left unmodified on
+/// error, so a client can fall back to a fresh TopK snapshot.
+pub fn apply_topk_delta(
+    base: &mut Vec<u64>,
+    added: &[u64],
+    evicted: &[u64],
+) -> Result<(), String> {
+    let have: std::collections::HashSet<u64> = base.iter().copied().collect();
+    if let Some(missing) = evicted.iter().find(|i| !have.contains(i)) {
+        return Err(format!("delta evicts index {missing} not in the selection"));
+    }
+    let gone: std::collections::HashSet<u64> = evicted.iter().copied().collect();
+    if let Some(dup) = added
+        .iter()
+        .find(|i| have.contains(i) && !gone.contains(i))
+    {
+        return Err(format!("delta adds index {dup} already in the selection"));
+    }
+    if !gone.is_empty() {
+        base.retain(|i| !gone.contains(i));
+    }
+    base.extend_from_slice(added);
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // Payload encoding helpers
 // ---------------------------------------------------------------------------
@@ -498,6 +633,8 @@ pub mod op {
     pub const CLOSE_SESSION: u8 = 9;
     pub const METRICS_SNAPSHOT: u8 = 10;
     pub const TRACE_EXPORT: u8 = 11;
+    pub const SUBSCRIBE: u8 = 12;
+    pub const UNSUBSCRIBE: u8 = 13;
 
     /// Stable op name for logs, per-op latency metrics, and trace span
     /// names (`serve.<name>`). A bounded set — safe to embed in interned
@@ -515,6 +652,8 @@ pub mod op {
             CLOSE_SESSION => "close_session",
             METRICS_SNAPSHOT => "metrics_snapshot",
             TRACE_EXPORT => "trace_export",
+            SUBSCRIBE => "subscribe",
+            UNSUBSCRIBE => "unsubscribe",
             _ => "unknown",
         }
     }
@@ -584,6 +723,20 @@ pub enum Request {
     MetricsSnapshot { prefix: String },
     /// Snapshot the server's span rings (for `sage trace export`).
     TraceExport,
+    /// Register for push [`Response::TopKDelta`] frames whenever this
+    /// session's selection changes under the given selection parameters
+    /// (same field meanings as [`Request::TopK`]). Idempotent per
+    /// (connection, session): a second Subscribe replaces the parameters
+    /// and resets the delta epoch.
+    Subscribe {
+        session: String,
+        method: String,
+        k: u64,
+        num_classes: u32,
+        seed: u64,
+    },
+    /// Stop push deltas for this session on this connection.
+    Unsubscribe { session: String },
 }
 
 /// Borrow-encoding fast path for the hot Phase-I op: serialize an
@@ -652,6 +805,8 @@ impl Request {
             Request::CloseSession { .. } => op::CLOSE_SESSION,
             Request::MetricsSnapshot { .. } => op::METRICS_SNAPSHOT,
             Request::TraceExport => op::TRACE_EXPORT,
+            Request::Subscribe { .. } => op::SUBSCRIBE,
+            Request::Unsubscribe { .. } => op::UNSUBSCRIBE,
         }
     }
 
@@ -713,6 +868,20 @@ impl Request {
             Request::CloseSession { session } => w.put_str(session),
             Request::MetricsSnapshot { prefix } => w.put_str(prefix),
             Request::TraceExport => {}
+            Request::Subscribe {
+                session,
+                method,
+                k,
+                num_classes,
+                seed,
+            } => {
+                w.put_str(session);
+                w.put_str(method);
+                w.put_u64(*k);
+                w.put_u32(*num_classes);
+                w.put_u64(*seed);
+            }
+            Request::Unsubscribe { session } => w.put_str(session),
         }
         w.into_bytes()
     }
@@ -779,6 +948,14 @@ impl Request {
             op::CLOSE_SESSION => Request::CloseSession { session: r.str()? },
             op::METRICS_SNAPSHOT => Request::MetricsSnapshot { prefix: r.str()? },
             op::TRACE_EXPORT => Request::TraceExport,
+            op::SUBSCRIBE => Request::Subscribe {
+                session: r.str()?,
+                method: r.str()?,
+                k: r.u64()?,
+                num_classes: r.u32()?,
+                seed: r.u64()?,
+            },
+            op::UNSUBSCRIBE => Request::Unsubscribe { session: r.str()? },
             other => return Err(format!("unknown opcode {other}")),
         };
         r.finish()?;
@@ -823,6 +1000,28 @@ pub enum Response {
     },
     /// Recorded spans from the server's trace rings (the TraceExport reply).
     Trace { spans: Vec<SpanRecord> },
+    /// **Unsolicited push frame** (docs/PROTOCOL.md §3.14): the subscribed
+    /// session's selection changed. Carried on opcode [`op::SUBSCRIBE`]
+    /// with status 0; demux by kind tag ([`Response::is_topk_delta`]).
+    ///
+    /// Reconstruction contract: starting from the previous epoch's index
+    /// list, remove `evicted` (order-preserving), then append `added` in
+    /// order — the result is byte-identical to the server's selection at
+    /// this epoch. Epoch 1's base is the empty list. Under backpressure
+    /// deltas coalesce: epochs may skip, but each delta is cumulative
+    /// since the last one actually delivered, so the invariant holds.
+    TopKDelta {
+        session: String,
+        /// Monotone per-subscription delta sequence number (starts at 1).
+        epoch: u64,
+        /// Indices entering the selection, in selection order.
+        added: Vec<u64>,
+        /// Indices leaving the selection, in previous-selection order.
+        evicted: Vec<u64>,
+        /// Minimum consensus-agreement score α over the current selection
+        /// (NaN encoded as-is when the selection is empty).
+        watermark: f64,
+    },
 }
 
 const RESP_OK: u8 = 0;
@@ -834,6 +1033,7 @@ const RESP_STATS: u8 = 5;
 const RESP_CHECKPOINTED: u8 = 6;
 const RESP_METRICS: u8 = 7;
 const RESP_TRACE: u8 = 8;
+const RESP_TOPK_DELTA: u8 = 9;
 
 fn put_pairs(w: &mut PayloadWriter, pairs: &[(String, u64)]) {
     w.put_u32(pairs.len() as u32);
@@ -861,6 +1061,13 @@ impl Response {
             Response::Error { .. } => 1,
             _ => 0,
         }
+    }
+
+    /// Whether an encoded response payload is a push [`Response::TopKDelta`]
+    /// frame. Subscribed clients call this on every ok frame to separate
+    /// unsolicited pushes from the reply they are waiting for.
+    pub fn is_topk_delta(payload: &[u8]) -> bool {
+        payload.first() == Some(&RESP_TOPK_DELTA)
     }
 
     pub fn encode(&self) -> Vec<u8> {
@@ -929,6 +1136,20 @@ impl Response {
                     w.put_u32(s.pid);
                     w.put_u32(s.tid);
                 }
+            }
+            Response::TopKDelta {
+                session,
+                epoch,
+                added,
+                evicted,
+                watermark,
+            } => {
+                w.put_u8(RESP_TOPK_DELTA);
+                w.put_str(session);
+                w.put_u64(*epoch);
+                w.put_u64_slice(added);
+                w.put_u64_slice(evicted);
+                w.put_f64(*watermark);
             }
         }
         w.into_bytes()
@@ -1006,6 +1227,13 @@ impl Response {
                 }
                 Response::Trace { spans }
             }
+            RESP_TOPK_DELTA => Response::TopKDelta {
+                session: r.str()?,
+                epoch: r.u64()?,
+                added: r.u64_slice()?,
+                evicted: r.u64_slice()?,
+                watermark: r.f64()?,
+            },
             other => return Err(format!("unknown response tag {other}")),
         };
         r.finish()?;
@@ -1086,6 +1314,16 @@ mod tests {
             prefix: "service.".into(),
         });
         round_trip_request(Request::TraceExport);
+        round_trip_request(Request::Subscribe {
+            session: "s1".into(),
+            method: "sage".into(),
+            k: 50,
+            num_classes: 10,
+            seed: 7,
+        });
+        round_trip_request(Request::Unsubscribe {
+            session: "s1".into(),
+        });
     }
 
     #[test]
@@ -1140,6 +1378,13 @@ mod tests {
                     pid: 7,
                     tid: 3,
                 }],
+            },
+            Response::TopKDelta {
+                session: "s1".into(),
+                epoch: 3,
+                added: vec![42, 7],
+                evicted: vec![5],
+                watermark: 0.75,
             },
         ];
         for resp in responses {
@@ -1260,6 +1505,108 @@ mod tests {
         frame.extend_from_slice(&(u32::MAX).to_le_bytes());
         let mut cursor = &frame[..];
         assert!(read_frame(&mut cursor).unwrap_err().contains("cap"));
+    }
+
+    #[test]
+    fn topk_delta_tag_is_detectable() {
+        let delta = Response::TopKDelta {
+            session: "s".into(),
+            epoch: 1,
+            added: vec![1],
+            evicted: vec![],
+            watermark: 0.5,
+        };
+        assert!(Response::is_topk_delta(&delta.encode()));
+        assert!(!Response::is_topk_delta(&Response::Ok.encode()));
+        assert!(!Response::is_topk_delta(&[]));
+    }
+
+    #[test]
+    fn apply_topk_delta_matches_contract() {
+        let mut sel = vec![3u64, 9, 1, 7];
+        apply_topk_delta(&mut sel, &[5, 2], &[9, 7]).unwrap();
+        assert_eq!(sel, vec![3, 1, 5, 2]);
+        // Snapshot form: evict everything, add the full new list.
+        let mut sel = vec![3u64, 1, 5, 2];
+        apply_topk_delta(&mut sel, &[8, 6, 4], &[3, 1, 5, 2]).unwrap();
+        assert_eq!(sel, vec![8, 6, 4]);
+        // Empty delta is the identity.
+        apply_topk_delta(&mut sel, &[], &[]).unwrap();
+        assert_eq!(sel, vec![8, 6, 4]);
+        // Malformed deltas are rejected and leave the base untouched.
+        assert!(apply_topk_delta(&mut sel, &[], &[99]).is_err());
+        assert!(apply_topk_delta(&mut sel, &[8], &[]).is_err());
+        assert_eq!(sel, vec![8, 6, 4]);
+    }
+
+    #[test]
+    fn frame_decoder_matches_blocking_reader_byte_by_byte() {
+        let payload = Request::Subscribe {
+            session: "s1".into(),
+            method: "sage".into(),
+            k: 10,
+            num_classes: 4,
+            seed: 0,
+        }
+        .encode();
+        let ctx = TraceCtx {
+            trace_id: 0x1111,
+            span_id: 0x2222,
+        };
+        let mut stream = encode_frame(op::SUBSCRIBE, 0, &payload);
+        stream.extend_from_slice(&encode_frame_traced(op::FREEZE, 0, b"", Some(ctx)));
+
+        let mut dec = FrameDecoder::new();
+        let mut frames = Vec::new();
+        for &b in &stream {
+            dec.extend(&[b]);
+            while let Some(f) = dec.next_frame().unwrap() {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].opcode, op::SUBSCRIBE);
+        assert_eq!(frames[0].payload, payload);
+        assert_eq!(frames[0].trace, None);
+        assert_eq!(frames[1].opcode, op::FREEZE);
+        assert_eq!(frames[1].trace, Some(ctx));
+        assert_eq!(dec.buffered(), 0);
+
+        // The whole stream in one extend drains identically.
+        let mut dec = FrameDecoder::new();
+        dec.extend(&stream);
+        assert_eq!(dec.next_frame().unwrap().unwrap().opcode, op::SUBSCRIBE);
+        assert_eq!(dec.next_frame().unwrap().unwrap().opcode, op::FREEZE);
+        assert!(dec.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_decoder_tears_like_the_blocking_reader() {
+        let payload = Request::Freeze { session: "x".into() }.encode();
+        let mut frame = encode_frame(op::FREEZE, 0, &payload);
+        let mid = frame.len() / 2;
+        frame[mid] ^= 0xFF;
+        let mut dec = FrameDecoder::new();
+        dec.extend(&frame);
+        assert!(dec.next_frame().is_err());
+
+        let mut dec = FrameDecoder::new();
+        dec.extend(b"NOPE");
+        dec.extend(&[0u8; 10]);
+        assert!(dec.next_frame().unwrap_err().contains("magic"));
+    }
+
+    #[test]
+    fn frame_decoder_compacts_consumed_prefix() {
+        let frame = encode_frame(op::FREEZE, 0, &Request::Freeze { session: "x".into() }.encode());
+        let mut dec = FrameDecoder::new();
+        for _ in 0..300 {
+            dec.extend(&frame);
+            assert!(dec.next_frame().unwrap().is_some());
+        }
+        assert_eq!(dec.buffered(), 0);
+        // The internal buffer must not have grown to 300 × frame size.
+        assert!(dec.buf.len() < frame.len() * 4 + 8192);
     }
 
     #[test]

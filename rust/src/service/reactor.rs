@@ -1,0 +1,1077 @@
+//! Readiness-driven reactor: the `--io epoll` engine behind `sage serve`.
+//!
+//! One event-loop thread multiplexes every connection over `util::sys`'s
+//! raw epoll bindings (no mio/tokio offline); registry dispatch — the part
+//! that runs kernels — happens on a compute [`ThreadPool`] so a long
+//! finalize never stalls accept, reads, or another connection's writes.
+//! The threaded engine in `service::server` remains the portable fallback;
+//! both speak the identical wire protocol and produce byte-identical
+//! responses (the integration suite runs every service test under both).
+//!
+//! # Connection state machine
+//!
+//! Each protocol connection owns an incremental [`FrameDecoder`] (reads
+//! never block: whatever bytes arrive are buffered until a frame
+//! completes) and a bounded outbox of fully-encoded frames. Responses are
+//! re-sequenced: every decoded request gets a per-connection sequence
+//! number, compute completions land in a `BTreeMap`, and frames leave in
+//! request order no matter how the pool schedules them. At most one
+//! request per connection is in flight at a time — the same
+//! one-request-at-a-time semantics as the threaded engine, so pipelined
+//! mutations (Create → Ingest → Freeze on one socket) apply in order.
+//!
+//! # Backpressure
+//!
+//! The outbox is watermarked: past [`HIGH_WATER`] the loop stops *reading*
+//! that connection (level-triggered interest drops `EPOLLIN`), so a slow
+//! reader throttles only itself — the TCP window fills and its producer
+//! blocks, exactly like the threaded engine's blocking-write composition.
+//! Push subscribers (see `service::subs`) ride the same outbox through a
+//! [`ReactorSink`]: when queued-plus-outbox bytes exceed the sink budget
+//! the hub's delta is refused (`PushOutcome::Busy`) and coalesced — a slow
+//! subscriber receives a fresh cumulative delta later, never an unbounded
+//! queue. Draining below [`LOW_WATER`] re-arms reads and kicks the hub.
+//!
+//! # Shutdown
+//!
+//! `ServerHandle` wakes the loop through its eventfd (no self-connect):
+//! the loop broadcasts GoingAway to subscribers, flushes what it can
+//! within a short grace window, and exits. Completions for connections
+//! that died in the meantime are dropped by token — tokens are never
+//! reused, so a stale completion can never reach the wrong peer.
+
+use super::registry::SessionRegistry;
+use super::subs::SubscriptionHub;
+use crate::util::sys::EventFd;
+use std::net::TcpListener;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+/// Everything the reactor needs from `Server::run`. The `threads` budget
+/// covers the event loop itself plus the compute pool (`threads - 1`
+/// workers), so `--io epoll` and `--io threads` are comparable at equal
+/// `--threads`.
+pub(crate) struct ReactorConfig {
+    pub listener: TcpListener,
+    pub metrics_listener: Option<TcpListener>,
+    pub registry: Arc<SessionRegistry>,
+    pub hub: Arc<SubscriptionHub>,
+    pub wake: Arc<EventFd>,
+    pub threads: usize,
+    pub slow_op_ms: u64,
+}
+
+#[cfg(target_os = "linux")]
+pub(crate) fn run(cfg: ReactorConfig, stop: Arc<AtomicBool>) -> Result<(), String> {
+    linux_impl::run(cfg, stop)
+}
+
+#[cfg(not(target_os = "linux"))]
+pub(crate) fn run(cfg: ReactorConfig, stop: Arc<AtomicBool>) -> Result<(), String> {
+    let _ = (cfg, stop);
+    Err("the epoll reactor requires Linux; run with --io threads".to_string())
+}
+
+#[cfg(target_os = "linux")]
+mod linux_impl {
+    use super::ReactorConfig;
+    use crate::service::metrics_http;
+    use crate::service::protocol::{
+        encode_frame_traced, op, Frame, FrameDecoder, Request, Response,
+    };
+    use crate::service::registry::SessionRegistry;
+    use crate::service::server::server_hists;
+    use crate::service::subs::{PushOutcome, PushSink};
+    use crate::util::metrics::global as metrics;
+    use crate::util::metrics::Histogram;
+    use crate::util::sys::{self, Epoll, Event, EventFd};
+    use crate::util::threadpool::ThreadPool;
+    use crate::util::trace::{self, TraceCtx};
+    use std::collections::{BTreeMap, HashMap, VecDeque};
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{Arc, Mutex, OnceLock};
+    use std::time::{Duration, Instant};
+
+    /// Wakes the loop: eventfd written by pool completions, push sinks,
+    /// and `ServerHandle` shutdown.
+    const TOKEN_WAKE: u64 = 0;
+    /// The protocol listener.
+    const TOKEN_LISTENER: u64 = 1;
+    /// The optional `/metrics` HTTP listener.
+    const TOKEN_METRICS: u64 = 2;
+    /// Connections start here; the counter is monotone and tokens are
+    /// never reused, so completions for closed connections drop safely.
+    const FIRST_CONN_TOKEN: u64 = 3;
+
+    /// Outbox bytes past which the loop stops reading the connection.
+    pub(super) const HIGH_WATER: usize = 1 << 20;
+    /// Outbox bytes below which reads re-arm and Busy subscribers retry.
+    pub(super) const LOW_WATER: usize = 256 << 10;
+    /// Queued-plus-outbox bytes past which a push sink reports Busy (the
+    /// hub then coalesces instead of queuing another delta).
+    pub(super) const PUSH_BUSY: usize = 256 << 10;
+
+    const READ_CHUNK: usize = 16 << 10;
+    const MAX_EVENTS: usize = 256;
+    /// Safety-net wait timeout; every real transition also writes the
+    /// eventfd, so this only bounds lost-wakeup damage.
+    const WAIT_MS: i32 = 250;
+    /// How long shutdown waits for in-flight responses and GoingAway
+    /// frames to flush before dropping the remaining connections.
+    const SHUTDOWN_GRACE: Duration = Duration::from_millis(250);
+
+    struct ReactorHists {
+        /// `sage.reactor.wait.ns` — time blocked in `epoll_wait`.
+        wait: &'static Histogram,
+        /// `sage.reactor.dispatch.ns` — pool-side wall clock of one
+        /// request (decode → handle → encode → frame).
+        dispatch: &'static Histogram,
+        /// `sage.reactor.write_queue.depth` — outbox depth in frames,
+        /// sampled at each enqueue.
+        depth: &'static Histogram,
+    }
+
+    fn reactor_hists() -> &'static ReactorHists {
+        static HISTS: OnceLock<ReactorHists> = OnceLock::new();
+        HISTS.get_or_init(|| {
+            let reg = metrics();
+            ReactorHists {
+                wait: reg.histogram("sage.reactor.wait.ns"),
+                dispatch: reg.histogram("sage.reactor.dispatch.ns"),
+                depth: reg.histogram("sage.reactor.write_queue.depth"),
+            }
+        })
+    }
+
+    /// One finished pool job: the fully-encoded response frame, routed
+    /// back to its connection by token and slotted by sequence number.
+    struct Completion {
+        token: u64,
+        seq: u64,
+        frame: Vec<u8>,
+    }
+
+    /// State shared between the loop, pool workers, and push sinks.
+    struct Shared {
+        wake: Arc<EventFd>,
+        completions: Mutex<Vec<Completion>>,
+        /// Tokens with freshly queued push frames to drain into outboxes.
+        push_pending: Mutex<Vec<u64>>,
+    }
+
+    /// The hub's nonblocking path into one connection's outbox. The loop
+    /// mirrors the outbox byte count into `outbox_bytes` so Busy reflects
+    /// the *total* unsent backlog, not just the staging queue.
+    struct ReactorSink {
+        token: u64,
+        shared: Arc<Shared>,
+        gone: AtomicBool,
+        queue: Mutex<VecDeque<Vec<u8>>>,
+        queued_bytes: AtomicUsize,
+        outbox_bytes: AtomicUsize,
+    }
+
+    impl PushSink for ReactorSink {
+        fn try_push(&self, frame: Vec<u8>) -> PushOutcome {
+            if self.gone.load(Ordering::Acquire) {
+                return PushOutcome::Gone;
+            }
+            let backlog = self.queued_bytes.load(Ordering::Relaxed)
+                + self.outbox_bytes.load(Ordering::Relaxed);
+            if backlog > PUSH_BUSY {
+                return PushOutcome::Busy;
+            }
+            self.queued_bytes.fetch_add(frame.len(), Ordering::Relaxed);
+            self.queue.lock().unwrap().push_back(frame);
+            self.shared.push_pending.lock().unwrap().push(self.token);
+            self.shared.wake.wake();
+            PushOutcome::Sent
+        }
+    }
+
+    /// A request headed for (or parked before) the compute pool.
+    struct DispatchJob {
+        token: u64,
+        seq: u64,
+        opcode: u8,
+        payload: Vec<u8>,
+        trace: Option<TraceCtx>,
+    }
+
+    struct FrameState {
+        decoder: FrameDecoder,
+        /// Sequence assigned to the next decoded request.
+        next_req_seq: u64,
+        /// Sequence whose response leaves the outbox next.
+        next_resp_seq: u64,
+        /// Out-of-order completions parked until their turn.
+        ready: BTreeMap<u64, Vec<u8>>,
+        /// One request on the pool at a time (per-connection ordering).
+        inflight: bool,
+        /// Decoded requests waiting for the in-flight one to finish.
+        pending: VecDeque<DispatchJob>,
+        /// Created lazily on the first Subscribe.
+        sink: Option<Arc<ReactorSink>>,
+    }
+
+    impl FrameState {
+        fn new() -> FrameState {
+            FrameState {
+                decoder: FrameDecoder::new(),
+                next_req_seq: 0,
+                next_resp_seq: 0,
+                ready: BTreeMap::new(),
+                inflight: false,
+                pending: VecDeque::new(),
+                sink: None,
+            }
+        }
+    }
+
+    enum ConnKind {
+        /// A protocol connection (SGW1 frames).
+        Frames(FrameState),
+        /// A `/metrics` scrape: buffer the request head, answer, close.
+        Http { request: Vec<u8> },
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        kind: ConnKind,
+        /// Complete frames (or the HTTP response) awaiting the socket.
+        outbox: VecDeque<Vec<u8>>,
+        /// Bytes of `outbox.front()` already written.
+        front_written: usize,
+        outbox_bytes: usize,
+        /// Currently registered epoll interest mask.
+        interest: u32,
+        close_after_flush: bool,
+        /// Peer EOF'd its write side; serve what is owed, then close.
+        peer_gone: bool,
+    }
+
+    enum After {
+        Keep,
+        Close,
+    }
+
+    fn frames_mut(conn: &mut Conn) -> &mut FrameState {
+        match &mut conn.kind {
+            ConnKind::Frames(fs) => fs,
+            ConnKind::Http { .. } => unreachable!("frame op on metrics connection"),
+        }
+    }
+
+    /// Append one complete frame to the outbox and keep the sink's mirror
+    /// of the backlog honest.
+    fn enqueue_frame(conn: &mut Conn, frame: Vec<u8>) {
+        conn.outbox_bytes += frame.len();
+        conn.outbox.push_back(frame);
+        reactor_hists().depth.record(conn.outbox.len() as u64);
+        mirror_outbox(conn);
+    }
+
+    fn mirror_outbox(conn: &Conn) {
+        if let ConnKind::Frames(fs) = &conn.kind {
+            if let Some(sink) = &fs.sink {
+                sink.outbox_bytes.store(conn.outbox_bytes, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Write as much of the outbox as the socket accepts right now.
+    /// `Ok(())` means either drained or `WouldBlock`; errors mean the
+    /// peer is gone.
+    fn flush_outbox(conn: &mut Conn) -> std::io::Result<()> {
+        while let Some(front) = conn.outbox.front() {
+            match conn.stream.write(&front[conn.front_written..]) {
+                Ok(0) => return Err(ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    conn.front_written += n;
+                    conn.outbox_bytes -= n;
+                    if conn.front_written == front.len() {
+                        conn.outbox.pop_front();
+                        conn.front_written = 0;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Interest follows state: reads stay armed until the outbox passes
+    /// the high watermark (or the conn is draining), writes arm only
+    /// while the outbox is nonempty (level-triggered — an always-armed
+    /// `EPOLLOUT` would spin).
+    fn desired_interest(conn: &Conn) -> u32 {
+        let mut mask = sys::EPOLLRDHUP;
+        let reading =
+            !conn.peer_gone && !conn.close_after_flush && conn.outbox_bytes < HIGH_WATER;
+        if reading {
+            mask |= sys::EPOLLIN;
+        }
+        if !conn.outbox.is_empty() {
+            mask |= sys::EPOLLOUT;
+        }
+        mask
+    }
+
+    /// True when nothing more will ever leave this connection.
+    fn conn_finished(conn: &Conn) -> bool {
+        if !conn.outbox.is_empty() {
+            return false;
+        }
+        // A response is still owed (in flight on the pool or parked
+        // out-of-order): deliver it before closing, even when draining.
+        let owed = match &conn.kind {
+            ConnKind::Http { .. } => false,
+            ConnKind::Frames(fs) => fs.inflight || !fs.ready.is_empty(),
+        };
+        if owed {
+            return false;
+        }
+        if conn.close_after_flush {
+            return true;
+        }
+        if !conn.peer_gone {
+            return false;
+        }
+        match &conn.kind {
+            ConnKind::Http { .. } => true,
+            ConnKind::Frames(fs) => fs.pending.is_empty(),
+        }
+    }
+
+    /// Pool-side request execution: mirrors the threaded engine's
+    /// decode → dispatch → encode stages (same histograms, same slow-op
+    /// warning, same trace adoption), then hands the encoded frame back
+    /// to the loop as a completion.
+    fn run_job(registry: &SessionRegistry, shared: &Shared, slow_op_ms: u64, job: DispatchJob) {
+        let hists = server_hists();
+        let total = Instant::now();
+        let _request_span = job
+            .trace
+            .map(|ctx| trace::adopt(&format!("serve.{}", op::name(job.opcode)), ctx));
+
+        let t = Instant::now();
+        let decoded = {
+            let _s = trace::span("serve.decode");
+            Request::decode(job.opcode, &job.payload)
+        };
+        hists.decode.record(t.elapsed().as_nanos() as u64);
+
+        let t = Instant::now();
+        let response = match decoded {
+            Ok(request) => {
+                let _s = trace::span("serve.handle");
+                crate::service::server::dispatch(registry, request)
+            }
+            Err(e) => Response::Error {
+                message: format!("bad request: {e}"),
+            },
+        };
+        let handle_ns = t.elapsed().as_nanos() as u64;
+        hists.handle.record(handle_ns);
+        if let Some(h) = hists.per_op.get(job.opcode as usize) {
+            h.record(handle_ns);
+        }
+        if slow_op_ms > 0 && handle_ns >= slow_op_ms.saturating_mul(1_000_000) {
+            crate::log_warn!(
+                "slow op {}: {:.1}ms (threshold {slow_op_ms}ms) trace={:016x}",
+                op::name(job.opcode),
+                handle_ns as f64 / 1e6,
+                job.trace.map(|c| c.trace_id).unwrap_or(0)
+            );
+        }
+        if matches!(response, Response::Error { .. }) {
+            metrics().counter("service.server.errors").inc();
+        }
+
+        let t = Instant::now();
+        let payload = {
+            let _s = trace::span("serve.encode");
+            response.encode()
+        };
+        hists.encode.record(t.elapsed().as_nanos() as u64);
+
+        let frame = encode_frame_traced(job.opcode, response.status(), &payload, job.trace);
+        reactor_hists().dispatch.record(total.elapsed().as_nanos() as u64);
+        shared
+            .completions
+            .lock()
+            .unwrap()
+            .push(Completion {
+                token: job.token,
+                seq: job.seq,
+                frame,
+            });
+        shared.wake.wake();
+    }
+
+    struct Reactor {
+        epoll: Epoll,
+        listener: TcpListener,
+        metrics_listener: Option<TcpListener>,
+        registry: Arc<SessionRegistry>,
+        hub: Arc<crate::service::subs::SubscriptionHub>,
+        shared: Arc<Shared>,
+        pool: ThreadPool,
+        slow_op_ms: u64,
+        conns: HashMap<u64, Conn>,
+        next_token: u64,
+        /// Connections whose next job bounced off a saturated pool;
+        /// retried once completions free a slot (or on the next tick).
+        stalled: Vec<u64>,
+    }
+
+    pub(super) fn run(cfg: ReactorConfig, stop: Arc<AtomicBool>) -> Result<(), String> {
+        let epoll = Epoll::new().map_err(|e| format!("epoll_create1: {e}"))?;
+        cfg.listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("listener nonblocking: {e}"))?;
+        epoll
+            .add(cfg.wake.as_raw_fd(), TOKEN_WAKE, sys::EPOLLIN)
+            .map_err(|e| format!("register wake eventfd: {e}"))?;
+        epoll
+            .add(cfg.listener.as_raw_fd(), TOKEN_LISTENER, sys::EPOLLIN)
+            .map_err(|e| format!("register listener: {e}"))?;
+        if let Some(l) = &cfg.metrics_listener {
+            l.set_nonblocking(true)
+                .map_err(|e| format!("metrics listener nonblocking: {e}"))?;
+            epoll
+                .add(l.as_raw_fd(), TOKEN_METRICS, sys::EPOLLIN)
+                .map_err(|e| format!("register metrics listener: {e}"))?;
+            if let Ok(addr) = l.local_addr() {
+                crate::log_info!("metrics exposition on http://{addr}/metrics");
+            }
+        }
+        let workers = cfg.threads.saturating_sub(1).max(1);
+        crate::log_info!(
+            "sage-serve reactor on {} (1 event loop + {workers} compute workers)",
+            cfg.listener
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?".to_string())
+        );
+        let mut reactor = Reactor {
+            epoll,
+            listener: cfg.listener,
+            metrics_listener: cfg.metrics_listener,
+            registry: cfg.registry,
+            hub: cfg.hub,
+            shared: Arc::new(Shared {
+                wake: cfg.wake,
+                completions: Mutex::new(Vec::new()),
+                push_pending: Mutex::new(Vec::new()),
+            }),
+            pool: ThreadPool::new(workers),
+            slow_op_ms: cfg.slow_op_ms,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            stalled: Vec::new(),
+        };
+
+        let mut events = vec![Event::zeroed(); MAX_EVENTS];
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let t = Instant::now();
+            let n = reactor
+                .epoll
+                .wait(&mut events, WAIT_MS)
+                .map_err(|e| format!("epoll_wait: {e}"))?;
+            reactor_hists().wait.record(t.elapsed().as_nanos() as u64);
+            for ev in &events[..n] {
+                match ev.token() {
+                    TOKEN_WAKE => {
+                        reactor.shared.wake.drain();
+                    }
+                    TOKEN_LISTENER => reactor.accept_main(),
+                    TOKEN_METRICS => reactor.accept_metrics(),
+                    token => reactor.conn_event(token, ev.events()),
+                }
+            }
+            reactor.drain_completions();
+            reactor.drain_pushes();
+            reactor.retry_stalled();
+        }
+        reactor.shutdown();
+        Ok(())
+    }
+
+    impl Reactor {
+        fn accept_main(&mut self) {
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        metrics().counter("service.server.connections").inc();
+                        let _ = stream.set_nodelay(true);
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        self.register(stream, ConnKind::Frames(FrameState::new()), true);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) => {
+                        crate::log_warn!("accept failed: {e}");
+                        break;
+                    }
+                }
+            }
+        }
+
+        fn accept_metrics(&mut self) {
+            loop {
+                let listener = match &self.metrics_listener {
+                    Some(l) => l,
+                    None => return,
+                };
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        self.register(stream, ConnKind::Http { request: Vec::new() }, false);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) => {
+                        crate::log_warn!("metrics accept failed: {e}");
+                        break;
+                    }
+                }
+            }
+        }
+
+        fn register(&mut self, stream: TcpStream, kind: ConnKind, counted: bool) {
+            let token = self.next_token;
+            self.next_token += 1;
+            let interest = sys::EPOLLIN | sys::EPOLLRDHUP;
+            if self.epoll.add(stream.as_raw_fd(), token, interest).is_err() {
+                return; // conn dropped; nothing registered yet
+            }
+            if counted {
+                metrics().gauge("sage.server.connections").add(1);
+            }
+            self.conns.insert(
+                token,
+                Conn {
+                    stream,
+                    kind,
+                    outbox: VecDeque::new(),
+                    front_written: 0,
+                    outbox_bytes: 0,
+                    interest,
+                    close_after_flush: false,
+                    peer_gone: false,
+                },
+            );
+        }
+
+        fn conn_event(&mut self, token: u64, bits: u32) {
+            let mut conn = match self.conns.remove(&token) {
+                Some(c) => c,
+                None => return, // stale event for a token closed this tick
+            };
+            let mut after = After::Keep;
+            if bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+                after = After::Close;
+            } else {
+                if bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 {
+                    after = self.readable(token, &mut conn);
+                }
+                if matches!(after, After::Keep)
+                    && (bits & sys::EPOLLOUT != 0 || !conn.outbox.is_empty())
+                {
+                    after = self.flush(&mut conn);
+                }
+            }
+            self.finish(token, conn, after);
+        }
+
+        /// Re-register interest and either park the connection back in
+        /// the map or tear it down.
+        fn finish(&mut self, token: u64, mut conn: Conn, after: After) {
+            let after = match after {
+                After::Keep if conn_finished(&conn) => After::Close,
+                a => a,
+            };
+            match after {
+                After::Keep => {
+                    let want = desired_interest(&conn);
+                    if want != conn.interest {
+                        conn.interest = want;
+                        let _ = self.epoll.modify(conn.stream.as_raw_fd(), token, want);
+                    }
+                    self.conns.insert(token, conn);
+                }
+                After::Close => self.close(token, conn),
+            }
+        }
+
+        fn close(&mut self, token: u64, conn: Conn) {
+            let _ = self.epoll.delete(conn.stream.as_raw_fd());
+            if let ConnKind::Frames(fs) = &conn.kind {
+                if let Some(sink) = &fs.sink {
+                    sink.gone.store(true, Ordering::Release);
+                }
+                self.hub.drop_conn(token);
+                metrics().gauge("sage.server.connections").sub(1);
+            }
+        }
+
+        fn readable(&mut self, token: u64, conn: &mut Conn) -> After {
+            match conn.kind {
+                ConnKind::Http { .. } => self.readable_http(conn),
+                ConnKind::Frames(_) => self.readable_frames(token, conn),
+            }
+        }
+
+        fn readable_frames(&mut self, token: u64, conn: &mut Conn) -> After {
+            let mut buf = [0u8; READ_CHUNK];
+            loop {
+                // Watermark throttle: a backed-up outbox parks the read
+                // side; `desired_interest` drops EPOLLIN until it drains.
+                if conn.outbox_bytes >= HIGH_WATER {
+                    break;
+                }
+                let n = match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.peer_gone = true;
+                        break;
+                    }
+                    Ok(n) => n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        crate::log_debug!("connection read failed: {e}");
+                        return After::Close;
+                    }
+                };
+                frames_mut(conn).decoder.extend(&buf[..n]);
+                if let Err(e) = self.pump_frames(token, conn) {
+                    crate::log_debug!("connection framing error: {e}");
+                    return After::Close;
+                }
+            }
+            After::Keep
+        }
+
+        /// Decode every complete frame buffered so far and route it:
+        /// Subscribe/Unsubscribe run inline on the loop (they only touch
+        /// hub state — never kernels); everything else becomes a pool
+        /// job. Both paths go through the sequence machinery, so
+        /// responses interleave in request order.
+        fn pump_frames(&mut self, token: u64, conn: &mut Conn) -> Result<(), String> {
+            loop {
+                let frame = match frames_mut(conn).decoder.next_frame()? {
+                    Some(f) => f,
+                    None => return Ok(()),
+                };
+                metrics().counter("service.server.requests").inc();
+                let seq = {
+                    let fs = frames_mut(conn);
+                    let s = fs.next_req_seq;
+                    fs.next_req_seq += 1;
+                    s
+                };
+                if frame.opcode == op::SUBSCRIBE || frame.opcode == op::UNSUBSCRIBE {
+                    let encoded = self.control_response(token, conn, &frame);
+                    frames_mut(conn).ready.insert(seq, encoded);
+                    self.pump_ready(conn);
+                } else {
+                    frames_mut(conn).pending.push_back(DispatchJob {
+                        token,
+                        seq,
+                        opcode: frame.opcode,
+                        payload: frame.payload,
+                        trace: frame.trace,
+                    });
+                    self.submit_next(token, conn);
+                }
+            }
+        }
+
+        /// Handle one Subscribe/Unsubscribe on the loop thread and return
+        /// the fully-encoded response frame. Mirrors the threaded
+        /// engine's stage histograms so per-op latency stays comparable.
+        fn control_response(&mut self, token: u64, conn: &mut Conn, frame: &Frame) -> Vec<u8> {
+            let hists = server_hists();
+            let _request_span = frame
+                .trace
+                .map(|ctx| trace::adopt(&format!("serve.{}", op::name(frame.opcode)), ctx));
+            let t = Instant::now();
+            let decoded = Request::decode(frame.opcode, &frame.payload);
+            hists.decode.record(t.elapsed().as_nanos() as u64);
+
+            let t = Instant::now();
+            let response = match decoded {
+                Ok(Request::Subscribe {
+                    session,
+                    method,
+                    k,
+                    num_classes,
+                    seed,
+                }) => {
+                    let sink = self.conn_sink(token, conn);
+                    match self.hub.subscribe(
+                        token,
+                        sink,
+                        &session,
+                        &method,
+                        k as usize,
+                        num_classes as usize,
+                        seed,
+                    ) {
+                        Ok(()) => Response::Ok,
+                        Err(message) => Response::Error { message },
+                    }
+                }
+                Ok(Request::Unsubscribe { session }) => {
+                    // Removing a subscription that never existed is not an
+                    // error (unsubscribe races session close).
+                    self.hub.unsubscribe(token, &session);
+                    Response::Ok
+                }
+                Ok(_) => Response::Error {
+                    message: "bad request: not a subscription op".to_string(),
+                },
+                Err(e) => Response::Error {
+                    message: format!("bad request: {e}"),
+                },
+            };
+            let handle_ns = t.elapsed().as_nanos() as u64;
+            hists.handle.record(handle_ns);
+            if let Some(h) = hists.per_op.get(frame.opcode as usize) {
+                h.record(handle_ns);
+            }
+            if matches!(response, Response::Error { .. }) {
+                metrics().counter("service.server.errors").inc();
+            }
+
+            let t = Instant::now();
+            let payload = response.encode();
+            hists.encode.record(t.elapsed().as_nanos() as u64);
+            encode_frame_traced(frame.opcode, response.status(), &payload, frame.trace)
+        }
+
+        /// The connection's push sink, created on first use. Created
+        /// before `SubscriptionHub::subscribe` can validate, so a failed
+        /// Subscribe may leave an idle sink behind — harmless, it holds
+        /// no subscription.
+        fn conn_sink(&self, token: u64, conn: &mut Conn) -> Arc<dyn PushSink> {
+            let shared = self.shared.clone();
+            let fs = frames_mut(conn);
+            let sink = fs.sink.get_or_insert_with(|| {
+                Arc::new(ReactorSink {
+                    token,
+                    shared,
+                    gone: AtomicBool::new(false),
+                    queue: Mutex::new(VecDeque::new()),
+                    queued_bytes: AtomicUsize::new(0),
+                    outbox_bytes: AtomicUsize::new(0),
+                })
+            });
+            sink.clone()
+        }
+
+        /// Move consecutive ready responses (in request order) into the
+        /// outbox.
+        fn pump_ready(&mut self, conn: &mut Conn) {
+            loop {
+                let frame = {
+                    let fs = frames_mut(conn);
+                    match fs.ready.remove(&fs.next_resp_seq) {
+                        Some(f) => {
+                            fs.next_resp_seq += 1;
+                            f
+                        }
+                        None => break,
+                    }
+                };
+                enqueue_frame(conn, frame);
+            }
+        }
+
+        /// Submit the connection's next pending request if nothing is in
+        /// flight. A saturated pool parks the job back at the queue head
+        /// and marks the connection stalled — never dropped.
+        fn submit_next(&mut self, token: u64, conn: &mut Conn) {
+            let fs = frames_mut(conn);
+            if fs.inflight {
+                return;
+            }
+            let job = match fs.pending.pop_front() {
+                Some(j) => j,
+                None => return,
+            };
+            match self.submit(job) {
+                None => fs.inflight = true,
+                Some(job) => {
+                    fs.pending.push_front(job);
+                    if !self.stalled.contains(&token) {
+                        self.stalled.push(token);
+                    }
+                }
+            }
+        }
+
+        /// Nonblocking pool submit that hands the job back on failure
+        /// (the closure parks it in a shared slot, so a refused submit
+        /// loses nothing).
+        fn submit(&self, job: DispatchJob) -> Option<DispatchJob> {
+            let slot = Arc::new(Mutex::new(Some(job)));
+            let task_slot = slot.clone();
+            let registry = self.registry.clone();
+            let shared = self.shared.clone();
+            let slow_op_ms = self.slow_op_ms;
+            let submitted = self.pool.try_execute(move || {
+                if let Some(job) = task_slot.lock().unwrap().take() {
+                    run_job(&registry, &shared, slow_op_ms, job);
+                }
+            });
+            match submitted {
+                Ok(()) => None,
+                Err(_) => slot.lock().unwrap().take(),
+            }
+        }
+
+        fn readable_http(&mut self, conn: &mut Conn) -> After {
+            let mut buf = [0u8; 4096];
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.peer_gone = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        let ConnKind::Http { request } = &mut conn.kind else {
+                            unreachable!()
+                        };
+                        let room = 4096usize.saturating_sub(request.len());
+                        request.extend_from_slice(&buf[..n.min(room)]);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => return After::Close,
+                }
+                let ConnKind::Http { request } = &conn.kind else {
+                    unreachable!()
+                };
+                if head_complete(request) {
+                    break;
+                }
+            }
+            if conn.close_after_flush {
+                return After::Keep; // already answered; just draining
+            }
+            let ConnKind::Http { request } = &conn.kind else {
+                unreachable!()
+            };
+            if !head_complete(request) && !conn.peer_gone {
+                return After::Keep; // more head bytes still coming
+            }
+            if request.is_empty() {
+                return After::Close;
+            }
+            let head = String::from_utf8_lossy(request).into_owned();
+            let response = metrics_http::respond(&head);
+            enqueue_frame(conn, response);
+            conn.close_after_flush = true;
+            self.flush(conn)
+        }
+
+        fn flush(&mut self, conn: &mut Conn) -> After {
+            if conn.outbox.is_empty() {
+                return After::Keep;
+            }
+            let before = conn.outbox_bytes;
+            let t = Instant::now();
+            let result = flush_outbox(conn);
+            server_hists().write.record(t.elapsed().as_nanos() as u64);
+            mirror_outbox(conn);
+            if let Err(e) = result {
+                crate::log_debug!("connection write failed: {e}");
+                return After::Close;
+            }
+            // Crossing the low watermark downward: Busy subscribers can
+            // fit a fresh delta now, so kick the hub's retry.
+            if before >= LOW_WATER && conn.outbox_bytes < LOW_WATER {
+                if let ConnKind::Frames(fs) = &conn.kind {
+                    if fs.sink.is_some() {
+                        self.hub.kick();
+                    }
+                }
+            }
+            After::Keep
+        }
+
+        fn drain_completions(&mut self) {
+            let completions = {
+                let mut q = self.shared.completions.lock().unwrap();
+                std::mem::take(&mut *q)
+            };
+            for c in completions {
+                let mut conn = match self.conns.remove(&c.token) {
+                    Some(conn) => conn,
+                    None => continue, // connection died while computing
+                };
+                {
+                    let fs = frames_mut(&mut conn);
+                    fs.inflight = false;
+                    fs.ready.insert(c.seq, c.frame);
+                }
+                self.pump_ready(&mut conn);
+                self.submit_next(c.token, &mut conn);
+                let after = self.flush(&mut conn);
+                self.finish(c.token, conn, after);
+            }
+        }
+
+        fn drain_pushes(&mut self) {
+            let tokens = {
+                let mut q = self.shared.push_pending.lock().unwrap();
+                std::mem::take(&mut *q)
+            };
+            for token in tokens {
+                let mut conn = match self.conns.remove(&token) {
+                    Some(c) => c,
+                    None => continue,
+                };
+                let frames: Vec<Vec<u8>> = {
+                    let fs = frames_mut(&mut conn);
+                    match &fs.sink {
+                        Some(sink) => {
+                            let mut q = sink.queue.lock().unwrap();
+                            let drained: Vec<Vec<u8>> = q.drain(..).collect();
+                            let bytes: usize = drained.iter().map(|f| f.len()).sum();
+                            sink.queued_bytes.fetch_sub(bytes, Ordering::Relaxed);
+                            drained
+                        }
+                        None => Vec::new(),
+                    }
+                };
+                for frame in frames {
+                    enqueue_frame(&mut conn, frame);
+                }
+                let after = self.flush(&mut conn);
+                self.finish(token, conn, after);
+            }
+        }
+
+        fn retry_stalled(&mut self) {
+            if self.stalled.is_empty() {
+                return;
+            }
+            let stalled = std::mem::take(&mut self.stalled);
+            for token in stalled {
+                let mut conn = match self.conns.remove(&token) {
+                    Some(c) => c,
+                    None => continue,
+                };
+                self.submit_next(token, &mut conn);
+                self.finish(token, conn, After::Keep);
+            }
+        }
+
+        /// Graceful drain: broadcast GoingAway to subscribers (idempotent
+        /// with `ServerHandle`'s own broadcast), deliver what in-flight
+        /// work completes within the grace window, then drop the rest.
+        fn shutdown(&mut self) {
+            self.hub.going_away();
+            self.drain_completions();
+            self.drain_pushes();
+            let tokens: Vec<u64> = self.conns.keys().copied().collect();
+            for token in tokens {
+                let mut conn = match self.conns.remove(&token) {
+                    Some(c) => c,
+                    None => continue,
+                };
+                conn.close_after_flush = true;
+                let after = self.flush(&mut conn);
+                self.finish(token, conn, after);
+            }
+            let deadline = Instant::now() + SHUTDOWN_GRACE;
+            let mut events = vec![Event::zeroed(); MAX_EVENTS];
+            while !self.conns.is_empty() && Instant::now() < deadline {
+                let n = match self.epoll.wait(&mut events, 25) {
+                    Ok(n) => n,
+                    Err(_) => break,
+                };
+                for ev in &events[..n] {
+                    match ev.token() {
+                        TOKEN_WAKE => {
+                            self.shared.wake.drain();
+                        }
+                        TOKEN_LISTENER | TOKEN_METRICS => {} // no new conns
+                        token => self.conn_event(token, ev.events()),
+                    }
+                }
+                self.drain_completions();
+                self.drain_pushes();
+            }
+            let leftovers: Vec<u64> = self.conns.keys().copied().collect();
+            for token in leftovers {
+                if let Some(conn) = self.conns.remove(&token) {
+                    self.close(token, conn);
+                }
+            }
+            // Dropping the pool joins the workers; any still-running job
+            // finishes and its completion is discarded with the loop.
+        }
+    }
+
+    fn head_complete(request: &[u8]) -> bool {
+        request.len() >= 4096 || request.windows(4).any(|w| w == b"\r\n\r\n")
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn sink_busy_reflects_queue_plus_outbox() {
+            let shared = Arc::new(Shared {
+                wake: Arc::new(EventFd::new().unwrap()),
+                completions: Mutex::new(Vec::new()),
+                push_pending: Mutex::new(Vec::new()),
+            });
+            let sink = ReactorSink {
+                token: 7,
+                shared,
+                gone: AtomicBool::new(false),
+                queue: Mutex::new(VecDeque::new()),
+                queued_bytes: AtomicUsize::new(0),
+                outbox_bytes: AtomicUsize::new(0),
+            };
+            assert_eq!(sink.try_push(vec![0u8; 16]), PushOutcome::Sent);
+            assert_eq!(sink.queued_bytes.load(Ordering::Relaxed), 16);
+            // Mirrored outbox bytes alone can trip the busy threshold.
+            sink.outbox_bytes.store(PUSH_BUSY + 1, Ordering::Relaxed);
+            assert_eq!(sink.try_push(vec![0u8; 16]), PushOutcome::Busy);
+            sink.outbox_bytes.store(0, Ordering::Relaxed);
+            assert_eq!(sink.try_push(vec![0u8; 16]), PushOutcome::Sent);
+            sink.gone.store(true, Ordering::Release);
+            assert_eq!(sink.try_push(vec![0u8; 16]), PushOutcome::Gone);
+            // Refused pushes must not leak queued bytes.
+            assert_eq!(sink.queued_bytes.load(Ordering::Relaxed), 32);
+            assert_eq!(
+                sink.shared.push_pending.lock().unwrap().as_slice(),
+                &[7, 7]
+            );
+        }
+
+        #[test]
+        fn head_complete_on_crlf_or_cap() {
+            assert!(!head_complete(b"GET /metrics HTTP/1.0\r\n"));
+            assert!(head_complete(b"GET /metrics HTTP/1.0\r\n\r\n"));
+            assert!(head_complete(&[b'x'; 4096]));
+        }
+    }
+}

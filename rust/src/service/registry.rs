@@ -63,7 +63,10 @@ use super::storage::{LocalDirBackend, StorageBackend};
 use super::wal::{Durability, Wal, WalConfig, WalFaultPlan, WalRecord};
 use crate::baselines::{select_weighted, SelectionInputs};
 use crate::config::Method;
-use crate::selection::{scorer_state_bytes, AgreementScorer, Scores, ENTRY_BYTES};
+use crate::selection::{
+    scorer_state_bytes, AgreementScorer, ScoreEntry, ScorerState, Scores, ScoresState,
+    ENTRY_BYTES,
+};
 use crate::sketch::{FdSketch, SketchState};
 use crate::tensor::{ComputeBackend, Matrix};
 use crate::util::channel::{bounded, Sender};
@@ -352,6 +355,20 @@ fn scorer_admission_error(name: &str, need: usize, budget: &ByteBudget) -> Strin
         budget.used(),
         budget.cap()
     )
+}
+
+/// Observer of session lifecycle events the push-subscription layer cares
+/// about. Installed once via [`SessionRegistry::set_watcher`]; callbacks
+/// run on the mutating request's thread *after* the mutation committed and
+/// outside all registry locks, so implementations may take their own locks
+/// but must stay cheap (the subscription hub just flips a dirty bit and
+/// signals its notifier thread).
+pub trait RegistryWatcher: Send + Sync {
+    /// A committed mutation (Freeze / Score / finalizing TopK) may have
+    /// changed `session`'s selection.
+    fn selection_dirty(&self, session: &str);
+    /// The session was closed; subscriptions on it are now dangling.
+    fn session_closed(&self, session: &str);
 }
 
 /// One served sketch session.
@@ -851,6 +868,95 @@ impl Session {
         Ok(select_weighted(method, &inputs, k))
     }
 
+    /// Non-mutating selection preview for push subscriptions: what would
+    /// TopK return *right now*? Exports the Phase-II state bit-exactly
+    /// under the lock (scorer/scores round-trips are rank-preserving by
+    /// construction — see `AgreementScorer::export_state`), then rebuilds,
+    /// merges in shard order, finalizes, and selects entirely outside the
+    /// lock, so a large preview never stalls ingest or scoring. The final
+    /// preview after the last Score batch is therefore byte-identical to
+    /// the finalize-based TopK and to offline `run_selection`.
+    ///
+    /// Returns `(selected indices, watermark)` where the watermark is the
+    /// minimum consensus-agreement α over the selection (NaN when empty).
+    /// `None` when no preview exists yet: unfrozen, nothing scored, a
+    /// GLISTER subscription, or state currently spilled to disk (a spilled
+    /// idle session must not be pulled back just to diff a preview — the
+    /// next mutation unspills it anyway and re-marks the subscription
+    /// dirty).
+    pub fn preview_selection(
+        &self,
+        method: Method,
+        k: usize,
+        num_classes: usize,
+        seed: u64,
+    ) -> Option<(Vec<u64>, f64)> {
+        if method == Method::Glister || self.frozen.lock().unwrap().is_none() {
+            return None;
+        }
+        enum Snap {
+            Finalized(ScoresState),
+            Raw(Vec<ScorerState>),
+        }
+        let snap = {
+            let p = self.phase2.lock().unwrap();
+            if p.spilled.is_some() {
+                return None;
+            }
+            if let Some(scores) = &p.scores {
+                Snap::Finalized(scores.export_state())
+            } else {
+                let states: Vec<ScorerState> =
+                    p.scorers.iter().flatten().map(|s| s.export_state()).collect();
+                if states.iter().map(|s| s.count).sum::<u64>() == 0 {
+                    return None;
+                }
+                Snap::Raw(states)
+            }
+        };
+        let scores = match snap {
+            Snap::Finalized(state) => Scores::from_state(&state).ok()?,
+            Snap::Raw(states) => {
+                // Shard-order merge — the same fold `top_k` performs.
+                let mut acc: Option<AgreementScorer> = None;
+                for state in &states {
+                    let scorer = AgreementScorer::from_state(state).ok()?;
+                    acc = Some(match acc {
+                        None => scorer,
+                        Some(mut merged) => {
+                            merged.merge(scorer);
+                            merged
+                        }
+                    });
+                }
+                acc?.finalize_with(self.compute.as_ref())
+            }
+        };
+        let inputs = SelectionInputs {
+            scores: &scores,
+            val_consensus: None,
+            num_classes,
+            seed,
+            compute: self.compute.as_ref(),
+        };
+        let (indices, _) = select_weighted(method, &inputs, k);
+        let alpha_of: std::collections::HashMap<usize, f32> = scores
+            .entries
+            .iter()
+            .map(|e: &ScoreEntry| (e.index, e.alpha))
+            .collect();
+        let mut watermark = f64::INFINITY;
+        for i in &indices {
+            if let Some(&a) = alpha_of.get(i) {
+                watermark = watermark.min(a as f64);
+            }
+        }
+        if !watermark.is_finite() {
+            watermark = f64::NAN;
+        }
+        Some((indices.iter().map(|&i| i as u64).collect(), watermark))
+    }
+
     /// Counter snapshot for the `Stats` wire op.
     pub fn stats_pairs(&self) -> Vec<(String, u64)> {
         let p = format!("service.session.{}", self.name);
@@ -1210,6 +1316,10 @@ pub struct SessionRegistry {
     /// the whole of replay) mutating ops skip logging entirely, so replay
     /// can drive the normal code paths without re-appending records.
     wal: OnceLock<Arc<Wal>>,
+    /// Push-subscription observer (see [`RegistryWatcher`]), set once by
+    /// the serving layer. Unset for offline/test registries — callbacks
+    /// then cost one relaxed load.
+    watcher: OnceLock<Arc<dyn RegistryWatcher>>,
 }
 
 impl SessionRegistry {
@@ -1232,6 +1342,19 @@ impl SessionRegistry {
             clock: AtomicU64::new(1),
             compute,
             wal: OnceLock::new(),
+            watcher: OnceLock::new(),
+        }
+    }
+
+    /// Install the push-subscription observer. One-shot: later calls are
+    /// ignored (the serving layer owns the single hub for this registry).
+    pub fn set_watcher(&self, watcher: Arc<dyn RegistryWatcher>) {
+        let _ = self.watcher.set(watcher);
+    }
+
+    fn notify_dirty(&self, name: &str) {
+        if let Some(w) = self.watcher.get() {
+            w.selection_dirty(name);
         }
     }
 
@@ -1406,6 +1529,23 @@ impl SessionRegistry {
         Ok(session)
     }
 
+    /// [`Session::preview_selection`] by name — the subscription hub's
+    /// entry point. `None` for unknown sessions and un-previewable state.
+    /// Touches the activity clock, so actively-subscribed sessions stay
+    /// late in the spill LRU order.
+    pub fn preview_selection(
+        &self,
+        name: &str,
+        method: Method,
+        k: usize,
+        num_classes: usize,
+        seed: u64,
+    ) -> Option<(Vec<u64>, f64)> {
+        self.get(name)
+            .ok()?
+            .preview_selection(method, k, num_classes, seed)
+    }
+
     /// Remove a session. Its admission reservations (slot, sketch bytes,
     /// scorer bytes) are released when the last `Arc` reference — in-flight
     /// requests included — goes away, via `Session::drop`, which also joins
@@ -1476,6 +1616,9 @@ impl SessionRegistry {
                 drop(session);
                 self.publish_shard_gauges(idx);
                 metrics().counter("service.registry.sessions_closed").inc();
+                if let Some(w) = self.watcher.get() {
+                    w.session_closed(name);
+                }
                 Ok(())
             }
             // Lost a race with a concurrent close of the same session: it
@@ -1539,19 +1682,25 @@ impl SessionRegistry {
     pub fn freeze(&self, name: &str) -> Result<FrozenSketch, String> {
         let session = self.get(name)?;
         let Some(wal) = self.wal_handle() else {
-            return session.freeze();
+            let info = session.freeze()?;
+            self.notify_dirty(name);
+            return Ok(info);
         };
-        let _gate = session.wal_gate.lock().unwrap();
-        let was_frozen = session.is_frozen();
-        let info = session.freeze()?;
-        if !was_frozen {
-            let payload = Request::Freeze {
-                session: name.to_string(),
+        let info = {
+            let _gate = session.wal_gate.lock().unwrap();
+            let was_frozen = session.is_frozen();
+            let info = session.freeze()?;
+            if !was_frozen {
+                let payload = Request::Freeze {
+                    session: name.to_string(),
+                }
+                .encode();
+                let seq = wal.append(self.shard_index(name), op::FREEZE, &payload)?;
+                session.note_wal_seq(seq);
             }
-            .encode();
-            let seq = wal.append(self.shard_index(name), op::FREEZE, &payload)?;
-            session.note_wal_seq(seq);
-        }
+            info
+        };
+        self.notify_dirty(name);
         Ok(info)
     }
 
@@ -1602,6 +1751,9 @@ impl SessionRegistry {
                 }
                 other => {
                     self.maybe_compact();
+                    if other.is_ok() {
+                        self.notify_dirty(name);
+                    }
                     return other;
                 }
             }
@@ -1667,6 +1819,9 @@ impl SessionRegistry {
                 }
                 other => {
                     self.maybe_compact();
+                    if other.is_ok() {
+                        self.notify_dirty(name);
+                    }
                     return other;
                 }
             }

@@ -1,46 +1,131 @@
-//! `sage-serve` TCP server: thread-per-connection on `util::threadpool`,
-//! speaking the length-prefixed `service::protocol` frames against the
-//! shared [`SessionRegistry`].
+//! `sage-serve` TCP server with two interchangeable I/O engines:
 //!
-//! Backpressure composes end-to-end: a full per-session ingest queue blocks
-//! the connection thread in `Session::ingest`, which stops reading from the
-//! socket, which fills the kernel TCP window, which blocks the producer.
-//! When the connection pool itself is saturated or shut down, the acceptor
-//! never blocks: `ThreadPool::try_execute` fails fast and the new
-//! connection is rejected with an error frame, keeping accept (and
-//! shutdown) responsive no matter the load.
+//! - `--io threads` — thread-per-connection on `util::threadpool`,
+//!   blocking reads/writes. Portable; concurrency is capped by the pool.
+//! - `--io epoll` — the readiness-driven reactor in `service::reactor`:
+//!   one event-loop thread multiplexes every connection over raw epoll
+//!   (`util::sys`), registry dispatch runs on a compute pool, and
+//!   concurrent connections are bounded by memory, not threads.
+//!
+//! `--io auto` (the default) picks epoll where the kernel supports it and
+//! falls back to threads elsewhere. Both engines speak the identical wire
+//! protocol against the shared [`SessionRegistry`] and produce
+//! byte-identical responses; the integration suite runs under both.
+//!
+//! Backpressure composes end-to-end in both engines. Threaded: a full
+//! per-session ingest queue blocks the connection thread in
+//! `Session::ingest`, which stops reading from the socket, which fills the
+//! kernel TCP window, which blocks the producer. Reactor: the bounded
+//! per-connection outbox throttles reads past its high watermark to the
+//! same effect (see `service::reactor`).
 //!
 //! Connection shedding is part of the wire contract (documented in
-//! docs/PROTOCOL.md §"Connection rejection and retry"): a shed connection
-//! receives exactly one error frame — opcode 0, status 1, message prefixed
-//! `connection rejected` — and is then closed. Clients retry with
-//! exponential backoff (`client::ServiceClient::request_with_retry`); the
+//! docs/PROTOCOL.md §"Connection rejection and retry"): when the threaded
+//! engine's pool is saturated, a shed connection receives exactly one
+//! error frame — opcode 0, status 1, message prefixed `connection
+//! rejected` — and is then closed. Clients retry with exponential backoff
+//! (`client::ServiceClient::request_with_retry`); the
 //! `service.server.rejected_connections` counter makes shedding observable
-//! through the Stats op.
+//! through the Stats op. The reactor does not shed at accept — load shows
+//! up as queueing in `sage.reactor.dispatch.ns` instead.
+//!
+//! Push subscriptions (Subscribe/Unsubscribe, `service::subs`) work under
+//! both engines: the reactor interleaves TopKDelta frames through each
+//! connection's outbox; the threaded engine drains a per-connection push
+//! queue between requests and on idle ticks. On shutdown, subscribers
+//! receive a final GoingAway error frame before the socket closes.
 
 use super::metrics_http;
 use super::protocol::{
     op, read_frame_event, write_frame, write_frame_traced, ReadEvent, Request, Response,
 };
+use super::reactor::{self, ReactorConfig};
 use super::registry::{RegistryConfig, SessionRegistry};
+use super::subs::{PushOutcome, PushSink, SubscriptionHub};
 use crate::config::Method;
 use crate::util::metrics::global as metrics;
 use crate::util::metrics::Histogram;
+use crate::util::sys::{self, EventFd};
 use crate::util::threadpool::ThreadPool;
 use crate::util::trace;
+use std::collections::VecDeque;
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Which I/O engine drives the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    /// Epoll where supported (Linux), threads elsewhere.
+    Auto,
+    /// Thread-per-connection (portable fallback).
+    Threads,
+    /// Readiness-driven reactor (requires Linux epoll).
+    Epoll,
+}
+
+impl IoMode {
+    pub fn parse(s: &str) -> Result<IoMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(IoMode::Auto),
+            "threads" => Ok(IoMode::Threads),
+            "epoll" => Ok(IoMode::Epoll),
+            other => Err(format!(
+                "unknown io mode '{other}' (expected auto, threads, or epoll)"
+            )),
+        }
+    }
+
+    /// Engine selection from the `SAGE_SERVE_IO` environment variable
+    /// (`auto` when unset or unparseable). This backs
+    /// `ServerConfig::default()`, so in-process servers — integration
+    /// tests in particular — honor the CI io-matrix without plumbing;
+    /// the explicit `sage serve --io` flag still wins.
+    pub fn from_env() -> IoMode {
+        match std::env::var("SAGE_SERVE_IO") {
+            Ok(s) => IoMode::parse(&s).unwrap_or(IoMode::Auto),
+            Err(_) => IoMode::Auto,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IoMode::Auto => "auto",
+            IoMode::Threads => "threads",
+            IoMode::Epoll => "epoll",
+        }
+    }
+
+    /// Collapse `Auto` onto a concrete engine for this host.
+    fn resolved(self) -> IoMode {
+        match self {
+            IoMode::Auto => {
+                if sys::epoll_supported() {
+                    IoMode::Epoll
+                } else {
+                    IoMode::Threads
+                }
+            }
+            concrete => concrete,
+        }
+    }
+}
 
 /// Server knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Bind address; port 0 picks a free port (see [`Server::local_addr`]).
     pub addr: String,
-    /// Connection-handler threads (thread-per-connection, pooled).
+    /// Thread budget. Threaded engine: connection-handler threads
+    /// (thread-per-connection, pooled). Reactor: one event-loop thread
+    /// plus `threads - 1` dispatch workers — the same total, so the two
+    /// engines are comparable at equal `--threads`.
     pub threads: usize,
+    /// I/O engine selection (see [`IoMode`]).
+    pub io: IoMode,
     /// Kernel-backend workers for the compute hot paths (FD shrink,
     /// finalize matvec, selection rules): ≤ 1 runs the serial reference,
     /// otherwise a shared `tensor::ParallelBackend` pool of this size —
@@ -49,7 +134,9 @@ pub struct ServerConfig {
     /// never perturbs the served ≡ offline exactness guarantee.
     pub compute_workers: usize,
     /// Bind address for the Prometheus `/metrics` + `/healthz` HTTP
-    /// endpoint (`None` = no exposition endpoint).
+    /// endpoint (`None` = no exposition endpoint). Under the reactor this
+    /// listener is multiplexed on the event loop; the threaded engine
+    /// runs a dedicated acceptor thread.
     pub metrics_addr: Option<String>,
     /// Requests whose registry dispatch takes at least this many
     /// milliseconds get a WARN log line carrying the op name and trace ID
@@ -63,6 +150,7 @@ impl Default for ServerConfig {
         Self {
             addr: "127.0.0.1:7009".to_string(),
             threads: 16,
+            io: IoMode::from_env(),
             compute_workers: 1,
             metrics_addr: None,
             slow_op_ms: 0,
@@ -76,14 +164,23 @@ pub struct Server {
     listener: TcpListener,
     metrics_listener: Option<TcpListener>,
     registry: Arc<SessionRegistry>,
+    hub: Arc<SubscriptionHub>,
     threads: usize,
+    io: IoMode,
     slow_op_ms: u64,
+    /// Shutdown wake-up for engines that poll readiness (`None` when the
+    /// platform has no eventfd — shutdown falls back to a self-connect).
+    wake: Option<Arc<EventFd>>,
 }
 
 impl Server {
     /// Bind the listener, build the registry, and recover any checkpointed
     /// sessions from the configured directory.
     pub fn bind(cfg: &ServerConfig) -> Result<Server, String> {
+        let io = cfg.io.resolved();
+        if io == IoMode::Epoll && !sys::epoll_supported() {
+            return Err("io mode 'epoll' requires Linux; use --io threads".to_string());
+        }
         let listener =
             TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
         let metrics_listener = match &cfg.metrics_addr {
@@ -111,12 +208,19 @@ impl Server {
                 cfg.registry.durability.name()
             );
         }
+        // The subscription hub watches the registry for selection changes
+        // in every mode; it only does work once something subscribes.
+        let hub = SubscriptionHub::new(&registry);
+        let wake = EventFd::new().ok().map(Arc::new);
         Ok(Server {
             listener,
             metrics_listener,
             registry,
+            hub,
             threads: cfg.threads.max(1),
+            io,
             slow_op_ms: cfg.slow_op_ms,
+            wake,
         })
     }
 
@@ -134,55 +238,124 @@ impl Server {
         self.registry.clone()
     }
 
-    /// Accept loop. Blocks the calling thread until `stop` flips (a wake-up
-    /// connection is enough to re-check it) or the listener dies. Open
-    /// connections poll `stop` between frames, so dropping the pool on exit
-    /// cannot deadlock on an idle client.
+    /// The concrete engine this server will run (`Auto` already resolved).
+    pub fn io_mode(&self) -> IoMode {
+        self.io
+    }
+
+    /// Serve until `stop` flips (the engines differ in how they notice:
+    /// the reactor via its wake eventfd, the threaded accept loop via an
+    /// eventfd-assisted epoll where available or a wake-up connection
+    /// otherwise). Blocks the calling thread.
     pub fn run(self, stop: Arc<AtomicBool>) -> Result<(), String> {
-        let pool = ThreadPool::new(self.threads);
-        crate::log_info!(
-            "sage-serve listening on {} ({} connection threads)",
-            self.local_addr(),
-            self.threads
+        match self.io {
+            IoMode::Epoll => self.run_reactor(stop),
+            _ => self.run_threads(stop),
+        }
+    }
+
+    fn run_reactor(self, stop: Arc<AtomicBool>) -> Result<(), String> {
+        let wake = self
+            .wake
+            .clone()
+            .ok_or_else(|| "io mode 'epoll' needs an eventfd (unsupported here)".to_string())?;
+        let hub = self.hub.clone();
+        let result = reactor::run(
+            ReactorConfig {
+                listener: self.listener,
+                metrics_listener: self.metrics_listener,
+                registry: self.registry,
+                hub: hub.clone(),
+                wake,
+                threads: self.threads,
+                slow_op_ms: self.slow_op_ms,
+            },
+            stop,
         );
-        let metrics_join = self.metrics_listener.map(|listener| {
-            if let Ok(addr) = listener.local_addr() {
+        hub.shutdown();
+        result
+    }
+
+    fn run_threads(self, stop: Arc<AtomicBool>) -> Result<(), String> {
+        let Server {
+            listener,
+            metrics_listener,
+            registry,
+            hub,
+            threads,
+            slow_op_ms,
+            wake,
+            ..
+        } = self;
+        let pool = ThreadPool::new(threads);
+        if let Ok(addr) = listener.local_addr() {
+            crate::log_info!("sage-serve listening on {addr} ({threads} connection threads)");
+        }
+        let metrics_join = metrics_listener.map(|l| {
+            if let Ok(addr) = l.local_addr() {
                 crate::log_info!("metrics exposition on http://{addr}/metrics");
             }
-            metrics_http::spawn(listener, stop.clone())
+            metrics_http::spawn(l, stop.clone())
         });
-        let slow_op_ms = self.slow_op_ms;
-        for incoming in self.listener.incoming() {
-            if stop.load(Ordering::Relaxed) {
-                break;
-            }
-            let stream = match incoming {
-                Ok(s) => s,
-                Err(e) => {
-                    crate::log_warn!("accept failed: {e}");
-                    continue;
+
+        // Prefer an eventfd-assisted nonblocking accept loop (Linux):
+        // shutdown is then a single eventfd write instead of a throwaway
+        // self-connect. Elsewhere, block in accept and rely on the wake-up
+        // connection from `ServerHandle`.
+        let epoll_accept = wake.as_deref().and_then(|w| epoll_for_accept(&listener, w));
+        match epoll_accept {
+            Some(ep) => {
+                let mut events = vec![sys::Event::zeroed(); 64];
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Err(e) = ep.wait(&mut events, 500) {
+                        crate::log_warn!("accept epoll_wait: {e}");
+                        break;
+                    }
+                    if let Some(w) = &wake {
+                        w.drain();
+                    }
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    loop {
+                        match listener.accept() {
+                            Ok((stream, _)) => spawn_conn(
+                                &pool, stream, &registry, &hub, &stop, slow_op_ms,
+                            ),
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                            Err(e) => {
+                                crate::log_warn!("accept failed: {e}");
+                                break;
+                            }
+                        }
+                    }
                 }
-            };
-            metrics().counter("service.server.connections").inc();
-            let registry = self.registry.clone();
-            let conn_stop = stop.clone();
-            let reject_stream = stream.try_clone().ok();
-            let submitted =
-                pool.try_execute(move || handle_connection(stream, registry, conn_stop, slow_op_ms));
-            if let Err(reason) = submitted {
-                // Graceful rejection: tell the peer and keep the acceptor
-                // alive and non-blocking. The operator sees the
-                // rejected-connection counter climb.
-                metrics().counter("service.server.rejected_connections").inc();
-                crate::log_warn!("connection rejected: {reason}");
-                if let Some(mut s) = reject_stream {
-                    let resp = Response::Error {
-                        message: format!("connection rejected: {reason}"),
-                    };
-                    let _ = write_frame(&mut s, 0, resp.status(), &resp.encode());
+            }
+            None => {
+                for incoming in listener.incoming() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match incoming {
+                        Ok(stream) => {
+                            spawn_conn(&pool, stream, &registry, &hub, &stop, slow_op_ms)
+                        }
+                        Err(e) => {
+                            crate::log_warn!("accept failed: {e}");
+                        }
+                    }
                 }
             }
         }
+        // Subscribers get their GoingAway frame before connection threads
+        // exit: frames land in the per-connection push queues here and the
+        // final drain in `handle_connection` writes them out. (Idempotent
+        // with `ServerHandle::stop_and_join`, which broadcasts first.)
+        hub.going_away();
+        hub.shutdown();
         if let Some(join) = metrics_join {
             let _ = join.join();
         }
@@ -195,6 +368,8 @@ impl Server {
         let addr = self.local_addr();
         let metrics_addr = self.metrics_addr();
         let registry = self.registry();
+        let hub = self.hub.clone();
+        let wake = self.wake.clone();
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let join = std::thread::spawn(move || {
@@ -206,8 +381,59 @@ impl Server {
             addr,
             metrics_addr,
             registry,
+            hub,
+            wake,
             stop,
             join: Some(join),
+        }
+    }
+}
+
+/// Build the threaded engine's accept epoll (nonblocking listener + wake
+/// eventfd) where the platform supports it.
+#[cfg(target_os = "linux")]
+fn epoll_for_accept(listener: &TcpListener, wake: &EventFd) -> Option<sys::Epoll> {
+    use std::os::unix::io::AsRawFd;
+    let ep = sys::Epoll::new().ok()?;
+    listener.set_nonblocking(true).ok()?;
+    ep.add(listener.as_raw_fd(), 0, sys::EPOLLIN).ok()?;
+    ep.add(wake.as_raw_fd(), 1, sys::EPOLLIN).ok()?;
+    Some(ep)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn epoll_for_accept(_listener: &TcpListener, _wake: &EventFd) -> Option<sys::Epoll> {
+    None
+}
+
+/// Accept-side handoff to the connection pool, with the graceful-rejection
+/// error frame when the pool is saturated or shut down.
+fn spawn_conn(
+    pool: &ThreadPool,
+    stream: TcpStream,
+    registry: &Arc<SessionRegistry>,
+    hub: &Arc<SubscriptionHub>,
+    stop: &Arc<AtomicBool>,
+    slow_op_ms: u64,
+) {
+    metrics().counter("service.server.connections").inc();
+    let registry = registry.clone();
+    let hub = hub.clone();
+    let conn_stop = stop.clone();
+    let reject_stream = stream.try_clone().ok();
+    let submitted =
+        pool.try_execute(move || handle_connection(stream, registry, hub, conn_stop, slow_op_ms));
+    if let Err(reason) = submitted {
+        // Graceful rejection: tell the peer and keep the acceptor
+        // alive and non-blocking. The operator sees the
+        // rejected-connection counter climb.
+        metrics().counter("service.server.rejected_connections").inc();
+        crate::log_warn!("connection rejected: {reason}");
+        if let Some(mut s) = reject_stream {
+            let resp = Response::Error {
+                message: format!("connection rejected: {reason}"),
+            };
+            let _ = write_frame(&mut s, 0, resp.status(), &resp.encode());
         }
     }
 }
@@ -217,6 +443,8 @@ pub struct ServerHandle {
     addr: SocketAddr,
     metrics_addr: Option<SocketAddr>,
     registry: Arc<SessionRegistry>,
+    hub: Arc<SubscriptionHub>,
+    wake: Option<Arc<EventFd>>,
     stop: Arc<AtomicBool>,
     join: Option<JoinHandle<()>>,
 }
@@ -235,8 +463,14 @@ impl ServerHandle {
         self.registry.clone()
     }
 
-    /// Stop accepting, wake the accept loop, and join the acceptor thread.
-    /// In-flight connections finish their current request on pool threads.
+    /// Live subscriptions across all connections (observability/tests).
+    pub fn subscription_count(&self) -> usize {
+        self.hub.subscription_count()
+    }
+
+    /// Stop accepting, wake the engine, and join the server thread.
+    /// In-flight requests finish; subscribers receive a final GoingAway
+    /// frame before their connections close.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
@@ -245,9 +479,15 @@ impl ServerHandle {
         if self.join.is_none() {
             return;
         }
+        // Broadcast GoingAway *before* flipping stop so connections still
+        // in their serve loops deliver it on their final drain.
+        self.hub.going_away();
         self.stop.store(true, Ordering::Relaxed);
-        // Wake the blocking accepts with throwaway connections (the metrics
-        // acceptor runs its own loop on the same stop flag).
+        if let Some(w) = &self.wake {
+            w.wake();
+        }
+        // Self-connect covers engines without an eventfd, and is harmless
+        // otherwise (the accept paths re-check stop before handling).
         let _ = TcpStream::connect(self.addr);
         if let Some(m) = self.metrics_addr {
             let _ = TcpStream::connect(m);
@@ -267,16 +507,17 @@ impl Drop for ServerHandle {
 /// Per-op server latency histograms, interned once (the op set is fixed,
 /// so the name set is bounded). `decode`/`handle`/`encode`/`write` split
 /// one request's wall clock into its four server-side stages; `per_op` is
-/// the handle stage broken out by opcode.
-struct ServerHists {
-    decode: &'static Histogram,
-    handle: &'static Histogram,
-    encode: &'static Histogram,
-    write: &'static Histogram,
-    per_op: Vec<&'static Histogram>,
+/// the handle stage broken out by opcode. Shared with the reactor so both
+/// engines report identical series.
+pub(crate) struct ServerHists {
+    pub(crate) decode: &'static Histogram,
+    pub(crate) handle: &'static Histogram,
+    pub(crate) encode: &'static Histogram,
+    pub(crate) write: &'static Histogram,
+    pub(crate) per_op: Vec<&'static Histogram>,
 }
 
-fn server_hists() -> &'static ServerHists {
+pub(crate) fn server_hists() -> &'static ServerHists {
     static HISTS: OnceLock<ServerHists> = OnceLock::new();
     HISTS.get_or_init(|| {
         let reg = metrics();
@@ -285,7 +526,7 @@ fn server_hists() -> &'static ServerHists {
             handle: reg.histogram("service.server.handle.ns"),
             encode: reg.histogram("service.server.encode.ns"),
             write: reg.histogram("service.server.write.ns"),
-            per_op: (0..=op::TRACE_EXPORT)
+            per_op: (0..=op::UNSUBSCRIBE)
                 .map(|code| {
                     reg.histogram(&format!("service.server.op.{}.ns", op::name(code)))
                 })
@@ -294,21 +535,94 @@ fn server_hists() -> &'static ServerHists {
     })
 }
 
+/// Monotone connection IDs for the threaded engine's subscription
+/// identity. Disjoint from nothing in particular — each server's hub only
+/// ever sees IDs from the one engine driving it.
+static NEXT_CONN_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Queued push frames under this many bytes are accepted; past it the
+/// sink reports Busy and the hub coalesces (mirrors the reactor's sink
+/// budget, scaled to the threaded drain cadence).
+const PUSH_QUEUE_BYTES: usize = 256 << 10;
+
+/// The threaded engine's [`PushSink`]: a bounded queue of encoded frames
+/// drained by the connection thread between requests, on idle ticks, and
+/// once after its serve loop exits (so a shutdown GoingAway still lands).
+struct ThreadPusher {
+    queue: Mutex<VecDeque<Vec<u8>>>,
+    bytes: AtomicUsize,
+    gone: AtomicBool,
+}
+
+impl ThreadPusher {
+    fn new() -> ThreadPusher {
+        ThreadPusher {
+            queue: Mutex::new(VecDeque::new()),
+            bytes: AtomicUsize::new(0),
+            gone: AtomicBool::new(false),
+        }
+    }
+
+    fn take_all(&self) -> Vec<Vec<u8>> {
+        let mut q = self.queue.lock().unwrap();
+        let drained: Vec<Vec<u8>> = q.drain(..).collect();
+        let bytes: usize = drained.iter().map(|f| f.len()).sum();
+        drop(q);
+        self.bytes.fetch_sub(bytes, Ordering::Relaxed);
+        drained
+    }
+}
+
+impl PushSink for ThreadPusher {
+    fn try_push(&self, frame: Vec<u8>) -> PushOutcome {
+        if self.gone.load(Ordering::Acquire) {
+            return PushOutcome::Gone;
+        }
+        if self.bytes.load(Ordering::Relaxed) > PUSH_QUEUE_BYTES {
+            return PushOutcome::Busy;
+        }
+        self.bytes.fetch_add(frame.len(), Ordering::Relaxed);
+        self.queue.lock().unwrap().push_back(frame);
+        PushOutcome::Sent
+    }
+}
+
+/// Write every queued push frame to the socket. `false` means the peer is
+/// gone (the caller breaks its serve loop).
+fn drain_pusher(stream: &mut TcpStream, pusher: &Option<Arc<ThreadPusher>>) -> bool {
+    let Some(p) = pusher else { return true };
+    for frame in p.take_all() {
+        if stream.write_all(&frame).is_err() {
+            p.gone.store(true, Ordering::Release);
+            return false;
+        }
+    }
+    true
+}
+
 /// One connection: request/response frames until EOF, a framing error, or
 /// server shutdown (polled between frames via the socket read timeout).
+/// Subscribe/Unsubscribe are intercepted here (they bind to *this*
+/// connection's push queue); everything else goes through [`dispatch`].
 fn handle_connection(
     mut stream: TcpStream,
     registry: Arc<SessionRegistry>,
+    hub: Arc<SubscriptionHub>,
     stop: Arc<AtomicBool>,
     slow_op_ms: u64,
 ) {
+    let _ = stream.set_nonblocking(false); // accepted from a nonblocking listener
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "?".to_string());
+    let conn_id = NEXT_CONN_ID.fetch_add(1, Ordering::Relaxed);
+    let gauge = metrics().gauge("sage.server.connections");
+    gauge.add(1);
     let hists = server_hists();
+    let mut pusher: Option<Arc<ThreadPusher>> = None;
     loop {
         if stop.load(Ordering::Relaxed) {
             break;
@@ -316,7 +630,13 @@ fn handle_connection(
         let frame = match read_frame_event(&mut stream) {
             Ok(ReadEvent::Frame(f)) => f,
             Ok(ReadEvent::Eof) => break, // clean close between requests
-            Ok(ReadEvent::Idle) => continue, // timeout between frames: poll stop
+            Ok(ReadEvent::Idle) => {
+                // Timeout between frames: poll stop, deliver pushes.
+                if !drain_pusher(&mut stream, &pusher) {
+                    break;
+                }
+                continue;
+            }
             Err(e) => {
                 crate::log_debug!("connection {peer}: {e}");
                 break;
@@ -339,6 +659,35 @@ fn handle_connection(
 
         let t = Instant::now();
         let response = match decoded {
+            Ok(Request::Subscribe {
+                session,
+                method,
+                k,
+                num_classes,
+                seed,
+            }) => {
+                let _s = trace::span("serve.handle");
+                let sink = pusher
+                    .get_or_insert_with(|| Arc::new(ThreadPusher::new()))
+                    .clone();
+                match hub.subscribe(
+                    conn_id,
+                    sink,
+                    &session,
+                    &method,
+                    k as usize,
+                    num_classes as usize,
+                    seed,
+                ) {
+                    Ok(()) => Response::Ok,
+                    Err(message) => Response::Error { message },
+                }
+            }
+            Ok(Request::Unsubscribe { session }) => {
+                let _s = trace::span("serve.handle");
+                hub.unsubscribe(conn_id, &session);
+                Response::Ok
+            }
             Ok(request) => {
                 let _s = trace::span("serve.handle");
                 dispatch(&registry, request)
@@ -382,10 +731,26 @@ fn handle_connection(
         if written.is_err() {
             break; // peer went away mid-response
         }
+        // Push frames ride between responses, never inside one.
+        if !drain_pusher(&mut stream, &pusher) {
+            break;
+        }
     }
+    // Final drain: a shutdown broadcast enqueues GoingAway before `stop`
+    // flips, so it is sitting in the queue by the time the loop exits.
+    let _ = drain_pusher(&mut stream, &pusher);
+    if let Some(p) = &pusher {
+        p.gone.store(true, Ordering::Release);
+    }
+    hub.drop_conn(conn_id);
+    gauge.sub(1);
 }
 
 /// Apply one request to the registry.
+///
+/// Subscribe/Unsubscribe never reach the registry — both engines bind
+/// them to connection state before dispatch — so here they only answer
+/// with an error (e.g. a frame replayed against a raw dispatch harness).
 pub fn dispatch(registry: &SessionRegistry, request: Request) -> Response {
     let _s = trace::span(registry_span_name(&request));
     let result = match request {
@@ -460,6 +825,9 @@ pub fn dispatch(registry: &SessionRegistry, request: Request) -> Response {
         Request::TraceExport => Ok(Response::Trace {
             spans: trace::collect(),
         }),
+        Request::Subscribe { .. } | Request::Unsubscribe { .. } => {
+            Err("subscription ops require a push-capable connection".to_string())
+        }
     };
     match result {
         Ok(resp) => resp,
@@ -482,5 +850,7 @@ fn registry_span_name(request: &Request) -> &'static str {
         Request::CloseSession { .. } => "registry.close",
         Request::MetricsSnapshot { .. } => "registry.metrics_snapshot",
         Request::TraceExport => "registry.trace_export",
+        Request::Subscribe { .. } => "registry.subscribe",
+        Request::Unsubscribe { .. } => "registry.unsubscribe",
     }
 }

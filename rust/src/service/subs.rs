@@ -1,0 +1,659 @@
+//! Push-subscription hub: turns registry mutations into coalesced
+//! `TopKDelta` push frames, independently of which I/O engine (threaded or
+//! reactor) owns the sockets.
+//!
+//! Data flow:
+//!
+//! ```text
+//! Freeze/Score/TopK wrapper ──▶ RegistryWatcher::selection_dirty
+//!        (request thread)            │  flips the sub's dirty bit
+//!                                    ▼
+//!                            notifier thread ──▶ Session::preview_selection
+//!                              (one per hub)       (bit-exact snapshot,
+//!                                    │              finalized off-lock)
+//!                                    ▼
+//!                         diff vs. last delivered ──▶ PushSink::try_push
+//! ```
+//!
+//! Coalescing contract: a subscription has at most ONE pending delta at
+//! any time. Deltas are cumulative from the last *delivered* selection to
+//! the current one, so when a slow subscriber's write queue is full
+//! ([`PushOutcome::Busy`]) the hub simply leaves the dirty bit set and
+//! retries later — the retried delta is recomputed fresh and spans every
+//! change since the last successful push. Epochs advance only on
+//! successful enqueue; a subscriber can observe epoch gaps in *time* but
+//! never in sequence (epochs it receives are consecutive), and the ordered
+//! reconstruction (`protocol::apply_topk_delta`) is exact at every epoch.
+
+use super::protocol::{apply_topk_delta, encode_frame, op, Response};
+use super::registry::{RegistryWatcher, SessionRegistry};
+use crate::config::Method;
+use crate::util::metrics::global as metrics;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Result of offering one encoded frame to a subscriber's write path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Enqueued (or written) — the delta is considered delivered.
+    Sent,
+    /// The connection's bounded write queue is over its watermark; the hub
+    /// keeps the subscription dirty and retries after a drain or timeout.
+    Busy,
+    /// The connection is gone; the hub drops the subscription.
+    Gone,
+}
+
+/// A connection's push channel. Implementations must be nonblocking: the
+/// notifier thread calls this for every dirty subscription and must never
+/// stall behind one slow peer.
+pub trait PushSink: Send + Sync {
+    fn try_push(&self, frame: Vec<u8>) -> PushOutcome;
+}
+
+/// The message GoingAway frames carry (docs/PROTOCOL.md §5). Prefix-matched
+/// by `client::is_going_away`, mirroring the `connection rejected` contract.
+pub const GOING_AWAY: &str = "going away";
+
+/// Build the GoingAway error frame broadcast to subscribers on shutdown:
+/// opcode 0, status 1 — the same unsolicited-error shape as connection
+/// rejection, so pre-subscription clients already parse it.
+pub fn going_away_frame() -> Vec<u8> {
+    let resp = Response::Error {
+        message: format!("{GOING_AWAY}: server shutting down"),
+    };
+    encode_frame(0, resp.status(), &resp.encode())
+}
+
+struct Subscription {
+    conn: u64,
+    session: String,
+    method: Method,
+    k: usize,
+    num_classes: usize,
+    seed: u64,
+    sink: Arc<dyn PushSink>,
+    /// Last delta sequence number successfully enqueued (0 = none yet).
+    epoch: u64,
+    /// The selection as of `epoch` — the client's reconstructed state.
+    last: Vec<u64>,
+    /// A mutation happened since the last successful push attempt.
+    dirty: bool,
+}
+
+#[derive(Default)]
+struct HubState {
+    subs: Vec<Subscription>,
+}
+
+/// Shared core of the hub; also the [`RegistryWatcher`] installed into the
+/// registry (which holds it for the registry's lifetime — the core keeps
+/// only a `Weak` registry reference back, so there is no cycle).
+pub struct HubCore {
+    registry: Weak<SessionRegistry>,
+    state: Mutex<HubState>,
+    wake: Condvar,
+    stop: AtomicBool,
+}
+
+impl RegistryWatcher for HubCore {
+    fn selection_dirty(&self, session: &str) {
+        let mut st = self.state.lock().unwrap();
+        let mut hit = false;
+        for sub in st.subs.iter_mut() {
+            if sub.session == session {
+                sub.dirty = true;
+                hit = true;
+            }
+        }
+        drop(st);
+        if hit {
+            self.wake.notify_all();
+        }
+    }
+
+    fn session_closed(&self, session: &str) {
+        let mut st = self.state.lock().unwrap();
+        let before = st.subs.len();
+        st.subs.retain(|s| s.session != session);
+        let dropped = before - st.subs.len();
+        drop(st);
+        if dropped > 0 {
+            metrics()
+                .gauge("sage.server.subscriptions")
+                .sub(dropped as u64);
+        }
+    }
+}
+
+/// How long the notifier sleeps with nothing dirty. Also the retry cadence
+/// for Busy subscribers whose connection never reports a drain.
+const IDLE_TICK: Duration = Duration::from_millis(25);
+
+/// Owner handle: spawns the notifier thread on construction, joins it on
+/// [`SubscriptionHub::shutdown`] (or drop).
+pub struct SubscriptionHub {
+    core: Arc<HubCore>,
+    notifier: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl SubscriptionHub {
+    /// Create the hub for `registry` and install it as the registry's
+    /// watcher. One hub per registry.
+    pub fn new(registry: &Arc<SessionRegistry>) -> Arc<SubscriptionHub> {
+        let core = Arc::new(HubCore {
+            registry: Arc::downgrade(registry),
+            state: Mutex::new(HubState::default()),
+            wake: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        registry.set_watcher(core.clone());
+        let worker = core.clone();
+        let notifier = std::thread::Builder::new()
+            .name("sage-subs".into())
+            .spawn(move || notifier_loop(worker))
+            .expect("spawn subscription notifier");
+        Arc::new(SubscriptionHub {
+            core,
+            notifier: Mutex::new(Some(notifier)),
+        })
+    }
+
+    /// Register (or re-register) a subscription. Validates the session and
+    /// method eagerly so the client's Subscribe response carries the error.
+    /// Re-subscribing the same (connection, session) replaces the selection
+    /// parameters and restarts the delta stream from epoch 1.
+    pub fn subscribe(
+        &self,
+        conn: u64,
+        sink: Arc<dyn PushSink>,
+        session: &str,
+        method: &str,
+        k: usize,
+        num_classes: usize,
+        seed: u64,
+    ) -> Result<(), String> {
+        let method = Method::parse(method)?;
+        if method == Method::Glister {
+            return Err("GLISTER needs a validation split; unsupported by the service".into());
+        }
+        let registry = self
+            .core
+            .registry
+            .upgrade()
+            .ok_or_else(|| "server shutting down".to_string())?;
+        registry.get(session)?; // unknown sessions fail the Subscribe itself
+        let mut st = self.core.state.lock().unwrap();
+        let replaced = st
+            .subs
+            .iter()
+            .position(|s| s.conn == conn && s.session == session);
+        let sub = Subscription {
+            conn,
+            session: session.to_string(),
+            method,
+            k,
+            num_classes,
+            seed,
+            sink,
+            epoch: 0,
+            last: Vec::new(),
+            // Dirty from birth: if the session already has a selection the
+            // subscriber gets its baseline snapshot delta immediately.
+            dirty: true,
+        };
+        match replaced {
+            Some(i) => st.subs[i] = sub,
+            None => {
+                st.subs.push(sub);
+                metrics().gauge("sage.server.subscriptions").add(1);
+            }
+        }
+        drop(st);
+        self.core.wake.notify_all();
+        Ok(())
+    }
+
+    /// Remove one subscription. Ok even if it does not exist (unsubscribe
+    /// races a close); returns whether one was removed.
+    pub fn unsubscribe(&self, conn: u64, session: &str) -> bool {
+        let mut st = self.core.state.lock().unwrap();
+        let before = st.subs.len();
+        st.subs.retain(|s| !(s.conn == conn && s.session == session));
+        let removed = before != st.subs.len();
+        drop(st);
+        if removed {
+            metrics().gauge("sage.server.subscriptions").sub(1);
+        }
+        removed
+    }
+
+    /// Drop every subscription owned by a connection (connection closed).
+    pub fn drop_conn(&self, conn: u64) {
+        let mut st = self.core.state.lock().unwrap();
+        let before = st.subs.len();
+        st.subs.retain(|s| s.conn != conn);
+        let dropped = before - st.subs.len();
+        drop(st);
+        if dropped > 0 {
+            metrics()
+                .gauge("sage.server.subscriptions")
+                .sub(dropped as u64);
+        }
+    }
+
+    /// A connection's write queue drained below its low watermark: retry
+    /// any Busy subscriptions now instead of waiting out the idle tick.
+    pub fn kick(&self) {
+        self.core.wake.notify_all();
+    }
+
+    /// Live subscription count (tests / bench).
+    pub fn subscription_count(&self) -> usize {
+        self.core.state.lock().unwrap().subs.len()
+    }
+
+    /// Broadcast the GoingAway frame to every subscriber's sink (best
+    /// effort — Busy or Gone sinks are skipped) and drop all
+    /// subscriptions. Called by both server modes at shutdown, before
+    /// connections close.
+    pub fn going_away(&self) {
+        let frame = going_away_frame();
+        let subs = {
+            let mut st = self.core.state.lock().unwrap();
+            std::mem::take(&mut st.subs)
+        };
+        if !subs.is_empty() {
+            metrics()
+                .gauge("sage.server.subscriptions")
+                .sub(subs.len() as u64);
+        }
+        // One frame per *connection*, not per subscription — a client with
+        // several sessions subscribed gets a single GoingAway.
+        let mut seen = HashSet::new();
+        for sub in subs {
+            if seen.insert(sub.conn) {
+                let _ = sub.sink.try_push(frame.clone());
+            }
+        }
+    }
+
+    /// Stop the notifier thread and join it.
+    pub fn shutdown(&self) {
+        self.core.stop.store(true, Ordering::Relaxed);
+        self.core.wake.notify_all();
+        if let Some(join) = self.notifier.lock().unwrap().take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for SubscriptionHub {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One claimed unit of notifier work: recompute this subscription's
+/// preview and push the delta.
+struct WorkItem {
+    conn: u64,
+    session: String,
+    method: Method,
+    k: usize,
+    num_classes: usize,
+    seed: u64,
+    sink: Arc<dyn PushSink>,
+    epoch: u64,
+    last: Vec<u64>,
+}
+
+fn notifier_loop(core: Arc<HubCore>) {
+    loop {
+        // Claim dirty subscriptions (clearing their bits — a mutation
+        // racing the preview sets them again, forcing a recompute).
+        let work: Vec<WorkItem> = {
+            let mut st = core.state.lock().unwrap();
+            loop {
+                if core.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                if st.subs.iter().any(|s| s.dirty) {
+                    break;
+                }
+                let (guard, _) = core.wake.wait_timeout(st, IDLE_TICK).unwrap();
+                st = guard;
+                if core.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            st.subs
+                .iter_mut()
+                .filter(|s| s.dirty)
+                .map(|s| {
+                    s.dirty = false;
+                    WorkItem {
+                        conn: s.conn,
+                        session: s.session.clone(),
+                        method: s.method,
+                        k: s.k,
+                        num_classes: s.num_classes,
+                        seed: s.seed,
+                        sink: s.sink.clone(),
+                        epoch: s.epoch,
+                        last: s.last.clone(),
+                    }
+                })
+                .collect()
+        };
+        let Some(registry) = core.registry.upgrade() else {
+            return;
+        };
+        for item in work {
+            // Preview outside the hub lock: kernels may run here, and
+            // Subscribe/Unsubscribe must never wait on them.
+            let Some((cur, watermark)) =
+                registry.preview_selection(&item.session, item.method, item.k, item.num_classes, item.seed)
+            else {
+                // Unknown session (closed mid-flight — session_closed has
+                // or will drop the sub) or nothing previewable yet; either
+                // way there is nothing to push and the next mutation
+                // re-marks the subscription dirty.
+                continue;
+            };
+            if cur == item.last {
+                continue; // mutation did not move the selection
+            }
+            let (added, evicted) = diff_selection(&item.last, &cur);
+            let resp = Response::TopKDelta {
+                session: item.session.clone(),
+                epoch: item.epoch + 1,
+                added,
+                evicted,
+                watermark,
+            };
+            // Push frames ride the Subscribe opcode with ok status; clients
+            // demux on the payload kind tag (protocol docs §3.14).
+            let frame = encode_frame(op::SUBSCRIBE, 0, &resp.encode());
+            let outcome = item.sink.try_push(frame);
+            let mut st = core.state.lock().unwrap();
+            let Some(sub) = st
+                .subs
+                .iter_mut()
+                .find(|s| s.conn == item.conn && s.session == item.session)
+            else {
+                continue; // unsubscribed while we computed
+            };
+            // A re-subscribe may have reset the stream while we worked;
+            // only commit against the epoch we computed from.
+            if sub.epoch != item.epoch {
+                continue;
+            }
+            match outcome {
+                PushOutcome::Sent => {
+                    sub.epoch += 1;
+                    sub.last = cur;
+                    metrics().counter("service.subs.deltas_sent").inc();
+                }
+                PushOutcome::Busy => {
+                    // Coalesce: stay dirty, retry after a drain kick or the
+                    // idle tick. The eventual delta covers this change too.
+                    sub.dirty = true;
+                    metrics().counter("service.subs.deltas_coalesced").inc();
+                }
+                PushOutcome::Gone => {
+                    let conn = sub.conn;
+                    st.subs.retain(|s| s.conn != conn);
+                    drop(st);
+                    metrics().gauge("sage.server.subscriptions").sub(1);
+                    continue;
+                }
+            }
+        }
+    }
+}
+
+/// Diff two selections into (added, evicted) such that the ordered
+/// reconstruction (`apply_topk_delta`) is exact. When the retained prefix
+/// reordered (possible for rules whose order is score-dependent), fall
+/// back to a full snapshot delta — evict everything, add the new list —
+/// which is always exact.
+fn diff_selection(last: &[u64], cur: &[u64]) -> (Vec<u64>, Vec<u64>) {
+    let last_set: HashSet<u64> = last.iter().copied().collect();
+    let cur_set: HashSet<u64> = cur.iter().copied().collect();
+    let added: Vec<u64> = cur.iter().copied().filter(|i| !last_set.contains(i)).collect();
+    let evicted: Vec<u64> = last.iter().copied().filter(|i| !cur_set.contains(i)).collect();
+    let mut recon = last.to_vec();
+    let valid = apply_topk_delta(&mut recon, &added, &evicted).is_ok();
+    if valid && recon == cur {
+        (added, evicted)
+    } else {
+        (cur.to_vec(), last.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::protocol::FrameDecoder;
+    use crate::service::registry::RegistryConfig;
+    use crate::tensor::Matrix;
+    use std::sync::Mutex as StdMutex;
+
+    /// Sink that records every pushed frame; can be switched to Busy/Gone.
+    struct RecordingSink {
+        frames: StdMutex<Vec<Vec<u8>>>,
+        mode: StdMutex<PushOutcome>,
+    }
+
+    impl RecordingSink {
+        fn new() -> Arc<RecordingSink> {
+            Arc::new(RecordingSink {
+                frames: StdMutex::new(Vec::new()),
+                mode: StdMutex::new(PushOutcome::Sent),
+            })
+        }
+        fn set_mode(&self, mode: PushOutcome) {
+            *self.mode.lock().unwrap() = mode;
+        }
+        fn deltas(&self) -> Vec<Response> {
+            self.frames
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|bytes| {
+                    let mut dec = FrameDecoder::new();
+                    dec.extend(bytes);
+                    let frame = dec.next_frame().unwrap().unwrap();
+                    Response::decode(&frame.payload).unwrap()
+                })
+                .collect()
+        }
+    }
+
+    impl PushSink for RecordingSink {
+        fn try_push(&self, frame: Vec<u8>) -> PushOutcome {
+            let mode = *self.mode.lock().unwrap();
+            if mode == PushOutcome::Sent {
+                self.frames.lock().unwrap().push(frame);
+            }
+            mode
+        }
+    }
+
+    fn scored_registry() -> Arc<SessionRegistry> {
+        let registry = Arc::new(SessionRegistry::new(RegistryConfig::default()));
+        registry.create("s", 4, 8, 1).unwrap();
+        registry
+            .ingest("s", 0, Matrix::from_fn(6, 8, |r, c| ((r * 13 + c * 7) % 5) as f32 - 2.0))
+            .unwrap();
+        registry.freeze("s").unwrap();
+        registry
+    }
+
+    fn score_one(registry: &SessionRegistry, start: u64, n: usize) {
+        let batch = crate::service::protocol::ScoreBatch {
+            indices: (start..start + n as u64).collect(),
+            labels: (0..n as u32).map(|i| i % 3).collect(),
+            norms: (0..n).map(|i| 1.0 + i as f32 * 0.25).collect(),
+            losses: (0..n).map(|i| 0.5 + i as f32 * 0.125).collect(),
+            zhat: Matrix::from_fn(n, 4, |r, c| {
+                let v = ((r * 5 + c * 3 + start as usize) % 7) as f32 - 3.0;
+                v / 4.0
+            }),
+        };
+        registry.score("s", 0, &batch).unwrap();
+    }
+
+    fn wait_for<F: Fn() -> bool>(what: &str, cond: F) {
+        for _ in 0..400 {
+            if cond() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("timed out waiting for {what}");
+    }
+
+    #[test]
+    fn deltas_reconstruct_to_the_served_selection() {
+        let registry = scored_registry();
+        let hub = SubscriptionHub::new(&registry);
+        let sink = RecordingSink::new();
+        hub.subscribe(1, sink.clone(), "s", "sage", 4, 3, 0).unwrap();
+
+        score_one(&registry, 0, 6);
+        wait_for("first delta", || !sink.deltas().is_empty());
+        score_one(&registry, 6, 6);
+        score_one(&registry, 12, 6);
+        let (offline, _) = registry.top_k("s", Method::Sage, 4, 3, 0).unwrap();
+        let expect: Vec<u64> = offline.iter().map(|&i| i as u64).collect();
+        wait_for("converged reconstruction", || {
+            let mut recon: Vec<u64> = Vec::new();
+            for d in sink.deltas() {
+                if let Response::TopKDelta { added, evicted, .. } = d {
+                    apply_topk_delta(&mut recon, &added, &evicted).unwrap();
+                }
+            }
+            recon == expect
+        });
+        // Epochs delivered are consecutive starting at 1.
+        let epochs: Vec<u64> = sink
+            .deltas()
+            .iter()
+            .filter_map(|d| match d {
+                Response::TopKDelta { epoch, .. } => Some(*epoch),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(epochs, (1..=epochs.len() as u64).collect::<Vec<_>>());
+        hub.shutdown();
+    }
+
+    #[test]
+    fn busy_sink_coalesces_and_recovers() {
+        let registry = scored_registry();
+        let hub = SubscriptionHub::new(&registry);
+        let sink = RecordingSink::new();
+        sink.set_mode(PushOutcome::Busy);
+        hub.subscribe(1, sink.clone(), "s", "sage", 3, 3, 0).unwrap();
+
+        score_one(&registry, 0, 5);
+        score_one(&registry, 5, 5);
+        score_one(&registry, 10, 5);
+        // Busy the whole time: nothing delivered, subscription survives.
+        std::thread::sleep(Duration::from_millis(120));
+        assert!(sink.deltas().is_empty());
+        assert_eq!(hub.subscription_count(), 1);
+
+        sink.set_mode(PushOutcome::Sent);
+        hub.kick();
+        wait_for("coalesced catch-up delta", || !sink.deltas().is_empty());
+        // The catch-up must reconstruct to the full current selection in
+        // ONE delta (epoch 1 — nothing was delivered while busy).
+        let deltas = sink.deltas();
+        let Response::TopKDelta { epoch, added, evicted, .. } = &deltas[0] else {
+            panic!("expected TopKDelta");
+        };
+        assert_eq!(*epoch, 1);
+        assert!(evicted.is_empty());
+        let (offline, _) = registry.top_k("s", Method::Sage, 3, 3, 0).unwrap();
+        let expect: Vec<u64> = offline.iter().map(|&i| i as u64).collect();
+        assert_eq!(added, &expect);
+        hub.shutdown();
+    }
+
+    #[test]
+    fn gone_sink_and_close_drop_subscriptions() {
+        let registry = scored_registry();
+        let hub = SubscriptionHub::new(&registry);
+        let sink = RecordingSink::new();
+        sink.set_mode(PushOutcome::Gone);
+        hub.subscribe(1, sink.clone(), "s", "sage", 3, 3, 0).unwrap();
+        score_one(&registry, 0, 5);
+        wait_for("gone sink dropped", || hub.subscription_count() == 0);
+
+        let sink2 = RecordingSink::new();
+        hub.subscribe(2, sink2, "s", "sage", 3, 3, 0).unwrap();
+        assert_eq!(hub.subscription_count(), 1);
+        registry.close("s").unwrap();
+        assert_eq!(hub.subscription_count(), 0);
+        hub.shutdown();
+    }
+
+    #[test]
+    fn subscribe_validates_session_and_method() {
+        let registry = scored_registry();
+        let hub = SubscriptionHub::new(&registry);
+        let sink = RecordingSink::new();
+        assert!(hub
+            .subscribe(1, sink.clone(), "nope", "sage", 3, 3, 0)
+            .unwrap_err()
+            .contains("unknown session"));
+        assert!(hub
+            .subscribe(1, sink.clone(), "s", "glister", 3, 3, 0)
+            .is_err());
+        assert!(hub.subscribe(1, sink, "s", "not-a-method", 3, 3, 0).is_err());
+        assert_eq!(hub.subscription_count(), 0);
+        hub.shutdown();
+    }
+
+    #[test]
+    fn going_away_broadcasts_once_per_connection() {
+        let registry = scored_registry();
+        let hub = SubscriptionHub::new(&registry);
+        registry.create("s2", 4, 8, 1).unwrap();
+        let sink = RecordingSink::new();
+        hub.subscribe(1, sink.clone(), "s", "sage", 3, 3, 0).unwrap();
+        hub.subscribe(1, sink.clone(), "s2", "sage", 3, 3, 0).unwrap();
+        hub.going_away();
+        assert_eq!(hub.subscription_count(), 0);
+        let frames = sink.frames.lock().unwrap();
+        assert_eq!(frames.len(), 1, "one GoingAway per connection");
+        let mut dec = FrameDecoder::new();
+        dec.extend(&frames[0]);
+        let frame = dec.next_frame().unwrap().unwrap();
+        assert_eq!(frame.opcode, 0);
+        assert_eq!(frame.status, 1);
+        match Response::decode(&frame.payload).unwrap() {
+            Response::Error { message } => assert!(message.starts_with(GOING_AWAY)),
+            other => panic!("expected Error frame, got {other:?}"),
+        }
+        hub.shutdown();
+    }
+
+    #[test]
+    fn diff_falls_back_to_snapshot_on_reorder() {
+        // Same membership, different order: member-diff is empty, so the
+        // snapshot fallback must engage to keep reconstruction exact.
+        let (added, evicted) = diff_selection(&[1, 2, 3], &[3, 2, 1]);
+        assert_eq!(added, vec![3, 2, 1]);
+        assert_eq!(evicted, vec![1, 2, 3]);
+        let mut recon = vec![1, 2, 3];
+        apply_topk_delta(&mut recon, &added, &evicted).unwrap();
+        assert_eq!(recon, vec![3, 2, 1]);
+    }
+}

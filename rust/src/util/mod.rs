@@ -9,5 +9,6 @@ pub mod json;
 pub mod log;
 pub mod metrics;
 pub mod rng;
+pub mod sys;
 pub mod threadpool;
 pub mod trace;

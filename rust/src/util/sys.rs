@@ -1,0 +1,398 @@
+//! Zero-dependency Linux readiness primitives: `epoll` and `eventfd`.
+//!
+//! The crate has no external dependencies, so the reactor cannot lean on
+//! mio or tokio. Instead this module declares the four syscalls the event
+//! loop needs (`epoll_create1`, `epoll_ctl`, `epoll_wait`, `eventfd`)
+//! plus `fcntl` for `O_NONBLOCK`, straight against the system libc that
+//! `std` already links. Everything is gated on `target_os = "linux"`;
+//! other platforms get a stub whose [`epoll_supported`] returns `false`
+//! so callers fall back to the portable threaded server.
+//!
+//! Safety model: every wrapper owns its fd (`close` on `Drop`), all raw
+//! pointers passed across the FFI boundary come from stack or `Vec`
+//! storage that outlives the call, and interest registration is keyed by
+//! a caller-chosen `u64` token rather than a pointer (so no lifetime
+//! escapes into the kernel).
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use std::io;
+    use std::os::unix::io::{AsRawFd, RawFd};
+
+    // Values from the Linux UAPI headers (asm-generic); stable ABI.
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0x80000;
+    const EFD_CLOEXEC: i32 = 0x80000;
+    const EFD_NONBLOCK: i32 = 0x800;
+    const F_GETFL: i32 = 3;
+    const F_SETFL: i32 = 4;
+    const O_NONBLOCK: i32 = 0x800;
+    const EINTR: i32 = 4;
+
+    /// Mirror of the kernel's `struct epoll_event`. On x86 the kernel
+    /// declares it packed; elsewhere it uses natural alignment.
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct Event {
+        events: u32,
+        data: u64,
+    }
+
+    impl Event {
+        pub fn zeroed() -> Self {
+            Event { events: 0, data: 0 }
+        }
+        /// Readiness bits reported by the kernel.
+        pub fn events(&self) -> u32 {
+            // Copy out of the (possibly packed) struct before use.
+            let e = self.events;
+            e
+        }
+        /// The token supplied at registration time.
+        pub fn token(&self) -> u64 {
+            let d = self.data;
+            d
+        }
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut Event) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut Event, maxevents: i32, timeout_ms: i32) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+        fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn close(fd: i32) -> i32;
+    }
+
+    fn cvt(ret: i32) -> io::Result<i32> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    /// Put any fd into nonblocking mode (sockets, listeners, eventfds).
+    pub fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+        unsafe {
+            let flags = cvt(fcntl(fd, F_GETFL, 0))?;
+            cvt(fcntl(fd, F_SETFL, flags | O_NONBLOCK))?;
+        }
+        Ok(())
+    }
+
+    /// An owned `eventfd(2)` used to wake `epoll_wait` from other threads.
+    ///
+    /// Writes are async-signal-safe and never block (`EFD_NONBLOCK`): the
+    /// counter saturates rather than queueing, which is exactly the
+    /// "at-least-one wakeup" semantic a reactor wake channel needs.
+    pub struct EventFd {
+        fd: RawFd,
+    }
+
+    impl EventFd {
+        pub fn new() -> io::Result<EventFd> {
+            let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+            Ok(EventFd { fd })
+        }
+
+        /// Wake any thread blocked in `epoll_wait` watching this fd.
+        /// Safe to call from any thread, any number of times.
+        pub fn wake(&self) {
+            let one: u64 = 1;
+            // EAGAIN means the counter is already nonzero — the wakeup is
+            // pending, so losing this write is fine.
+            let _ = unsafe { write(self.fd, &one as *const u64 as *const u8, 8) };
+        }
+
+        /// Consume pending wakeups so level-triggered epoll stops
+        /// reporting the fd readable. Returns how many `wake` calls were
+        /// coalesced (0 if none were pending).
+        pub fn drain(&self) -> u64 {
+            let mut buf: u64 = 0;
+            let n = unsafe { read(self.fd, &mut buf as *mut u64 as *mut u8, 8) };
+            if n == 8 {
+                buf
+            } else {
+                0
+            }
+        }
+    }
+
+    impl AsRawFd for EventFd {
+        fn as_raw_fd(&self) -> RawFd {
+            self.fd
+        }
+    }
+
+    impl Drop for EventFd {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.fd);
+            }
+        }
+    }
+
+    /// An owned epoll instance (level-triggered; the reactor re-arms
+    /// interest explicitly, which keeps the state machine auditable).
+    pub struct Epoll {
+        fd: RawFd,
+    }
+
+    impl Epoll {
+        pub fn new() -> io::Result<Epoll> {
+            let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(Epoll { fd })
+        }
+
+        /// Register `fd` with the given interest mask and token.
+        pub fn add(&self, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, events)
+        }
+
+        /// Change the interest mask for an already-registered fd.
+        pub fn modify(&self, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, events)
+        }
+
+        /// Remove `fd` from the interest list.
+        pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+            // Pre-2.6.9 kernels demanded a non-null event for DEL; pass
+            // one unconditionally — it costs nothing.
+            let mut ev = Event::zeroed();
+            cvt(unsafe { epoll_ctl(self.fd, EPOLL_CTL_DEL, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+            let mut ev = Event { events, data: token };
+            cvt(unsafe { epoll_ctl(self.fd, op, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        /// Block for up to `timeout_ms` (-1 = forever) and fill `events`.
+        /// Returns the number of ready entries; EINTR retries internally.
+        pub fn wait(&self, events: &mut [Event], timeout_ms: i32) -> io::Result<usize> {
+            loop {
+                let n = unsafe {
+                    epoll_wait(
+                        self.fd,
+                        events.as_mut_ptr(),
+                        events.len() as i32,
+                        timeout_ms,
+                    )
+                };
+                if n >= 0 {
+                    return Ok(n as usize);
+                }
+                let err = io::Error::last_os_error();
+                if err.raw_os_error() == Some(EINTR) {
+                    continue;
+                }
+                return Err(err);
+            }
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.fd);
+            }
+        }
+    }
+
+    /// Whether the readiness-driven reactor can run on this host.
+    pub fn epoll_supported() -> bool {
+        true
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use linux::*;
+
+/// Non-Linux stub: the reactor is unavailable; `sage serve --io auto`
+/// falls back to the threaded server.
+#[cfg(not(target_os = "linux"))]
+mod fallback {
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    #[derive(Clone, Copy)]
+    pub struct Event;
+
+    impl Event {
+        pub fn zeroed() -> Self {
+            Event
+        }
+        pub fn events(&self) -> u32 {
+            0
+        }
+        pub fn token(&self) -> u64 {
+            0
+        }
+    }
+
+    fn unsupported() -> io::Error {
+        io::Error::new(io::ErrorKind::Unsupported, "epoll is Linux-only")
+    }
+
+    pub fn set_nonblocking(_fd: RawFd) -> io::Result<()> {
+        Err(unsupported())
+    }
+
+    pub struct EventFd;
+
+    impl EventFd {
+        pub fn new() -> io::Result<EventFd> {
+            Err(unsupported())
+        }
+        pub fn wake(&self) {}
+        pub fn drain(&self) -> u64 {
+            0
+        }
+    }
+
+    pub struct Epoll;
+
+    impl Epoll {
+        pub fn new() -> io::Result<Epoll> {
+            Err(unsupported())
+        }
+        pub fn add(&self, _fd: RawFd, _token: u64, _events: u32) -> io::Result<()> {
+            Err(unsupported())
+        }
+        pub fn modify(&self, _fd: RawFd, _token: u64, _events: u32) -> io::Result<()> {
+            Err(unsupported())
+        }
+        pub fn delete(&self, _fd: RawFd) -> io::Result<()> {
+            Err(unsupported())
+        }
+        pub fn wait(&self, _events: &mut [Event], _timeout_ms: i32) -> io::Result<usize> {
+            Err(unsupported())
+        }
+    }
+
+    pub fn epoll_supported() -> bool {
+        false
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub use fallback::*;
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn eventfd_wakes_epoll_and_drains() {
+        let ep = Epoll::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.as_raw_fd(), 7, EPOLLIN).unwrap();
+
+        let mut events = vec![Event::zeroed(); 8];
+        // Nothing pending: a zero-timeout wait reports no readiness.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+
+        ev.wake();
+        ev.wake(); // coalesces with the first
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token(), 7);
+        assert!(events[0].events() & EPOLLIN != 0);
+        assert_eq!(ev.drain(), 2);
+        // Drained: level-triggered readiness clears.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        assert_eq!(ev.drain(), 0);
+    }
+
+    #[test]
+    fn wake_from_another_thread_unblocks_wait() {
+        let ep = Epoll::new().unwrap();
+        let ev = std::sync::Arc::new(EventFd::new().unwrap());
+        ep.add(ev.as_raw_fd(), 1, EPOLLIN).unwrap();
+        let ev2 = ev.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            ev2.wake();
+        });
+        let mut events = vec![Event::zeroed(); 4];
+        let n = ep.wait(&mut events, 5000).unwrap();
+        assert_eq!(n, 1);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn socket_readiness_and_interest_rewrites() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let ep = Epoll::new().unwrap();
+        ep.add(listener.as_raw_fd(), 10, EPOLLIN).unwrap();
+
+        let mut events = vec![Event::zeroed(); 8];
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        let n = ep.wait(&mut events, 5000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token(), 10);
+
+        let (mut server_side, _) = listener.accept().unwrap();
+        set_nonblocking(server_side.as_raw_fd()).unwrap();
+        ep.add(server_side.as_raw_fd(), 11, EPOLLIN | EPOLLRDHUP)
+            .unwrap();
+        client.write_all(b"ping").unwrap();
+        // Wait until the connection token reports readable.
+        let mut saw = false;
+        for _ in 0..100 {
+            let n = ep.wait(&mut events, 100).unwrap();
+            if events[..n].iter().any(|e| e.token() == 11) {
+                saw = true;
+                break;
+            }
+        }
+        assert!(saw, "connection never became readable");
+        let mut buf = [0u8; 16];
+        assert_eq!(server_side.read(&mut buf).unwrap(), 4);
+
+        // MOD to write interest, then DEL; both must succeed.
+        ep.modify(server_side.as_raw_fd(), 11, EPOLLOUT).unwrap();
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert!(events[..n].iter().any(|e| e.token() == 11));
+        ep.delete(server_side.as_raw_fd()).unwrap();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn nonblocking_read_returns_would_block() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let (mut server_side, _) = listener.accept().unwrap();
+        set_nonblocking(server_side.as_raw_fd()).unwrap();
+        let mut buf = [0u8; 4];
+        let err = server_side.read(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+    }
+}

@@ -10,6 +10,7 @@
 //! code block of whitespace-separated hex bytes for one complete frame.
 
 use sage::service::protocol::{encode_frame_traced, read_frame, Request, Response};
+use sage::service::{apply_topk_delta, is_going_away};
 
 struct DocFrame {
     kind: String,
@@ -61,20 +62,29 @@ fn every_documented_example_frame_round_trips_byte_for_byte() {
     let doc = std::fs::read_to_string(path)
         .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
     let frames = parse_doc_frames(&doc);
-    // All eleven request ops (plus the traced-frame example from §7) and
-    // all nine response kinds are documented.
+    // All thirteen request ops (plus the traced-frame example from §7) and
+    // all ten response kinds (TopKDelta twice, plus the unsolicited
+    // GoingAway error) are documented.
     assert!(
-        frames.len() >= 21,
-        "expected ≥21 documented example frames, found {}",
+        frames.len() >= 26,
+        "expected ≥26 documented example frames, found {}",
         frames.len()
     );
     let requests = frames.iter().filter(|f| f.kind == "request").count();
     let responses = frames.iter().filter(|f| f.kind == "response").count();
-    assert!(requests >= 12, "expected ≥12 request examples, found {requests}");
-    assert!(responses >= 9, "expected ≥9 response examples, found {responses}");
+    assert!(requests >= 14, "expected ≥14 request examples, found {requests}");
+    assert!(responses >= 12, "expected ≥12 response examples, found {responses}");
     assert!(
         frames.iter().any(|f| f.label.contains("traced")),
         "expected a traced-frame example (PROTOCOL.md §7)"
+    );
+    assert!(
+        frames.iter().any(|f| f.label.contains("TopKDelta")),
+        "expected a TopKDelta push example (PROTOCOL.md §3.14)"
+    );
+    assert!(
+        frames.iter().any(|f| f.label.contains("GoingAway")),
+        "expected a GoingAway example (PROTOCOL.md §3.14)"
     );
 
     for frame in &frames {
@@ -121,4 +131,49 @@ fn every_documented_example_frame_round_trips_byte_for_byte() {
             frame.label
         );
     }
+}
+
+/// The §3.14 examples are not just valid frames — the documented
+/// reconstruction contract must actually hold across them, and the
+/// GoingAway example must classify as such.
+#[test]
+fn documented_push_frames_honor_their_semantics() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/PROTOCOL.md");
+    let doc = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
+    let frames = parse_doc_frames(&doc);
+
+    let mut selection: Vec<u64> = Vec::new();
+    let mut deltas_applied = 0;
+    for frame in frames.iter().filter(|f| f.label.contains("TopKDelta")) {
+        let decoded = read_frame(&mut &frame.bytes[..]).unwrap().unwrap();
+        assert!(
+            Response::is_topk_delta(&decoded.payload),
+            "'{}' fails the push-frame demux rule",
+            frame.label
+        );
+        let Response::TopKDelta { epoch, added, evicted, .. } =
+            Response::decode(&decoded.payload).unwrap()
+        else {
+            panic!("'{}' is not a TopKDelta", frame.label);
+        };
+        assert_eq!(epoch, deltas_applied + 1, "doc deltas are consecutive");
+        apply_topk_delta(&mut selection, &added, &evicted)
+            .unwrap_or_else(|e| panic!("'{}' violates the apply rule: {e}", frame.label));
+        deltas_applied += 1;
+    }
+    assert_eq!(deltas_applied, 2, "expected the two documented deltas");
+    // [] -> [0,1] -> [1,2], exactly as the §6.2 prose claims.
+    assert_eq!(selection, vec![1, 2]);
+
+    let going_away = frames
+        .iter()
+        .find(|f| f.label.contains("GoingAway"))
+        .expect("GoingAway example");
+    let decoded = read_frame(&mut &going_away.bytes[..]).unwrap().unwrap();
+    assert_eq!((decoded.opcode, decoded.status), (0, 1));
+    let Response::Error { message } = Response::decode(&decoded.payload).unwrap() else {
+        panic!("GoingAway example is not an Error frame");
+    };
+    assert!(is_going_away(&message), "'{message}' must classify as going-away");
 }

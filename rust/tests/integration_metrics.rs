@@ -324,3 +324,135 @@ fn concurrent_score_topk_pressure_spills_unspills_and_stays_bit_exact() {
     handle.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// The reactor engine and the push-subscription hub must surface their
+/// health signals: connection/subscription gauges, event-loop wait and
+/// dispatch latency histograms, per-connection write-queue depth, and
+/// delta-flow counters — over the MetricsSnapshot op AND the Prometheus
+/// scrape (docs/OBSERVABILITY.md §Reactor).
+#[test]
+fn reactor_and_subscription_metrics_are_exposed() {
+    if !sage::util::sys::epoll_supported() {
+        // The sage.reactor.* series only exist under --io epoll.
+        return;
+    }
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 4,
+        io: sage::service::IoMode::Epoll,
+        compute_workers: 1,
+        metrics_addr: Some("127.0.0.1:0".into()),
+        registry: RegistryConfig::default(),
+        ..ServerConfig::default()
+    })
+    .expect("bind reactor server");
+    let addr = server.local_addr().to_string();
+    let metrics_addr = server.metrics_addr().expect("metrics endpoint bound");
+    let handle = server.spawn();
+
+    // Metrics are process-global across this binary's tests: counters are
+    // asserted as deltas, gauges as live values no other test here touches
+    // (nothing else subscribes).
+    let mut client = ServiceClient::connect(&addr).unwrap();
+    let counter = |pairs: &[(String, u64)], name: &str| {
+        pairs.iter().find(|(n, _)| n == name).map_or(0, |(_, v)| *v)
+    };
+    let (counters0, _, _) = client.metrics_snapshot("service.subs.").unwrap();
+    let sent0 = counter(&counters0, "service.subs.deltas_sent");
+
+    client.create_session("rxm", 4, 8, 1).unwrap();
+    client
+        .ingest(
+            "rxm",
+            0,
+            &Matrix::from_fn(6, 8, |r, c| ((r * 13 + c * 7) % 5) as f32 - 2.0),
+        )
+        .unwrap();
+    client.freeze("rxm").unwrap();
+    client.subscribe("rxm", "sage", 4, 2, 0).unwrap();
+
+    // One Score marks the selection dirty; the pushed delta proves the
+    // subscription flow end to end (and populates deltas_sent).
+    let (indices, labels, zhat, norms, losses) = score_block_data(6, 4, 0);
+    client
+        .score(
+            "rxm",
+            0,
+            &ScoreBlock {
+                indices: &indices,
+                labels: &labels,
+                zhat: &zhat,
+                norms: &norms,
+                losses: &losses,
+            },
+        )
+        .unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        assert!(std::time::Instant::now() < deadline, "no delta pushed");
+        match client
+            .poll_delta(std::time::Duration::from_millis(100))
+            .unwrap()
+        {
+            Some(event) => {
+                assert_eq!(event.session, "rxm");
+                break;
+            }
+            None => continue,
+        }
+    }
+
+    let (counters, gauges, hists) = client.metrics_snapshot("").unwrap();
+    let gauge = |name: &str| {
+        gauges
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("missing gauge {name}: {gauges:?}"))
+    };
+    assert!(gauge("sage.server.connections") >= 1, "we are connected");
+    let subs_during = gauge("sage.server.subscriptions");
+    assert!(subs_during >= 1, "our subscription is live");
+    assert!(
+        counter(&counters, "service.subs.deltas_sent") > sent0,
+        "the delivered delta must be counted"
+    );
+    for name in [
+        "sage.reactor.wait.ns",
+        "sage.reactor.dispatch.ns",
+        "sage.reactor.write_queue.depth",
+    ] {
+        let stats = hists
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or_else(|| panic!("missing reactor histogram {name}"));
+        assert!(stats.count > 0, "{name} never recorded");
+        assert!(stats.p50 <= stats.p99 && stats.p99 <= stats.max, "{name}");
+    }
+
+    // The same series reach Prometheus, sanitized.
+    let scrape = http_get(&metrics_addr, "/metrics");
+    for series in [
+        "sage_server_connections",
+        "sage_server_subscriptions",
+        "sage_reactor_wait_ns_count",
+        "sage_reactor_dispatch_ns_count",
+        "sage_reactor_write_queue_depth_count",
+        "service_subs_deltas_sent",
+    ] {
+        assert!(scrape.contains(series), "scrape missing {series}");
+    }
+
+    // Unsubscribing releases exactly our gauge increment.
+    client.unsubscribe("rxm").unwrap();
+    let (_, gauges_after, _) = client.metrics_snapshot("sage.server.").unwrap();
+    let subs_after = gauges_after
+        .iter()
+        .find(|(n, _)| n == "sage.server.subscriptions")
+        .map(|(_, v)| *v)
+        .expect("subscriptions gauge");
+    assert_eq!(subs_after, subs_during - 1);
+
+    handle.shutdown();
+}

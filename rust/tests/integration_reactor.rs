@@ -1,0 +1,306 @@
+//! Integration: the I/O engine matrix and push TopK subscriptions.
+//!
+//! Every test here runs under BOTH `--io` modes (threads always; epoll
+//! where the host supports it), asserting the engines are observationally
+//! identical:
+//!
+//! * the headline exactness contract — a subscribed client receives
+//!   unsolicited TopKDelta frames (no polling requests issued) whose
+//!   delta-reconstructed selection is byte-identical to the offline
+//!   `pipeline::run_selection`;
+//! * the slow-reader torture — a subscriber that stops reading while four
+//!   producers churn its session neither stalls the server nor perturbs
+//!   other sessions, and its eventual reconstruction is still exact
+//!   (deterministic Busy-sink coalescing itself is unit-covered in
+//!   `service::subs`);
+//! * GoingAway — shutdown delivers a final classifiable error frame to
+//!   subscribers before the socket closes.
+
+use sage::config::Method;
+use sage::data::{generate, BenchmarkKind};
+use sage::grad::{MlpSpec, TrainHyper};
+use sage::pipeline::{
+    phase1_gradient_stream, phase2_score_stream, run_selection, shard_ranges, PipelineConfig,
+    ScoreBlock,
+};
+use sage::runtime::{ModelBackend, ReferenceModelBackend};
+use sage::service::{
+    apply_topk_delta, is_going_away, IoMode, RegistryConfig, Server, ServerConfig, ServerHandle,
+    ServiceClient,
+};
+use sage::tensor::Matrix;
+use std::time::{Duration, Instant};
+
+fn backend() -> ReferenceModelBackend {
+    ReferenceModelBackend::new(MlpSpec::new(8, 12, 10), TrainHyper::default(), 16, 16, 8)
+}
+
+/// The engines this host can run: threads everywhere, epoll on Linux.
+fn io_modes() -> Vec<IoMode> {
+    let mut modes = vec![IoMode::Threads];
+    if sage::util::sys::epoll_supported() {
+        modes.push(IoMode::Epoll);
+    }
+    modes
+}
+
+fn spawn_server_io(io: IoMode, threads: usize) -> (ServerHandle, String) {
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        threads,
+        io,
+        compute_workers: 2,
+        registry: RegistryConfig::default(),
+        ..ServerConfig::default()
+    })
+    .expect("bind server");
+    assert_eq!(server.io_mode(), io);
+    let addr = server.local_addr().to_string();
+    (server.spawn(), addr)
+}
+
+/// Drain push deltas until the reconstruction equals `expect` (the server
+/// keeps pushing as Score ops land, so intermediate states are fine), with
+/// a hard deadline. Epochs must be strictly increasing; every delta must
+/// satisfy the apply rule.
+fn reconstruct_until(client: &mut ServiceClient, session: &str, expect: &[u64]) -> u64 {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut recon: Vec<u64> = Vec::new();
+    let mut last_epoch = 0u64;
+    while recon != expect {
+        assert!(
+            Instant::now() < deadline,
+            "reconstruction did not converge: have {} indices, want {}",
+            recon.len(),
+            expect.len()
+        );
+        let Some(event) = client.poll_delta(Duration::from_millis(200)).unwrap() else {
+            continue;
+        };
+        assert_eq!(event.session, session);
+        assert!(
+            event.epoch > last_epoch,
+            "epoch went {last_epoch} -> {} (must be strictly increasing)",
+            event.epoch
+        );
+        last_epoch = event.epoch;
+        apply_topk_delta(&mut recon, &event.added, &event.evicted)
+            .expect("server delta violates the apply rule");
+        if !recon.is_empty() {
+            assert!(
+                !event.watermark.is_nan(),
+                "non-empty selection carries a real consensus watermark"
+            );
+        }
+    }
+    last_epoch
+}
+
+/// The acceptance-criteria test: subscribe first, then stream the full
+/// two-phase pipeline through concurrent producer connections, and fold
+/// the unsolicited deltas — never issuing a TopK from the subscriber —
+/// into the exact offline selection. Byte-identical under both engines.
+#[test]
+fn push_deltas_reconstruct_offline_selection_under_both_io_modes() {
+    let workers = 4;
+    let n = 160;
+    let k = 40;
+    let b = backend();
+    let ds = generate(&BenchmarkKind::Cifar10.spec(8), n, 5, 0);
+    let cfg = PipelineConfig {
+        workers,
+        warmup_steps: 2,
+        seed: 11,
+        ..Default::default()
+    };
+    let offline = run_selection(&b, &ds, Method::Sage, k, &cfg, None).unwrap();
+    let expect: Vec<u64> = offline.indices.iter().map(|&i| i as u64).collect();
+
+    for io in io_modes() {
+        let (handle, addr) = spawn_server_io(io, 8);
+        let mut control = ServiceClient::connect(&addr).unwrap();
+        control
+            .create_session("rt", b.ell(), b.spec().d(), workers)
+            .unwrap();
+        // Subscribe before any data exists: every delta below arrives
+        // because the server pushed it, not because we asked.
+        control.subscribe("rt", "sage", k, 10, cfg.seed).unwrap();
+
+        let ranges = shard_ranges(n, workers);
+        let params = &offline.params;
+        let (b_ref, ds_ref) = (&b, &ds);
+        std::thread::scope(|scope| {
+            for (shard, &range) in ranges.iter().enumerate() {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut client = ServiceClient::connect(&addr).unwrap();
+                    phase1_gradient_stream(b_ref, ds_ref, params, range, |g| {
+                        client.ingest("rt", shard, g).map(|_| ())
+                    })
+                    .unwrap();
+                });
+            }
+        });
+        let frozen = control.freeze("rt").unwrap();
+        assert_eq!(
+            frozen.sketch.as_slice(),
+            offline.sketch.as_slice(),
+            "served sketch diverged (io={})",
+            io.name()
+        );
+        std::thread::scope(|scope| {
+            for (shard, &range) in ranges.iter().enumerate() {
+                let addr = addr.clone();
+                let sketch = &frozen.sketch;
+                scope.spawn(move || {
+                    let mut client = ServiceClient::connect(&addr).unwrap();
+                    phase2_score_stream(b_ref, ds_ref, params, sketch, range, |blk| {
+                        client.score("rt", shard, &blk)
+                    })
+                    .unwrap();
+                });
+            }
+        });
+
+        let final_epoch = reconstruct_until(&mut control, "rt", &expect);
+        assert!(final_epoch >= 1, "io={}", io.name());
+
+        // Unsubscribe is idempotent and the connection stays usable for
+        // normal requests afterwards.
+        control.unsubscribe("rt").unwrap();
+        control.unsubscribe("rt").unwrap();
+        let (indices, _) = control.top_k("rt", "sage", k, 10, cfg.seed).unwrap();
+        assert_eq!(indices, offline.indices, "io={}", io.name());
+
+        handle.shutdown();
+    }
+}
+
+fn score_batch(client: &mut ServiceClient, session: &str, start: usize, n: usize) {
+    let indices: Vec<usize> = (start..start + n).collect();
+    let labels: Vec<u32> = (0..n as u32).map(|i| i % 3).collect();
+    let norms: Vec<f32> = (0..n).map(|i| 1.0 + i as f32 * 0.25).collect();
+    let losses: Vec<f32> = (0..n).map(|i| 0.5 + i as f32 * 0.125).collect();
+    let zhat = Matrix::from_fn(n, 4, |r, c| {
+        let v = ((r * 5 + c * 3 + start) % 7) as f32 - 3.0;
+        v / 4.0
+    });
+    client
+        .score(
+            session,
+            0,
+            &ScoreBlock {
+                indices: &indices,
+                labels: &labels,
+                zhat: &zhat,
+                norms: &norms,
+                losses: &losses,
+            },
+        )
+        .unwrap();
+}
+
+/// The slow-reader torture: a subscriber goes silent while its session is
+/// churned through many Score ops by four concurrent producers. The
+/// server must keep serving everyone else promptly (bounded write queues
+/// + coalescing, never blocking), and once the subscriber resumes reading
+/// its delta-reconstructed selection must still converge to the exact
+/// served TopK.
+#[test]
+fn slow_subscriber_stalls_nothing_and_stays_exact() {
+    for io in io_modes() {
+        let (handle, addr) = spawn_server_io(io, 6);
+
+        let mut sub = ServiceClient::connect(&addr).unwrap();
+        sub.create_session("slow", 4, 8, 1).unwrap();
+        sub.ingest(
+            "slow",
+            0,
+            &Matrix::from_fn(6, 8, |r, c| ((r * 13 + c * 7) % 5) as f32 - 2.0),
+        )
+        .unwrap();
+        sub.freeze("slow").unwrap();
+        sub.subscribe("slow", "sage", 8, 3, 0).unwrap();
+        // From here the subscriber reads NOTHING until the churn is over.
+
+        // Four producers churn the subscribed session: every Score marks
+        // the selection dirty and provokes a push at the silent reader.
+        std::thread::scope(|scope| {
+            for producer in 0..4usize {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut client = ServiceClient::connect(&addr).unwrap();
+                    for batch in 0..10usize {
+                        score_batch(&mut client, "slow", (producer * 10 + batch) * 6, 6);
+                    }
+                });
+            }
+        });
+
+        // An unrelated session on a fresh connection must run its whole
+        // lifecycle promptly while the slow reader's deltas are pending.
+        let t0 = Instant::now();
+        let mut fast = ServiceClient::connect(&addr).unwrap();
+        fast.create_session("fast", 4, 8, 1).unwrap();
+        fast.ingest(
+            "fast",
+            0,
+            &Matrix::from_fn(6, 8, |r, c| (r + 2 * c) as f32 - 5.0),
+        )
+        .unwrap();
+        fast.freeze("fast").unwrap();
+        score_batch(&mut fast, "fast", 0, 6);
+        let (fast_sel, _) = fast.top_k("fast", "sage", 4, 3, 0).unwrap();
+        assert_eq!(fast_sel.len(), 4);
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "unrelated session stalled behind a slow subscriber (io={}, took {:?})",
+            io.name(),
+            t0.elapsed()
+        );
+
+        // The slow reader wakes up. Its reconstruction must converge to
+        // the served selection exactly — coalesced epochs may skip, but
+        // each delivered delta is cumulative, so the invariant holds.
+        let (served, _) = fast.top_k("slow", "sage", 8, 3, 0).unwrap();
+        let expect: Vec<u64> = served.iter().map(|&i| i as u64).collect();
+        reconstruct_until(&mut sub, "slow", &expect);
+
+        handle.shutdown();
+    }
+}
+
+/// Shutdown must deliver one final, classifiable GoingAway error frame to
+/// every subscribed connection before closing it — not just reset the
+/// socket under the client.
+#[test]
+fn shutdown_delivers_going_away_to_subscribers() {
+    for io in io_modes() {
+        let (handle, addr) = spawn_server_io(io, 4);
+        let mut sub = ServiceClient::connect(&addr).unwrap();
+        sub.create_session("ga", 4, 8, 1).unwrap();
+        sub.subscribe("ga", "sage", 4, 3, 0).unwrap();
+
+        handle.shutdown();
+
+        // Any in-flight deltas drain first; the next abnormal event must
+        // be the GoingAway frame, surfaced as a classifiable error.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let err = loop {
+            assert!(
+                Instant::now() < deadline,
+                "no GoingAway before the deadline (io={})",
+                io.name()
+            );
+            match sub.poll_delta(Duration::from_millis(100)) {
+                Ok(_) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(
+            is_going_away(&err),
+            "expected a GoingAway frame, got '{err}' (io={})",
+            io.name()
+        );
+    }
+}
