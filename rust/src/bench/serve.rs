@@ -14,22 +14,42 @@
 //! 2. **Churn**: sequential connect → CreateSession → CloseSession
 //!    cycles on a few workers, yielding sessions/sec and p50/p99 cycle
 //!    latency.
+//! 3. **Throughput**: `frames` pipelined Stats requests down ONE
+//!    connection, bursts kept in flight by a writer thread while the
+//!    bench thread counts response frames — the phase where the reactor's
+//!    outbox actually builds depth and `writev` batches. Yields
+//!    frames/sec and bytes/sec per engine.
 //!
 //! The report records both engines side by side plus the concurrency
 //! ratio (epoll / threads); `sage bench serve --quick` gates the ratio in
 //! CI (the reactor must sustain at least [`MIN_CONCURRENCY_RATIO`]× the
-//! threaded engine's concurrent sessions).
+//! threaded engine's concurrent sessions). It also re-runs the epoll
+//! throughput phase with gathered writes disabled (`writev: false`) as a
+//! per-frame baseline and gates batched/baseline ≥ [`MIN_WRITEV_RATIO`].
 
-use crate::service::protocol::{op, read_frame, write_frame, Request, Response};
+use crate::service::protocol::{
+    encode_frame, op, read_frame, write_frame, FrameDecoder, Request, Response,
+};
 use crate::service::{IoMode, Server, ServerConfig, ServiceClient};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 /// The CI gate: reactor concurrent sessions ≥ this × threaded engine's.
 pub const MIN_CONCURRENCY_RATIO: f64 = 4.0;
+
+/// The writev gate: batched epoll frames/sec ≥ this × the per-frame
+/// baseline's. Below 1.0 so parity-with-noise passes while a real
+/// regression (batching slower than one syscall per frame) fails.
+pub const MIN_WRITEV_RATIO: f64 = 0.95;
+
+/// Requests kept in flight per burst by the throughput writer thread —
+/// deep enough that the reactor's outbox holds multiple frames per
+/// `writev`, shallow enough to stay under socket buffers.
+const PIPELINE_BURST: usize = 32;
 
 /// Knobs for one `run_serve_bench` invocation.
 #[derive(Clone, Debug)]
@@ -41,6 +61,8 @@ pub struct ServeBenchSpec {
     pub sessions: usize,
     /// Total connect→create→close cycles in the churn phase.
     pub churn: usize,
+    /// Pipelined Stats requests in the throughput phase.
+    pub frames: usize,
     /// Per-request client timeout; also bounds how long a queued-but-
     /// never-served connection counts against the threaded engine.
     pub timeout: Duration,
@@ -52,6 +74,7 @@ impl Default for ServeBenchSpec {
             threads: 4,
             sessions: 64,
             churn: 200,
+            frames: 6000,
             timeout: Duration::from_secs(2),
         }
     }
@@ -62,6 +85,7 @@ impl ServeBenchSpec {
     pub fn quick(mut self) -> Self {
         self.sessions = 32;
         self.churn = 80;
+        self.frames = 2000;
         self.timeout = Duration::from_millis(1500);
         self
     }
@@ -83,6 +107,10 @@ pub struct EngineResult {
     pub p99_ms: f64,
     /// Churn cycles that errored (shed connections under pressure).
     pub churn_failed: usize,
+    /// Throughput phase: pipelined Stats responses per second.
+    pub frames_per_sec: f64,
+    /// Throughput phase: response wire bytes per second.
+    pub bytes_per_sec: f64,
 }
 
 impl EngineResult {
@@ -98,6 +126,8 @@ impl EngineResult {
         m.insert("p50_ms".into(), Json::Num(self.p50_ms));
         m.insert("p99_ms".into(), Json::Num(self.p99_ms));
         m.insert("churn_failed".into(), Json::Num(self.churn_failed as f64));
+        m.insert("frames_per_sec".into(), Json::Num(self.frames_per_sec));
+        m.insert("bytes_per_sec".into(), Json::Num(self.bytes_per_sec));
         Json::Obj(m)
     }
 }
@@ -107,7 +137,12 @@ impl EngineResult {
 pub struct ServeBenchReport {
     pub threads: usize,
     pub sessions: usize,
+    pub frames: usize,
     pub engines: Vec<EngineResult>,
+    /// Epoll throughput with gathered writes forced OFF (`writev: false`)
+    /// — the one-syscall-per-frame baseline the writev gate compares
+    /// against. `None` when the host cannot run the reactor.
+    pub perframe_frames_per_sec: Option<f64>,
 }
 
 impl ServeBenchReport {
@@ -128,11 +163,26 @@ impl ServeBenchReport {
         self.concurrency_ratio().map(|r| r >= MIN_CONCURRENCY_RATIO)
     }
 
+    /// Batched / per-frame throughput ratio for the reactor, when both
+    /// epoll runs happened.
+    pub fn writev_ratio(&self) -> Option<f64> {
+        let baseline = self.perframe_frames_per_sec?.max(1e-9);
+        let batched = self.engine("epoll")?.frames_per_sec;
+        Some(batched / baseline)
+    }
+
+    /// Whether gathered writes met the [`MIN_WRITEV_RATIO`] gate (`None`
+    /// when the host cannot run the reactor).
+    pub fn writev_holds(&self) -> Option<bool> {
+        self.writev_ratio().map(|r| r >= MIN_WRITEV_RATIO)
+    }
+
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("suite".into(), Json::Str("serve".into()));
         m.insert("threads".into(), Json::Num(self.threads as f64));
         m.insert("sessions".into(), Json::Num(self.sessions as f64));
+        m.insert("frames".into(), Json::Num(self.frames as f64));
         m.insert(
             "engines".into(),
             Json::Arr(self.engines.iter().map(|e| e.to_json()).collect()),
@@ -140,6 +190,14 @@ impl ServeBenchReport {
         match self.concurrency_ratio() {
             Some(r) => m.insert("concurrency_ratio".into(), Json::Num(r)),
             None => m.insert("concurrency_ratio".into(), Json::Null),
+        };
+        match self.perframe_frames_per_sec {
+            Some(f) => m.insert("perframe_frames_per_sec".into(), Json::Num(f)),
+            None => m.insert("perframe_frames_per_sec".into(), Json::Null),
+        };
+        match self.writev_ratio() {
+            Some(r) => m.insert("writev_ratio".into(), Json::Num(r)),
+            None => m.insert("writev_ratio".into(), Json::Null),
         };
         Json::Obj(m)
     }
@@ -164,15 +222,30 @@ pub fn run_serve_bench(spec: &ServeBenchSpec) -> ServeBenchReport {
             Err(e) => crate::log_warn!("serve bench ({}) failed: {e}", mode.name()),
         }
     }
+    // Per-frame baseline: the reactor again, gathered writes disabled, so
+    // the writev gate has an apples-to-apples syscall-per-frame number.
+    let perframe_frames_per_sec = if crate::util::sys::epoll_supported() {
+        match throughput_only(spec, IoMode::Epoll, false) {
+            Ok(fps) => Some(fps),
+            Err(e) => {
+                crate::log_warn!("serve bench (epoll per-frame baseline) failed: {e}");
+                None
+            }
+        }
+    } else {
+        None
+    };
     ServeBenchReport {
         threads: spec.threads,
         sessions: spec.sessions,
+        frames: spec.frames,
         engines,
+        perframe_frames_per_sec,
     }
 }
 
-fn bench_engine(spec: &ServeBenchSpec, mode: IoMode) -> Result<EngineResult, String> {
-    let server = Server::bind(&ServerConfig {
+fn server_config(spec: &ServeBenchSpec, mode: IoMode, writev: bool) -> ServerConfig {
+    ServerConfig {
         addr: "127.0.0.1:0".into(),
         threads: spec.threads.max(1),
         io: mode,
@@ -180,12 +253,19 @@ fn bench_engine(spec: &ServeBenchSpec, mode: IoMode) -> Result<EngineResult, Str
         metrics_addr: None,
         slow_op_ms: 0,
         registry: Default::default(),
-    })?;
+        writev,
+        sndbuf: None,
+    }
+}
+
+fn bench_engine(spec: &ServeBenchSpec, mode: IoMode) -> Result<EngineResult, String> {
+    let server = Server::bind(&server_config(spec, mode, true))?;
     let addr = server.local_addr();
     let handle = server.spawn();
 
     let concurrent_ok = concurrency_phase(addr, spec);
     let (sessions_per_sec, p50_ms, p99_ms, churn_failed) = churn_phase(addr, spec);
+    let (frames_per_sec, bytes_per_sec) = throughput_phase(addr, spec)?;
 
     handle.shutdown();
     Ok(EngineResult {
@@ -196,7 +276,74 @@ fn bench_engine(spec: &ServeBenchSpec, mode: IoMode) -> Result<EngineResult, Str
         p50_ms,
         p99_ms,
         churn_failed,
+        frames_per_sec,
+        bytes_per_sec,
     })
+}
+
+/// A fresh server running only the throughput phase — used for the
+/// `writev: false` baseline leg of the gate.
+fn throughput_only(spec: &ServeBenchSpec, mode: IoMode, writev: bool) -> Result<f64, String> {
+    let server = Server::bind(&server_config(spec, mode, writev))?;
+    let addr = server.local_addr();
+    let handle = server.spawn();
+    let result = throughput_phase(addr, spec);
+    handle.shutdown();
+    result.map(|(frames_per_sec, _)| frames_per_sec)
+}
+
+/// Pipelined Stats frames down one connection: a writer thread keeps
+/// [`PIPELINE_BURST`]-deep bursts in flight while this thread counts
+/// response frames off a [`FrameDecoder`]. Returns (frames/sec,
+/// bytes/sec) over the whole exchange.
+fn throughput_phase(addr: SocketAddr, spec: &ServeBenchSpec) -> Result<(f64, f64), String> {
+    let frames = spec.frames.max(1);
+    let mut stream = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(spec.timeout))
+        .map_err(|e| e.to_string())?;
+    let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+    let request = Request::Stats {
+        session: String::new(),
+    };
+    let wire = encode_frame(op::STATS, 0, &request.encode());
+    let t0 = Instant::now();
+    let writer_join = std::thread::spawn(move || {
+        let mut burst = Vec::with_capacity(wire.len() * PIPELINE_BURST);
+        let mut sent = 0usize;
+        while sent < frames {
+            let n = PIPELINE_BURST.min(frames - sent);
+            burst.clear();
+            for _ in 0..n {
+                burst.extend_from_slice(&wire);
+            }
+            if writer.write_all(&burst).is_err() {
+                return;
+            }
+            sent += n;
+        }
+        let _ = writer.flush();
+    });
+    let mut decoder = FrameDecoder::new();
+    let mut chunk = vec![0u8; 64 << 10];
+    let mut got = 0usize;
+    let mut bytes = 0usize;
+    while got < frames {
+        if decoder.next_frame()?.is_some() {
+            got += 1;
+            continue;
+        }
+        let n = stream.read(&mut chunk).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err(format!("connection closed after {got}/{frames} frames"));
+        }
+        bytes += n;
+        decoder.extend(&chunk[..n]);
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let _ = writer_join.join();
+    Ok((got as f64 / elapsed, bytes as f64 / elapsed))
 }
 
 /// Open every connection, one Stats round trip each, all held open behind
@@ -303,6 +450,7 @@ mod tests {
             threads: 2,
             sessions: 4,
             churn: 8,
+            frames: 64,
             timeout: Duration::from_millis(800),
         };
         let report = run_serve_bench(&spec);
@@ -312,16 +460,25 @@ mod tests {
             assert!(engine.concurrent_ok >= 1, "{engine:?}");
             assert!(engine.sessions_per_sec > 0.0, "{engine:?}");
             assert!(engine.p99_ms >= engine.p50_ms, "{engine:?}");
+            assert!(engine.frames_per_sec > 0.0, "{engine:?}");
+            assert!(engine.bytes_per_sec > engine.frames_per_sec, "{engine:?}");
         }
-        // The reactor serves every connection when the host has epoll.
+        // The reactor serves every connection when the host has epoll,
+        // and the per-frame baseline leg ran for the writev gate.
         if crate::util::sys::epoll_supported() {
             let epoll = report.engine("epoll").expect("epoll engine ran");
             assert_eq!(epoll.concurrent_ok, 4);
+            assert!(report.perframe_frames_per_sec.unwrap_or(0.0) > 0.0);
+            assert!(report.writev_ratio().unwrap_or(0.0) > 0.0);
         }
         let parsed = crate::util::json::parse(&report.to_json_string()).expect("valid json");
         assert_eq!(parsed.get("suite").and_then(|j| j.as_str()), Some("serve"));
         let engines = parsed.get("engines").and_then(|j| j.as_arr()).unwrap();
         assert_eq!(engines.len(), report.engines.len());
+        for engine in engines {
+            assert!(engine.get("frames_per_sec").is_some());
+            assert!(engine.get("bytes_per_sec").is_some());
+        }
     }
 
     #[test]
@@ -329,9 +486,10 @@ mod tests {
         assert_eq!(percentile(&[], 99), 0.0);
         assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50), 3.0);
         assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 99), 4.0);
-        let report = ServeBenchReport {
+        let mut report = ServeBenchReport {
             threads: 2,
             sessions: 8,
+            frames: 64,
             engines: vec![
                 EngineResult {
                     io: "threads".into(),
@@ -341,6 +499,8 @@ mod tests {
                     p50_ms: 1.0,
                     p99_ms: 2.0,
                     churn_failed: 0,
+                    frames_per_sec: 1000.0,
+                    bytes_per_sec: 50_000.0,
                 },
                 EngineResult {
                     io: "epoll".into(),
@@ -350,10 +510,20 @@ mod tests {
                     p50_ms: 1.0,
                     p99_ms: 2.0,
                     churn_failed: 0,
+                    frames_per_sec: 2000.0,
+                    bytes_per_sec: 100_000.0,
                 },
             ],
+            perframe_frames_per_sec: Some(2000.0),
         };
         assert_eq!(report.concurrency_ratio(), Some(4.0));
         assert_eq!(report.ratio_holds(), Some(true));
+        // Parity passes the writev gate; a real regression fails it.
+        assert_eq!(report.writev_ratio(), Some(1.0));
+        assert_eq!(report.writev_holds(), Some(true));
+        report.engines[1].frames_per_sec = 2000.0 * (MIN_WRITEV_RATIO - 0.05);
+        assert_eq!(report.writev_holds(), Some(false));
+        report.perframe_frames_per_sec = None;
+        assert_eq!(report.writev_holds(), None);
     }
 }

@@ -167,7 +167,8 @@ fn app() -> App {
                     Opt { name: "serve-threads", takes_value: true, help: "serve: thread budget for BOTH I/O engines", default: Some("4") },
                     Opt { name: "sessions", takes_value: true, help: "serve: concurrent connections attempted per engine (default 64; 32 with --quick)", default: None },
                     Opt { name: "churn", takes_value: true, help: "serve: connect/create/close cycles per engine (default 200; 80 with --quick)", default: None },
-                    Opt { name: "quick", takes_value: false, help: "CI smoke: fewer iters; kernels gates parallel/SIMD wins, serve gates the reactor's >=4x concurrency ratio", default: None },
+                    Opt { name: "frames", takes_value: true, help: "serve: pipelined Stats requests in the throughput phase (default 6000; 2000 with --quick)", default: None },
+                    Opt { name: "quick", takes_value: false, help: "CI smoke: fewer iters; kernels gates parallel/SIMD wins, serve gates the reactor's >=4x concurrency ratio and writev >= 0.95x per-frame throughput", default: None },
                 ],
             },
             Command {
@@ -472,6 +473,7 @@ fn cmd_serve(p: &Parsed) -> Result<(), String> {
         },
         metrics_addr: p.get("metrics-addr").map(str::to_string),
         slow_op_ms: p.get_usize("slow-op-ms")?.unwrap_or(0) as u64,
+        ..Default::default()
     };
     let server = sage::service::Server::bind(&cfg)?;
     println!(
@@ -694,23 +696,28 @@ fn cmd_bench_serve(p: &Parsed) -> Result<(), String> {
     if let Some(churn) = p.get_usize("churn")? {
         spec.churn = churn.max(1);
     }
+    if let Some(frames) = p.get_usize("frames")? {
+        spec.frames = frames.max(1);
+    }
     log_info!(
-        "bench serve: threads={} sessions={} churn={}",
+        "bench serve: threads={} sessions={} churn={} frames={}",
         spec.threads,
         spec.sessions,
-        spec.churn
+        spec.churn,
+        spec.frames
     );
     let report = sage::bench::run_serve_bench(&spec);
     if report.engines.is_empty() {
         return Err("bench serve: no I/O engine completed".into());
     }
     println!(
-        "{:<8} {:>10} {:>12} {:>12} {:>9} {:>9} {:>7}",
-        "engine", "attempted", "concurrent", "sess/sec", "p50", "p99", "failed"
+        "{:<8} {:>10} {:>12} {:>12} {:>9} {:>9} {:>7} {:>12} {:>12}",
+        "engine", "attempted", "concurrent", "sess/sec", "p50", "p99", "failed", "frames/sec",
+        "MiB/sec"
     );
     for engine in &report.engines {
         println!(
-            "{:<8} {:>10} {:>12} {:>12.1} {:>7.2}ms {:>7.2}ms {:>7}",
+            "{:<8} {:>10} {:>12} {:>12.1} {:>7.2}ms {:>7.2}ms {:>7} {:>12.0} {:>12.2}",
             engine.io,
             engine.attempted,
             engine.concurrent_ok,
@@ -718,11 +725,19 @@ fn cmd_bench_serve(p: &Parsed) -> Result<(), String> {
             engine.p50_ms,
             engine.p99_ms,
             engine.churn_failed,
+            engine.frames_per_sec,
+            engine.bytes_per_sec / (1 << 20) as f64,
         );
     }
     match report.concurrency_ratio() {
         Some(ratio) => println!("concurrency ratio (epoll / threads): {ratio:.1}x"),
         None => println!("concurrency ratio: n/a (host lacks epoll; only the threaded engine ran)"),
+    }
+    match (report.writev_ratio(), report.perframe_frames_per_sec) {
+        (Some(ratio), Some(baseline)) => println!(
+            "writev ratio (batched / per-frame): {ratio:.2}x (baseline {baseline:.0} frames/sec)"
+        ),
+        _ => println!("writev ratio: n/a (reactor did not run)"),
     }
     // `--out` defaults to the kernels artifact name; the serve suite owns
     // its own file unless the user overrode the path explicitly.
@@ -737,6 +752,15 @@ fn cmd_bench_serve(p: &Parsed) -> Result<(), String> {
             "quick gate: reactor concurrency ratio {:.1}x below the required {:.0}x",
             report.concurrency_ratio().unwrap_or(0.0),
             sage::bench::serve::MIN_CONCURRENCY_RATIO
+        ));
+    }
+    // Mirror of the kernels suite's SIMD-vs-scalar gate: batched writev
+    // must not lose to the one-syscall-per-frame baseline.
+    if quick && report.writev_holds() == Some(false) {
+        return Err(format!(
+            "quick gate: writev throughput {:.2}x below the required {:.2}x of per-frame",
+            report.writev_ratio().unwrap_or(0.0),
+            sage::bench::serve::MIN_WRITEV_RATIO
         ));
     }
     Ok(())

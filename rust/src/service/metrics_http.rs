@@ -11,11 +11,15 @@
 //! - `GET /healthz` — `ok` while the server is up (liveness probe).
 //!
 //! Everything else is a 404; non-GET methods get a 405. One short-lived
-//! connection per request (`Connection: close` semantics), handled inline
-//! on the acceptor thread — a scrape is tiny and the endpoint is not on
-//! the data path.
+//! connection per request (`Connection: close` semantics), handled by a
+//! small bounded worker pool ([`SCRAPE_WORKERS`] threads) so a slow or
+//! silent peer cannot wedge the acceptor. When the pool's queue is full —
+//! a scrape storm — excess connections are shed immediately with a `503`
+//! and the `service.metrics_http.rejected` counter climbs; the endpoint
+//! is not on the data path and never blocks it.
 
 use crate::util::metrics;
+use crate::util::threadpool::ThreadPool;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -23,21 +27,49 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+/// Scrape handler threads. Two is plenty for Prometheus-cadence polling;
+/// the bounded queue behind them (see `ThreadPool`) absorbs bursts and
+/// anything past it is shed with a 503 rather than piling up threads.
+const SCRAPE_WORKERS: usize = 2;
+
+/// Canned shed response, written inline on the acceptor thread when the
+/// scrape pool is saturated.
+const BUSY_RESPONSE: &[u8] = b"HTTP/1.0 503 Service Unavailable\r\n\
+    Content-Type: text/plain; charset=utf-8\r\n\
+    Content-Length: 5\r\nConnection: close\r\n\r\nbusy\n";
+
 /// Accept loop for the metrics endpoint. Mirrors the main server's
 /// shutdown protocol: blocks in `accept`, re-checks `stop` per connection,
 /// and is woken by a throwaway connection (see `ServerHandle`).
 pub fn spawn(listener: TcpListener, stop: Arc<AtomicBool>) -> JoinHandle<()> {
     std::thread::spawn(move || {
+        let pool = ThreadPool::new(SCRAPE_WORKERS);
         for incoming in listener.incoming() {
             if stop.load(Ordering::Relaxed) {
                 break;
             }
             match incoming {
-                Ok(stream) => handle(stream),
+                Ok(stream) => {
+                    let reject = stream.try_clone().ok();
+                    if pool.try_execute(move || handle(stream)).is_err() {
+                        shed(reject);
+                    }
+                }
                 Err(e) => crate::log_warn!("metrics accept failed: {e}"),
             }
         }
     })
+}
+
+/// Scrape-storm overflow: answer 503 without ever handing the connection
+/// a thread. Short write timeout — a peer too slow to take 100 bytes is
+/// dropped, not waited on.
+fn shed(stream: Option<TcpStream>) {
+    metrics::global().counter("service.metrics_http.rejected").inc();
+    if let Some(mut s) = stream {
+        let _ = s.set_write_timeout(Some(Duration::from_millis(500)));
+        let _ = s.write_all(BUSY_RESPONSE);
+    }
 }
 
 /// Render the full HTTP/1.0 response for one request head (request line +
@@ -134,6 +166,73 @@ mod tests {
 
         stop.store(true, Ordering::Relaxed);
         let _ = TcpStream::connect(addr); // wake the acceptor
+        join.join().unwrap();
+    }
+
+    /// A scrape storm: with every worker wedged on a silent peer and the
+    /// pool queue full, further connections must be shed with a 503 —
+    /// never queued without bound, never given a new thread — and the
+    /// endpoint must recover once the storm passes.
+    #[test]
+    fn scrape_storm_sheds_with_503_and_recovers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let join = spawn(listener, stop.clone());
+
+        // Wedge both workers and fill the bounded queue: silent
+        // connections hold a worker for the full read timeout, and the
+        // queued ones keep the pool saturated behind them.
+        let stalls: Vec<TcpStream> = (0..SCRAPE_WORKERS * 5)
+            .map(|_| TcpStream::connect(addr).unwrap())
+            .collect();
+        std::thread::sleep(Duration::from_millis(100));
+
+        // Storm requests while saturated: every response must be a clean
+        // 200 or an immediate 503 — nothing hangs, nothing is dropped
+        // without an answer (the peer FIN after `get` counts as answered).
+        let started = std::time::Instant::now();
+        let mut shed_seen = false;
+        for _ in 0..4 {
+            let resp = get(addr, "/healthz");
+            assert!(
+                resp.is_empty()
+                    || resp.starts_with("HTTP/1.0 200")
+                    || resp.starts_with("HTTP/1.0 503"),
+                "unexpected storm response: {resp:?}"
+            );
+            if resp.starts_with("HTTP/1.0 503") {
+                shed_seen = true;
+            }
+        }
+        assert!(
+            shed_seen,
+            "saturated pool never shed a request with 503"
+        );
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "storm responses were not prompt: {:?}",
+            started.elapsed()
+        );
+
+        // Storm over: stalled peers hang up, workers drain, and a fresh
+        // scrape succeeds again.
+        drop(stalls);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let resp = get(addr, "/healthz");
+            if resp.starts_with("HTTP/1.0 200") {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "endpoint did not recover after the storm: {resp:?}"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(addr);
         join.join().unwrap();
     }
 }

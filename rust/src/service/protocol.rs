@@ -98,8 +98,33 @@ pub fn encode_frame_traced(
     payload: &[u8],
     trace: Option<TraceCtx>,
 ) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_frame_traced_into(&mut out, opcode, status, payload, trace);
+    out
+}
+
+/// [`encode_frame`] into a caller-supplied buffer (see
+/// [`encode_frame_traced_into`]).
+pub fn encode_frame_into(out: &mut Vec<u8>, opcode: u8, status: u16, payload: &[u8]) {
+    encode_frame_traced_into(out, opcode, status, payload, None);
+}
+
+/// [`encode_frame_traced`] into a caller-supplied buffer. The buffer is
+/// cleared first, so the checksum covers exactly the frame bytes and the
+/// result is byte-identical to the allocating variant (which delegates
+/// here — one body, no way to diverge). The serve hot paths pair this
+/// with [`crate::util::bufpool`] so steady-state encodes reuse capacity
+/// instead of allocating per frame.
+pub fn encode_frame_traced_into(
+    out: &mut Vec<u8>,
+    opcode: u8,
+    status: u16,
+    payload: &[u8],
+    trace: Option<TraceCtx>,
+) {
     let ext = if trace.is_some() { TRACE_EXT_LEN } else { 0 };
-    let mut out = Vec::with_capacity(HEADER_LEN + ext + payload.len() + 8);
+    out.clear();
+    out.reserve(HEADER_LEN + ext + payload.len() + 8);
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.push(opcode);
@@ -111,9 +136,8 @@ pub fn encode_frame_traced(
         out.extend_from_slice(&t.span_id.to_le_bytes());
     }
     out.extend_from_slice(payload);
-    let sum = fnv64(&out);
+    let sum = fnv64(out);
     out.extend_from_slice(&sum.to_le_bytes());
-    out
 }
 
 /// Write one frame. Rejects payloads over [`MAX_PAYLOAD`] locally with a
@@ -306,6 +330,13 @@ pub struct FrameDecoder {
     pos: usize,
 }
 
+/// Keep-capacity watermark for [`FrameDecoder`]'s internal buffer: once a
+/// frame drains the buffer completely, capacity above this is released.
+/// A single giant IngestBatch (up to the 256 MiB [`MAX_PAYLOAD`]) must
+/// not pin its buffer for the life of the connection, while steady-state
+/// small frames never pay a realloc.
+const DECODER_KEEP_CAPACITY: usize = 256 << 10;
+
 impl FrameDecoder {
     pub fn new() -> Self {
         Self::default()
@@ -325,6 +356,23 @@ impl FrameDecoder {
     /// Bytes buffered but not yet consumed by a decoded frame.
     pub fn buffered(&self) -> usize {
         self.buf.len() - self.pos
+    }
+
+    /// Current capacity of the internal buffer (tests pin the shrink
+    /// watermark through this).
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Post-frame shrink policy: only when the buffer is fully drained
+    /// (no partial frame in flight — shrinking mid-frame would memmove
+    /// pending bytes for nothing) and capacity sits above the watermark.
+    fn maybe_shrink(&mut self) {
+        if self.pos == self.buf.len() && self.buf.capacity() > DECODER_KEEP_CAPACITY {
+            self.buf.clear();
+            self.pos = 0;
+            self.buf.shrink_to(DECODER_KEEP_CAPACITY);
+        }
     }
 
     /// Decode the next complete frame, if the buffer holds one.
@@ -378,8 +426,12 @@ impl FrameDecoder {
         } else {
             None
         };
-        let payload = avail[HEADER_LEN + ext..HEADER_LEN + ext + len].to_vec();
+        // Payload buffers come from (and are returned to) the pool by the
+        // serve engines, so a steady-state decode allocates nothing.
+        let mut payload = crate::util::bufpool::global().take();
+        payload.extend_from_slice(&avail[HEADER_LEN + ext..HEADER_LEN + ext + len]);
         self.pos += total;
+        self.maybe_shrink();
         Ok(Some(Frame {
             opcode,
             status,
@@ -434,6 +486,13 @@ pub struct PayloadWriter {
 impl PayloadWriter {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Build on top of an existing (e.g. pooled) buffer, reusing its
+    /// capacity. The buffer is cleared first.
+    pub fn wrap(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Self { buf }
     }
 
     pub fn into_bytes(self) -> Vec<u8> {
@@ -1071,7 +1130,17 @@ impl Response {
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = PayloadWriter::new();
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// [`Response::encode`] into a caller-supplied buffer (cleared
+    /// first), reusing its capacity — the serve hot paths feed pooled
+    /// buffers through here. One body backs both variants, so the bytes
+    /// cannot diverge.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut w = PayloadWriter::wrap(std::mem::take(out));
         match self {
             Response::Ok => w.put_u8(RESP_OK),
             Response::Error { message } => {
@@ -1152,7 +1221,7 @@ impl Response {
                 w.put_f64(*watermark);
             }
         }
-        w.into_bytes()
+        *out = w.into_bytes();
     }
 
     /// Decode a response payload (kind tag + fields).
@@ -1607,6 +1676,54 @@ mod tests {
         assert_eq!(dec.buffered(), 0);
         // The internal buffer must not have grown to 300 × frame size.
         assert!(dec.buf.len() < frame.len() * 4 + 8192);
+    }
+
+    #[test]
+    fn frame_decoder_releases_capacity_after_giant_frame() {
+        let big = encode_frame(op::INGEST_BATCH, 0, &vec![0xABu8; 16 << 20]);
+        let small = encode_frame(op::FREEZE, 0, &Request::Freeze { session: "x".into() }.encode());
+        let mut dec = FrameDecoder::new();
+        dec.extend(&big);
+        assert!(dec.capacity() >= 16 << 20);
+        let f = dec.next_frame().unwrap().unwrap();
+        assert_eq!(f.payload.len(), 16 << 20);
+        // Fully drained: the keep-capacity watermark must release the
+        // 16 MiB now, not hold it for the connection's lifetime.
+        assert!(
+            dec.capacity() <= DECODER_KEEP_CAPACITY,
+            "decoder still pins {} bytes",
+            dec.capacity()
+        );
+        // Steady-state small frames decode fine and never re-inflate it.
+        for _ in 0..64 {
+            dec.extend(&small);
+            let f = dec.next_frame().unwrap().unwrap();
+            assert_eq!(f.opcode, op::FREEZE);
+        }
+        assert!(dec.capacity() <= DECODER_KEEP_CAPACITY);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_encoders_byte_for_byte() {
+        let resp = Response::Stats {
+            pairs: vec![("rows".into(), 7), ("shards".into(), 2)],
+        };
+        // Start from a dirty buffer with stale bytes: _into must clear it.
+        let mut payload = vec![0xFFu8; 64];
+        resp.encode_into(&mut payload);
+        assert_eq!(payload, resp.encode());
+
+        let trace = Some(TraceCtx {
+            trace_id: 0x0123_4567_89ab_cdef,
+            span_id: 0xfedc_ba98_7654_3210,
+        });
+        let mut frame = vec![9u8; 3];
+        encode_frame_traced_into(&mut frame, op::STATS, 0, &payload, trace);
+        assert_eq!(frame, encode_frame_traced(op::STATS, 0, &payload, trace));
+
+        let mut untraced = Vec::new();
+        encode_frame_into(&mut untraced, op::STATS, 0, &payload);
+        assert_eq!(untraced, encode_frame(op::STATS, 0, &payload));
     }
 
     #[test]

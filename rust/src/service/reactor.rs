@@ -32,6 +32,16 @@
 //! subscriber receives a fresh cumulative delta later, never an unbounded
 //! queue. Draining below [`LOW_WATER`] re-arms reads and kicks the hub.
 //!
+//! # Wire hot path
+//!
+//! Connections are accepted with `accept4(SOCK_NONBLOCK | SOCK_CLOEXEC)`
+//! (no per-connection `fcntl` pair; `TCP_NODELAY` set once at accept) and
+//! outboxes drain through a single gathered `writev(2)` per readiness
+//! event — up to `MAX_WRITEV_BATCH` frames per call, resuming mid-frame
+//! after short writes. Every buffer on the path (request payloads,
+//! encoded responses, framed bytes) cycles through `util::bufpool`, so a
+//! steady-state request allocates nothing. See docs/ARCHITECTURE.md §5.2.
+//!
 //! # Shutdown
 //!
 //! `ServerHandle` wakes the loop through its eventfd (no self-connect):
@@ -59,6 +69,12 @@ pub(crate) struct ReactorConfig {
     pub wake: Arc<EventFd>,
     pub threads: usize,
     pub slow_op_ms: u64,
+    /// Gathered-write batching on the outbox; `false` keeps the
+    /// historical one-`write(2)`-per-frame loop (the bench baseline).
+    pub writev: bool,
+    /// `SO_SNDBUF` for accepted protocol sockets (tests force short
+    /// writes with tiny values).
+    pub sndbuf: Option<usize>,
 }
 
 #[cfg(target_os = "linux")]
@@ -77,11 +93,12 @@ mod linux_impl {
     use super::ReactorConfig;
     use crate::service::metrics_http;
     use crate::service::protocol::{
-        encode_frame_traced, op, Frame, FrameDecoder, Request, Response,
+        encode_frame_traced_into, op, Frame, FrameDecoder, Request, Response,
     };
     use crate::service::registry::SessionRegistry;
     use crate::service::server::server_hists;
     use crate::service::subs::{PushOutcome, PushSink};
+    use crate::util::bufpool;
     use crate::util::metrics::global as metrics;
     use crate::util::metrics::Histogram;
     use crate::util::sys::{self, Epoll, Event, EventFd};
@@ -90,7 +107,7 @@ mod linux_impl {
     use std::collections::{BTreeMap, HashMap, VecDeque};
     use std::io::{ErrorKind, Read, Write};
     use std::net::{TcpListener, TcpStream};
-    use std::os::unix::io::AsRawFd;
+    use std::os::unix::io::{AsRawFd, FromRawFd};
     use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
     use std::sync::{Arc, Mutex, OnceLock};
     use std::time::{Duration, Instant};
@@ -116,6 +133,10 @@ mod linux_impl {
 
     const READ_CHUNK: usize = 16 << 10;
     const MAX_EVENTS: usize = 256;
+    /// Frames gathered into one `writev` call. Well under the kernel's
+    /// `UIO_MAXIOV`; bounds both the stack-allocated iovec array and the
+    /// latency of a single syscall on a deep outbox.
+    pub(super) const MAX_WRITEV_BATCH: usize = 64;
     /// Safety-net wait timeout; every real transition also writes the
     /// eventfd, so this only bounds lost-wakeup damage.
     const WAIT_MS: i32 = 250;
@@ -132,6 +153,12 @@ mod linux_impl {
         /// `sage.reactor.write_queue.depth` — outbox depth in frames,
         /// sampled at each enqueue.
         depth: &'static Histogram,
+        /// `sage.reactor.writev.frames_per_call` — complete frames
+        /// retired by one gathered write (partially written frames don't
+        /// count until a later call finishes them).
+        writev_frames: &'static Histogram,
+        /// `sage.reactor.writev.ns` — wall clock of one `writev(2)` call.
+        writev_ns: &'static Histogram,
     }
 
     fn reactor_hists() -> &'static ReactorHists {
@@ -142,6 +169,8 @@ mod linux_impl {
                 wait: reg.histogram("sage.reactor.wait.ns"),
                 dispatch: reg.histogram("sage.reactor.dispatch.ns"),
                 depth: reg.histogram("sage.reactor.write_queue.depth"),
+                writev_frames: reg.histogram("sage.reactor.writev.frames_per_call"),
+                writev_ns: reg.histogram("sage.reactor.writev.ns"),
             }
         })
     }
@@ -177,11 +206,13 @@ mod linux_impl {
     impl PushSink for ReactorSink {
         fn try_push(&self, frame: Vec<u8>) -> PushOutcome {
             if self.gone.load(Ordering::Acquire) {
+                crate::util::bufpool::global().put(frame);
                 return PushOutcome::Gone;
             }
             let backlog = self.queued_bytes.load(Ordering::Relaxed)
                 + self.outbox_bytes.load(Ordering::Relaxed);
             if backlog > PUSH_BUSY {
+                crate::util::bufpool::global().put(frame);
                 return PushOutcome::Busy;
             }
             self.queued_bytes.fetch_add(frame.len(), Ordering::Relaxed);
@@ -285,7 +316,75 @@ mod linux_impl {
     /// Write as much of the outbox as the socket accepts right now.
     /// `Ok(())` means either drained or `WouldBlock`; errors mean the
     /// peer is gone.
-    fn flush_outbox(conn: &mut Conn) -> std::io::Result<()> {
+    ///
+    /// The batched path gathers up to [`MAX_WRITEV_BATCH`] frames into a
+    /// single `writev(2)`. A short count is resumed exactly: fully
+    /// written frames pop (and their buffers return to the pool), the
+    /// first unfinished frame records its progress in `front_written`,
+    /// and the next call's iovec starts mid-frame from there — so EAGAIN
+    /// in the middle of a frame never reorders or duplicates a byte.
+    /// `batched = false` (config `writev: false`, the serve bench's
+    /// baseline) keeps the historical one-write-per-frame loop.
+    fn flush_outbox(conn: &mut Conn, batched: bool) -> std::io::Result<()> {
+        if !batched {
+            return flush_outbox_per_frame(conn);
+        }
+        let fd = conn.stream.as_raw_fd();
+        let hists = reactor_hists();
+        while !conn.outbox.is_empty() {
+            let mut iovs = [sys::IoVec::empty(); MAX_WRITEV_BATCH];
+            let mut n_iovs = 0;
+            let mut batch_bytes = 0usize;
+            for frame in conn.outbox.iter().take(MAX_WRITEV_BATCH) {
+                let skip = if n_iovs == 0 { conn.front_written } else { 0 };
+                iovs[n_iovs] = sys::IoVec::new(&frame[skip..]);
+                batch_bytes += frame.len() - skip;
+                n_iovs += 1;
+            }
+            let t = Instant::now();
+            let wrote = sys::writev(fd, &iovs[..n_iovs]);
+            hists.writev_ns.record(t.elapsed().as_nanos() as u64);
+            match wrote {
+                Ok(0) => return Err(ErrorKind::WriteZero.into()),
+                Ok(mut n) => {
+                    let short = n < batch_bytes;
+                    let mut retired = 0u64;
+                    while n > 0 {
+                        let front_len = conn.outbox.front().map_or(0, |f| f.len());
+                        let remaining = front_len - conn.front_written;
+                        if n >= remaining {
+                            n -= remaining;
+                            conn.outbox_bytes -= remaining;
+                            conn.front_written = 0;
+                            if let Some(done) = conn.outbox.pop_front() {
+                                bufpool::global().put(done);
+                            }
+                            retired += 1;
+                        } else {
+                            conn.front_written += n;
+                            conn.outbox_bytes -= n;
+                            n = 0;
+                        }
+                    }
+                    hists.writev_frames.record(retired);
+                    if short {
+                        // The socket buffer filled mid-batch: another call
+                        // would just collect EAGAIN. Let EPOLLOUT re-arm.
+                        return Ok(());
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// The pre-writev baseline: one `write(2)` per frame. Kept callable
+    /// (not just as dead history) so `sage bench serve` can measure the
+    /// gathered path against it.
+    fn flush_outbox_per_frame(conn: &mut Conn) -> std::io::Result<()> {
         while let Some(front) = conn.outbox.front() {
             match conn.stream.write(&front[conn.front_written..]) {
                 Ok(0) => return Err(ErrorKind::WriteZero.into()),
@@ -293,7 +392,9 @@ mod linux_impl {
                     conn.front_written += n;
                     conn.outbox_bytes -= n;
                     if conn.front_written == front.len() {
-                        conn.outbox.pop_front();
+                        if let Some(done) = conn.outbox.pop_front() {
+                            bufpool::global().put(done);
+                        }
                         conn.front_written = 0;
                     }
                 }
@@ -365,6 +466,9 @@ mod linux_impl {
             Request::decode(job.opcode, &job.payload)
         };
         hists.decode.record(t.elapsed().as_nanos() as u64);
+        // Request::decode copies out everything it needs, so the wire
+        // payload can recycle before the (possibly long) handle stage.
+        bufpool::global().put(job.payload);
 
         let t = Instant::now();
         let response = match decoded {
@@ -394,13 +498,16 @@ mod linux_impl {
         }
 
         let t = Instant::now();
-        let payload = {
+        let mut payload = bufpool::global().take();
+        {
             let _s = trace::span("serve.encode");
-            response.encode()
-        };
+            response.encode_into(&mut payload);
+        }
         hists.encode.record(t.elapsed().as_nanos() as u64);
 
-        let frame = encode_frame_traced(job.opcode, response.status(), &payload, job.trace);
+        let mut frame = bufpool::global().take();
+        encode_frame_traced_into(&mut frame, job.opcode, response.status(), &payload, job.trace);
+        bufpool::global().put(payload);
         reactor_hists().dispatch.record(total.elapsed().as_nanos() as u64);
         shared
             .completions
@@ -423,6 +530,10 @@ mod linux_impl {
         shared: Arc<Shared>,
         pool: ThreadPool,
         slow_op_ms: u64,
+        /// Gathered-write batching (false = per-frame bench baseline).
+        writev: bool,
+        /// `SO_SNDBUF` applied to accepted protocol sockets.
+        sndbuf: Option<usize>,
         conns: HashMap<u64, Conn>,
         next_token: u64,
         /// Connections whose next job bounced off a saturated pool;
@@ -472,6 +583,8 @@ mod linux_impl {
             }),
             pool: ThreadPool::new(workers),
             slow_op_ms: cfg.slow_op_ms,
+            writev: cfg.writev,
+            sndbuf: cfg.sndbuf,
             conns: HashMap::new(),
             next_token: FIRST_CONN_TOKEN,
             stalled: Vec::new(),
@@ -507,14 +620,20 @@ mod linux_impl {
     }
 
     impl Reactor {
+        /// Accept with `accept4(SOCK_NONBLOCK | SOCK_CLOEXEC)`: the fd is
+        /// born nonblocking (no fcntl get/set pair per connection) and
+        /// socket options are applied exactly once, here.
         fn accept_main(&mut self) {
             loop {
-                match self.listener.accept() {
-                    Ok((stream, _)) => {
+                match sys::accept_nonblocking(self.listener.as_raw_fd()) {
+                    Ok(fd) => {
+                        // SAFETY: accept4 just returned this connected
+                        // socket fd; nothing else owns it.
+                        let stream = unsafe { TcpStream::from_raw_fd(fd) };
                         metrics().counter("service.server.connections").inc();
                         let _ = stream.set_nodelay(true);
-                        if stream.set_nonblocking(true).is_err() {
-                            continue;
+                        if let Some(bytes) = self.sndbuf {
+                            let _ = sys::set_sndbuf(fd, bytes);
                         }
                         self.register(stream, ConnKind::Frames(FrameState::new()), true);
                     }
@@ -529,15 +648,14 @@ mod linux_impl {
 
         fn accept_metrics(&mut self) {
             loop {
-                let listener = match &self.metrics_listener {
-                    Some(l) => l,
+                let fd = match &self.metrics_listener {
+                    Some(l) => l.as_raw_fd(),
                     None => return,
                 };
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        if stream.set_nonblocking(true).is_err() {
-                            continue;
-                        }
+                match sys::accept_nonblocking(fd) {
+                    Ok(fd) => {
+                        // SAFETY: as in `accept_main` — a fresh owned fd.
+                        let stream = unsafe { TcpStream::from_raw_fd(fd) };
                         self.register(stream, ConnKind::Http { request: Vec::new() }, false);
                     }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => break,
@@ -615,11 +733,20 @@ mod linux_impl {
             }
         }
 
-        fn close(&mut self, token: u64, conn: Conn) {
+        fn close(&mut self, token: u64, mut conn: Conn) {
             let _ = self.epoll.delete(conn.stream.as_raw_fd());
+            // Undelivered frames still recycle — a churny workload of
+            // short-lived connections would otherwise leak pool hits.
+            for frame in conn.outbox.drain(..) {
+                bufpool::global().put(frame);
+            }
             if let ConnKind::Frames(fs) = &conn.kind {
                 if let Some(sink) = &fs.sink {
                     sink.gone.store(true, Ordering::Release);
+                    for frame in sink.queue.lock().unwrap().drain(..) {
+                        bufpool::global().put(frame);
+                    }
+                    sink.queued_bytes.store(0, Ordering::Relaxed);
                 }
                 self.hub.drop_conn(token);
                 metrics().gauge("sage.server.connections").sub(1);
@@ -664,10 +791,14 @@ mod linux_impl {
         }
 
         /// Decode every complete frame buffered so far and route it:
-        /// Subscribe/Unsubscribe run inline on the loop (they only touch
-        /// hub state — never kernels); everything else becomes a pool
-        /// job. Both paths go through the sequence machinery, so
-        /// responses interleave in request order.
+        /// Subscribe/Unsubscribe/Stats run inline on the loop
+        /// (Subscribe/Unsubscribe only touch hub state, Stats is a cheap
+        /// registry read — never kernels; and inline Stats lets a
+        /// pipelined burst build a multi-frame outbox for one gathered
+        /// write instead of ping-ponging through the pool one frame at a
+        /// time); everything else becomes a pool job. Both paths go
+        /// through the sequence machinery, so responses interleave in
+        /// request order.
         fn pump_frames(&mut self, token: u64, conn: &mut Conn) -> Result<(), String> {
             loop {
                 let frame = match frames_mut(conn).decoder.next_frame()? {
@@ -681,8 +812,9 @@ mod linux_impl {
                     fs.next_req_seq += 1;
                     s
                 };
-                if frame.opcode == op::SUBSCRIBE || frame.opcode == op::UNSUBSCRIBE {
+                if matches!(frame.opcode, op::SUBSCRIBE | op::UNSUBSCRIBE | op::STATS) {
                     let encoded = self.control_response(token, conn, &frame);
+                    bufpool::global().put(frame.payload);
                     frames_mut(conn).ready.insert(seq, encoded);
                     self.pump_ready(conn);
                 } else {
@@ -739,6 +871,12 @@ mod linux_impl {
                     self.hub.unsubscribe(token, &session);
                     Response::Ok
                 }
+                // Stats never touches kernels; answering on the loop is
+                // cheaper than a pool round trip and lets pipelined Stats
+                // bursts batch into one writev (see `pump_frames`).
+                Ok(req @ Request::Stats { .. }) => {
+                    crate::service::server::dispatch(&self.registry, req)
+                }
                 Ok(_) => Response::Error {
                     message: "bad request: not a subscription op".to_string(),
                 },
@@ -756,9 +894,19 @@ mod linux_impl {
             }
 
             let t = Instant::now();
-            let payload = response.encode();
+            let mut payload = bufpool::global().take();
+            response.encode_into(&mut payload);
             hists.encode.record(t.elapsed().as_nanos() as u64);
-            encode_frame_traced(frame.opcode, response.status(), &payload, frame.trace)
+            let mut out = bufpool::global().take();
+            encode_frame_traced_into(
+                &mut out,
+                frame.opcode,
+                response.status(),
+                &payload,
+                frame.trace,
+            );
+            bufpool::global().put(payload);
+            out
         }
 
         /// The connection's push sink, created on first use. Created
@@ -893,7 +1041,7 @@ mod linux_impl {
             }
             let before = conn.outbox_bytes;
             let t = Instant::now();
-            let result = flush_outbox(conn);
+            let result = flush_outbox(conn, self.writev);
             server_hists().write.record(t.elapsed().as_nanos() as u64);
             mirror_outbox(conn);
             if let Err(e) = result {
@@ -920,7 +1068,12 @@ mod linux_impl {
             for c in completions {
                 let mut conn = match self.conns.remove(&c.token) {
                     Some(conn) => conn,
-                    None => continue, // connection died while computing
+                    None => {
+                        // Connection died while computing; the orphaned
+                        // frame still recycles.
+                        bufpool::global().put(c.frame);
+                        continue;
+                    }
                 };
                 {
                     let fs = frames_mut(&mut conn);

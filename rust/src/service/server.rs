@@ -37,12 +37,14 @@
 
 use super::metrics_http;
 use super::protocol::{
-    op, read_frame_event, write_frame, write_frame_traced, ReadEvent, Request, Response,
+    encode_frame_traced_into, op, read_frame_event, write_frame, ReadEvent, Request, Response,
+    MAX_PAYLOAD,
 };
 use super::reactor::{self, ReactorConfig};
 use super::registry::{RegistryConfig, SessionRegistry};
 use super::subs::{PushOutcome, PushSink, SubscriptionHub};
 use crate::config::Method;
+use crate::util::bufpool;
 use crate::util::metrics::global as metrics;
 use crate::util::metrics::Histogram;
 use crate::util::sys::{self, EventFd};
@@ -142,7 +144,26 @@ pub struct ServerConfig {
     /// milliseconds get a WARN log line carrying the op name and trace ID
     /// (0 = disabled).
     pub slow_op_ms: u64,
+    /// Reactor gathered writes: drain each connection's outbox with one
+    /// `writev(2)` over an iovec batch instead of one `write(2)` per
+    /// frame. On by default; `SAGE_REACTOR_WRITEV=0|false|off` restores
+    /// the per-frame baseline (which `sage bench serve` measures the
+    /// batched path against). Wire bytes are identical either way.
+    pub writev: bool,
+    /// `SO_SNDBUF` for accepted protocol sockets (`None` = kernel
+    /// default). Tests set tiny values to force short writes through the
+    /// partial-write resume path.
+    pub sndbuf: Option<usize>,
     pub registry: RegistryConfig,
+}
+
+/// `SAGE_REACTOR_WRITEV=0|false|off` disables gathered writes; anything
+/// else — including unset — enables them.
+fn writev_from_env() -> bool {
+    match std::env::var("SAGE_REACTOR_WRITEV") {
+        Ok(v) => !matches!(v.to_ascii_lowercase().as_str(), "0" | "false" | "off"),
+        Err(_) => true,
+    }
 }
 
 impl Default for ServerConfig {
@@ -154,6 +175,8 @@ impl Default for ServerConfig {
             compute_workers: 1,
             metrics_addr: None,
             slow_op_ms: 0,
+            writev: writev_from_env(),
+            sndbuf: None,
             registry: RegistryConfig::default(),
         }
     }
@@ -168,6 +191,8 @@ pub struct Server {
     threads: usize,
     io: IoMode,
     slow_op_ms: u64,
+    writev: bool,
+    sndbuf: Option<usize>,
     /// Shutdown wake-up for engines that poll readiness (`None` when the
     /// platform has no eventfd — shutdown falls back to a self-connect).
     wake: Option<Arc<EventFd>>,
@@ -220,6 +245,8 @@ impl Server {
             threads: cfg.threads.max(1),
             io,
             slow_op_ms: cfg.slow_op_ms,
+            writev: cfg.writev,
+            sndbuf: cfg.sndbuf,
             wake,
         })
     }
@@ -269,6 +296,8 @@ impl Server {
                 wake,
                 threads: self.threads,
                 slow_op_ms: self.slow_op_ms,
+                writev: self.writev,
+                sndbuf: self.sndbuf,
             },
             stop,
         );
@@ -284,6 +313,7 @@ impl Server {
             hub,
             threads,
             slow_op_ms,
+            sndbuf,
             wake,
             ..
         } = self;
@@ -323,7 +353,7 @@ impl Server {
                     loop {
                         match listener.accept() {
                             Ok((stream, _)) => spawn_conn(
-                                &pool, stream, &registry, &hub, &stop, slow_op_ms,
+                                &pool, stream, &registry, &hub, &stop, slow_op_ms, sndbuf,
                             ),
                             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                             Err(e) => {
@@ -341,7 +371,7 @@ impl Server {
                     }
                     match incoming {
                         Ok(stream) => {
-                            spawn_conn(&pool, stream, &registry, &hub, &stop, slow_op_ms)
+                            spawn_conn(&pool, stream, &registry, &hub, &stop, slow_op_ms, sndbuf)
                         }
                         Err(e) => {
                             crate::log_warn!("accept failed: {e}");
@@ -406,6 +436,21 @@ fn epoll_for_accept(_listener: &TcpListener, _wake: &EventFd) -> Option<sys::Epo
     None
 }
 
+/// Shrink the socket's kernel send buffer when the operator asked for one
+/// (test harnesses use tiny buffers to force short writes).
+#[cfg(unix)]
+fn apply_sndbuf(stream: &TcpStream, sndbuf: Option<usize>) {
+    use std::os::unix::io::AsRawFd;
+    if let Some(bytes) = sndbuf {
+        if let Err(e) = sys::set_sndbuf(stream.as_raw_fd(), bytes) {
+            crate::log_debug!("SO_SNDBUF({bytes}) failed: {e}");
+        }
+    }
+}
+
+#[cfg(not(unix))]
+fn apply_sndbuf(_stream: &TcpStream, _sndbuf: Option<usize>) {}
+
 /// Accept-side handoff to the connection pool, with the graceful-rejection
 /// error frame when the pool is saturated or shut down.
 fn spawn_conn(
@@ -415,8 +460,10 @@ fn spawn_conn(
     hub: &Arc<SubscriptionHub>,
     stop: &Arc<AtomicBool>,
     slow_op_ms: u64,
+    sndbuf: Option<usize>,
 ) {
     metrics().counter("service.server.connections").inc();
+    apply_sndbuf(&stream, sndbuf);
     let registry = registry.clone();
     let hub = hub.clone();
     let conn_stop = stop.clone();
@@ -576,9 +623,11 @@ impl ThreadPusher {
 impl PushSink for ThreadPusher {
     fn try_push(&self, frame: Vec<u8>) -> PushOutcome {
         if self.gone.load(Ordering::Acquire) {
+            bufpool::global().put(frame);
             return PushOutcome::Gone;
         }
         if self.bytes.load(Ordering::Relaxed) > PUSH_QUEUE_BYTES {
+            bufpool::global().put(frame);
             return PushOutcome::Busy;
         }
         self.bytes.fetch_add(frame.len(), Ordering::Relaxed);
@@ -592,12 +641,41 @@ impl PushSink for ThreadPusher {
 fn drain_pusher(stream: &mut TcpStream, pusher: &Option<Arc<ThreadPusher>>) -> bool {
     let Some(p) = pusher else { return true };
     for frame in p.take_all() {
-        if stream.write_all(&frame).is_err() {
+        let ok = stream.write_all(&frame).is_ok();
+        bufpool::global().put(frame);
+        if !ok {
             p.gone.store(true, Ordering::Release);
             return false;
         }
     }
     true
+}
+
+/// [`write_frame_traced`](super::protocol::write_frame_traced), but the
+/// frame is assembled in a pooled buffer instead of a fresh allocation —
+/// the steady-state response path allocates nothing.
+fn write_pooled_frame(
+    stream: &mut TcpStream,
+    opcode: u8,
+    status: u16,
+    payload: &[u8],
+    trace: Option<trace::TraceCtx>,
+) -> Result<(), String> {
+    if payload.len() > MAX_PAYLOAD {
+        return Err(format!(
+            "frame payload {} bytes exceeds the {MAX_PAYLOAD}-byte wire cap; \
+             split the batch into smaller blocks",
+            payload.len()
+        ));
+    }
+    let mut frame = bufpool::global().take();
+    encode_frame_traced_into(&mut frame, opcode, status, payload, trace);
+    let result = stream
+        .write_all(&frame)
+        .and_then(|()| stream.flush())
+        .map_err(|e| format!("frame write: {e}"));
+    bufpool::global().put(frame);
+    result
 }
 
 /// One connection: request/response frames until EOF, a framing error, or
@@ -656,6 +734,9 @@ fn handle_connection(
             Request::decode(opcode, &frame.payload)
         };
         hists.decode.record(t.elapsed().as_nanos() as u64);
+        // `Request::decode` copies what it needs; the wire payload buffer
+        // goes straight back to the pool.
+        bufpool::global().put(frame.payload);
 
         let t = Instant::now();
         let response = match decoded {
@@ -714,10 +795,11 @@ fn handle_connection(
         }
 
         let t = Instant::now();
-        let payload = {
+        let mut payload = bufpool::global().take();
+        {
             let _s = trace::span("serve.encode");
-            response.encode()
-        };
+            response.encode_into(&mut payload);
+        }
         hists.encode.record(t.elapsed().as_nanos() as u64);
 
         let t = Instant::now();
@@ -725,8 +807,9 @@ fn handle_connection(
         // included — so the client can stitch causality across failures.
         let written = {
             let _s = trace::span("serve.write");
-            write_frame_traced(&mut stream, opcode, response.status(), &payload, frame.trace)
+            write_pooled_frame(&mut stream, opcode, response.status(), &payload, frame.trace)
         };
+        bufpool::global().put(payload);
         hists.write.record(t.elapsed().as_nanos() as u64);
         if written.is_err() {
             break; // peer went away mid-response

@@ -25,7 +25,7 @@
 //! never in sequence (epochs it receives are consecutive), and the ordered
 //! reconstruction (`protocol::apply_topk_delta`) is exact at every epoch.
 
-use super::protocol::{apply_topk_delta, encode_frame, op, Response};
+use super::protocol::{apply_topk_delta, encode_frame, encode_frame_into, op, Response};
 use super::registry::{RegistryWatcher, SessionRegistry};
 use crate::config::Method;
 use crate::util::metrics::global as metrics;
@@ -376,8 +376,15 @@ fn notifier_loop(core: Arc<HubCore>) {
                 watermark,
             };
             // Push frames ride the Subscribe opcode with ok status; clients
-            // demux on the payload kind tag (protocol docs §3.14).
-            let frame = encode_frame(op::SUBSCRIBE, 0, &resp.encode());
+            // demux on the payload kind tag (protocol docs §3.14). Both the
+            // payload and the frame come from (and, on Busy/Gone, return
+            // to) the buffer pool.
+            let pool = crate::util::bufpool::global();
+            let mut payload = pool.take();
+            resp.encode_into(&mut payload);
+            let mut frame = pool.take();
+            encode_frame_into(&mut frame, op::SUBSCRIBE, 0, &payload);
+            pool.put(payload);
             let outcome = item.sink.try_push(frame);
             let mut st = core.state.lock().unwrap();
             let Some(sub) = st

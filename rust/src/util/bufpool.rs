@@ -1,0 +1,221 @@
+//! Thread-striped recycling pool for the serve hot path's byte buffers.
+//!
+//! Every frame the service touches — decoded request payloads, encoded
+//! response payloads, fully framed wire bytes, push deltas — is a plain
+//! `Vec<u8>`. Before this pool, each one was allocated fresh and dropped
+//! after a single use; at service rates that is two allocator round trips
+//! per frame on the hottest path in the process. [`BufferPool`] keeps
+//! retired buffers on per-thread stripes so a steady-state request reuses
+//! capacity instead of allocating.
+//!
+//! Design rules:
+//!
+//! - **Striped, not global.** [`STRIPES`] independent free lists, each
+//!   behind its own mutex; threads are assigned a home stripe round-robin.
+//!   `put` targets the home stripe, so the common same-thread
+//!   encode→write→recycle cycle never contends.
+//! - **Cross-thread flows still hit.** The reactor's pool workers `take`
+//!   buffers that the event-loop thread `put` back (and vice versa), so
+//!   `take` scans *all* stripes starting from the caller's, using
+//!   `try_lock` — a contended stripe is skipped, never waited on.
+//! - **The pool bounds memory, it does not grow it.** At most
+//!   [`PER_STRIPE`] buffers per stripe are kept, and any buffer whose
+//!   capacity exceeds [`MAX_POOLED_CAPACITY`] is dropped on `put` (one
+//!   giant IngestBatch must not turn the pool into a balloon). Overflow
+//!   and oversize buffers fall back to the allocator's `drop`.
+//!
+//! Observability: `sage.bufpool.hits` / `sage.bufpool.misses` count
+//! `take` outcomes (a miss is a fresh allocation) and
+//! `sage.bufpool.dropped_oversize` counts buffers refused at `put` for
+//! capacity; see docs/OBSERVABILITY.md.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::metrics::{global as metrics, Counter};
+
+/// Independent free lists; power of two, sized for "a few event loops
+/// plus a worker pool" worth of threads.
+const STRIPES: usize = 8;
+
+/// Buffers parked per stripe before `put` starts dropping.
+const PER_STRIPE: usize = 64;
+
+/// Buffers with more capacity than this are never pooled: recycling is
+/// for steady-state frames, not for the occasional 256 MiB ingest batch.
+pub const MAX_POOLED_CAPACITY: usize = 1 << 20;
+
+struct PoolCounters {
+    hits: &'static Counter,
+    misses: &'static Counter,
+    dropped_oversize: &'static Counter,
+}
+
+fn pool_counters() -> &'static PoolCounters {
+    static COUNTERS: OnceLock<PoolCounters> = OnceLock::new();
+    COUNTERS.get_or_init(|| PoolCounters {
+        hits: metrics().counter("sage.bufpool.hits"),
+        misses: metrics().counter("sage.bufpool.misses"),
+        dropped_oversize: metrics().counter("sage.bufpool.dropped_oversize"),
+    })
+}
+
+/// The caller's home stripe: assigned round-robin on first use so threads
+/// spread across stripes without any registration step.
+fn stripe_index() -> usize {
+    use std::cell::Cell;
+    thread_local! {
+        static STRIPE: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    STRIPE.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            static NEXT: AtomicUsize = AtomicUsize::new(0);
+            v = NEXT.fetch_add(1, Ordering::Relaxed) % STRIPES;
+            s.set(v);
+        }
+        v
+    })
+}
+
+/// See the module docs. Most callers use the process-wide [`global`]
+/// pool; constructing a private pool is only interesting in tests.
+pub struct BufferPool {
+    stripes: Vec<Mutex<Vec<Vec<u8>>>>,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool {
+            stripes: (0..STRIPES).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    /// A cleared buffer: recycled when any stripe has one (hit), freshly
+    /// allocated otherwise (miss). Never blocks — contended stripes are
+    /// skipped.
+    pub fn take(&self) -> Vec<u8> {
+        let start = stripe_index();
+        for i in 0..STRIPES {
+            if let Ok(mut stripe) = self.stripes[(start + i) % STRIPES].try_lock() {
+                if let Some(mut buf) = stripe.pop() {
+                    drop(stripe);
+                    buf.clear();
+                    pool_counters().hits.inc();
+                    return buf;
+                }
+            }
+        }
+        pool_counters().misses.inc();
+        Vec::new()
+    }
+
+    /// Return a buffer for reuse. Zero-capacity buffers are pointless to
+    /// pool, oversize ones are refused (see [`MAX_POOLED_CAPACITY`]), and
+    /// when every stripe is full or contended the buffer just drops —
+    /// `put` never blocks and never grows the pool past its caps.
+    pub fn put(&self, buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        if buf.capacity() > MAX_POOLED_CAPACITY {
+            pool_counters().dropped_oversize.inc();
+            return;
+        }
+        let start = stripe_index();
+        for i in 0..STRIPES {
+            if let Ok(mut stripe) = self.stripes[(start + i) % STRIPES].try_lock() {
+                if stripe.len() < PER_STRIPE {
+                    stripe.push(buf);
+                    return;
+                }
+            }
+        }
+    }
+
+    #[cfg(test)]
+    fn pooled(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new()
+    }
+}
+
+/// The process-wide pool shared by both serve engines (frame encode,
+/// payload encode, decoder payloads, push deltas).
+pub fn global() -> &'static BufferPool {
+    static POOL: OnceLock<BufferPool> = OnceLock::new();
+    POOL.get_or_init(BufferPool::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycles_returned_capacity() {
+        let pool = BufferPool::new();
+        let mut buf = Vec::with_capacity(4096);
+        buf.extend_from_slice(b"stale contents");
+        pool.put(buf);
+
+        let got = pool.take();
+        assert!(got.is_empty(), "pooled buffers must come back cleared");
+        assert!(got.capacity() >= 4096, "capacity was not recycled");
+
+        // Nothing left: the next take allocates fresh.
+        assert_eq!(pool.take().capacity(), 0);
+    }
+
+    #[test]
+    fn oversize_buffers_are_refused() {
+        let pool = BufferPool::new();
+        pool.put(Vec::with_capacity(MAX_POOLED_CAPACITY + 1));
+        assert_eq!(pool.pooled(), 0);
+        // At the cap is fine.
+        pool.put(Vec::with_capacity(MAX_POOLED_CAPACITY));
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn pool_size_is_bounded() {
+        let pool = BufferPool::new();
+        let cap = STRIPES * PER_STRIPE;
+        for _ in 0..cap + 100 {
+            pool.put(Vec::with_capacity(64));
+        }
+        assert!(pool.pooled() <= cap, "pool grew past its stripe caps");
+    }
+
+    #[test]
+    fn cross_stripe_take_finds_buffers_from_other_threads() {
+        use std::sync::Arc;
+        let pool = Arc::new(BufferPool::new());
+        // Park buffers from several threads so they land on stripes other
+        // than this thread's home stripe.
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = pool.clone();
+                std::thread::spawn(move || pool.put(Vec::with_capacity(512)))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let parked = pool.pooled();
+        assert!(parked > 0);
+        // This thread must be able to drain them all regardless of which
+        // stripe they sit on.
+        let mut recovered = 0;
+        for _ in 0..parked {
+            if pool.take().capacity() >= 512 {
+                recovered += 1;
+            }
+        }
+        assert_eq!(recovered, parked);
+    }
+}

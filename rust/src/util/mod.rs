@@ -3,6 +3,7 @@
 //! property-testing harness. Nothing here depends on the paper — these are
 //! the libraries the coordinator would normally pull from crates.io.
 
+pub mod bufpool;
 pub mod channel;
 pub mod check;
 pub mod json;

@@ -1,12 +1,15 @@
-//! Zero-dependency Linux readiness primitives: `epoll` and `eventfd`.
+//! Zero-dependency Linux readiness and scatter/gather primitives:
+//! `epoll`, `eventfd`, `writev`, `accept4`.
 //!
 //! The crate has no external dependencies, so the reactor cannot lean on
-//! mio or tokio. Instead this module declares the four syscalls the event
-//! loop needs (`epoll_create1`, `epoll_ctl`, `epoll_wait`, `eventfd`)
-//! plus `fcntl` for `O_NONBLOCK`, straight against the system libc that
-//! `std` already links. Everything is gated on `target_os = "linux"`;
-//! other platforms get a stub whose [`epoll_supported`] returns `false`
-//! so callers fall back to the portable threaded server.
+//! mio or tokio. Instead this module declares the syscalls the event
+//! loop needs (`epoll_create1`, `epoll_ctl`, `epoll_wait`, `eventfd`,
+//! `writev`, `accept4`, `setsockopt`) plus `fcntl` for `O_NONBLOCK`,
+//! straight against the system libc that `std` already links. Everything
+//! is gated on `target_os = "linux"`; other platforms get a stub whose
+//! [`epoll_supported`] returns `false` so callers fall back to the
+//! portable threaded server (the gather-write helpers return
+//! `Unsupported` there and callers keep the per-frame write loop).
 //!
 //! Safety model: every wrapper owns its fd (`close` on `Drop`), all raw
 //! pointers passed across the FFI boundary come from stack or `Vec`
@@ -36,6 +39,14 @@ mod linux {
     const F_SETFL: i32 = 4;
     const O_NONBLOCK: i32 = 0x800;
     const EINTR: i32 = 4;
+    const SOCK_NONBLOCK: i32 = 0x800;
+    const SOCK_CLOEXEC: i32 = 0x80000;
+    const SOL_SOCKET: i32 = 1;
+    const SO_SNDBUF: i32 = 7;
+
+    /// Linux's `UIO_MAXIOV`: the kernel rejects longer iovec arrays, so
+    /// [`writev`] truncates its batch to this many entries.
+    pub const MAX_IOV: usize = 1024;
 
     /// Mirror of the kernel's `struct epoll_event`. On x86 the kernel
     /// declares it packed; elsewhere it uses natural alignment.
@@ -73,6 +84,117 @@ mod linux {
         fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
         fn write(fd: i32, buf: *const u8, count: usize) -> isize;
         fn close(fd: i32) -> i32;
+        // Aliased so the safe wrappers below can use the canonical names.
+        #[link_name = "writev"]
+        fn sys_writev(fd: i32, iov: *const std::ffi::c_void, iovcnt: i32) -> isize;
+        #[link_name = "accept4"]
+        fn sys_accept4(
+            fd: i32,
+            addr: *mut std::ffi::c_void,
+            addrlen: *mut u32,
+            flags: i32,
+        ) -> i32;
+        #[link_name = "setsockopt"]
+        fn sys_setsockopt(
+            fd: i32,
+            level: i32,
+            optname: i32,
+            optval: *const std::ffi::c_void,
+            optlen: u32,
+        ) -> i32;
+    }
+
+    /// Mirror of `struct iovec` for [`writev`]. A trailing `PhantomData`
+    /// ZST does not change the `repr(C)` layout, and its lifetime ties
+    /// each entry to the buffer it points into, so a batch cannot outlive
+    /// the frames it references (the same trick as `std::io::IoSlice`,
+    /// which is not usable here because raw-fd `writev` is not exposed by
+    /// std without a crate dependency).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct IoVec<'a> {
+        base: *const u8,
+        len: usize,
+        _buf: std::marker::PhantomData<&'a [u8]>,
+    }
+
+    impl<'a> IoVec<'a> {
+        pub fn new(buf: &'a [u8]) -> IoVec<'a> {
+            IoVec {
+                base: buf.as_ptr(),
+                len: buf.len(),
+                _buf: std::marker::PhantomData,
+            }
+        }
+
+        /// Placeholder for initializing fixed-size batch arrays; callers
+        /// slice the array to the filled prefix before the syscall.
+        pub fn empty() -> IoVec<'static> {
+            IoVec {
+                base: std::ptr::null(),
+                len: 0,
+                _buf: std::marker::PhantomData,
+            }
+        }
+    }
+
+    /// Gathered write: one syscall over up to [`MAX_IOV`] buffers.
+    /// Returns the byte count the kernel accepted — short counts are
+    /// normal and the caller resumes from where the kernel stopped, which
+    /// may be mid-buffer. `EAGAIN` surfaces as `WouldBlock` and `EINTR`
+    /// as `Interrupted`, exactly like `TcpStream::write`.
+    pub fn writev(fd: RawFd, iovs: &[IoVec<'_>]) -> io::Result<usize> {
+        let n = iovs.len().min(MAX_IOV);
+        let wrote = unsafe { sys_writev(fd, iovs.as_ptr() as *const std::ffi::c_void, n as i32) };
+        if wrote < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(wrote as usize)
+        }
+    }
+
+    /// `accept4(2)` with `SOCK_NONBLOCK | SOCK_CLOEXEC`: the accepted fd
+    /// is born nonblocking, skipping the `fcntl` get/set pair that
+    /// `TcpListener::accept` + `set_nonblocking` costs per connection.
+    /// `EINTR` retries internally; `WouldBlock` means the backlog is
+    /// empty. The caller takes ownership of the returned fd.
+    pub fn accept_nonblocking(listener: RawFd) -> io::Result<RawFd> {
+        loop {
+            let fd = unsafe {
+                sys_accept4(
+                    listener,
+                    std::ptr::null_mut(),
+                    std::ptr::null_mut(),
+                    SOCK_NONBLOCK | SOCK_CLOEXEC,
+                )
+            };
+            if fd >= 0 {
+                return Ok(fd);
+            }
+            let err = io::Error::last_os_error();
+            if err.raw_os_error() == Some(EINTR) {
+                continue;
+            }
+            return Err(err);
+        }
+    }
+
+    /// Set `SO_SNDBUF` on a socket (the kernel doubles the value for
+    /// bookkeeping and clamps it to its configured range). The serve
+    /// tests use tiny buffers to force short writes through the
+    /// partial-write resume path.
+    pub fn set_sndbuf(fd: RawFd, bytes: usize) -> io::Result<()> {
+        let val = bytes.min(i32::MAX as usize) as i32;
+        cvt(unsafe {
+            sys_setsockopt(
+                fd,
+                SOL_SOCKET,
+                SO_SNDBUF,
+                &val as *const i32 as *const std::ffi::c_void,
+                std::mem::size_of::<i32>() as u32,
+            )
+        })?;
+        Ok(())
     }
 
     fn cvt(ret: i32) -> io::Result<i32> {
@@ -258,6 +380,38 @@ mod fallback {
         Err(unsupported())
     }
 
+    pub const MAX_IOV: usize = 1024;
+
+    #[derive(Clone, Copy)]
+    pub struct IoVec<'a> {
+        _buf: std::marker::PhantomData<&'a [u8]>,
+    }
+
+    impl<'a> IoVec<'a> {
+        pub fn new(_buf: &'a [u8]) -> IoVec<'a> {
+            IoVec {
+                _buf: std::marker::PhantomData,
+            }
+        }
+        pub fn empty() -> IoVec<'static> {
+            IoVec {
+                _buf: std::marker::PhantomData,
+            }
+        }
+    }
+
+    pub fn writev(_fd: RawFd, _iovs: &[IoVec<'_>]) -> io::Result<usize> {
+        Err(unsupported())
+    }
+
+    pub fn accept_nonblocking(_listener: RawFd) -> io::Result<RawFd> {
+        Err(unsupported())
+    }
+
+    pub fn set_sndbuf(_fd: RawFd, _bytes: usize) -> io::Result<()> {
+        Err(unsupported())
+    }
+
     pub struct EventFd;
 
     impl EventFd {
@@ -382,6 +536,47 @@ mod tests {
         assert!(events[..n].iter().any(|e| e.token() == 11));
         ep.delete(server_side.as_raw_fd()).unwrap();
         assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn accept4_yields_nonblocking_fd_and_writev_gathers() {
+        use std::os::unix::io::FromRawFd;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        set_nonblocking(listener.as_raw_fd()).unwrap();
+
+        // Empty backlog: accept4 reports WouldBlock instead of blocking.
+        let err = accept_nonblocking(listener.as_raw_fd()).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        let fd = loop {
+            match accept_nonblocking(listener.as_raw_fd()) {
+                Ok(fd) => break fd,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => panic!("accept4 failed: {e}"),
+            }
+        };
+        let server_side = unsafe { TcpStream::from_raw_fd(fd) };
+
+        // SOCK_NONBLOCK held: a read with no pending data must not block.
+        let mut probe = [0u8; 1];
+        let err = (&server_side).read(&mut probe).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+
+        set_sndbuf(server_side.as_raw_fd(), 4096).unwrap();
+
+        // One gathered write over three buffers arrives as one byte run.
+        let parts: [&[u8]; 3] = [b"hel", b"lo ", b"iovec"];
+        let iovs: Vec<IoVec<'_>> = parts.iter().map(|p| IoVec::new(p)).collect();
+        let n = writev(server_side.as_raw_fd(), &iovs).unwrap();
+        assert_eq!(n, 11);
+        let mut got = [0u8; 11];
+        client.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"hello iovec");
     }
 
     #[test]

@@ -421,6 +421,9 @@ fn reactor_and_subscription_metrics_are_exposed() {
         "sage.reactor.wait.ns",
         "sage.reactor.dispatch.ns",
         "sage.reactor.write_queue.depth",
+        // The wire hot path: every response flush goes through writev.
+        "sage.reactor.writev.frames_per_call",
+        "sage.reactor.writev.ns",
     ] {
         let stats = hists
             .iter()
@@ -430,6 +433,18 @@ fn reactor_and_subscription_metrics_are_exposed() {
         assert!(stats.count > 0, "{name} never recorded");
         assert!(stats.p50 <= stats.p99 && stats.p99 <= stats.max, "{name}");
     }
+    // Buffer recycling on the hot path: the first takes miss (fresh
+    // allocations), and after one request/response cycle returns its
+    // buffers, later takes hit. Both counters are process-global and
+    // monotone, so absolute > 0 is safe.
+    assert!(
+        counter(&counters, "sage.bufpool.misses") > 0,
+        "bufpool misses never counted: {counters:?}"
+    );
+    assert!(
+        counter(&counters, "sage.bufpool.hits") > 0,
+        "steady-state traffic never recycled a buffer: {counters:?}"
+    );
 
     // The same series reach Prometheus, sanitized.
     let scrape = http_get(&metrics_addr, "/metrics");
@@ -439,6 +454,10 @@ fn reactor_and_subscription_metrics_are_exposed() {
         "sage_reactor_wait_ns_count",
         "sage_reactor_dispatch_ns_count",
         "sage_reactor_write_queue_depth_count",
+        "sage_reactor_writev_frames_per_call_count",
+        "sage_reactor_writev_ns_count",
+        "sage_bufpool_hits",
+        "sage_bufpool_misses",
         "service_subs_deltas_sent",
     ] {
         assert!(scrape.contains(series), "scrape missing {series}");

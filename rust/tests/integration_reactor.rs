@@ -270,6 +270,117 @@ fn slow_subscriber_stalls_nothing_and_stays_exact() {
     }
 }
 
+/// The short-write torture for the wire hot path: with a tiny server-side
+/// `SO_SNDBUF`, a ~128 KiB Freeze response can never leave in one
+/// syscall, so the reactor's `writev` must resume mid-frame across iovec
+/// boundaries (and the threaded engine's blocking write must chunk)
+/// without corrupting a byte. A normal reader fetches the reference wire
+/// bytes; a reader that sips 1 KiB at a time — keeping the kernel send
+/// buffer full so *every* flush returns short — must receive the
+/// identical stream. Runs under both engines; the epoll leg additionally
+/// proves the gathered-write path was exercised via its histograms.
+#[test]
+fn tiny_sndbuf_short_writes_deliver_byte_identical_frames() {
+    use sage::service::protocol::{op, write_frame, FrameDecoder, Request};
+    use std::io::Read;
+    use std::net::TcpStream;
+
+    // Read one whole response frame as raw wire bytes, `chunk` bytes per
+    // read, pausing `pause` between reads.
+    fn read_frame_raw(stream: &mut TcpStream, chunk: usize, pause: Duration) -> Vec<u8> {
+        let mut decoder = FrameDecoder::new();
+        let mut raw = Vec::new();
+        let mut buf = vec![0u8; chunk];
+        loop {
+            if decoder.next_frame().expect("clean frame stream").is_some() {
+                return raw;
+            }
+            let n = stream.read(&mut buf).expect("read response");
+            assert!(n > 0, "connection closed mid-frame");
+            raw.extend_from_slice(&buf[..n]);
+            decoder.extend(&buf[..n]);
+            if !pause.is_zero() {
+                std::thread::sleep(pause);
+            }
+        }
+    }
+
+    fn freeze_response_raw(addr: &str, chunk: usize, pause: Duration) -> Vec<u8> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let request = Request::Freeze {
+            session: "sndbuf".into(),
+        };
+        write_frame(&mut stream, op::FREEZE, 0, &request.encode()).unwrap();
+        read_frame_raw(&mut stream, chunk, pause)
+    }
+
+    for io in io_modes() {
+        let server = Server::bind(&ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            threads: 4,
+            io,
+            compute_workers: 1,
+            registry: RegistryConfig::default(),
+            sndbuf: Some(4096),
+            ..ServerConfig::default()
+        })
+        .expect("bind server");
+        let addr = server.local_addr().to_string();
+        let handle = server.spawn();
+
+        // ℓ=64, D=512 → a 64x512 f32 sketch, so Freeze answers with
+        // ~128 KiB — far past any plausible doubled SO_SNDBUF. Freeze is
+        // idempotent, so repeated requests get byte-identical responses.
+        let mut setup = ServiceClient::connect(&addr).unwrap();
+        setup.create_session("sndbuf", 64, 512, 1).unwrap();
+        setup
+            .ingest("sndbuf", 0, &Matrix::from_fn(4, 512, |r, c| (r * 7 + c) as f32 * 0.01))
+            .unwrap();
+        setup.freeze("sndbuf").unwrap();
+
+        let writev_before = writev_count(&mut setup);
+        let reference = freeze_response_raw(&addr, 64 << 10, Duration::ZERO);
+        assert!(
+            reference.len() > 100_000,
+            "response too small to force short writes: {} bytes (io={})",
+            reference.len(),
+            io.name()
+        );
+        let sipped = freeze_response_raw(&addr, 1024, Duration::from_millis(1));
+        assert_eq!(
+            reference.len(),
+            sipped.len(),
+            "wire length diverged under short writes (io={})",
+            io.name()
+        );
+        assert!(
+            reference == sipped,
+            "wire bytes diverged under short writes (io={})",
+            io.name()
+        );
+        if io == IoMode::Epoll && std::env::var("SAGE_REACTOR_WRITEV").is_err() {
+            assert!(
+                writev_count(&mut setup) > writev_before,
+                "reactor served a 128 KiB response without a single writev"
+            );
+        }
+
+        handle.shutdown();
+    }
+}
+
+/// Current process-global count of `sage.reactor.writev.ns` samples (the
+/// metrics registry is shared across tests in this binary, so callers
+/// compare deltas).
+fn writev_count(client: &mut ServiceClient) -> u64 {
+    let (_, _, hists) = client.metrics_snapshot("sage.reactor.writev.").unwrap();
+    hists
+        .iter()
+        .find(|(n, _)| n == "sage.reactor.writev.ns")
+        .map(|(_, s)| s.count)
+        .unwrap_or(0)
+}
+
 /// Shutdown must deliver one final, classifiable GoingAway error frame to
 /// every subscribed connection before closing it — not just reset the
 /// socket under the client.
